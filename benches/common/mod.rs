@@ -1,0 +1,133 @@
+//! Shared bench harness (criterion is unavailable offline; `cargo bench`
+//! runs these as `harness = false` binaries).
+//!
+//! Conventions:
+#![allow(dead_code)] // shared across several bench binaries; not all use every helper
+//! * every bench gives each optimizer arm the SAME wall-clock budget, the
+//!   paper's protocol (§4: "each optimizer is given an equal compute time
+//!   budget on the same fixed PINN task");
+//! * budgets scale via `ENGD_BENCH_BUDGET` (seconds per arm, default 20);
+//! * each arm's full trajectory lands in `results/bench/<bench>/<arm>.csv`,
+//!   and the bench prints the paper-figure summary table to stdout.
+
+use std::time::Instant;
+
+use engd::config::{OptimizerConfig, RunConfig};
+use engd::coordinator::{train, TrainReport};
+use engd::runtime::Runtime;
+
+pub fn budget_seconds(default: f64) -> f64 {
+    std::env::var("ENGD_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// One bench arm: a named optimizer config on a problem.
+pub struct Arm {
+    pub tag: String,
+    pub problem: String,
+    pub optimizer: OptimizerConfig,
+}
+
+impl Arm {
+    pub fn new(tag: &str, problem: &str, optimizer: OptimizerConfig) -> Self {
+        Arm {
+            tag: tag.to_string(),
+            problem: problem.to_string(),
+            optimizer,
+        }
+    }
+}
+
+/// Run every arm under an equal time budget; returns reports in arm order.
+/// Arms that fail (e.g. OOM-guard refusals) are reported as None with the
+/// error printed — a legitimate outcome (the paper's dense ENGD also OOMs).
+pub fn run_arms(
+    bench: &str,
+    rt: &Runtime,
+    arms: &[Arm],
+    budget_s: f64,
+    max_steps: usize,
+) -> Vec<Option<TrainReport>> {
+    let mut out = Vec::new();
+    for arm in arms {
+        let cfg = RunConfig {
+            name: arm.tag.clone(),
+            problem: arm.problem.clone(),
+            steps: max_steps,
+            eval_every: 5,
+            time_budget_s: budget_s,
+            out_dir: format!("results/bench/{bench}"),
+            optimizer: arm.optimizer.clone(),
+            ..RunConfig::default()
+        };
+        cfg.optimizer.validate().expect("arm config");
+        println!("\n--- arm: {} on {} (budget {budget_s:.0}s) ---", arm.tag, arm.problem);
+        let t0 = Instant::now();
+        match train(cfg, rt, false) {
+            Ok(r) => {
+                println!(
+                    "    {} steps in {:.1}s — best L2 {:.3e}, final loss {:.3e}",
+                    r.steps_done,
+                    t0.elapsed().as_secs_f64(),
+                    r.best_l2,
+                    r.final_loss
+                );
+                out.push(Some(r));
+            }
+            Err(e) => {
+                println!("    FAILED (recorded as such): {e:#}");
+                out.push(None);
+            }
+        }
+    }
+    out
+}
+
+/// Print the standard comparison table for a set of finished arms.
+pub fn print_table(title: &str, arms: &[Arm], reports: &[Option<TrainReport>]) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<26} {:>7} {:>9} {:>11} {:>11} {:>12}",
+        "arm", "steps", "wall[s]", "best L2", "t(L2<=1e-1)", "t(L2<=1e-2)"
+    );
+    for (arm, rep) in arms.iter().zip(reports) {
+        match rep {
+            Some(r) => {
+                let t1 = time_to(r, 1e-1);
+                let t2 = time_to(r, 1e-2);
+                println!(
+                    "{:<26} {:>7} {:>9.1} {:>11.3e} {:>11} {:>12}",
+                    arm.tag,
+                    r.steps_done,
+                    r.wall_s,
+                    r.best_l2,
+                    t1.map_or("-".into(), |t| format!("{t:.1}s")),
+                    t2.map_or("-".into(), |t| format!("{t:.1}s")),
+                );
+            }
+            None => println!("{:<26} {:>7}", arm.tag, "FAILED"),
+        }
+    }
+}
+
+pub fn time_to(r: &TrainReport, thr: f64) -> Option<f64> {
+    r.time_to
+        .iter()
+        .find(|(t, _)| (*t - thr).abs() < 1e-12)
+        .map(|(_, s)| *s)
+}
+
+/// Speedup factor between two arms at the tightest threshold both reached —
+/// the §5 headline metric ("same L2 error up to 75× faster").
+pub fn speedup_at_equal_l2(slow: &TrainReport, fast: &TrainReport) -> Option<(f64, f64)> {
+    for thr in [1e-4, 1e-3, 1e-2, 1e-1] {
+        if let (Some(ts), Some(tf)) = (time_to(slow, thr), time_to(fast, thr)) {
+            if tf > 0.0 {
+                return Some((thr, ts / tf));
+            }
+        }
+    }
+    None
+}

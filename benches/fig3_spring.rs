@@ -1,0 +1,103 @@
+//! Figure 3 (+ Figs. 8, 11–14): ENGD-W vs SPRING on the 5d and 100d Poisson
+//! problems (and 10d via `--problem`/env).
+//!
+//! Expected shape (paper): SPRING ≥ ENGD-W everywhere, with a decisive gap
+//! on the 100d problem; SPRING needs no line search.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{budget_seconds, print_table, run_arms, Arm};
+use engd::config::run::OptimizerKind;
+use engd::config::OptimizerConfig;
+use engd::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let budget = budget_seconds(30.0);
+    let base = OptimizerConfig::default();
+
+    // --- 5d: line-search arms are the paper's primary A.2 setup; the
+    // fixed-lr arms reproduce A.2.1 (at our scaled batch/step budget the
+    // fixed-lr variants progress much more slowly — they need the paper's
+    // tens-of-thousands of steps; see EXPERIMENTS.md).
+    let arms5 = vec![
+        Arm::new("engd_w-5d-ls", "poisson5d", OptimizerConfig {
+            kind: OptimizerKind::EngdW,
+            damping: 1e-8,
+            line_search: true,
+            ..base.clone()
+        }),
+        Arm::new("spring-5d-ls", "poisson5d", OptimizerConfig {
+            kind: OptimizerKind::Spring,
+            damping: 2.086287e-10,
+            momentum: 3.11542e-1,
+            line_search: true,
+            ..base.clone()
+        }),
+        Arm::new("engd_w-5d-fixed", "poisson5d", OptimizerConfig {
+            kind: OptimizerKind::EngdW,
+            damping: 6.804474e-8,
+            lr: 5.2289e-2,
+            ..base.clone()
+        }),
+        Arm::new("spring-5d-fixed", "poisson5d", OptimizerConfig {
+            kind: OptimizerKind::Spring,
+            damping: 6.811585e-10,
+            momentum: 8.26966e-1,
+            lr: 6.3502e-2,
+            ..base.clone()
+        }),
+    ];
+    let reports5 = run_arms("fig3-5d", &rt, &arms5, budget, 100_000);
+    print_table(
+        "Fig. 3 (left) — 5d: SPRING vs ENGD-W (paper: SPRING converges faster, \
+         no line search needed)",
+        &arms5,
+        &reports5,
+    );
+
+    // --- 10d (paper A.3 line-search bests) ---
+    let arms10 = vec![
+        Arm::new("engd_w-10d", "poisson10d", OptimizerConfig {
+            kind: OptimizerKind::EngdW,
+            damping: 3.9e-7,
+            line_search: true,
+            ..base.clone()
+        }),
+        Arm::new("spring-10d", "poisson10d", OptimizerConfig {
+            kind: OptimizerKind::Spring,
+            damping: 1.7e-7,
+            momentum: 9.05328e-1,
+            line_search: true,
+            ..base.clone()
+        }),
+    ];
+    let reports10 = run_arms("fig3-10d", &rt, &arms10, budget, 100_000);
+    print_table("Fig. 11/12 — 10d: SPRING vs ENGD-W", &arms10, &reports10);
+
+    // --- 100d (paper A.4 line-search bests) ---
+    let arms100 = vec![
+        Arm::new("engd_w-100d", "poisson100d", OptimizerConfig {
+            kind: OptimizerKind::EngdW,
+            damping: 4.7772e-3,
+            line_search: true,
+            ..base.clone()
+        }),
+        Arm::new("spring-100d", "poisson100d", OptimizerConfig {
+            kind: OptimizerKind::Spring,
+            damping: 3.0116e-2,
+            momentum: 6.76335e-1,
+            line_search: true,
+            ..base.clone()
+        }),
+    ];
+    let reports100 = run_arms("fig3-100d", &rt, &arms100, budget, 100_000);
+    print_table(
+        "Fig. 3 (right) — 100d: SPRING vs ENGD-W (paper: SPRING reaches L2 \
+         errors 'not previously seen')",
+        &arms100,
+        &reports100,
+    );
+    Ok(())
+}

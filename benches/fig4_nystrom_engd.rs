@@ -1,0 +1,51 @@
+//! Figure 4 (+ Figs. 9/10): randomized Nyström vs exact ENGD-W across batch
+//! sizes, sketch = 10% of N.
+//!
+//! Expected shape (paper): randomization accelerates the *early* phase, more
+//! so at larger batch sizes, but exact computation is needed for the final
+//! accuracies. Batch sizes are scaled (512/1024/2048 vs the paper's
+//! 1000/10000/50000 — DESIGN.md §Substitutions).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{budget_seconds, print_table, run_arms, Arm};
+use engd::config::run::{ExecPath, OptimizerKind, SolveMode};
+use engd::config::OptimizerConfig;
+use engd::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let budget = budget_seconds(25.0);
+
+    for problem in ["poisson5d_n512", "poisson5d_n1024", "poisson5d_n2048"] {
+        let mk = |tag: &str, solve: SolveMode| {
+            Arm::new(tag, problem, OptimizerConfig {
+                kind: OptimizerKind::EngdW,
+                damping: 1e-6,
+                line_search: true, // paper: "all under our standard line-search"
+                solve,
+                sketch_ratio: 0.10, // paper's sketch size
+                path: ExecPath::Decomposed,
+                ..OptimizerConfig::default()
+            })
+        };
+        let arms = vec![
+            mk("exact", SolveMode::Exact),
+            mk("nystrom_gpu", SolveMode::NystromGpu),
+            mk("nystrom_stable", SolveMode::NystromStable),
+        ];
+        let reports = run_arms(&format!("fig4-{problem}"), &rt, &arms, budget, 100_000);
+        print_table(
+            &format!(
+                "Fig. 4 — {problem}: exact vs randomized ENGD-W, sketch 10% N \
+                 (paper: randomization helps early at large N, exact wins late)"
+            ),
+            &arms,
+            &reports,
+        );
+        // Early-phase comparison: loss at the first quarter of the budget.
+        println!("  (early-phase trajectories: see results/bench/fig4-{problem}/*.csv)");
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Figure 5 (+ Fig. 15): Nyström-randomized vs exact SPRING on the 100d
+//! Poisson problem.
+//!
+//! Expected shape (paper): randomization gives *no* speedup here — in high
+//! dimension the differentiation through the operator dominates per-step
+//! cost, so accelerating the kernel solve barely matters, while the sketch
+//! loses accuracy (d_eff/N stays above 50%, Fig. 6b).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{budget_seconds, print_table, run_arms, Arm};
+use engd::config::run::{ExecPath, OptimizerKind, SolveMode};
+use engd::config::OptimizerConfig;
+use engd::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let budget = budget_seconds(25.0);
+    let problem = "poisson100d";
+
+    let mk = |tag: &str, solve: SolveMode| {
+        Arm::new(tag, problem, OptimizerConfig {
+            kind: OptimizerKind::Spring,
+            damping: 3.0116e-2, // paper A.4 best (line-search setup)
+            momentum: 6.76335e-1,
+            line_search: true,
+            solve,
+            sketch_ratio: 0.10,
+            path: if solve == SolveMode::Exact {
+                ExecPath::Fused
+            } else {
+                ExecPath::Decomposed
+            },
+            ..OptimizerConfig::default()
+        })
+    };
+    let arms = vec![
+        mk("spring-exact", SolveMode::Exact),
+        // Also run the exact solve on the decomposed path so the
+        // exact-vs-sketched comparison is apples-to-apples in Rust.
+        {
+            let mut a = mk("spring-exact-decomposed", SolveMode::Exact);
+            a.optimizer.path = ExecPath::Decomposed;
+            a
+        },
+        mk("spring-nystrom_gpu", SolveMode::NystromGpu),
+        mk("spring-nystrom_stable", SolveMode::NystromStable),
+    ];
+    let reports = run_arms("fig5", &rt, &arms, budget, 100_000);
+    print_table(
+        "Fig. 5 — 100d SPRING: exact vs randomized (paper: randomized ≈ or \
+         worse than exact; operator differentiation dominates)",
+        &arms,
+        &reports,
+    );
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Linear-algebra substrate microbenchmarks — the §Perf tracking harness for
+//! the L3 hot paths (EXPERIMENTS.md §Perf records the before/after of each
+//! optimization iteration).
+//!
+//! Reports GFLOP/s for the kernels that dominate the decomposed optimizer
+//! paths: gram (K = JJᵀ), matmul (sketch products), Cholesky (kernel solve),
+//! plus tr_matvec (the Jᵀa map-back).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+
+use engd::linalg::{Cholesky, Matrix};
+use engd::metrics::Summary;
+use engd::rng::Rng;
+
+fn time_op(tag: &str, flops: f64, reps: usize, mut f: impl FnMut()) {
+    // Warm-up.
+    f();
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let s = Summary::of(&samples);
+    println!(
+        "{tag:<34} median {:>8.4}s  {:>7.2} GFLOP/s  (IQR [{:.4}, {:.4}])",
+        s.median,
+        flops / s.median / 1e9,
+        s.q1,
+        s.q3
+    );
+}
+
+fn main() {
+    let mut rng = Rng::seed_from(1);
+    println!("threads: {}", engd::parallel::num_threads());
+
+    // gram: the ENGD-W kernel build, N×P → N×N (2·N²·P/2 useful flops).
+    for (n, p) in [(448, 10_065), (1024, 10_065)] {
+        let mut j = Matrix::zeros(n, p);
+        rng.fill_normal(j.data_mut());
+        time_op(
+            &format!("gram      J({n}x{p}) -> K"),
+            (n * n) as f64 * p as f64, // symmetric: N²/2 dots of length P → N²P flops
+            5,
+            || {
+                let k = j.gram();
+                std::hint::black_box(&k);
+            },
+        );
+    }
+
+    // matmul: sketch product shapes (N×P)(P×S).
+    let (n, p, s) = (1024, 10_065, 102);
+    let mut a = Matrix::zeros(n, p);
+    rng.fill_normal(a.data_mut());
+    let mut b = Matrix::zeros(p, s);
+    rng.fill_normal(b.data_mut());
+    time_op(
+        &format!("matmul    ({n}x{p})({p}x{s})"),
+        2.0 * (n * p * s) as f64,
+        5,
+        || {
+            let c = a.matmul(&b);
+            std::hint::black_box(&c);
+        },
+    );
+
+    // Cholesky: kernel-solve factorization, N×N.
+    for n in [448usize, 1024, 2048] {
+        let mut g = Matrix::zeros(n, n / 2);
+        rng.fill_normal(g.data_mut());
+        let k = g.gram().add_diag(1.0);
+        time_op(
+            &format!("cholesky  ({n}x{n})"),
+            (n as f64).powi(3) / 3.0,
+            5,
+            || {
+                let ch = Cholesky::factor(&k).unwrap();
+                std::hint::black_box(&ch);
+            },
+        );
+    }
+
+    // tr_matvec: the Jᵀa map-back, N×P.
+    let mut j = Matrix::zeros(1024, 10_065);
+    rng.fill_normal(j.data_mut());
+    let mut v = vec![0.0; 1024];
+    rng.fill_normal(&mut v);
+    time_op("tr_matvec Jᵀa (1024x10065)", 2.0 * (1024 * 10_065) as f64, 20, || {
+        let y = j.tr_matvec(&v);
+        std::hint::black_box(&y);
+    });
+
+    // matvec: Jφ (SPRING's ζ shift).
+    let mut w = vec![0.0; 10_065];
+    rng.fill_normal(&mut w);
+    time_op("matvec    Jφ (1024x10065)", 2.0 * (1024 * 10_065) as f64, 20, || {
+        let y = j.matvec(&w);
+        std::hint::black_box(&y);
+    });
+}

@@ -1,0 +1,79 @@
+//! High-dimensional PINN training: the 100d Poisson problem (paper §4 item 2,
+//! Fig. 3 right / Fig. 13).
+//!
+//! The paper's qualitative claim: in high dimensions SPRING clearly beats
+//! ENGD-W (its momentum transports curvature information across the highly
+//! stochastic small-batch iterations). This driver runs both at the paper's
+//! A.4.1 fixed-lr hyperparameters on the width-scaled 100d network and prints
+//! the comparison.
+//!
+//! ```bash
+//! cargo run --release --example highdim [steps]
+//! ```
+
+use anyhow::Result;
+
+use engd::config::run::OptimizerKind;
+use engd::config::RunConfig;
+use engd::coordinator::train;
+use engd::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    let rt = Runtime::new("artifacts")?;
+    let p = rt.manifest().problem("poisson100d")?;
+    println!(
+        "100d Poisson (harmonic): arch {:?}, P = {}, batch {}+{} — scaled from \
+         the paper's P = 1.3M (DESIGN.md §Substitutions)",
+        p.arch, p.n_params, p.n_interior, p.n_boundary
+    );
+
+    let mut engd_cfg = RunConfig {
+        name: "highdim-engd-w".into(),
+        problem: "poisson100d".into(),
+        steps,
+        eval_every: 10,
+        ..RunConfig::default()
+    };
+    // Paper A.4 (line-search) ENGD-W: damping 4.78e-3.
+    engd_cfg.optimizer.kind = OptimizerKind::EngdW;
+    engd_cfg.optimizer.damping = 4.7772e-3;
+    engd_cfg.optimizer.line_search = true;
+
+    let mut spring_cfg = RunConfig {
+        name: "highdim-spring".into(),
+        problem: "poisson100d".into(),
+        steps,
+        eval_every: 10,
+        ..RunConfig::default()
+    };
+    // Paper A.4.1 SPRING: damping 3.01e-2, momentum 0.984, lr 0.0924.
+    spring_cfg.optimizer.kind = OptimizerKind::Spring;
+    spring_cfg.optimizer.damping = 3.0116e-2;
+    spring_cfg.optimizer.momentum = 0.98386;
+    spring_cfg.optimizer.lr = 0.092362;
+
+    println!("\n=== ENGD-W (100d) ===");
+    let engd = train(engd_cfg, &rt, true)?;
+    println!("\n=== SPRING (100d) ===");
+    let spring = train(spring_cfg, &rt, true)?;
+
+    println!("\n=== summary ===");
+    println!(
+        "ENGD-W : best L2 {:.3e} in {:.1}s ({} steps)",
+        engd.best_l2, engd.wall_s, engd.steps_done
+    );
+    println!(
+        "SPRING : best L2 {:.3e} in {:.1}s ({} steps)",
+        spring.best_l2, spring.wall_s, spring.steps_done
+    );
+    if spring.best_l2 < engd.best_l2 {
+        println!("reproduces the paper: SPRING wins in high dimension");
+    } else {
+        println!("note: ENGD-W won this run — try more steps (paper gives 10000s budgets)");
+    }
+    Ok(())
+}

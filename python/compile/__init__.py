@@ -1,0 +1,13 @@
+"""Build-time compile package: JAX model (L2) + Pallas kernels (L1) + AOT lowering.
+
+Everything in this package runs ONCE at build time (`make artifacts`). The Rust
+coordinator loads the resulting HLO-text artifacts through PJRT and never
+imports Python again.
+
+The paper's experiments run in double precision; we enable x64 globally before
+any jax.numpy import so every artifact is f64.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

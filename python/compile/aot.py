@@ -1,0 +1,217 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not a serialized ``HloModuleProto``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--problems a,b,c | --full]
+
+Outputs:
+    <out>/<problem>/<artifact>.hlo.txt
+    <out>/manifest.json     — shapes/dtypes/arg order per artifact; the Rust
+                              runtime is entirely manifest-driven.
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .problems import FULL_SET, PROBLEMS, QUICK_SET, Problem
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function to HLO text (return_tuple=True; the Rust side
+    unwraps with ``to_tuple*``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def artifact_registry(p: Problem):
+    """Artifact name → (fn, [(arg_name, shape), ...], [out_name, ...]).
+
+    All dtypes are f64. Scalars have shape ().
+    """
+    ni, nb, n, pp, d, m = (
+        p.n_interior, p.n_boundary, p.n_total, p.n_params, p.dim, p.n_eval)
+    theta = ("theta", (pp,))
+    xi = ("x_interior", (ni, d))
+    xb = ("x_boundary", (nb, d))
+
+    reg = {
+        "loss": (
+            lambda t, a, b: (model.loss(t, a, b, p),),
+            [theta, xi, xb],
+            ["loss"],
+        ),
+        "grad": (
+            lambda t, a, b: model.loss_and_grad(t, a, b, p),
+            [theta, xi, xb],
+            ["loss", "grad"],
+        ),
+        "u_pred": (
+            lambda t, x: (model.u_pred(t, x, p),),
+            [theta, ("x_eval", (m, d))],
+            ["u"],
+        ),
+        "residuals_jacobian": (
+            lambda t, a, b: model.residuals_and_jacobian(t, a, b, p),
+            [theta, xi, xb],
+            ["r", "jacobian"],
+        ),
+        "kernel": (
+            lambda t, a, b: model.kernel_matrix(t, a, b, p),
+            [theta, xi, xb],
+            ["kernel", "r"],
+        ),
+        "engd_w_dir": (
+            lambda t, a, b, lam: model.engd_w_direction(t, a, b, lam, p),
+            [theta, xi, xb, ("damping", ())],
+            ["phi", "loss", "r_norm2"],
+        ),
+        "spring_dir": (
+            lambda t, ph, a, b, lam, mu: model.spring_direction(
+                t, ph, a, b, lam, mu, p),
+            [theta, ("phi_prev", (pp,)), xi, xb, ("damping", ()),
+             ("momentum", ())],
+            ["phi_raw", "loss", "r_norm2"],
+        ),
+        "engd_w_step": (
+            lambda t, a, b, lam, eta: model.engd_w_step(t, a, b, lam, eta, p),
+            [theta, xi, xb, ("damping", ()), ("lr", ())],
+            ["theta_next", "loss", "r_norm2"],
+        ),
+        "spring_step": (
+            lambda t, ph, a, b, lam, mu, eta, bias: model.spring_step(
+                t, ph, a, b, lam, mu, eta, bias, p),
+            [theta, ("phi_prev", (pp,)), xi, xb, ("damping", ()),
+             ("momentum", ()), ("lr", ()), ("bias", ())],
+            ["theta_next", "phi_raw", "loss", "r_norm2"],
+        ),
+        "jtv": (
+            lambda t, a, b, v: (model.jtv(t, a, b, v, p),),
+            [theta, xi, xb, ("v", (n,))],
+            ["jtv"],
+        ),
+        "jv": (
+            lambda t, a, b, w: (model.jv(t, a, b, w, p),),
+            [theta, xi, xb, ("w", (pp,))],
+            ["jv"],
+        ),
+    }
+    return reg
+
+
+# Which artifacts each problem gets. Batch-size sweep variants only need the
+# decomposed path (Rust owns the linear algebra there); the main problems get
+# the full set including the fused hot-path steps.
+CORE = ["loss", "grad", "u_pred", "residuals_jacobian"]
+FULL = CORE + [
+    "kernel", "engd_w_dir", "spring_dir", "engd_w_step", "spring_step",
+    "jtv", "jv",
+]
+
+
+def artifact_set_for(name: str):
+    if "_n" in name and name.split("_n")[-1].isdigit():
+        return CORE
+    return FULL
+
+
+def lower_problem(p: Problem, out_dir: str, verbose: bool = True):
+    """Lower all artifacts for one problem; returns manifest entries."""
+    os.makedirs(os.path.join(out_dir, p.name), exist_ok=True)
+    reg = artifact_registry(p)
+    entries = {}
+    for art in artifact_set_for(p.name):
+        fn, args, outs = reg[art]
+        t0 = time.time()
+        specs = [_spec(shape) for _, shape in args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        rel = os.path.join(p.name, f"{art}.hlo.txt")
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        out_shapes = [
+            list(s.shape) for s in jax.eval_shape(fn, *specs)
+        ]
+        entries[art] = {
+            "file": rel,
+            "args": [{"name": n, "shape": list(s)} for n, s in args],
+            "outputs": [
+                {"name": n, "shape": s} for n, s in zip(outs, out_shapes)
+            ],
+        }
+        if verbose:
+            print(f"  {p.name}/{art}: {len(text)/1e6:.2f} MB HLO, "
+                  f"{time.time()-t0:.1f}s")
+    return entries
+
+
+def build(out_dir: str, problem_names, verbose: bool = True):
+    manifest = {"dtype": "f64", "problems": {}}
+    for name in problem_names:
+        p = PROBLEMS[name]
+        if verbose:
+            print(f"[aot] {name}: d={p.dim} P={p.n_params} "
+                  f"N={p.n_interior}+{p.n_boundary}")
+        entries = lower_problem(p, out_dir, verbose)
+        manifest["problems"][name] = {
+            "dim": p.dim,
+            "arch": p.arch,
+            "n_params": p.n_params,
+            "n_interior": p.n_interior,
+            "n_boundary": p.n_boundary,
+            "n_eval": p.n_eval,
+            "interior_weight": p.interior_weight,
+            "boundary_weight": p.boundary_weight,
+            "pde": p.pde,
+            "artifacts": entries,
+        }
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"[aot] wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--problems", default=None,
+                    help="comma-separated problem names (default: quick set)")
+    ap.add_argument("--full", action="store_true",
+                    help="also build paper-scale architectures/batches")
+    args = ap.parse_args()
+    if args.problems:
+        names = args.problems.split(",")
+        for n in names:
+            if n not in PROBLEMS:
+                raise SystemExit(
+                    f"unknown problem {n!r}; have {sorted(PROBLEMS)}")
+    else:
+        names = FULL_SET if args.full else QUICK_SET
+    t0 = time.time()
+    build(args.out, names)
+    print(f"[aot] total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

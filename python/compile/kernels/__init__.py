@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU; see DESIGN.md §Hardware-Adaptation)."""
+
+from .gram import gram
+from .matmul import matmul
+
+__all__ = ["gram", "matmul"]

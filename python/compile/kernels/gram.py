@@ -1,0 +1,110 @@
+"""Tiled Gram (kernel-matrix) Pallas kernel: ``K = A @ A.T``.
+
+This is the per-iteration hot-spot of ENGD-W (paper §3.1): forming the
+``N x N`` neural-tangent-kernel matrix ``J J^T`` costs ``O(N^2 P)`` and
+dominates each optimization step once the Woodbury identity removes the
+``O(P^3)`` solve.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * the grid iterates over (row-tile ``i``, col-tile ``j``, reduction-tile
+    ``k``); ``BlockSpec``s stage ``(TILE_N, TILE_P)`` panels of ``A`` from HBM
+    into VMEM, and the ``(TILE_N, TILE_N)`` output tile lives in VMEM as the
+    accumulator across the ``k`` loop,
+  * the inner product is a plain dense matmul, i.e. exactly the shape the MXU
+    systolic array wants,
+  * with ``symmetric=True`` tiles strictly above the diagonal are skipped and
+    mirrored afterwards, halving the FLOPs — the tile-level analogue of a
+    ``syrk``.
+
+VMEM footprint per grid step: ``(2*TILE_N*TILE_P + TILE_N^2) * itemsize``
+bytes — see DESIGN.md §Perf for the table. Default tiles (256, 2048) give
+8.9 MB f64 (< 16 MiB VMEM) and, equally important for the interpret-mode
+CPU path, a *small grid*: each grid step costs fixed interpreter overhead,
+so (2, 2, 5) = 20 steps on the 5d problem instead of (7, 7, 79) = 3871 with
+small tiles (measured 54 s → sub-second; EXPERIMENTS.md §Perf).
+
+The kernel is lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so correctness (and the artifact pipeline) runs
+through the interpreter while the tiling structure is what a real TPU build
+would compile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, y_ref, o_ref, *, symmetric: bool):
+    """One (i, j, k) grid step: accumulate ``X_i @ Y_j^T`` into ``O_ij``."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    if symmetric:
+        # Only the lower triangle of tiles is computed; `gram` mirrors it.
+        @pl.when(i >= j)
+        def _acc():
+            o_ref[...] += jnp.dot(
+                x_ref[...], y_ref[...].T, preferred_element_type=o_ref.dtype
+            )
+    else:
+        o_ref[...] += jnp.dot(
+            x_ref[...], y_ref[...].T, preferred_element_type=o_ref.dtype
+        )
+
+
+def _pad_to(a, rows, cols):
+    n, p = a.shape
+    if n == rows and p == cols:
+        return a
+    return jnp.pad(a, ((0, rows - n), (0, cols - p)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_n", "tile_p", "symmetric", "interpret")
+)
+def gram(a, *, tile_n: int = 256, tile_p: int = 2048, symmetric: bool = True,
+         interpret: bool = True):
+    """Compute ``K = A @ A.T`` with a tiled Pallas kernel.
+
+    Args:
+      a: ``(N, P)`` array (the residual Jacobian ``J_k`` in ENGD-W).
+      tile_n: row-tile size (output tiles are ``tile_n x tile_n``).
+      tile_p: reduction-tile size along the parameter dimension.
+      symmetric: compute only the lower tile-triangle and mirror.
+      interpret: run through the Pallas interpreter (required on CPU).
+
+    Returns:
+      ``(N, N)`` Gram matrix with ``a``'s dtype.
+    """
+    a = jnp.asarray(a)
+    n, p = a.shape
+    tile_n = min(tile_n, max(8, n))
+    tile_p = min(tile_p, max(8, p))
+    n_pad = pl.cdiv(n, tile_n) * tile_n
+    p_pad = pl.cdiv(p, tile_p) * tile_p
+    a_p = _pad_to(a, n_pad, p_pad)
+
+    grid = (n_pad // tile_n, n_pad // tile_n, p_pad // tile_p)
+    out = pl.pallas_call(
+        functools.partial(_gram_kernel, symmetric=symmetric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, tile_p), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile_n, tile_p), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, tile_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), a.dtype),
+        interpret=interpret,
+    )(a_p, a_p)
+
+    if symmetric:
+        lower = jnp.tril(out)
+        out = lower + lower.T - jnp.diag(jnp.diag(out))
+    return out[:n, :n]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest/hypothesis sweeps assert the
+Pallas kernels match these to tight tolerances across shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def gram_ref(a):
+    """Kernel (Gram/NTK) matrix ``K = A @ A.T`` for ``A in R^{N x P}``.
+
+    This is the sample-space matrix of the paper's eq. (5): with ``A = J_k``
+    (the residual Jacobian), ``K = J_k J_k^T`` is the matrix whose damped
+    inverse defines the ENGD-W / SPRING direction.
+    """
+    return jnp.asarray(a) @ jnp.asarray(a).T
+
+
+def matmul_ref(a, b):
+    """Plain dense product ``A @ B`` (used for sketches ``K Ω`` and map-backs)."""
+    return jnp.asarray(a) @ jnp.asarray(b)

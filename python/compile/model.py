@@ -1,0 +1,308 @@
+"""Layer-2 JAX model: PINN ansatz, PDE residuals, Jacobians, and the fused
+ENGD-W / SPRING step computations (paper eqs. 4–8, Algorithm 1).
+
+Parameters are a single flat f64 vector θ ∈ R^P so the Rust coordinator can
+treat them as an opaque buffer. The layout (per layer: row-major W, then b) is
+mirrored by ``rust/src/pde/params.rs`` and cross-checked in integration tests.
+
+All functions here are pure and jit-lowerable; ``aot.py`` lowers a closed set
+of them per problem to HLO text for the PJRT runtime.
+"""
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import linalg
+from .kernels import gram
+from .problems import Problem
+
+
+def _gram(j):
+    """Kernel matrix via the Pallas gram kernel, with interpret-friendly
+    tiles.
+
+    On a real TPU the default (256, 2048) tiling balances VMEM footprint and
+    MXU occupancy (see kernels/gram.py). Under interpret=True on CPU every
+    grid step pays fixed interpreter overhead, so the artifacts use the
+    coarsest genuine schedule: one row-tile, large reduction tiles
+    (measured 0.93 s → 0.25 s on the 5d kernel; EXPERIMENTS.md §Perf).
+    """
+    n = j.shape[0]
+    return gram(j, tile_n=max(8, n), tile_p=8192)
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter MLP
+# ---------------------------------------------------------------------------
+
+def param_count(arch: List[int]) -> int:
+    return sum(i * o + o for i, o in zip(arch[:-1], arch[1:]))
+
+
+def unflatten(theta, arch: List[int]) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Split flat θ into per-layer (W, b); W is (out, in) row-major."""
+    layers = []
+    offset = 0
+    for fan_in, fan_out in zip(arch[:-1], arch[1:]):
+        w = theta[offset:offset + fan_in * fan_out].reshape(fan_out, fan_in)
+        offset += fan_in * fan_out
+        b = theta[offset:offset + fan_out]
+        offset += fan_out
+        layers.append((w, b))
+    return layers
+
+
+def init_params(key, arch: List[int]) -> jnp.ndarray:
+    """Tanh-MLP init (PyTorch-default-like U(-1/√fan_in, 1/√fan_in)).
+
+    Matches the paper's PyTorch baseline initialization so the early loss
+    trajectories are comparable.
+    """
+    chunks = []
+    for fan_in, fan_out in zip(arch[:-1], arch[1:]):
+        key, wk, bk = jax.random.split(key, 3)
+        bound = 1.0 / math.sqrt(fan_in)
+        chunks.append(
+            jax.random.uniform(wk, (fan_out * fan_in,), jnp.float64,
+                               -bound, bound))
+        chunks.append(
+            jax.random.uniform(bk, (fan_out,), jnp.float64, -bound, bound))
+    return jnp.concatenate(chunks)
+
+
+def mlp_forward(theta, x, arch: List[int]):
+    """u_θ(x) for a single point x ∈ R^d. Tanh activations, linear head."""
+    h = x
+    layers = unflatten(theta, arch)
+    for w, b in layers[:-1]:
+        h = jnp.tanh(w @ h + b)
+    w, b = layers[-1]
+    return (w @ h + b)[0]
+
+
+def u_batch(theta, xs, arch: List[int]):
+    """Vectorized forward pass: (M, d) -> (M,)."""
+    return jax.vmap(lambda x: mlp_forward(theta, x, arch))(xs)
+
+
+# ---------------------------------------------------------------------------
+# PDE operator: Laplacian via forward-over-reverse (Hessian-vector probes)
+# ---------------------------------------------------------------------------
+
+def laplacian(theta, x, arch: List[int], coords: int | None = None):
+    """Δu_θ(x) = Σ_i (H e_i)_i with H e_i from jvp-of-grad.
+
+    Forward-over-reverse costs O(d) network evaluations — the same
+    Taylor-mode-flavoured evaluation strategy the paper cites ([2], §4
+    "Implementation"). vmapped over the coordinate basis. ``coords`` limits
+    the sum to the first ``coords`` coordinates (the spatial Laplacian of the
+    heat operator, where the last coordinate is time).
+    """
+    d = x.shape[0]
+    n_coords = d if coords is None else coords
+    grad_u = jax.grad(lambda y: mlp_forward(theta, y, arch))
+
+    def hvp_diag(i):
+        e = jnp.zeros(d, x.dtype).at[i].set(1.0)
+        return jax.jvp(grad_u, (x,), (e,))[1][i]
+
+    return jnp.sum(jax.vmap(hvp_diag)(jnp.arange(n_coords)))
+
+
+def time_derivative(theta, x, arch: List[int]):
+    """∂u/∂t with time as the last coordinate (one JVP)."""
+    d = x.shape[0]
+    e_t = jnp.zeros(d, x.dtype).at[d - 1].set(1.0)
+    return jax.jvp(lambda y: mlp_forward(theta, y, arch), (x,), (e_t,))[1]
+
+
+def pde_operator(theta, x, problem: Problem):
+    """L u_θ at one point: the residual operator minus the forcing.
+
+    * "poisson": −Δu − f      (paper §2, −Δu = f)
+    * "heat":    ∂_t u − Δ_x u − f   (time = last coordinate)
+    """
+    if problem.operator == "poisson":
+        return -laplacian(theta, x, problem.arch) - problem.f(x)
+    if problem.operator == "heat":
+        return (time_derivative(theta, x, problem.arch)
+                - laplacian(theta, x, problem.arch, coords=problem.dim - 1)
+                - problem.f(x))
+    raise ValueError(f"unknown operator {problem.operator!r}")
+
+
+# ---------------------------------------------------------------------------
+# Residuals, loss, Jacobian (paper §3 notation)
+# ---------------------------------------------------------------------------
+
+def residuals(theta, x_int, x_bnd, problem: Problem):
+    """r(θ) = [r_Ω; r_∂Ω] with the paper's 1/√N scaling, so L = ½‖r‖².
+
+    r_Ω,i  = √(ω_Ω/N_Ω)   · (-Δu_θ(x_i) - f(x_i))
+    r_∂Ω,j = √(ω_∂Ω/N_∂Ω) · (u_θ(x_j) - g(x_j))
+    """
+    arch = problem.arch
+    r_int = jax.vmap(lambda x: pde_operator(theta, x, problem))(
+        x_int) * math.sqrt(problem.interior_weight / problem.n_interior)
+
+    u_b = u_batch(theta, x_bnd, arch)
+    g_vals = jax.vmap(problem.g)(x_bnd)
+    r_bnd = (u_b - g_vals) * math.sqrt(
+        problem.boundary_weight / problem.n_boundary)
+    return jnp.concatenate([r_int, r_bnd])
+
+
+def loss(theta, x_int, x_bnd, problem: Problem):
+    """L(θ) = ½‖r(θ)‖² (paper §3)."""
+    r = residuals(theta, x_int, x_bnd, problem)
+    return 0.5 * jnp.vdot(r, r)
+
+
+def _residual_interior_one(theta, x, problem: Problem):
+    """Single-sample interior residual (scalar)."""
+    scale = math.sqrt(problem.interior_weight / problem.n_interior)
+    return pde_operator(theta, x, problem) * scale
+
+
+def _residual_boundary_one(theta, x, problem: Problem):
+    """Single-sample boundary residual (scalar)."""
+    scale = math.sqrt(problem.boundary_weight / problem.n_boundary)
+    return (mlp_forward(theta, x, problem.arch) - problem.g(x)) * scale
+
+
+def residuals_and_jacobian(theta, x_int, x_bnd, problem: Problem):
+    """(r, J) with J = ∂r/∂θ ∈ R^{N×P} — the object Woodbury lives on.
+
+    Row i of J is the *per-sample* gradient ∇_θ r_i, so we compute it as
+    vmap(value_and_grad(single-sample residual)) — one batched backward pass
+    whose cost tracks a single full-batch gradient. The naive
+    `jacrev(residuals)` pulls N full-batch VJPs instead and is ~N× slower
+    (measured 10 s vs 0.1 s on the 5d problem; EXPERIMENTS.md §Perf).
+    """
+    vg_int = jax.vmap(
+        jax.value_and_grad(lambda t, x: _residual_interior_one(t, x, problem)),
+        in_axes=(None, 0),
+    )
+    r_int, j_int = vg_int(theta, x_int)
+    vg_bnd = jax.vmap(
+        jax.value_and_grad(lambda t, x: _residual_boundary_one(t, x, problem)),
+        in_axes=(None, 0),
+    )
+    r_bnd, j_bnd = vg_bnd(theta, x_bnd)
+    return (
+        jnp.concatenate([r_int, r_bnd]),
+        jnp.concatenate([j_int, j_bnd], axis=0),
+    )
+
+
+def loss_and_grad(theta, x_int, x_bnd, problem: Problem):
+    """(L, ∇L) without materializing J — the SGD/Adam path."""
+    return jax.value_and_grad(
+        lambda t: loss(t, x_int, x_bnd, problem))(theta)
+
+
+def kernel_matrix(theta, x_int, x_bnd, problem: Problem,
+                  use_pallas: bool = True):
+    """(K, r) with K = J Jᵀ formed by the Pallas gram kernel (paper §3.1)."""
+    r, j = residuals_and_jacobian(theta, x_int, x_bnd, problem)
+    k = _gram(j) if use_pallas else j @ j.T
+    return k, r
+
+
+# ---------------------------------------------------------------------------
+# Fused natural-gradient directions and steps (paper eqs. 5, 7–8, Alg. 1)
+# ---------------------------------------------------------------------------
+
+def _damped_kernel_solve(k, lam, rhs):
+    """Solve (K + λI) a = rhs via our pure-HLO Cholesky (K is PSD).
+
+    ``jnp.linalg.cholesky`` would lower to a LAPACK typed-FFI custom-call the
+    pinned PJRT runtime rejects; see ``compile.linalg``.
+    """
+    return linalg.damped_solve(k, lam, rhs)
+
+
+def engd_w_direction(theta, x_int, x_bnd, lam, problem: Problem):
+    """φ = Jᵀ (J Jᵀ + λI)⁻¹ r — ENGD-W, the Woodbury form of eq. (4).
+
+    Returns (φ, loss, ‖r‖²). One XLA program: Jacobian, Pallas gram, damped
+    Cholesky solve, map-back.
+    """
+    r, j = residuals_and_jacobian(theta, x_int, x_bnd, problem)
+    k = _gram(j)
+    a = _damped_kernel_solve(k, lam, r)
+    phi = j.T @ a
+    return phi, 0.5 * jnp.vdot(r, r), jnp.vdot(r, r)
+
+
+def spring_direction(theta, phi_prev, x_int, x_bnd, lam, mu,
+                     problem: Problem):
+    """Raw SPRING update (paper eq. 8, Alg. 1 lines 6–7 plus the μφ shift):
+
+        ζ = r − μ J φ_{k−1}
+        φ_raw = μ φ_{k−1} + Jᵀ (J Jᵀ + λI)⁻¹ ζ
+
+    The 1/√(1−μ^{2k}) bias correction (line 8) is a scalar rescale applied by
+    the Rust coordinator, which also owns the φ state between steps.
+    Returns (φ_raw, loss, ‖r‖²).
+    """
+    r, j = residuals_and_jacobian(theta, x_int, x_bnd, problem)
+    k = _gram(j)
+    zeta = r - mu * (j @ phi_prev)
+    a = _damped_kernel_solve(k, lam, zeta)
+    phi_raw = mu * phi_prev + j.T @ a
+    return phi_raw, 0.5 * jnp.vdot(r, r), jnp.vdot(r, r)
+
+
+def engd_w_step(theta, x_int, x_bnd, lam, eta, problem: Problem):
+    """Fully fused fixed-learning-rate ENGD-W step: θ' = θ − η φ.
+
+    The single-artifact hot path: one PJRT execute per training step.
+    Returns (θ', loss, ‖r‖²).
+    """
+    phi, l, rn = engd_w_direction(theta, x_int, x_bnd, lam, problem)
+    return theta - eta * phi, l, rn
+
+
+def spring_step(theta, phi_prev, x_int, x_bnd, lam, mu, eta, bias,
+                problem: Problem):
+    """Fully fused fixed-learning-rate SPRING step (Alg. 1 lines 6–9).
+
+    ``bias`` is the precomputed 1/√(1−μ^{2k}) factor (Rust tracks k).
+    Returns (θ', φ_raw, loss, ‖r‖²); the coordinator stores φ_raw (Adam-style
+    bias correction — the correction scales the θ update, not the state; see
+    DESIGN.md for the Algorithm-1-literal alternative).
+    """
+    phi_raw, l, rn = spring_direction(
+        theta, phi_prev, x_int, x_bnd, lam, mu, problem)
+    return theta - eta * bias * phi_raw, phi_raw, l, rn
+
+
+# ---------------------------------------------------------------------------
+# Jacobian-vector map-backs for the decomposed (Rust-side linalg) path
+# ---------------------------------------------------------------------------
+
+def jtv(theta, x_int, x_bnd, v, problem: Problem):
+    """Jᵀ v ∈ R^P via a single VJP (no J materialization)."""
+    _, vjp_fn = jax.vjp(
+        lambda t: residuals(t, x_int, x_bnd, problem), theta)
+    return vjp_fn(v)[0]
+
+
+def jv(theta, x_int, x_bnd, w, problem: Problem):
+    """J w ∈ R^N via a single JVP."""
+    return jax.jvp(
+        lambda t: residuals(t, x_int, x_bnd, problem), (theta,), (w,))[1]
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+def u_pred(theta, xs, problem: Problem):
+    """Network prediction on the evaluation set; the exact solution and the
+    L2-error reduction live in Rust (``rust/src/pde``)."""
+    return u_batch(theta, xs, problem.arch)

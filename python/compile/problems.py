@@ -1,0 +1,264 @@
+"""Problem definitions: the paper's Poisson benchmarks (§4, Appendix A).
+
+Each problem is a Poisson equation ``-Δu = f`` on the unit cube ``[0,1]^d``
+with Dirichlet boundary data ``g`` and a known exact solution ``u_star`` used
+for the L2-error evaluation. The definitions are mirrored in Rust
+(``rust/src/pde/problems.rs``) and cross-checked by an integration test; the
+Python side is the single source of truth for the *artifacts* (shapes, batch
+sizes, architectures) via the manifest.
+
+Paper setups:
+  * 5d  (A.2):  -Δu = π² Σ cos(πx_i),  g = Σ cos(πx_i),  arch 5-64-64-48-48-1
+                (P = 10 065, exactly the paper's network).
+  * 10d (A.3):  -Δu = 0, harmonic boundary g = Σ_{i≤d/2} x_{2i-1} x_{2i},
+                paper arch 10-256-256-128-128-1 (P = 118 145).
+  * 100d (A.4): same harmonic family at d=100, paper arch
+                100-768-768-512-512-1 (P = 1 325 057).
+
+Scaled variants (DESIGN.md §Substitutions): CPU-PJRT budgets require smaller
+batches everywhere and smaller hidden widths for d ∈ {10, 100}; the `*_full`
+variants keep the paper's exact architecture and batch sizes for opt-in runs.
+"""
+
+import dataclasses
+import math
+from typing import Callable, Dict, List
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """A Poisson problem instance plus the discretization used for artifacts."""
+
+    name: str
+    dim: int
+    arch: List[int]           # layer widths, arch[0] == dim, arch[-1] == 1
+    n_interior: int           # N_Ω   (per-batch interior collocation points)
+    n_boundary: int           # N_∂Ω  (per-batch boundary points)
+    n_eval: int               # fixed L2-evaluation set size
+    f: Callable               # forcing, (d,) -> scalar  (RHS of -Δu = f)
+    g: Callable               # boundary data, (d,) -> scalar
+    u_star: Callable          # exact solution, (d,) -> scalar
+    pde: str = ""             # exact-solution family tag, mirrored in Rust
+    operator: str = "poisson"  # PDE operator: "poisson" (-Δu = f) or "heat"
+                               # (∂_t u - Δ_x u = f, last coordinate = time)
+    interior_weight: float = 1.0   # |Ω| factor in the loss (paper §3 uses 1)
+    boundary_weight: float = 1.0   # |∂Ω| factor (paper §3 uses 1)
+
+    @property
+    def n_total(self) -> int:
+        return self.n_interior + self.n_boundary
+
+    @property
+    def n_params(self) -> int:
+        p = 0
+        for fan_in, fan_out in zip(self.arch[:-1], self.arch[1:]):
+            p += fan_in * fan_out + fan_out
+        return p
+
+
+def _cosine_sum(x):
+    """u*(x) = Σ_i cos(π x_i) — the paper's 5d solution."""
+    return jnp.sum(jnp.cos(jnp.pi * x))
+
+
+def _cosine_sum_rhs(x):
+    """-Δ u* = π² Σ_i cos(π x_i)."""
+    return jnp.pi ** 2 * jnp.sum(jnp.cos(jnp.pi * x))
+
+
+def _harmonic_poly(x):
+    """u*(x) = Σ_{i=1}^{d/2} x_{2i-1} x_{2i}; harmonic, so -Δu* = 0."""
+    return jnp.sum(x[0::2] * x[1::2])
+
+
+def _zero(x):
+    return jnp.zeros(())
+
+
+def _sqnorm(x):
+    """u*(x) = ||x||² with -Δu* = -2d (the §4 variant of the 100d problem)."""
+    return jnp.sum(x * x)
+
+
+def _sqnorm_rhs(x):
+    d = x.shape[0]
+    return jnp.full((), -2.0 * d)
+
+
+def _sine_product(x):
+    """u*(x) = Π_i sin(π x_i) — classic 2d quickstart problem, zero boundary."""
+    return jnp.prod(jnp.sin(jnp.pi * x))
+
+
+def _heat_product(x):
+    """u*(x, t) = e^{-2π²t} sin(πx₀) sin(πx₁); solves u_t = Δu (heat2d).
+
+    The last coordinate is time; boundary/initial data are supervised with
+    u* on every face of the space-time cylinder (standard for PINN benchmarks
+    with known solutions — the top face adds harmless extra supervision).
+    """
+    return (jnp.exp(-2.0 * jnp.pi**2 * x[-1])
+            * jnp.sin(jnp.pi * x[0]) * jnp.sin(jnp.pi * x[1]))
+
+
+def _sine_product_rhs(x):
+    d = x.shape[0]
+    return d * jnp.pi ** 2 * jnp.prod(jnp.sin(jnp.pi * x))
+
+
+def _make_problems() -> Dict[str, Problem]:
+    problems = [
+        # Small 2d problem: quickstart + large-batch randomization experiments
+        # (small P keeps J transfers cheap at N = 4096).
+        Problem(
+            name="poisson2d",
+            dim=2,
+            arch=[2, 32, 32, 1],
+            n_interior=128,
+            n_boundary=32,
+            n_eval=512,
+            f=_sine_product_rhs,
+            g=_zero,
+            u_star=_sine_product,
+            pde="sine_product",
+        ),
+        # The paper's 5d problem with its exact architecture (P = 10 065).
+        Problem(
+            name="poisson5d",
+            dim=5,
+            arch=[5, 64, 64, 48, 48, 1],
+            n_interior=384,
+            n_boundary=64,
+            n_eval=2000,
+            f=_cosine_sum_rhs,
+            g=_cosine_sum,
+            u_star=_cosine_sum,
+            pde="cosine_sum",
+        ),
+        # Paper-scale 5d batch (N = 3500 as in Fig. 2) — opt-in via --full.
+        Problem(
+            name="poisson5d_full",
+            dim=5,
+            arch=[5, 64, 64, 48, 48, 1],
+            n_interior=3000,
+            n_boundary=500,
+            n_eval=2000,
+            f=_cosine_sum_rhs,
+            g=_cosine_sum,
+            u_star=_cosine_sum,
+            pde="cosine_sum",
+        ),
+        # 10d harmonic problem, width-scaled (paper arch is opt-in below).
+        Problem(
+            name="poisson10d",
+            dim=10,
+            arch=[10, 96, 96, 64, 64, 1],
+            n_interior=256,
+            n_boundary=64,
+            n_eval=2000,
+            f=_zero,
+            g=_harmonic_poly,
+            u_star=_harmonic_poly,
+            pde="harmonic",
+        ),
+        Problem(
+            name="poisson10d_full",
+            dim=10,
+            arch=[10, 256, 256, 128, 128, 1],
+            n_interior=3000,
+            n_boundary=1000,
+            n_eval=2000,
+            f=_zero,
+            g=_harmonic_poly,
+            u_star=_harmonic_poly,
+            pde="harmonic",
+        ),
+        # 100d harmonic problem (Appendix A.4 family), width-scaled.
+        # Fig. 6b tracks d_eff at N = 150; we use N = 128 + 32 = 160.
+        Problem(
+            name="poisson100d",
+            dim=100,
+            arch=[100, 192, 192, 128, 128, 1],
+            n_interior=128,
+            n_boundary=32,
+            n_eval=1000,
+            f=_zero,
+            g=_harmonic_poly,
+            u_star=_harmonic_poly,
+            pde="harmonic",
+        ),
+        # §4's alternative 100d setup: f = -2d, u* = ||x||².
+        Problem(
+            name="poisson100d_sq",
+            dim=100,
+            arch=[100, 192, 192, 128, 128, 1],
+            n_interior=128,
+            n_boundary=32,
+            n_eval=1000,
+            f=_sqnorm_rhs,
+            g=_sqnorm,
+            u_star=_sqnorm,
+            pde="sqnorm",
+        ),
+    ]
+    # Beyond the paper: a time-dependent problem exercising the "heat"
+    # operator path (u_t - Δ_x u = 0 on [0,1]² × [0,1]).
+    problems.append(
+        Problem(
+            name="heat2d",
+            dim=3,
+            arch=[3, 48, 48, 1],
+            n_interior=192,
+            n_boundary=64,
+            n_eval=1000,
+            f=_zero,
+            g=_heat_product,
+            u_star=_heat_product,
+            pde="heat_product",
+            operator="heat",
+        )
+    )
+    # Large-batch variants for the randomization experiments (Fig. 4/9/10):
+    # same PDE/architecture as poisson5d, batch sizes swept upward.
+    for n in (512, 1024, 2048):
+        ni = int(n * 6 / 7)
+        problems.append(
+            dataclasses.replace(
+                problems[1],
+                name=f"poisson5d_n{n}",
+                n_interior=ni,
+                n_boundary=n - ni,
+            )
+        )
+    # 2d large-batch variants: P is tiny so N = 4096 stays cheap on CPU.
+    for n in (1024, 4096):
+        problems.append(
+            dataclasses.replace(
+                problems[0],
+                name=f"poisson2d_n{n}",
+                n_interior=int(n * 0.8),
+                n_boundary=n - int(n * 0.8),
+            )
+        )
+    return {p.name: p for p in problems}
+
+
+PROBLEMS: Dict[str, Problem] = _make_problems()
+
+# Default artifact sets: the quick set is what `make artifacts` builds; the
+# full set adds the paper-scale architectures/batches.
+QUICK_SET = [
+    "poisson2d",
+    "heat2d",
+    "poisson5d",
+    "poisson10d",
+    "poisson100d",
+    "poisson5d_n512",
+    "poisson5d_n1024",
+    "poisson5d_n2048",
+    "poisson2d_n1024",
+    "poisson2d_n4096",
+]
+FULL_SET = QUICK_SET + ["poisson5d_full", "poisson10d_full", "poisson100d_sq"]

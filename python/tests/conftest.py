@@ -1,0 +1,11 @@
+"""Shared pytest fixtures: x64 mode is enabled by the compile package import."""
+
+import jax
+import pytest
+
+import compile  # noqa: F401  (enables jax_enable_x64)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(20250710)

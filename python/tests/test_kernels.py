@@ -1,0 +1,95 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including non-tile-multiples and degenerate sizes)
+and dtypes; assert_allclose against ref.py is the core correctness signal for
+the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, matmul
+from compile.kernels.ref import gram_ref, matmul_ref
+
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float64).astype(dtype)
+
+
+def _tol(dtype, scale):
+    # Reduction-order noise grows with the contraction length.
+    return (1e-5 if dtype == jnp.float32 else 1e-11) * max(scale, 1.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    p=st.integers(1, 300),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(n, p, dtype, seed):
+    a = _rand(jax.random.PRNGKey(seed), (n, p), dtype)
+    got = gram(a)
+    want = gram_ref(a)
+    assert got.dtype == a.dtype
+    np.testing.assert_allclose(got, want, rtol=_tol(dtype, p ** 0.5), atol=_tol(dtype, p))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 300),
+    n=st.integers(1, 150),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, dtype, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = _rand(k1, (m, k), dtype)
+    b = _rand(k2, (k, n), dtype)
+    got = matmul(a, b)
+    want = matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=_tol(dtype, k ** 0.5), atol=_tol(dtype, k))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(2, 120),
+    p=st.integers(2, 200),
+    tile_n=st.sampled_from([8, 16, 64, 128]),
+    tile_p=st.sampled_from([8, 32, 128, 256]),
+)
+def test_gram_tiling_invariance(n, p, tile_n, tile_p):
+    """The result must not depend on the BlockSpec tiling."""
+    a = jax.random.normal(jax.random.PRNGKey(7), (n, p), jnp.float64)
+    base = gram(a)
+    tiled = gram(a, tile_n=tile_n, tile_p=tile_p)
+    np.testing.assert_allclose(base, tiled, rtol=1e-11, atol=1e-11)
+
+
+def test_gram_symmetric_flag_consistency():
+    a = jax.random.normal(jax.random.PRNGKey(3), (70, 130), jnp.float64)
+    sym = gram(a, symmetric=True)
+    full = gram(a, symmetric=False)
+    np.testing.assert_allclose(sym, full, rtol=1e-11, atol=1e-11)
+    # Exact symmetry of the mirrored output.
+    np.testing.assert_array_equal(sym, sym.T)
+
+
+def test_gram_is_psd():
+    a = jax.random.normal(jax.random.PRNGKey(5), (40, 80), jnp.float64)
+    w = jnp.linalg.eigvalsh(gram(a))
+    assert float(w.min()) > -1e-9
+
+
+def test_matmul_rejects_shape_mismatch():
+    a = jnp.zeros((3, 4))
+    b = jnp.zeros((5, 2))
+    with pytest.raises(AssertionError):
+        matmul(a, b)

@@ -1,0 +1,61 @@
+"""Pure-HLO Cholesky/triangular solves vs jnp.linalg (compile.linalg).
+
+These routines back the fused ENGD-W/SPRING artifacts, so their correctness
+is what makes the single-artifact hot path exact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import linalg
+
+
+def _spd(key, n, cond_boost=0.0):
+    a = jax.random.normal(key, (n, n), jnp.float64)
+    return a @ a.T + (n + cond_boost) * jnp.eye(n)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 80), seed=st.integers(0, 2**31 - 1))
+def test_cholesky_matches_jnp(n, seed):
+    a = _spd(jax.random.PRNGKey(seed), n)
+    np.testing.assert_allclose(
+        linalg.cholesky(a), jnp.linalg.cholesky(a), rtol=1e-9, atol=1e-9
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 80), seed=st.integers(0, 2**31 - 1))
+def test_chol_solve_matches_jnp_solve(n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = _spd(k1, n)
+    b = jax.random.normal(k2, (n,), jnp.float64)
+    np.testing.assert_allclose(
+        linalg.chol_solve(a, b), jnp.linalg.solve(a, b), rtol=1e-7, atol=1e-9
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 60), seed=st.integers(0, 2**31 - 1))
+def test_triangular_solves(n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    l = jnp.tril(jax.random.normal(k1, (n, n), jnp.float64)) + 3 * jnp.eye(n)
+    b = jax.random.normal(k2, (n,), jnp.float64)
+    y = linalg.solve_lower(l, b)
+    np.testing.assert_allclose(l @ y, b, rtol=1e-9, atol=1e-9)
+    x = linalg.solve_upper(l.T, b)
+    np.testing.assert_allclose(l.T @ x, b, rtol=1e-9, atol=1e-9)
+
+
+def test_damped_solve_is_the_engd_system():
+    key = jax.random.PRNGKey(0)
+    j = jax.random.normal(key, (30, 100), jnp.float64)
+    k = j @ j.T  # rank-deficient? no: 30x100 → full row rank w.h.p.
+    lam = 1e-6
+    r = jax.random.normal(key, (30,), jnp.float64)
+    a = linalg.damped_solve(k, lam, r)
+    np.testing.assert_allclose(
+        (k + lam * jnp.eye(30)) @ a, r, rtol=1e-6, atol=1e-8
+    )

@@ -1,0 +1,143 @@
+//! Command-line argument parsing (substrate — clap is unavailable offline).
+//!
+//! Grammar: `engd <command> [--flag value]... [--switch]... [positional]...`
+//! Flags may also be written `--flag=value`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// Switch names the command recognizes (everything else with no value
+    /// is an error — catches typos like `--step 100`).
+    known_switches: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn parse(known_switches: &[&'static str]) -> Result<Self> {
+        Self::parse_from(std::env::args().skip(1).collect(), known_switches)
+    }
+
+    pub fn parse_from(argv: Vec<String>, known_switches: &[&'static str]) -> Result<Self> {
+        let mut args = Args {
+            known_switches: known_switches.to_vec(),
+            ..Default::default()
+        };
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if args.known_switches.contains(&name) {
+                    args.switches.push(name.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        bail!("flag --{name} is missing a value");
+                    }
+                    args.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    bail!("flag --{name} is missing a value");
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, flag: &str, default: &'a str) -> &'a str {
+        self.get(flag).unwrap_or(default)
+    }
+
+    pub fn require(&self, flag: &str) -> Result<&str> {
+        self.get(flag)
+            .ok_or_else(|| anyhow!("missing required flag --{flag}"))
+    }
+
+    pub fn get_f64(&self, flag: &str) -> Result<Option<f64>> {
+        self.get(flag)
+            .map(|s| {
+                s.parse::<f64>()
+                    .map_err(|_| anyhow!("--{flag} expects a number, got '{s}'"))
+            })
+            .transpose()
+    }
+
+    pub fn get_usize(&self, flag: &str) -> Result<Option<usize>> {
+        self.get(flag)
+            .map(|s| {
+                s.parse::<usize>()
+                    .map_err(|_| anyhow!("--{flag} expects an integer, got '{s}'"))
+            })
+            .transpose()
+    }
+
+    /// All flags, for forwarding/validation.
+    pub fn flags(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.flags.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse_from(
+            s.split_whitespace().map(String::from).collect(),
+            &["echo", "full"],
+        )
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse("train --problem poisson5d --steps=100 --echo extra").unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("problem"), Some("poisson5d"));
+        assert_eq!(a.get_usize("steps").unwrap(), Some(100));
+        assert!(a.has("echo"));
+        assert!(!a.has("full"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(parse("train --steps").is_err());
+        assert!(parse("train --steps --echo").is_err());
+    }
+
+    #[test]
+    fn numeric_validation() {
+        let a = parse("x --lr 1e-3").unwrap();
+        assert_eq!(a.get_f64("lr").unwrap(), Some(1e-3));
+        let a = parse("x --lr abc").unwrap();
+        assert!(a.get_f64("lr").is_err());
+    }
+
+    #[test]
+    fn require_reports_flag_name() {
+        let a = parse("train").unwrap();
+        let err = a.require("config").unwrap_err().to_string();
+        assert!(err.contains("--config"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Configuration substrate: JSON + TOML-subset parsers and typed run configs.
+//!
+//! serde/toml are unavailable offline, so both parsers are implemented here
+//! (see DESIGN.md "Offline-dependency constraint").
+
+pub mod json;
+pub mod toml;
+
+pub mod run;
+
+pub use run::{OptimizerConfig, RunConfig};

@@ -1,0 +1,402 @@
+//! Typed run configuration, parsed from `configs/*.toml` (or built in code).
+
+use anyhow::{anyhow, bail, Result};
+
+use super::json::JsonValue;
+
+/// Which optimizer drives the run (paper §4 evaluates all of these).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OptimizerKind {
+    Sgd,
+    Adam,
+    /// Original dense ENGD: forms the P×P Gramian (Müller–Zeinhofer 2023).
+    EngdDense,
+    /// ENGD via the Woodbury/kernel form (paper eq. 5).
+    EngdW,
+    /// SPRING: Woodbury + Kaczmarz momentum (paper Alg. 1).
+    Spring,
+    /// Hessian-free: truncated CG on the Gauss–Newton system (Martens 2010).
+    HessianFree,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sgd" => Self::Sgd,
+            "adam" => Self::Adam,
+            "engd" | "engd_dense" => Self::EngdDense,
+            "engd_w" => Self::EngdW,
+            "spring" => Self::Spring,
+            "hessian_free" | "hf" => Self::HessianFree,
+            _ => bail!("unknown optimizer kind '{s}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sgd => "sgd",
+            Self::Adam => "adam",
+            Self::EngdDense => "engd_dense",
+            Self::EngdW => "engd_w",
+            Self::Spring => "spring",
+            Self::HessianFree => "hessian_free",
+        }
+    }
+}
+
+/// Kernel-solve strategy for ENGD-W / SPRING.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveMode {
+    /// Exact damped Cholesky solve of (JJᵀ + λI).
+    Exact,
+    /// GPU-efficient randomized Nyström (paper Algorithm 2) sketch-and-solve.
+    NystromGpu,
+    /// Standard stable Nyström (Frangella–Tropp–Udell alg. 2.1) baseline.
+    NystromStable,
+    /// Sketch-and-precondition: Nyström-preconditioned CG (paper §3.3's
+    /// discussed-and-rejected alternative; kept for the ablation bench).
+    NystromPcg,
+}
+
+impl SolveMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "exact" => Self::Exact,
+            "nystrom" | "nystrom_gpu" | "gpu" => Self::NystromGpu,
+            "nystrom_stable" | "stable" => Self::NystromStable,
+            "nystrom_pcg" | "pcg" => Self::NystromPcg,
+            _ => bail!("unknown solve mode '{s}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Exact => "exact",
+            Self::NystromGpu => "nystrom_gpu",
+            Self::NystromStable => "nystrom_stable",
+            Self::NystromPcg => "nystrom_pcg",
+        }
+    }
+}
+
+/// Sketch-rank policy for the randomized solves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankPolicy {
+    /// Paper default: sketch = sketch_ratio · N, fixed for the whole run.
+    Fixed,
+    /// Paper §5 future work: grow the sketch until the captured spectral
+    /// tail reaches the damping floor (see `nystrom::adaptive`).
+    Adaptive,
+}
+
+impl RankPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fixed" => Self::Fixed,
+            "adaptive" => Self::Adaptive,
+            _ => bail!("unknown rank policy '{s}'"),
+        })
+    }
+}
+
+/// How SPRING applies the paper's 1/√(1−μ^{2k}) bias correction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BiasMode {
+    /// Adam-style: correction scales the θ update, raw φ is stored (default).
+    Adam,
+    /// Algorithm-1-literal: the corrected φ is also the stored state.
+    Overwrite,
+    /// No correction (original SPRING of Goldshlager et al.).
+    None,
+}
+
+impl BiasMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "adam" => Self::Adam,
+            "overwrite" => Self::Overwrite,
+            "none" => Self::None,
+            _ => bail!("unknown bias mode '{s}'"),
+        })
+    }
+}
+
+/// Execution path for natural-gradient optimizers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPath {
+    /// One fused XLA artifact per step (hot path).
+    Fused,
+    /// Rust-side linear algebra over (J, r) from `residuals_jacobian`
+    /// (required for Nyström / effective-dimension experiments).
+    Decomposed,
+}
+
+impl ExecPath {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fused" => Self::Fused,
+            "decomposed" => Self::Decomposed,
+            _ => bail!("unknown exec path '{s}'"),
+        })
+    }
+}
+
+/// Full optimizer configuration (superset across optimizers; each reads the
+/// fields it needs — mirrors the paper's per-optimizer hyperparameter lists
+/// in Appendix A.1).
+#[derive(Debug, Clone)]
+pub struct OptimizerConfig {
+    pub kind: OptimizerKind,
+    pub damping: f64,
+    pub momentum: f64,
+    pub lr: f64,
+    pub line_search: bool,
+    pub solve: SolveMode,
+    /// Nyström sketch size as a fraction of N (paper uses 0.10).
+    pub sketch_ratio: f64,
+    /// Max CG iterations for Hessian-free.
+    pub cg_iters: usize,
+    /// CG relative-residual tolerance for Hessian-free.
+    pub cg_tol: f64,
+    /// Exponential-moving-average factor on the dense Gramian (ENGD).
+    pub ema: f64,
+    /// Initialize the dense Gramian accumulator to identity (ENGD).
+    pub gramian_identity_init: bool,
+    pub bias: BiasMode,
+    pub path: ExecPath,
+    /// Sketch-rank policy (fixed = paper default).
+    pub rank_policy: RankPolicy,
+    /// Adaptive policy: cap on sketch size as a fraction of N.
+    pub sketch_max_ratio: f64,
+    /// Line-search grid depth (number of halvings from `ls_eta_max`).
+    pub ls_grid: usize,
+    /// Largest step size probed by the line search.
+    pub ls_eta_max: f64,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        OptimizerConfig {
+            kind: OptimizerKind::Spring,
+            damping: 1e-8,
+            momentum: 0.9,
+            lr: 0.05,
+            line_search: false,
+            solve: SolveMode::Exact,
+            sketch_ratio: 0.10,
+            cg_iters: 100,
+            cg_tol: 1e-10,
+            ema: 0.0,
+            gramian_identity_init: true,
+            bias: BiasMode::Adam,
+            path: ExecPath::Fused,
+            rank_policy: RankPolicy::Fixed,
+            sketch_max_ratio: 0.5,
+            ls_grid: 18,
+            ls_eta_max: 2.0,
+        }
+    }
+}
+
+impl OptimizerConfig {
+    pub fn from_value(v: &JsonValue) -> Result<Self> {
+        let mut c = OptimizerConfig::default();
+        let obj = v
+            .as_object()
+            .ok_or_else(|| anyhow!("[optimizer] must be a table"))?;
+        for (k, val) in obj {
+            match k.as_str() {
+                "kind" => {
+                    c.kind = OptimizerKind::parse(
+                        val.as_str().ok_or_else(|| anyhow!("kind must be a string"))?,
+                    )?
+                }
+                "damping" => c.damping = num(val, k)?,
+                "momentum" => c.momentum = num(val, k)?,
+                "lr" => c.lr = num(val, k)?,
+                "line_search" => c.line_search = boolean(val, k)?,
+                "solve" => {
+                    c.solve = SolveMode::parse(
+                        val.as_str().ok_or_else(|| anyhow!("solve must be a string"))?,
+                    )?
+                }
+                "sketch_ratio" => c.sketch_ratio = num(val, k)?,
+                "cg_iters" => c.cg_iters = num(val, k)? as usize,
+                "cg_tol" => c.cg_tol = num(val, k)?,
+                "ema" => c.ema = num(val, k)?,
+                "gramian_identity_init" => c.gramian_identity_init = boolean(val, k)?,
+                "bias" => {
+                    c.bias = BiasMode::parse(
+                        val.as_str().ok_or_else(|| anyhow!("bias must be a string"))?,
+                    )?
+                }
+                "rank_policy" => {
+                    c.rank_policy = RankPolicy::parse(
+                        val.as_str().ok_or_else(|| anyhow!("rank_policy must be a string"))?,
+                    )?
+                }
+                "sketch_max_ratio" => c.sketch_max_ratio = num(val, k)?,
+                "ls_grid" => c.ls_grid = num(val, k)? as usize,
+                "ls_eta_max" => c.ls_eta_max = num(val, k)?,
+                "path" => {
+                    c.path = ExecPath::parse(
+                        val.as_str().ok_or_else(|| anyhow!("path must be a string"))?,
+                    )?
+                }
+                _ => bail!("unknown [optimizer] key '{k}'"),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.damping < 0.0 {
+            bail!("damping must be >= 0");
+        }
+        if !(0.0..1.0).contains(&self.momentum) && self.momentum != 0.0 {
+            if self.momentum >= 1.0 {
+                bail!("momentum must be < 1");
+            }
+        }
+        if self.sketch_ratio <= 0.0 || self.sketch_ratio > 1.0 {
+            bail!("sketch_ratio must be in (0, 1]");
+        }
+        if self.solve != SolveMode::Exact && self.path == ExecPath::Fused {
+            bail!("randomized solves require path = \"decomposed\"");
+        }
+        Ok(())
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub name: String,
+    pub problem: String,
+    pub artifacts_dir: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// Wall-clock budget in seconds (0 = unlimited) — the paper gives each
+    /// run a fixed time budget (7000 s / 10000 s); ours are scaled.
+    pub time_budget_s: f64,
+    pub out_dir: String,
+    /// Save a checkpoint every N steps (0 = off).
+    pub checkpoint_every: usize,
+    /// Resume θ/φ/step from this checkpoint file.
+    pub resume_from: Option<String>,
+    pub optimizer: OptimizerConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            name: "run".into(),
+            problem: "poisson5d".into(),
+            artifacts_dir: "artifacts".into(),
+            steps: 200,
+            seed: 42,
+            eval_every: 10,
+            time_budget_s: 0.0,
+            out_dir: "results".into(),
+            checkpoint_every: 0,
+            resume_from: None,
+            optimizer: OptimizerConfig::default(),
+        }
+    }
+}
+
+fn num(v: &JsonValue, key: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow!("'{key}' must be a number"))
+}
+
+fn boolean(v: &JsonValue, key: &str) -> Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow!("'{key}' must be a boolean"))
+}
+
+impl RunConfig {
+    pub fn from_value(v: &JsonValue) -> Result<Self> {
+        let mut c = RunConfig::default();
+        let obj = v.as_object().ok_or_else(|| anyhow!("config must be a table"))?;
+        for (k, val) in obj {
+            match k.as_str() {
+                "name" => c.name = req_str(val, k)?,
+                "problem" => c.problem = req_str(val, k)?,
+                "artifacts" | "artifacts_dir" => c.artifacts_dir = req_str(val, k)?,
+                "steps" => c.steps = num(val, k)? as usize,
+                "seed" => c.seed = num(val, k)? as u64,
+                "eval_every" => c.eval_every = num(val, k)? as usize,
+                "time_budget_s" => c.time_budget_s = num(val, k)?,
+                "out_dir" => c.out_dir = req_str(val, k)?,
+                "checkpoint_every" => c.checkpoint_every = num(val, k)? as usize,
+                "resume_from" => c.resume_from = Some(req_str(val, k)?),
+                "optimizer" => c.optimizer = OptimizerConfig::from_value(val)?,
+                _ => bail!("unknown config key '{k}'"),
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn from_toml_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
+        Self::from_value(&super::toml::parse(&text)?)
+    }
+}
+
+fn req_str(v: &JsonValue, key: &str) -> Result<String> {
+    Ok(v.as_str()
+        .ok_or_else(|| anyhow!("'{key}' must be a string"))?
+        .to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let v = crate::config::toml::parse(
+            r#"
+name = "spring-5d"
+problem = "poisson5d"
+steps = 300
+seed = 7
+
+[optimizer]
+kind = "spring"
+damping = 2e-10
+momentum = 0.31
+lr = 0.06
+"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.name, "spring-5d");
+        assert_eq!(c.steps, 300);
+        assert_eq!(c.optimizer.kind, OptimizerKind::Spring);
+        assert_eq!(c.optimizer.damping, 2e-10);
+        assert_eq!(c.optimizer.momentum, 0.31);
+    }
+
+    #[test]
+    fn rejects_randomized_fused() {
+        let v = crate::config::toml::parse(
+            r#"
+[optimizer]
+kind = "engd_w"
+solve = "nystrom"
+path = "fused"
+"#,
+        )
+        .unwrap();
+        assert!(RunConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn unknown_key_is_an_error() {
+        let v = crate::config::toml::parse("bogus = 1").unwrap();
+        assert!(RunConfig::from_value(&v).is_err());
+    }
+}

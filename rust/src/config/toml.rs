@@ -1,0 +1,199 @@
+//! TOML-subset parser (substrate — the `toml` crate is unavailable offline).
+//!
+//! Supports the subset used by `configs/*.toml`:
+//!   * `[table]` and `[table.subtable]` headers
+//!   * `key = value` with string / float / integer / boolean / array values
+//!   * `#` comments, blank lines
+//!
+//! Values are stored as `JsonValue` so the config layer has one value model.
+
+use anyhow::{bail, Context, Result};
+
+use super::json::JsonValue;
+
+/// Parse TOML text into a nested `JsonValue::Object`.
+pub fn parse(text: &str) -> Result<JsonValue> {
+    let mut root: Vec<(String, JsonValue)> = Vec::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(stripped) = line.strip_prefix('[') {
+            let inner = stripped
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated table header", lineno + 1))?;
+            if inner.starts_with('[') {
+                bail!("line {}: array-of-tables is not supported", lineno + 1);
+            }
+            current_path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_table(&mut root, &current_path)?;
+        } else {
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+            let key = unquote_key(key.trim());
+            let value = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            let table = navigate(&mut root, &current_path)?;
+            if table.iter().any(|(k, _)| k == &key) {
+                bail!("line {}: duplicate key '{}'", lineno + 1, key);
+            }
+            table.push((key, value));
+        }
+    }
+    Ok(JsonValue::Object(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote_key(key: &str) -> String {
+    key.trim_matches('"').to_string()
+}
+
+fn ensure_table(root: &mut Vec<(String, JsonValue)>, path: &[String]) -> Result<()> {
+    navigate(root, path).map(|_| ())
+}
+
+fn navigate<'a>(
+    root: &'a mut Vec<(String, JsonValue)>,
+    path: &[String],
+) -> Result<&'a mut Vec<(String, JsonValue)>> {
+    match path.split_first() {
+        None => Ok(root),
+        Some((part, rest)) => {
+            let idx = match root.iter().position(|(k, _)| k == part) {
+                Some(i) => i,
+                None => {
+                    root.push((part.clone(), JsonValue::Object(Vec::new())));
+                    root.len() - 1
+                }
+            };
+            match &mut root[idx].1 {
+                JsonValue::Object(entries) => navigate(entries, rest),
+                _ => bail!("'{}' is not a table", part),
+            }
+        }
+    }
+}
+
+fn parse_value(s: &str) -> Result<JsonValue> {
+    if s.starts_with('"') {
+        let inner = s
+            .strip_prefix('"')
+            .and_then(|x| x.strip_suffix('"'))
+            .with_context(|| format!("unterminated string: {s}"))?;
+        return Ok(JsonValue::String(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .and_then(|x| x.strip_suffix(']'))
+            .with_context(|| format!("unterminated array: {s}"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(JsonValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(JsonValue::Bool(true)),
+        "false" => return Ok(JsonValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(x) = cleaned.parse::<f64>() {
+        return Ok(JsonValue::Number(x));
+    }
+    bail!("cannot parse TOML value: {s}")
+}
+
+/// Split an array body on top-level commas (no nested-array commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_values() {
+        let v = parse(
+            r#"
+# run config
+name = "demo"
+steps = 500
+
+[optimizer]
+kind = "spring"
+damping = 1e-8        # tuned
+momentum = 0.9
+lr_grid = [0.01, 0.1, 1.0]
+
+[optimizer.line_search]
+enabled = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("demo"));
+        assert_eq!(v.get("steps").unwrap().as_f64(), Some(500.0));
+        let opt = v.get("optimizer").unwrap();
+        assert_eq!(opt.get("damping").unwrap().as_f64(), Some(1e-8));
+        assert_eq!(opt.get("lr_grid").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(
+            opt.get("line_search").unwrap().get("enabled").unwrap().as_bool(),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("a = @nope").is_err());
+        assert!(parse("[unclosed").is_err());
+    }
+
+    #[test]
+    fn numbers_with_underscores() {
+        let v = parse("n = 10_000").unwrap();
+        assert_eq!(v.get("n").unwrap().as_f64(), Some(10000.0));
+    }
+
+    #[test]
+    fn comment_inside_string_is_kept() {
+        let v = parse(r##"s = "a # b""##).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a # b"));
+    }
+}

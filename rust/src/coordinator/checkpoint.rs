@@ -1,0 +1,142 @@
+//! Checkpointing: save/restore the training state (θ, SPRING's φ, step
+//! counter) so long runs survive restarts — standard framework plumbing the
+//! paper's 7000–10000 s runs imply.
+//!
+//! Format: a small JSON header (magic, problem, shapes, step, seed) followed
+//! by raw little-endian f64 buffers, in one file. No external serialization
+//! deps (offline build), so the layout is hand-rolled and versioned.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::json::{self, JsonValue};
+
+const MAGIC: &[u8; 8] = b"ENGDCKP1";
+
+/// A training checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub problem: String,
+    /// 1-based index of the last completed step.
+    pub step: usize,
+    pub seed: u64,
+    pub theta: Vec<f64>,
+    /// SPRING momentum state (empty for other optimizers).
+    pub phi: Vec<f64>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let header = JsonValue::Object(vec![
+            ("problem".into(), JsonValue::String(self.problem.clone())),
+            ("step".into(), JsonValue::Number(self.step as f64)),
+            ("seed".into(), JsonValue::Number(self.seed as f64)),
+            ("theta_len".into(), JsonValue::Number(self.theta.len() as f64)),
+            ("phi_len".into(), JsonValue::Number(self.phi.len() as f64)),
+        ]);
+        let header = json::to_string(&header);
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for x in self.theta.iter().chain(&self.phi) {
+            f.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an engd checkpoint (bad magic)");
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        if hlen > 1 << 20 {
+            bail!("checkpoint header implausibly large ({hlen} bytes)");
+        }
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = json::parse(std::str::from_utf8(&hbuf)?)?;
+        let get = |k: &str| -> Result<f64> {
+            header
+                .get(k)
+                .and_then(JsonValue::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint header missing '{k}'"))
+        };
+        let theta_len = get("theta_len")? as usize;
+        let phi_len = get("phi_len")? as usize;
+        let mut read_f64s = |n: usize| -> Result<Vec<f64>> {
+            let mut buf = vec![0u8; n * 8];
+            f.read_exact(&mut buf)?;
+            Ok(buf
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        };
+        let theta = read_f64s(theta_len)?;
+        let phi = read_f64s(phi_len)?;
+        Ok(Checkpoint {
+            problem: header
+                .get("problem")
+                .and_then(JsonValue::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            step: get("step")? as usize,
+            seed: get("seed")? as u64,
+            theta,
+            phi,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_exactly() {
+        let ck = Checkpoint {
+            problem: "poisson5d".into(),
+            step: 123,
+            seed: 42,
+            theta: (0..257).map(|i| (i as f64).sin() * 1e-3).collect(),
+            phi: (0..257).map(|i| (i as f64).cos()).collect(),
+        };
+        let path = std::env::temp_dir().join(format!("engd-ckp-{}.bin", std::process::id()));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back); // bitwise f64 equality through LE bytes
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_phi_is_fine() {
+        let ck = Checkpoint {
+            problem: "p".into(),
+            step: 1,
+            seed: 7,
+            theta: vec![1.0, 2.0],
+            phi: vec![],
+        };
+        let path = std::env::temp_dir().join(format!("engd-ckp2-{}.bin", std::process::id()));
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join(format!("engd-ckp3-{}.bin", std::process::id()));
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,13 @@
+//! Training coordinator — the L3 driver that owns the run loop.
+//!
+//! Per the paper's protocol (§4): each iteration draws a fresh collocation
+//! batch, the optimizer produces an update (through the fused artifacts or
+//! the Rust linalg path), and the relative L2 error against the known exact
+//! solution is evaluated on a fixed validation set; runs are bounded by a
+//! step count and/or a wall-clock budget.
+
+mod checkpoint;
+mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use trainer::{train, TrainReport, Trainer};

@@ -1,0 +1,195 @@
+//! The training loop.
+
+use anyhow::{Context, Result};
+
+use super::checkpoint::Checkpoint;
+use crate::config::RunConfig;
+use crate::metrics::{RunLogger, StepRecord};
+use crate::optim::{build_optimizer, Optimizer, StepEnv};
+use crate::pde::{exact_solution, init_params, l2_relative_error, Sampler};
+use crate::rng::Rng;
+use crate::runtime::{ProblemSpec, Runtime};
+
+/// Summary of a finished run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub name: String,
+    pub steps_done: usize,
+    pub wall_s: f64,
+    pub final_loss: f64,
+    pub best_l2: f64,
+    /// (threshold, seconds) pairs for time-to-accuracy reporting.
+    pub time_to: Vec<(f64, f64)>,
+    /// Wall-clock seconds spent inside PJRT compilation (excluded from the
+    /// per-step budget, like jit warm-up in the paper's PyTorch runs).
+    pub compile_s: f64,
+}
+
+/// A reusable training driver bound to one runtime + problem.
+pub struct Trainer<'a> {
+    /// First step index to run (resumes advance this past 1).
+    start_step: usize,
+    pub cfg: RunConfig,
+    pub rt: &'a Runtime,
+    problem: ProblemSpec,
+    optimizer: Box<dyn Optimizer>,
+    sampler: Sampler,
+    rng: Rng,
+    /// Fixed evaluation set (points + exact values).
+    eval_points: Vec<f64>,
+    eval_exact: Vec<f64>,
+    pub theta: Vec<f64>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(cfg: RunConfig, rt: &'a Runtime) -> Result<Self> {
+        let problem = rt.manifest().problem(&cfg.problem)?.clone();
+        let optimizer = build_optimizer(&cfg)?;
+        let mut rng = Rng::seed_from(cfg.seed);
+        let mut sampler = Sampler::new(problem.dim, cfg.seed ^ 0xA5A5_A5A5);
+        let eval_points = sampler.eval_set(problem.n_eval);
+        let exact = exact_solution(&problem.pde)?;
+        let eval_exact = exact.eval_batch(&eval_points, problem.dim);
+        let arch = problem.arch.clone();
+        let mut theta = init_params(&arch, &mut rng);
+        anyhow::ensure!(
+            theta.len() == problem.n_params,
+            "architecture/param-count mismatch: {} vs manifest {}",
+            theta.len(),
+            problem.n_params
+        );
+        let mut optimizer = optimizer;
+        let mut start_step = 1usize;
+        if let Some(path) = &cfg.resume_from {
+            let ck = Checkpoint::load(path)
+                .with_context(|| format!("resuming from {path}"))?;
+            anyhow::ensure!(
+                ck.problem == cfg.problem,
+                "checkpoint is for problem '{}', run wants '{}'",
+                ck.problem,
+                cfg.problem
+            );
+            anyhow::ensure!(
+                ck.theta.len() == problem.n_params,
+                "checkpoint θ has {} params, manifest says {}",
+                ck.theta.len(),
+                problem.n_params
+            );
+            theta = ck.theta;
+            if !ck.phi.is_empty() {
+                optimizer.restore_state(ck.phi);
+            }
+            start_step = ck.step + 1;
+        }
+        Ok(Trainer {
+            start_step,
+            cfg,
+            rt,
+            problem,
+            optimizer,
+            sampler,
+            rng,
+            eval_points,
+            eval_exact,
+            theta,
+        })
+    }
+
+    /// Save a checkpoint of the current state to
+    /// `<out_dir>/<name>.ckpt`.
+    pub fn save_checkpoint(&self, step: usize) -> Result<()> {
+        let ck = Checkpoint {
+            problem: self.cfg.problem.clone(),
+            step,
+            seed: self.cfg.seed,
+            theta: self.theta.clone(),
+            phi: self.optimizer.state(),
+        };
+        let path = std::path::Path::new(&self.cfg.out_dir)
+            .join(format!("{}.ckpt", self.cfg.name));
+        ck.save(path)
+    }
+
+    /// Relative L2 error of the current iterate on the fixed validation set.
+    pub fn evaluate_l2(&self) -> Result<f64> {
+        let art = self.rt.artifact(&self.problem.name, "u_pred")?;
+        let out = art.call(&[&self.theta, &self.eval_points])?;
+        Ok(l2_relative_error(&out[0], &self.eval_exact))
+    }
+
+    /// Run the configured number of steps (or until the time budget runs
+    /// out), logging to `<out_dir>/<name>.{jsonl,csv}`.
+    pub fn run(&mut self, echo: bool) -> Result<TrainReport> {
+        let mut logger = RunLogger::create(&self.cfg.out_dir, &self.cfg.name, echo)
+            .context("creating run logger")?;
+
+        // Warm the artifact cache before the clock matters: compile time is
+        // a startup cost, not a per-step cost (DESIGN.md §Perf).
+        let _ = self.evaluate_l2()?;
+
+        let mut final_loss = f64::NAN;
+        let mut steps_done = 0;
+        let end = self.start_step + self.cfg.steps - 1;
+        for k in self.start_step..=end {
+            if self.cfg.time_budget_s > 0.0 && logger.elapsed() > self.cfg.time_budget_s {
+                break;
+            }
+            let x_int = self.sampler.interior(self.problem.n_interior);
+            let x_bnd = self.sampler.boundary(self.problem.n_boundary);
+            let evaluate = k % self.cfg.eval_every.max(1) == 0 || k == self.cfg.steps;
+            let mut env = StepEnv {
+                rt: self.rt,
+                problem: &self.problem,
+                x_int: &x_int,
+                x_bnd: &x_bnd,
+                k,
+                rng: &mut self.rng,
+                diagnostics: evaluate,
+            };
+            let info = self
+                .optimizer
+                .step(&mut self.theta, &mut env)
+                .with_context(|| format!("step {k}"))?;
+            final_loss = info.loss;
+            steps_done = k;
+
+            let l2 = if evaluate {
+                self.evaluate_l2()?
+            } else {
+                f64::NAN
+            };
+            logger.log(StepRecord {
+                step: k,
+                wall_s: logger.elapsed(),
+                loss: info.loss,
+                l2_error: l2,
+                lr: info.lr_used,
+                extra: info.extra,
+            })?;
+            if self.cfg.checkpoint_every > 0 && k % self.cfg.checkpoint_every == 0 {
+                self.save_checkpoint(k)?;
+            }
+        }
+        logger.flush()?;
+
+        let thresholds = [1e-1, 1e-2, 1e-3, 1e-4];
+        let time_to = thresholds
+            .iter()
+            .filter_map(|&t| logger.time_to_l2(t).map(|s| (t, s)))
+            .collect();
+        Ok(TrainReport {
+            name: self.cfg.name.clone(),
+            steps_done,
+            wall_s: logger.elapsed(),
+            final_loss,
+            best_l2: logger.best_l2(),
+            time_to,
+            compile_s: *self.rt.compile_seconds.borrow(),
+        })
+    }
+}
+
+/// One-call convenience: build a trainer and run it.
+pub fn train(cfg: RunConfig, rt: &Runtime, echo: bool) -> Result<TrainReport> {
+    Trainer::new(cfg, rt)?.run(echo)
+}

@@ -1,0 +1,35 @@
+//! # engd — Energy Natural Gradient Descent, improved
+//!
+//! Full-system reproduction of *"Improving Energy Natural Gradient Descent
+//! through Woodbury, Momentum, and Randomization"* (NeurIPS 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas Gram/matmul kernels (`python/compile/kernels/`),
+//! * **L2** — the JAX PINN model and fused optimizer steps
+//!   (`python/compile/model.py`), AOT-lowered to HLO text,
+//! * **L3** — this crate: the training coordinator, the optimizer suite
+//!   (ENGD, ENGD-W, SPRING, Nyström variants, SGD/Adam/Hessian-free
+//!   baselines), a complete dense/randomized linear-algebra substrate, and
+//!   the benchmark harness reproducing every figure of the paper.
+//!
+//! Python never runs at training time: the Rust binary loads the AOT
+//! artifacts through the PJRT C API and owns the entire hot path.
+//!
+//! Quickstart (after `make artifacts`):
+//! ```bash
+//! cargo run --release -- train --problem poisson5d --opt spring --steps 300 --echo
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod linalg;
+pub mod metrics;
+pub mod nystrom;
+pub mod optim;
+pub mod parallel;
+pub mod pde;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod sweep;

@@ -1,0 +1,276 @@
+//! Cholesky factorization and solves — the exact kernel solve of ENGD-W
+//! (paper eq. 5) and both Cholesky steps of the GPU-efficient Nyström
+//! (paper Algorithm 2, lines 5 and 8).
+
+use anyhow::{bail, Result};
+
+use super::matrix::Matrix;
+use crate::parallel::par_chunks;
+
+/// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
+pub struct Cholesky {
+    l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix.
+    ///
+    /// Right-looking column algorithm with the trailing update parallelized
+    /// over rows. Fails (rather than producing NaNs) if a pivot is not
+    /// strictly positive — the caller decides how to re-damp.
+    pub fn factor(a: &Matrix) -> Result<Self> {
+        if a.rows() != a.cols() {
+            bail!("cholesky: matrix is {}x{}, not square", a.rows(), a.cols());
+        }
+        let n = a.rows();
+        let mut l = a.clone();
+        for j in 0..n {
+            // Pivot: d = sqrt(A[j,j] - L[j,:j]·L[j,:j])
+            let ljj = {
+                let row_j = l.row(j);
+                let s: f64 = row_j[..j].iter().map(|x| x * x).sum();
+                row_j[j] - s
+            };
+            if ljj <= 0.0 || !ljj.is_finite() {
+                bail!(
+                    "cholesky: non-positive pivot {ljj:.3e} at column {j} \
+                     (matrix is not PD at this damping)"
+                );
+            }
+            let d = ljj.sqrt();
+            l[(j, j)] = d;
+            // Column scale + it is cheaper to fold the trailing update into
+            // each row's dot against row j (left-looking within the row):
+            //   L[i,j] = (A[i,j] - L[i,:j]·L[j,:j]) / d
+            let cols = n;
+            if n - j - 1 > 256 {
+                let lp = SendMutPtr(l.data_mut().as_mut_ptr());
+                par_chunks(n - j - 1, |s, e| {
+                    for off in s..e {
+                        let i = j + 1 + off;
+                        // SAFETY: row j (read-only here) and the written slot
+                        // (i, j) live in disjoint rows per thread; all reads
+                        // below column j are never written in this sweep.
+                        unsafe {
+                            let row_i =
+                                std::slice::from_raw_parts(lp.get().add(i * cols), j + 1);
+                            let row_j =
+                                std::slice::from_raw_parts(lp.get().add(j * cols), j);
+                            let s = super::vec_ops::dot(&row_i[..j], row_j);
+                            *lp.get().add(i * cols + j) = (row_i[j] - s) / d;
+                        }
+                    }
+                });
+            } else {
+                for i in j + 1..n {
+                    let s = super::vec_ops::dot(&l.row(i)[..j], &l.row(j)[..j]);
+                    l[(i, j)] = (l[(i, j)] - s) / d;
+                }
+            }
+        }
+        // Zero the strict upper triangle so `l` is a clean factor.
+        for i in 0..n {
+            for j in i + 1..n {
+                l[(i, j)] = 0.0;
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    pub fn factor_matrix(&self) -> &Matrix {
+        &self.l
+    }
+
+    /// Solve `A x = b` (forward + back substitution).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let y = self.solve_lower(b);
+        self.solve_upper(&y)
+    }
+
+    /// Solve `L y = b`.
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let s = super::vec_ops::dot(&self.l.row(i)[..i], &y[..i]);
+            y[i] = (b[i] - s) / self.l[(i, i)];
+        }
+        y
+    }
+
+    /// Solve `Lᵀ x = b`.
+    pub fn solve_upper(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for i in (0..n).rev() {
+            x[i] /= self.l[(i, i)];
+            let xi = x[i];
+            // Eliminate column i from the remaining rows: x[:i] -= L[i,:i]·xi
+            let row_i = self.l.row(i);
+            for k in 0..i {
+                x[k] -= row_i[k] * xi;
+            }
+        }
+        x
+    }
+
+    /// Multi-RHS solve: `A X = B` where B's *columns* are the right-hand
+    /// sides; returns X with the same layout.
+    pub fn solve_matrix(&self, b: &Matrix) -> Matrix {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = Matrix::zeros(n, b.cols());
+        // Solve per column (parallelizable; columns are independent).
+        let cols: Vec<Vec<f64>> =
+            crate::parallel::par_map(b.cols(), |j| self.solve(&b.col(j)));
+        for (j, col) in cols.iter().enumerate() {
+            for i in 0..n {
+                out[(i, j)] = col[i];
+            }
+        }
+        out
+    }
+
+    /// Right-solve `X Lᵀ⁻¹`, i.e. solve `X Lᵀ = B` row-wise — Algorithm 2
+    /// line 6 (`B = Y_ν C⁻¹` with C upper-triangular from `chol(ΩᵀY_ν)`).
+    ///
+    /// Our `Cholesky` stores the *lower* factor L with A = L Lᵀ; `C = Lᵀ`.
+    /// For each row b of B we solve `x Lᵀ = b  ⇔  L xᵀ = bᵀ`.
+    pub fn right_solve_transpose(&self, b: &Matrix) -> Matrix {
+        let n = self.l.rows();
+        assert_eq!(b.cols(), n, "right_solve_transpose: width mismatch");
+        let rows: Vec<Vec<f64>> =
+            crate::parallel::par_map(b.rows(), |i| self.solve_lower(b.row(i)));
+        let mut out = Matrix::zeros(b.rows(), n);
+        for (i, row) in rows.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(row);
+        }
+        out
+    }
+
+    /// trace(A⁻¹) via the factor: Σ_j ‖L⁻¹ e_j‖² — used by the effective
+    /// dimension d_eff = N − λ·tr((K+λI)⁻¹) (paper §3.4).
+    pub fn inverse_trace(&self) -> f64 {
+        let n = self.l.rows();
+        let traces: Vec<f64> = crate::parallel::par_map(n, |j| {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let y = self.solve_lower(&e);
+            super::vec_ops::dot(&y, &y)
+        });
+        traces.iter().sum()
+    }
+
+    /// log det(A) = 2 Σ log L_ii (spectral diagnostics).
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows())
+            .map(|i| self.l[(i, i)].ln())
+            .sum::<f64>()
+            * 2.0
+    }
+}
+
+struct SendMutPtr(*mut f64);
+unsafe impl Send for SendMutPtr {}
+unsafe impl Sync for SendMutPtr {}
+
+impl SendMutPtr {
+    /// See `matrix.rs`: method access keeps the closure capture `Sync`.
+    #[inline]
+    fn get(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Matrix {
+        let mut a = Matrix::zeros(n, n);
+        rng.fill_normal(a.data_mut());
+        a.gram().add_diag(n as f64)
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::seed_from(1);
+        for n in [1, 2, 5, 33, 100, 300] {
+            let a = spd(&mut rng, n);
+            let ch = Cholesky::factor(&a).unwrap();
+            let l = ch.factor_matrix();
+            let rec = l.matmul(&l.transpose());
+            assert!(rec.max_abs_diff(&a) < 1e-8 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct_residual() {
+        let mut rng = Rng::seed_from(2);
+        for n in [1, 7, 64, 200] {
+            let a = spd(&mut rng, n);
+            let mut b = vec![0.0; n];
+            rng.fill_normal(&mut b);
+            let x = Cholesky::factor(&a).unwrap().solve(&b);
+            let r = a.matvec(&x);
+            let err: f64 = r.iter().zip(&b).map(|(u, v)| (u - v).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-8, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn multi_rhs_matches_single() {
+        let mut rng = Rng::seed_from(3);
+        let a = spd(&mut rng, 40);
+        let mut b = Matrix::zeros(40, 5);
+        rng.fill_normal(b.data_mut());
+        let ch = Cholesky::factor(&a).unwrap();
+        let x = ch.solve_matrix(&b);
+        for j in 0..5 {
+            let xj = ch.solve(&b.col(j));
+            for i in 0..40 {
+                assert!((x[(i, j)] - xj[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn right_solve_transpose_inverts() {
+        let mut rng = Rng::seed_from(4);
+        let a = spd(&mut rng, 20);
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut b = Matrix::zeros(8, 20);
+        rng.fill_normal(b.data_mut());
+        let x = ch.right_solve_transpose(&b);
+        // x @ Lᵀ should equal b.
+        let rec = x.matmul(&ch.factor_matrix().transpose());
+        assert!(rec.max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn inverse_trace_matches_explicit_inverse() {
+        let mut rng = Rng::seed_from(5);
+        let a = spd(&mut rng, 30);
+        let ch = Cholesky::factor(&a).unwrap();
+        let inv = ch.solve_matrix(&Matrix::identity(30));
+        let want: f64 = (0..30).map(|i| inv[(i, i)]).sum();
+        assert!((ch.inverse_trace() - want).abs() < 1e-8);
+    }
+
+    #[test]
+    fn non_pd_fails_cleanly() {
+        let a = Matrix::from_fn(3, 3, |i, j| if i == j { -1.0 } else { 0.0 });
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn log_det_matches_eigenvalues_diag() {
+        let a = Matrix::from_fn(4, 4, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let ch = Cholesky::factor(&a).unwrap();
+        let want = (1f64.ln() + 2f64.ln() + 3f64.ln() + 4f64.ln());
+        assert!((ch.log_det() - want).abs() < 1e-12);
+    }
+}

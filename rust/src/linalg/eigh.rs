@@ -1,0 +1,174 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! This is the SVD-class dense factorization in our stack: the *standard
+//! stable* Nyström baseline (Frangella–Tropp–Udell alg. 2.1) needs an
+//! economy SVD of the sketch `B ∈ R^{N×S}`, which we obtain from the
+//! eigendecomposition of the small `S×S` Gram matrix `BᵀB` (see
+//! `nystrom::stable`). Jacobi is slower than LAPACK's tridiagonalization
+//! pipelines but unconditionally robust and embarrassingly simple to verify —
+//! and its cost *is the point* of the paper's Appendix-B benchmark: the
+//! GPU-efficient variant exists precisely to avoid paying for it.
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition `A = V diag(w) Vᵀ` with eigenvalues ascending.
+pub struct Eigh {
+    /// Eigenvalues, ascending.
+    pub eigenvalues: Vec<f64>,
+    /// Columns are the corresponding eigenvectors.
+    pub eigenvectors: Matrix,
+}
+
+/// Cyclic Jacobi with threshold sweeps. Converges quadratically once
+/// off-diagonal mass is small; we cap at 30 sweeps (typ. ≤ 12 for our sizes).
+pub fn eigh(a: &Matrix) -> Eigh {
+    assert_eq!(a.rows(), a.cols(), "eigh needs a square matrix");
+    let n = a.rows();
+    let mut m = a.clone();
+    let mut v = Matrix::identity(n);
+
+    if n == 0 {
+        return Eigh {
+            eigenvalues: vec![],
+            eigenvectors: v,
+        };
+    }
+
+    for _sweep in 0..30 {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + m.frobenius_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Stable rotation computation (Golub & Van Loan §8.5).
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    1.0 / (tau - (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // A ← JᵀAJ, applied to rows/cols p and q.
+                for k in 0..n {
+                    let akp = m[(k, p)];
+                    let akq = m[(k, q)];
+                    m[(k, p)] = c * akp - s * akq;
+                    m[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[(p, k)];
+                    let aqk = m[(q, k)];
+                    m[(p, k)] = c * apk - s * aqk;
+                    m[(q, k)] = s * apk + c * aqk;
+                }
+                // Accumulate V ← VJ.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Sort ascending.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m[(i, i)].partial_cmp(&m[(j, j)]).unwrap());
+    let eigenvalues: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
+    let mut eigenvectors = Matrix::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..n {
+            eigenvectors[(i, new_j)] = v[(i, old_j)];
+        }
+    }
+    Eigh {
+        eigenvalues,
+        eigenvectors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_symmetric(rng: &mut Rng, n: usize) -> Matrix {
+        let mut a = Matrix::zeros(n, n);
+        rng.fill_normal(a.data_mut());
+        let at = a.transpose();
+        let mut s = a;
+        s.add_scaled(&at, 1.0);
+        s.scale_in_place(0.5);
+        s
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let mut rng = Rng::seed_from(1);
+        for n in [1, 2, 3, 10, 40] {
+            let a = random_symmetric(&mut rng, n);
+            let e = eigh(&a);
+            // A V = V diag(w)
+            let av = a.matmul(&e.eigenvectors);
+            for j in 0..n {
+                for i in 0..n {
+                    let want = e.eigenvectors[(i, j)] * e.eigenvalues[j];
+                    assert!((av[(i, j)] - want).abs() < 1e-9, "n={n} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_are_orthonormal() {
+        let mut rng = Rng::seed_from(2);
+        let a = random_symmetric(&mut rng, 25);
+        let e = eigh(&a);
+        let vtv = e.eigenvectors.transpose().matmul(&e.eigenvectors);
+        assert!(vtv.max_abs_diff(&Matrix::identity(25)) < 1e-10);
+    }
+
+    #[test]
+    fn known_eigenvalues() {
+        // [[2, 1], [1, 2]] has eigenvalues 1 and 3.
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = eigh(&a);
+        assert!((e.eigenvalues[0] - 1.0).abs() < 1e-12);
+        assert!((e.eigenvalues[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_and_det_invariants() {
+        let mut rng = Rng::seed_from(3);
+        let a = random_symmetric(&mut rng, 15);
+        let e = eigh(&a);
+        let trace: f64 = (0..15).map(|i| a[(i, i)]).sum();
+        let sum: f64 = e.eigenvalues.iter().sum();
+        assert!((trace - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn psd_gram_has_nonnegative_spectrum() {
+        let mut rng = Rng::seed_from(4);
+        let mut b = Matrix::zeros(10, 30);
+        rng.fill_normal(b.data_mut());
+        let e = eigh(&b.gram());
+        assert!(e.eigenvalues.iter().all(|&w| w > -1e-9));
+    }
+}

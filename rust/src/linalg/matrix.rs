@@ -1,0 +1,423 @@
+//! Row-major dense matrix with blocked, thread-parallel products.
+//!
+//! The blocking constants are tuned in the §Perf pass (EXPERIMENTS.md): the
+//! kernel loops are written j-innermost over row-major data so the compiler
+//! auto-vectorizes the inner axpy, and the L2-resident `MC × KC` panel of A
+//! is reused across the full width of B.
+
+use crate::parallel::par_chunks;
+
+/// Row-major dense f64 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+/// Panel height of A processed per thread-block (rows).
+const MC: usize = 64;
+/// Reduction-panel width kept hot in L2 (columns of A / rows of B).
+const KC: usize = 256;
+
+impl Matrix {
+    // ----- constructors -------------------------------------------------
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(
+            data.len(),
+            rows * cols,
+            "buffer has {} elements, {}x{} needs {}",
+            data.len(),
+            rows,
+            cols,
+            rows * cols
+        );
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a closure over (i, j).
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    // ----- accessors ----------------------------------------------------
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    // ----- simple transforms ---------------------------------------------
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// self + alpha * I (the damping shift (K + λI) of eq. 5).
+    pub fn add_diag(&self, alpha: f64) -> Matrix {
+        assert_eq!(self.rows, self.cols, "add_diag needs a square matrix");
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            out[(i, i)] += alpha;
+        }
+        out
+    }
+
+    pub fn scale_in_place(&mut self, alpha: f64) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// self += alpha * other (elementwise).
+    pub fn add_scaled(&mut self, other: &Matrix, alpha: f64) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += alpha * y;
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Largest |a_ij| distance to another matrix (test helper).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    // ----- products -------------------------------------------------------
+
+    /// Blocked, multi-threaded `C = A @ B`.
+    ///
+    /// Parallelizes over MC-row panels of A; within a panel, the j-innermost
+    /// kernel does `C[i, :] += a_ik * B[k, :]`, which vectorizes cleanly on
+    /// row-major data and streams B once per KC panel.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(
+            self.cols, b.rows,
+            "matmul shape mismatch: {}x{} @ {}x{}",
+            self.rows, self.cols, b.rows, b.cols
+        );
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        let n = b.cols;
+        let c_ptr = SendMutPtr(c.data.as_mut_ptr());
+        par_chunks(self.rows.div_ceil(MC), |pstart, pend| {
+            for panel in pstart..pend {
+                let i0 = panel * MC;
+                let i1 = (i0 + MC).min(self.rows);
+                for k0 in (0..self.cols).step_by(KC) {
+                    let k1 = (k0 + KC).min(self.cols);
+                    for i in i0..i1 {
+                        // SAFETY: each thread owns disjoint row panels of C.
+                        let c_row: &mut [f64] = unsafe {
+                            std::slice::from_raw_parts_mut(c_ptr.get().add(i * n), n)
+                        };
+                        let a_row = self.row(i);
+                        for k in k0..k1 {
+                            let aik = a_row[k];
+                            if aik == 0.0 {
+                                continue;
+                            }
+                            let b_row = b.row(k);
+                            for j in 0..n {
+                                c_row[j] += aik * b_row[j];
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        c
+    }
+
+    /// Symmetric Gram product `K = A @ Aᵀ` exploiting symmetry (the Rust-side
+    /// analogue of the L1 Pallas gram kernel, used on the decomposed path).
+    ///
+    /// Computes the lower triangle in parallel over row blocks and mirrors.
+    pub fn gram(&self) -> Matrix {
+        let n = self.rows;
+        let mut k = Matrix::zeros(n, n);
+        let k_ptr = SendMutPtr(k.data.as_mut_ptr());
+        par_chunks(n, |istart, iend| {
+            for i in istart..iend {
+                let ai = self.row(i);
+                // SAFETY: thread writes only rows in [istart, iend).
+                let k_row: &mut [f64] =
+                    unsafe { std::slice::from_raw_parts_mut(k_ptr.get().add(i * n), n) };
+                for j in 0..=i {
+                    k_row[j] = dot_slices(ai, self.row(j));
+                }
+            }
+        });
+        // Mirror the strict lower triangle.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                k[(i, j)] = k[(j, i)];
+            }
+        }
+        k
+    }
+
+    /// `y = A @ x` (thread-parallel over rows).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec shape mismatch");
+        crate::parallel::par_map(self.rows, |i| dot_slices(self.row(i), x))
+    }
+
+    /// `y = Aᵀ @ x` without forming the transpose (accumulates rows).
+    pub fn tr_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len(), "tr_matvec shape mismatch");
+        // Parallel over column chunks to keep writes disjoint.
+        let mut y = vec![0.0; self.cols];
+        let y_ptr = SendMutPtr(y.as_mut_ptr());
+        let cols = self.cols;
+        par_chunks(self.cols.div_ceil(512), |cstart, cend| {
+            let j0 = cstart * 512;
+            let j1 = (cend * 512).min(cols);
+            if j0 >= j1 {
+                return;
+            }
+            // SAFETY: disjoint column ranges per thread.
+            let y_chunk: &mut [f64] =
+                unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(j0), j1 - j0) };
+            for i in 0..self.rows {
+                let xi = x[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let a_row = &self.row(i)[j0..j1];
+                for (yj, aij) in y_chunk.iter_mut().zip(a_row) {
+                    *yj += xi * aij;
+                }
+            }
+        });
+        y
+    }
+
+    /// Effective FLOP count of `matmul` with `other` (perf reporting).
+    pub fn matmul_flops(&self, b: &Matrix) -> f64 {
+        2.0 * self.rows as f64 * self.cols as f64 * b.cols as f64
+    }
+}
+
+#[inline]
+fn dot_slices(a: &[f64], b: &[f64]) -> f64 {
+    // 4-way unrolled dot; the compiler turns this into packed FMA.
+    let n = a.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+struct SendMutPtr(*mut f64);
+unsafe impl Send for SendMutPtr {}
+unsafe impl Sync for SendMutPtr {}
+
+impl SendMutPtr {
+    /// Method (not field) access, so edition-2021 closures capture the whole
+    /// `Sync` wrapper rather than the raw pointer field.
+    #[inline]
+    fn get(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(m.data_mut());
+        m
+    }
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::seed_from(1);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 33, 9), (70, 129, 65), (128, 256, 64)] {
+            let a = random_matrix(&mut rng, m, k);
+            let b = random_matrix(&mut rng, k, n);
+            let c = a.matmul(&b);
+            let c0 = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&c0) < 1e-10, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gram_matches_matmul_transpose() {
+        let mut rng = Rng::seed_from(2);
+        for (n, p) in [(1, 4), (7, 3), (33, 65), (64, 128), (100, 50)] {
+            let a = random_matrix(&mut rng, n, p);
+            let k = a.gram();
+            let k0 = a.matmul(&a.transpose());
+            assert!(k.max_abs_diff(&k0) < 1e-10, "({n},{p})");
+            // Exact symmetry by construction.
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(k[(i, j)], k[(j, i)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_and_transpose_matvec() {
+        let mut rng = Rng::seed_from(3);
+        let a = random_matrix(&mut rng, 37, 53);
+        let x: Vec<f64> = (0..53).map(|i| (i as f64).sin()).collect();
+        let y = a.matvec(&x);
+        for i in 0..37 {
+            let want: f64 = (0..53).map(|j| a[(i, j)] * x[j]).sum();
+            assert!((y[i] - want).abs() < 1e-10);
+        }
+        let z: Vec<f64> = (0..37).map(|i| (i as f64).cos()).collect();
+        let w = a.tr_matvec(&z);
+        for j in 0..53 {
+            let want: f64 = (0..37).map(|i| a[(i, j)] * z[i]).sum();
+            assert!((w[j] - want).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::seed_from(4);
+        let a = random_matrix(&mut rng, 45, 71);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn add_diag_shifts_diagonal_only() {
+        let mut rng = Rng::seed_from(5);
+        let a = random_matrix(&mut rng, 12, 12);
+        let b = a.add_diag(2.5);
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = a[(i, j)] + if i == j { 2.5 } else { 0.0 };
+                assert_eq!(b[(i, j)], want);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

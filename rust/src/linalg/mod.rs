@@ -1,0 +1,31 @@
+//! Dense f64 linear algebra substrate (nalgebra/LAPACK are unavailable
+//! offline; the paper's algorithms are all dense kernels over matrices that
+//! fit comfortably in memory once the Woodbury identity moves the solve into
+//! sample space).
+//!
+//! Contents:
+//! * [`Matrix`] — row-major dense matrix with blocked, multi-threaded
+//!   products (`matmul`, `gram`, `matvec`, ...).
+//! * [`chol`] — Cholesky factorization + triangular/multi-RHS solves (the
+//!   exact kernel solve of ENGD-W, paper eq. 5).
+//! * [`eigh`] — cyclic Jacobi symmetric eigendecomposition (the SVD-class
+//!   factorization used by the *standard stable* Nyström baseline and the
+//!   spectral diagnostics).
+//! * [`qr`] — Householder QR (test-matrix orthonormalization in the stable
+//!   Nyström baseline).
+//! * [`cg`] — preconditioned conjugate gradients on a matrix-free operator
+//!   (the Hessian-free baseline, Martens 2010).
+
+mod cg;
+mod chol;
+mod eigh;
+mod matrix;
+mod qr;
+mod vec_ops;
+
+pub use cg::{cg_solve, CgOutcome};
+pub use chol::Cholesky;
+pub use eigh::{eigh, Eigh};
+pub use matrix::Matrix;
+pub use qr::thin_qr;
+pub use vec_ops::{axpy, dot, norm2, scale, sub};

@@ -1,0 +1,102 @@
+//! Thin (economy) QR via Householder reflections.
+//!
+//! Used by the standard stable Nyström baseline to orthonormalize the
+//! Gaussian test matrix Ω (Frangella–Tropp–Udell alg. 2.1, the step the
+//! paper's GPU-efficient Algorithm 2 deliberately *skips*).
+
+use super::matrix::Matrix;
+
+/// Economy QR: returns Q (m×n, orthonormal columns) for m ≥ n input.
+pub fn thin_qr(a: &Matrix) -> Matrix {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "thin_qr expects a tall matrix, got {m}x{n}");
+
+    // Householder factorization, storing reflectors in-place.
+    let mut r = a.clone();
+    let mut betas = vec![0.0; n];
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the reflector for column k below the diagonal.
+        let mut v: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let alpha = -v[0].signum() * super::vec_ops::norm2(&v);
+        if alpha == 0.0 {
+            // Degenerate (zero) column: identity reflector.
+            vs.push(v);
+            betas[k] = 0.0;
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm2 = super::vec_ops::dot(&v, &v);
+        let beta = if vnorm2 > 0.0 { 2.0 / vnorm2 } else { 0.0 };
+        // Apply to the trailing columns of R.
+        for j in k..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i - k] * r[(i, j)];
+            }
+            s *= beta;
+            for i in k..m {
+                r[(i, j)] -= s * v[i - k];
+            }
+        }
+        vs.push(v);
+        betas[k] = beta;
+    }
+
+    // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the first n columns of I.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let beta = betas[k];
+        if beta == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i - k] * q[(i, j)];
+            }
+            s *= beta;
+            for i in k..m {
+                q[(i, j)] -= s * v[i - k];
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let mut rng = Rng::seed_from(1);
+        for (m, n) in [(5, 5), (30, 10), (100, 17), (64, 1)] {
+            let mut a = Matrix::zeros(m, n);
+            rng.fill_normal(a.data_mut());
+            let q = thin_qr(&a);
+            let qtq = q.transpose().matmul(&q);
+            assert!(
+                qtq.max_abs_diff(&Matrix::identity(n)) < 1e-10,
+                "({m},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn q_spans_the_input() {
+        // range(Q) == range(A): projecting A onto Q's span reproduces A.
+        let mut rng = Rng::seed_from(2);
+        let mut a = Matrix::zeros(40, 8);
+        rng.fill_normal(a.data_mut());
+        let q = thin_qr(&a);
+        let proj = q.matmul(&q.transpose().matmul(&a));
+        assert!(proj.max_abs_diff(&a) < 1e-9);
+    }
+}

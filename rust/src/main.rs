@@ -1,0 +1,292 @@
+//! `engd` — the training framework CLI.
+//!
+//! Commands:
+//!   train      train a PINN (from --config TOML or --problem + flags)
+//!   sweep      random-search hyperparameters (paper Appendix A.1 protocol)
+//!   eff-dim    track the kernel's effective dimension over training (Fig. 6)
+//!   list       show the problems/artifacts in the manifest
+//!   smoke      end-to-end sanity check of the artifact pipeline
+//!
+//! Examples:
+//!   engd train --problem poisson5d --opt spring --steps 300 --echo
+//!   engd train --config configs/spring_5d.toml --echo
+//!   engd sweep --problem poisson5d --opt engd_w --trials 10 --steps 100
+//!   engd eff-dim --problem poisson5d --steps 50 --damping 1e-8
+
+use anyhow::{bail, Context, Result};
+
+use engd::cli::Args;
+use engd::config::run::{BiasMode, ExecPath, OptimizerKind, SolveMode};
+use engd::config::RunConfig;
+use engd::coordinator::train;
+use engd::runtime::Runtime;
+
+const SWITCHES: &[&str] = &["echo", "line-search", "diag", "help"];
+
+fn main() {
+    let args = match Args::parse(SWITCHES) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    if args.has("help") || args.command.is_empty() || args.command == "help" {
+        print_help();
+        return Ok(());
+    }
+    match args.command.as_str() {
+        "train" => cmd_train(args),
+        "sweep" => cmd_sweep(args),
+        "eff-dim" => cmd_eff_dim(args),
+        "list" => cmd_list(args),
+        "smoke" => cmd_smoke(args),
+        "report" => cmd_report(args),
+        other => bail!("unknown command '{other}' (try 'engd help')"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "engd — Improving Energy Natural Gradient Descent through Woodbury, \
+         Momentum, and Randomization (NeurIPS 2025) — full-system reproduction\n\
+         \n\
+         USAGE: engd <command> [flags]\n\
+         \n\
+         COMMANDS\n\
+         \x20 train     train a PINN\n\
+         \x20 sweep     random-search hyperparameters (paper A.1 protocol)\n\
+         \x20 eff-dim   track kernel effective dimension (paper Fig. 6)\n\
+         \x20 list      show problems/artifacts in the manifest\n\
+         \x20 smoke     end-to-end pipeline sanity check\n\
+         \x20 report    summarize results/ CSVs as a markdown table\n\
+         \n\
+         COMMON FLAGS\n\
+         \x20 --artifacts DIR   artifact directory (default: artifacts)\n\
+         \x20 --config FILE     TOML run config (train)\n\
+         \x20 --problem NAME    problem from the manifest\n\
+         \x20 --opt KIND        sgd|adam|engd_dense|engd_w|spring|hessian_free\n\
+         \x20 --steps N         training steps\n\
+         \x20 --lr X --damping X --momentum X --sketch X\n\
+         \x20 --solve MODE      exact|nystrom_gpu|nystrom_stable\n\
+         \x20 --path MODE       fused|decomposed\n\
+         \x20 --bias MODE       adam|overwrite|none\n\
+         \x20 --line-search     use the grid line search\n\
+         \x20 --seed N --eval-every N --time-budget S --out DIR --name NAME\n\
+         \x20 --echo            print per-step progress"
+    );
+}
+
+/// Build a RunConfig from --config and/or command-line overrides.
+fn config_from_args(args: &Args) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        RunConfig::from_toml_file(path)?
+    } else {
+        RunConfig::default()
+    };
+    if let Some(p) = args.get("problem") {
+        cfg.problem = p.to_string();
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    if let Some(n) = args.get("name") {
+        cfg.name = n.to_string();
+    } else if args.get("config").is_none() {
+        cfg.name = format!("{}-{}", cfg.problem, args.get_or("opt", "spring"));
+    }
+    if let Some(s) = args.get_usize("steps")? {
+        cfg.steps = s;
+    }
+    if let Some(s) = args.get_usize("seed")? {
+        cfg.seed = s as u64;
+    }
+    if let Some(s) = args.get_usize("eval-every")? {
+        cfg.eval_every = s;
+    }
+    if let Some(t) = args.get_f64("time-budget")? {
+        cfg.time_budget_s = t;
+    }
+    if let Some(o) = args.get("out") {
+        cfg.out_dir = o.to_string();
+    }
+    if let Some(n) = args.get_usize("checkpoint-every")? {
+        cfg.checkpoint_every = n;
+    }
+    if let Some(p) = args.get("resume") {
+        cfg.resume_from = Some(p.to_string());
+    }
+    let opt = &mut cfg.optimizer;
+    if let Some(kind) = args.get("opt") {
+        opt.kind = OptimizerKind::parse(kind)?;
+    }
+    if let Some(x) = args.get_f64("lr")? {
+        opt.lr = x;
+    }
+    if let Some(x) = args.get_f64("damping")? {
+        opt.damping = x;
+    }
+    if let Some(x) = args.get_f64("momentum")? {
+        opt.momentum = x;
+    }
+    if let Some(x) = args.get_f64("sketch")? {
+        opt.sketch_ratio = x;
+    }
+    if let Some(m) = args.get("solve") {
+        opt.solve = SolveMode::parse(m)?;
+        if opt.solve != SolveMode::Exact {
+            opt.path = ExecPath::Decomposed;
+        }
+    }
+    if let Some(m) = args.get("path") {
+        opt.path = ExecPath::parse(m)?;
+    }
+    if let Some(m) = args.get("bias") {
+        opt.bias = BiasMode::parse(m)?;
+    }
+    if args.has("line-search") {
+        opt.line_search = true;
+    }
+    if let Some(x) = args.get_usize("cg-iters")? {
+        opt.cg_iters = x;
+    }
+    if let Some(x) = args.get_f64("ema")? {
+        opt.ema = x;
+    }
+    opt.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::new(&cfg.artifacts_dir)
+        .with_context(|| format!("loading artifacts from '{}'", cfg.artifacts_dir))?;
+    let opt_desc = engd::optim::build_optimizer(&cfg)?.describe();
+    println!(
+        "[train] {} on {} ({} steps, seed {})",
+        opt_desc, cfg.problem, cfg.steps, cfg.seed
+    );
+    let report = train(cfg, &rt, args.has("echo"))?;
+    println!(
+        "[train] done: {} steps in {:.1}s (+{:.1}s compile) — final loss {:.4e}, best L2 {:.4e}",
+        report.steps_done, report.wall_s, report.compile_s, report.final_loss, report.best_l2
+    );
+    for (thr, s) in &report.time_to {
+        println!("[train]   reached L2 <= {thr:.0e} at t = {s:.2}s");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut cfg = config_from_args(args)?;
+    if args.get("name").is_none() {
+        cfg.name = format!("sweep-{}-{}", cfg.problem, cfg.optimizer.kind.name());
+    }
+    let trials = args.get_usize("trials")?.unwrap_or(10);
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    println!(
+        "[sweep] {} trials of {} on {} ({} steps each)",
+        trials,
+        cfg.optimizer.kind.name(),
+        cfg.problem,
+        cfg.steps
+    );
+    let trials = engd::sweep::run_sweep(&cfg, &rt, trials, true)?;
+    println!("\n[sweep] ranking (best L2 ascending):");
+    for t in trials.iter().take(5) {
+        println!(
+            "  #{:<3} L2={:.3e}  damping={:.3e} momentum={:.3} lr={:.3e}  ({} steps, {:.1}s)",
+            t.index,
+            t.report.best_l2,
+            t.optimizer.damping,
+            t.optimizer.momentum,
+            t.optimizer.lr,
+            t.report.steps_done,
+            t.report.wall_s
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eff_dim(args: &Args) -> Result<()> {
+    let mut cfg = config_from_args(args)?;
+    // d_eff tracking needs the decomposed path + diagnostics at every eval.
+    cfg.optimizer.path = ExecPath::Decomposed;
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    println!(
+        "[eff-dim] tracking d_eff of (K + lambda*I), lambda = {:.3e}, problem {}",
+        cfg.optimizer.damping, cfg.problem
+    );
+    cfg.eval_every = args.get_usize("eval-every")?.unwrap_or(5);
+    cfg.name = format!("effdim-{}", cfg.problem);
+    let report = train(cfg, &rt, true)?;
+    println!(
+        "[eff-dim] done; per-step d_eff is in results/{}.csv (d_eff, d_eff_ratio columns)",
+        report.name
+    );
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let rt = Runtime::new(dir)?;
+    println!("platform: {}", rt.platform());
+    for (name, p) in &rt.manifest().problems {
+        println!(
+            "{name}: d={} arch={:?} P={} N={}+{} eval={} pde={}",
+            p.dim, p.arch, p.n_params, p.n_interior, p.n_boundary, p.n_eval, p.pde
+        );
+        let arts: Vec<&str> = p.artifacts.keys().map(|s| s.as_str()).collect();
+        println!("   artifacts: {}", arts.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let dir = args.get_or("dir", "results");
+    let rows = engd::metrics::report::summarize_dir(dir)?;
+    if rows.is_empty() {
+        println!("no run CSVs found under {dir}");
+        return Ok(());
+    }
+    print!("{}", engd::metrics::report::markdown_table(&rows));
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let rt = Runtime::new(dir)?;
+    println!("[smoke] platform = {}", rt.platform());
+    let problem = args.get_or("problem", "poisson2d");
+    let mut cfg = RunConfig {
+        problem: problem.to_string(),
+        artifacts_dir: dir.to_string(),
+        name: "smoke".into(),
+        steps: 10,
+        eval_every: 5,
+        ..RunConfig::default()
+    };
+    cfg.optimizer.kind = OptimizerKind::Spring;
+    cfg.optimizer.line_search = true;
+    cfg.optimizer.momentum = 0.8;
+    cfg.optimizer.damping = 1e-6;
+    let report = train(cfg, &rt, true)?;
+    anyhow::ensure!(report.steps_done == 10, "expected 10 steps");
+    anyhow::ensure!(report.final_loss.is_finite(), "loss diverged");
+    println!(
+        "[smoke] OK — loss {:.4e}, L2 {:.4e}",
+        report.final_loss, report.best_l2
+    );
+    Ok(())
+}

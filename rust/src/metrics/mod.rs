@@ -1,0 +1,253 @@
+//! Metrics substrate: run directories, JSONL/CSV sinks, timers, and summary
+//! statistics (the role W&B plays in the paper's experimental protocol).
+
+pub mod report;
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::json::JsonValue;
+
+/// One training-step record; serialized as a JSONL line and a CSV row.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub wall_s: f64,
+    pub loss: f64,
+    /// Relative L2 error against the exact solution (NaN when not evaluated
+    /// this step).
+    pub l2_error: f64,
+    /// Step length actually taken (after line search, if any).
+    pub lr: f64,
+    /// Optimizer-specific extras (e.g. d_eff, cg_iters, sketch size).
+    pub extra: Vec<(String, f64)>,
+}
+
+/// Writes per-step records to `<dir>/<name>.jsonl` + `.csv` as they arrive.
+pub struct RunLogger {
+    jsonl: BufWriter<File>,
+    csv: BufWriter<File>,
+    csv_header_written: bool,
+    start: Instant,
+    pub dir: PathBuf,
+    pub name: String,
+    records: Vec<StepRecord>,
+    echo: bool,
+}
+
+impl RunLogger {
+    pub fn create(dir: impl AsRef<Path>, name: &str, echo: bool) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let jsonl = BufWriter::new(File::create(dir.join(format!("{name}.jsonl")))?);
+        let csv = BufWriter::new(File::create(dir.join(format!("{name}.csv")))?);
+        Ok(RunLogger {
+            jsonl,
+            csv,
+            csv_header_written: false,
+            start: Instant::now(),
+            dir,
+            name: name.to_string(),
+            records: Vec::new(),
+            echo,
+        })
+    }
+
+    /// Seconds since logger creation.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn log(&mut self, rec: StepRecord) -> Result<()> {
+        // JSONL
+        let mut obj = vec![
+            ("step".to_string(), JsonValue::Number(rec.step as f64)),
+            ("wall_s".to_string(), JsonValue::Number(rec.wall_s)),
+            ("loss".to_string(), JsonValue::Number(rec.loss)),
+            ("l2_error".to_string(), JsonValue::Number(rec.l2_error)),
+            ("lr".to_string(), JsonValue::Number(rec.lr)),
+        ];
+        for (k, v) in &rec.extra {
+            obj.push((k.clone(), JsonValue::Number(*v)));
+        }
+        writeln!(
+            self.jsonl,
+            "{}",
+            crate::config::json::to_string(&JsonValue::Object(obj))
+        )?;
+
+        // CSV (header from the first record's extras)
+        if !self.csv_header_written {
+            let extras: Vec<&str> = rec.extra.iter().map(|(k, _)| k.as_str()).collect();
+            writeln!(
+                self.csv,
+                "step,wall_s,loss,l2_error,lr{}{}",
+                if extras.is_empty() { "" } else { "," },
+                extras.join(",")
+            )?;
+            self.csv_header_written = true;
+        }
+        let extras: Vec<String> = rec.extra.iter().map(|(_, v)| format!("{v:.6e}")).collect();
+        writeln!(
+            self.csv,
+            "{},{:.4},{:.6e},{:.6e},{:.3e}{}{}",
+            rec.step,
+            rec.wall_s,
+            rec.loss,
+            rec.l2_error,
+            rec.lr,
+            if extras.is_empty() { "" } else { "," },
+            extras.join(",")
+        )?;
+        if self.echo {
+            let l2 = if rec.l2_error.is_nan() {
+                "      -  ".to_string()
+            } else {
+                format!("{:.3e}", rec.l2_error)
+            };
+            println!(
+                "[{}] step {:>5}  t={:7.2}s  loss={:.6e}  L2={}  lr={:.2e}",
+                self.name, rec.step, rec.wall_s, rec.loss, l2, rec.lr
+            );
+        }
+        self.records.push(rec);
+        // Flush per record: steps cost orders of magnitude more than the
+        // write, and live `tail -f` on the CSVs is part of the workflow.
+        self.jsonl.flush()?;
+        self.csv.flush()?;
+        Ok(())
+    }
+
+    pub fn records(&self) -> &[StepRecord] {
+        &self.records
+    }
+
+    /// Best (minimum) L2 error observed so far.
+    pub fn best_l2(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.l2_error)
+            .filter(|x| x.is_finite())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// First wall-clock time at which L2 dropped below `threshold`
+    /// (the paper's headline "same error, 75× faster" metric).
+    pub fn time_to_l2(&self, threshold: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.l2_error.is_finite() && r.l2_error <= threshold)
+            .map(|r| r.wall_s)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.jsonl.flush()?;
+        self.csv.flush()?;
+        Ok(())
+    }
+}
+
+/// Simple wall-clock stopwatch for perf sections.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+    pub fn seconds(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Median / inter-quartile summary for bench reporting (the role criterion
+/// plays in a crates.io build).
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub median: f64,
+    pub q1: f64,
+    pub q3: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample set");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |f: f64| -> f64 {
+            let idx = f * (s.len() - 1) as f64;
+            let lo = idx.floor() as usize;
+            let hi = idx.ceil() as usize;
+            let frac = idx - lo as f64;
+            s[lo] * (1.0 - frac) + s[hi] * frac
+        };
+        Summary {
+            median: q(0.5),
+            q1: q(0.25),
+            q3: q(0.75),
+            min: s[0],
+            max: *s.last().unwrap(),
+            n: s.len(),
+        }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:.4e}s  IQR [{:.4e}, {:.4e}]  range [{:.4e}, {:.4e}]  n={}",
+            self.median, self.q1, self.q3, self.min, self.max, self.n
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logger_writes_jsonl_and_csv() {
+        let dir = std::env::temp_dir().join(format!("engd-test-{}", std::process::id()));
+        let mut lg = RunLogger::create(&dir, "t", false).unwrap();
+        for step in 0..3 {
+            lg.log(StepRecord {
+                step,
+                wall_s: step as f64 * 0.1,
+                loss: 1.0 / (step + 1) as f64,
+                l2_error: if step == 2 { 0.01 } else { f64::NAN },
+                lr: 0.1,
+                extra: vec![("d_eff".into(), 42.0)],
+            })
+            .unwrap();
+        }
+        lg.flush().unwrap();
+        let jsonl = std::fs::read_to_string(dir.join("t.jsonl")).unwrap();
+        assert_eq!(jsonl.lines().count(), 3);
+        let parsed = crate::config::json::parse(jsonl.lines().next().unwrap()).unwrap();
+        assert_eq!(parsed.get("d_eff").unwrap().as_f64(), Some(42.0));
+        let csv = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert!(csv.starts_with("step,wall_s,loss,l2_error,lr,d_eff"));
+        assert_eq!(lg.best_l2(), 0.01);
+        assert!(lg.time_to_l2(0.05).is_some());
+        assert!(lg.time_to_l2(0.001).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_quartiles() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.q1, 2.0);
+        assert_eq!(s.q3, 4.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Results reporting: scan run CSVs and summarize them as a markdown table —
+//! the tool that fills EXPERIMENTS.md from `results/bench/`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Summary of one run CSV.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub name: String,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub final_loss: f64,
+    pub best_l2: f64,
+    /// (threshold, first wall-clock seconds at/below it)
+    pub time_to: Vec<(f64, f64)>,
+}
+
+/// Parse a training CSV written by [`crate::metrics::RunLogger`].
+pub fn parse_run_csv(path: impl AsRef<Path>) -> Result<RunSummary> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = text.lines();
+    let header: Vec<&str> = lines
+        .next()
+        .context("empty CSV")?
+        .split(',')
+        .collect();
+    let col = |name: &str| header.iter().position(|c| *c == name);
+    let (step_i, wall_i, loss_i, l2_i) = (
+        col("step").context("no step column")?,
+        col("wall_s").context("no wall_s column")?,
+        col("loss").context("no loss column")?,
+        col("l2_error").context("no l2_error column")?,
+    );
+
+    let thresholds = [1e-1, 1e-2, 1e-3, 1e-4];
+    let mut time_to: Vec<(f64, f64)> = Vec::new();
+    let mut steps = 0usize;
+    let mut wall_s = 0.0;
+    let mut final_loss = f64::NAN;
+    let mut best_l2 = f64::INFINITY;
+    for line in lines {
+        let cols: Vec<&str> = line.split(',').collect();
+        let get = |i: usize| cols.get(i).and_then(|s| s.parse::<f64>().ok());
+        if let Some(s) = get(step_i) {
+            steps = s as usize;
+        }
+        if let Some(w) = get(wall_i) {
+            wall_s = w;
+        }
+        if let Some(l) = get(loss_i) {
+            final_loss = l;
+        }
+        if let Some(e) = get(l2_i) {
+            if e.is_finite() {
+                best_l2 = best_l2.min(e);
+                for &t in &thresholds {
+                    if e <= t && !time_to.iter().any(|(tt, _)| *tt == t) {
+                        time_to.push((t, wall_s));
+                    }
+                }
+            }
+        }
+    }
+    Ok(RunSummary {
+        name: path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("?")
+            .to_string(),
+        steps,
+        wall_s,
+        final_loss,
+        best_l2,
+        time_to,
+    })
+}
+
+/// Summarize every CSV under `dir` (recursively), sorted by path.
+pub fn summarize_dir(dir: impl AsRef<Path>) -> Result<Vec<(String, RunSummary)>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.as_ref().to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries = match std::fs::read_dir(&d) {
+            Ok(e) => e,
+            Err(_) => continue,
+        };
+        for entry in entries.flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "csv") {
+                if let Ok(s) = parse_run_csv(&p) {
+                    let rel = p.display().to_string();
+                    out.push((rel, s));
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+/// Render summaries as a GitHub-markdown table.
+pub fn markdown_table(rows: &[(String, RunSummary)]) -> String {
+    let mut s = String::from(
+        "| run | steps | wall [s] | final loss | best L2 | t(≤1e-1) | t(≤1e-2) | t(≤1e-3) |\n\
+         |---|---|---|---|---|---|---|---|\n",
+    );
+    for (path, r) in rows {
+        let t = |thr: f64| -> String {
+            r.time_to
+                .iter()
+                .find(|(tt, _)| *tt == thr)
+                .map(|(_, s)| format!("{s:.1}s"))
+                .unwrap_or_else(|| "—".into())
+        };
+        s.push_str(&format!(
+            "| {} | {} | {:.1} | {:.3e} | {:.3e} | {} | {} | {} |\n",
+            path,
+            r.steps,
+            r.wall_s,
+            r.final_loss,
+            r.best_l2,
+            t(1e-1),
+            t(1e-2),
+            t(1e-3),
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_logger_output() {
+        let dir = std::env::temp_dir().join(format!("engd-report-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("runA.csv");
+        std::fs::write(
+            &path,
+            "step,wall_s,loss,l2_error,lr\n\
+             1,0.5,1.0e0,NaN,1e-1\n\
+             2,1.0,5.0e-1,9.0e-2,1e-1\n\
+             3,1.5,1.0e-2,5.0e-3,1e-1\n",
+        )
+        .unwrap();
+        let s = parse_run_csv(&path).unwrap();
+        assert_eq!(s.steps, 3);
+        assert_eq!(s.best_l2, 5.0e-3);
+        assert_eq!(s.time_to, vec![(1e-1, 1.0), (1e-2, 1.5)]);
+
+        let rows = summarize_dir(&dir).unwrap();
+        assert_eq!(rows.len(), 1);
+        let md = markdown_table(&rows);
+        assert!(md.contains("runA"));
+        assert!(md.contains("5.000e-3"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,35 @@
+//! Randomized Nyström approximations of the regularized kernel matrix
+//! (paper §3.3–§3.4).
+//!
+//! * [`gpu_efficient`] — the paper's Algorithm 2: Cholesky-only
+//!   sketch-and-solve, skipping the QR of Ω and the SVD of the sketch.
+//! * [`stable`] — the standard stable Nyström of Frangella–Tropp–Udell
+//!   (alg. 2.1), the baseline of the paper's Appendix-B benchmark. Its
+//!   SVD-class factorization is our Jacobi `eigh` (DESIGN.md §Substitutions).
+//! * [`effective_dim`] — d_eff(A) = Tr(A (A+λI)⁻¹) (paper §3.4), computed
+//!   exactly via a Cholesky inverse-trace, plus the spectral variant.
+
+mod adaptive;
+mod effective_dim;
+mod gpu_efficient;
+mod pcg;
+mod stable;
+
+pub use adaptive::{adaptive_nystrom_from_jacobian, AdaptiveNystrom};
+pub use effective_dim::{effective_dimension, effective_dimension_spectral};
+pub use gpu_efficient::GpuNystrom;
+pub use pcg::{nystrom_pcg, PcgOutcome};
+pub use stable::StableNystrom;
+
+/// Common interface: a factorized approximation of `A_nys + λI` that can
+/// apply its inverse to vectors (the only operation the optimizers need).
+pub trait NystromApprox {
+    /// Apply `(Â + λI)⁻¹ v`.
+    fn inv_apply(&self, v: &[f64]) -> Vec<f64>;
+
+    /// The sketch size actually used.
+    fn sketch_size(&self) -> usize;
+
+    /// Reconstruct the dense approximation `Â` (tests / diagnostics only).
+    fn dense_approx(&self) -> crate::linalg::Matrix;
+}

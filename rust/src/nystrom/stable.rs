@@ -1,0 +1,233 @@
+//! Standard *stable* randomized Nyström approximation
+//! (Frangella–Tropp–Udell, SIAM J. Matrix Anal. 2023, algorithm 2.1) —
+//! the baseline the paper's GPU-efficient Algorithm 2 is benchmarked against
+//! (Appendix B).
+//!
+//! ```text
+//! 1: Ω ← qr_econ(randn(n, ℓ)).Q        ← the QR Algorithm 2 skips
+//! 2: Y ← A Ω
+//! 3: ν ← √n · eps(‖Y‖₂);  Y_ν ← Y + νΩ
+//! 4: C ← chol(Ωᵀ Y_ν)
+//! 5: B ← Y_ν C⁻¹
+//! 6: [U, Σ, ~] ← svd_econ(B)           ← the SVD Algorithm 2 skips
+//! 7: Λ ← max(0, Σ² − νI)
+//! ```
+//!
+//! yielding `Â = U Λ Uᵀ` and the exact damped inverse
+//! `(Â + λI)⁻¹ = U ((Λ+λ)⁻¹ − λ⁻¹) Uᵀ + λ⁻¹ I`.
+//!
+//! The economy SVD of B (n × ℓ) is computed from the eigendecomposition of
+//! the ℓ×ℓ Gram matrix BᵀB via our Jacobi `eigh` — the SVD-class
+//! factorization whose cost Appendix B measures (DESIGN.md §Substitutions).
+
+use anyhow::{Context, Result};
+
+use super::NystromApprox;
+use crate::linalg::{eigh, thin_qr, Cholesky, Matrix};
+use crate::rng::Rng;
+
+/// Eigendecomposition-form stable Nyström approximation.
+pub struct StableNystrom {
+    /// U (n × ℓ), orthonormal columns.
+    u: Matrix,
+    /// Λ (ℓ), nonnegative.
+    lam_diag: Vec<f64>,
+    lambda: f64,
+    pub nu: f64,
+}
+
+impl StableNystrom {
+    pub fn build(a: &Matrix, sketch: usize, lambda: f64, rng: &mut Rng) -> Result<Self> {
+        let n = a.rows();
+        assert_eq!(a.rows(), a.cols(), "Nyström needs a square PSD matrix");
+        let sketch = sketch.clamp(1, n);
+
+        // 1: orthonormal test matrix.
+        let mut g = Matrix::zeros(n, sketch);
+        rng.fill_normal(g.data_mut());
+        let omega = thin_qr(&g);
+
+        // 2: sketch.
+        let y = a.matmul(&omega);
+        Self::from_sketch(omega, y, lambda)
+    }
+
+    /// Build from a precomputed (orthonormal Ω, Y = AΩ) pair.
+    pub fn from_sketch(omega: Matrix, y: Matrix, lambda: f64) -> Result<Self> {
+        let n = y.rows();
+
+        // 3: shift — with ν escalation on rank-deficient sketches, as in
+        // `gpu_efficient` (see the comment there).
+        let base_nu = (n as f64).sqrt() * ulp(y.frobenius_norm());
+        let mut attempt = 0;
+        let (y_nu, c, nu) = loop {
+            let nu = base_nu * 1000f64.powi(attempt);
+            let mut y_nu = y.clone();
+            y_nu.add_scaled(&omega, nu);
+            // 4: core Cholesky.
+            let mut core = omega.transpose().matmul(&y_nu);
+            symmetrize(&mut core);
+            match Cholesky::factor(&core) {
+                Ok(c) => break (y_nu, c, nu),
+                Err(_) if attempt < 5 => attempt += 1,
+                Err(e) => {
+                    return Err(e)
+                        .context("stable Nyström core ΩᵀYν is not PD even after ν escalation")
+                }
+            }
+        };
+        // 5: triangular solve.
+        let b = c.right_solve_transpose(&y_nu);
+
+        // 6: economy SVD of B from eigh(BᵀB): BᵀB = V Σ² Vᵀ, U = B V Σ⁻¹.
+        let btb = b.transpose().matmul(&b);
+        let e = eigh(&btb);
+        let ell = btb.rows();
+        // Descending order is conventional for SVD; eigh returns ascending.
+        let mut u = Matrix::zeros(n, ell);
+        let mut lam_diag = vec![0.0; ell];
+        let bv = b.matmul(&e.eigenvectors);
+        for (col, k) in (0..ell).rev().enumerate() {
+            let sigma2 = e.eigenvalues[k].max(0.0);
+            let sigma = sigma2.sqrt();
+            // 7: Λ = max(0, Σ² − ν).
+            lam_diag[col] = (sigma2 - nu).max(0.0);
+            if sigma > 0.0 {
+                for i in 0..n {
+                    u[(i, col)] = bv[(i, k)] / sigma;
+                }
+            }
+        }
+        Ok(StableNystrom {
+            u,
+            lam_diag,
+            lambda,
+            nu,
+        })
+    }
+
+    /// The approximation's eigenvalues (descending).
+    pub fn eigenvalues(&self) -> &[f64] {
+        &self.lam_diag
+    }
+}
+
+impl NystromApprox for StableNystrom {
+    /// `(UΛUᵀ + λI)⁻¹ v = U ((Λ+λ)⁻¹ − λ⁻¹) Uᵀ v + v / λ`.
+    fn inv_apply(&self, v: &[f64]) -> Vec<f64> {
+        let utv = self.u.tr_matvec(v);
+        let scaled: Vec<f64> = utv
+            .iter()
+            .zip(&self.lam_diag)
+            .map(|(x, &w)| x * (1.0 / (w + self.lambda) - 1.0 / self.lambda))
+            .collect();
+        let u_scaled = self.u.matvec(&scaled);
+        v.iter()
+            .zip(&u_scaled)
+            .map(|(vi, ui)| vi / self.lambda + ui)
+            .collect()
+    }
+
+    fn sketch_size(&self) -> usize {
+        self.lam_diag.len()
+    }
+
+    fn dense_approx(&self) -> Matrix {
+        let mut ul = self.u.clone();
+        for j in 0..self.lam_diag.len() {
+            let w = self.lam_diag[j];
+            for i in 0..ul.rows() {
+                ul[(i, j)] *= w;
+            }
+        }
+        ul.matmul(&self.u.transpose())
+    }
+}
+
+fn ulp(x: f64) -> f64 {
+    if x == 0.0 {
+        return f64::MIN_POSITIVE;
+    }
+    let bits = x.abs().to_bits();
+    f64::from_bits(bits + 1) - x.abs()
+}
+
+fn symmetrize(m: &mut Matrix) {
+    let n = m.rows();
+    for i in 0..n {
+        for j in i + 1..n {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decaying_psd(rng: &mut Rng, n: usize, decay: f64) -> Matrix {
+        let mut g = Matrix::zeros(n, n);
+        rng.fill_normal(g.data_mut());
+        let q = thin_qr(&g);
+        let mut k = Matrix::zeros(n, n);
+        for j in 0..n {
+            let w = (-decay * j as f64).exp();
+            for i in 0..n {
+                k[(i, j)] = q[(i, j)] * w;
+            }
+        }
+        k.matmul(&q.transpose())
+    }
+
+    #[test]
+    fn full_sketch_recovers_matrix() {
+        let mut rng = Rng::seed_from(1);
+        let a = decaying_psd(&mut rng, 30, 0.3);
+        let nys = StableNystrom::build(&a, 30, 1e-8, &mut rng).unwrap();
+        assert!(a.max_abs_diff(&nys.dense_approx()) < 1e-7);
+    }
+
+    #[test]
+    fn inv_apply_matches_dense_solve() {
+        let mut rng = Rng::seed_from(2);
+        let a = decaying_psd(&mut rng, 25, 0.4);
+        let lam = 1e-3;
+        let nys = StableNystrom::build(&a, 12, lam, &mut rng).unwrap();
+        let dense = nys.dense_approx().add_diag(lam);
+        let mut v = vec![0.0; 25];
+        rng.fill_normal(&mut v);
+        let want = Cholesky::factor(&dense).unwrap().solve(&v);
+        let got = nys.inv_apply(&v);
+        for (w, g) in want.iter().zip(&got) {
+            assert!((w - g).abs() < 1e-7, "{w} vs {g}");
+        }
+    }
+
+    #[test]
+    fn gpu_and_stable_agree_on_easy_spectra() {
+        // With a strongly decaying spectrum and a generous sketch, the two
+        // variants should produce nearly identical approximations — this is
+        // the paper's claim that skipping QR/SVD costs little accuracy.
+        let mut rng = Rng::seed_from(3);
+        let a = decaying_psd(&mut rng, 40, 0.5);
+        let stable = StableNystrom::build(&a, 25, 1e-6, &mut rng).unwrap();
+        let gpu = super::super::GpuNystrom::build(&a, 25, 1e-6, &mut rng).unwrap();
+        let d = stable.dense_approx().max_abs_diff(&gpu.dense_approx());
+        let scale = a.frobenius_norm();
+        assert!(d / scale < 1e-4, "relative divergence {}", d / scale);
+    }
+
+    #[test]
+    fn eigenvalues_are_nonnegative_descending() {
+        let mut rng = Rng::seed_from(4);
+        let a = decaying_psd(&mut rng, 30, 0.2);
+        let nys = StableNystrom::build(&a, 15, 1e-8, &mut rng).unwrap();
+        let w = nys.eigenvalues();
+        assert!(w.iter().all(|&x| x >= 0.0));
+        for k in 1..w.len() {
+            assert!(w[k - 1] >= w[k] - 1e-12);
+        }
+    }
+}

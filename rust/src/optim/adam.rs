@@ -1,0 +1,58 @@
+//! Adam — first-order baseline (paper §4; only the learning rate is tuned,
+//! Appendix A.1).
+
+use anyhow::Result;
+
+use super::{Optimizer, StepEnv, StepInfo};
+use crate::config::OptimizerConfig;
+
+pub struct Adam {
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+}
+
+impl Adam {
+    pub fn new(o: &OptimizerConfig) -> Self {
+        Adam {
+            lr: o.lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
+        let (loss, grad) = env.loss_and_grad(theta)?;
+        if self.m.is_empty() {
+            self.m = vec![0.0; theta.len()];
+            self.v = vec![0.0; theta.len()];
+        }
+        let k = env.k as i32;
+        let bc1 = 1.0 - self.beta1.powi(k);
+        let bc2 = 1.0 - self.beta2.powi(k);
+        for i in 0..theta.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            theta[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+        Ok(StepInfo {
+            loss,
+            lr_used: self.lr,
+            extra: vec![("grad_norm".into(), crate::linalg::norm2(&grad))],
+        })
+    }
+
+    fn describe(&self) -> String {
+        format!("adam(lr={:.3e})", self.lr)
+    }
+}

@@ -1,0 +1,112 @@
+//! Original (dense) ENGD — Müller & Zeinhofer 2023, the paper's eq. (1)–(4):
+//!
+//! `θ ← θ − η (G + λI)⁻¹ ∇L`,   `G = Jᵀ J ∈ R^{P×P}`
+//!
+//! This is the O(P³) baseline the Woodbury identity obsoletes. Forming and
+//! factoring the P×P Gramian is *supposed* to be slow — Fig. 2's point is
+//! that ENGD-W takes 30× more steps in the same wall-clock budget. Appendix
+//! A.1 tunes: damping, Gramian EMA factor, and identity-vs-zero Gramian
+//! initialization; all three are implemented here.
+//!
+//! A guard refuses P > `MAX_DENSE_PARAMS` (the paper's ENGD likewise OOMs on
+//! the 10d/100d networks and is excluded there, Appendix A.3).
+
+use anyhow::{bail, Result};
+
+use super::{grid_line_search, Optimizer, StepEnv, StepInfo};
+use crate::config::OptimizerConfig;
+use crate::linalg::{Cholesky, Matrix};
+
+/// Dense ENGD refuses to run above this parameter count (24 GiB-class guard,
+/// mirroring the paper's OOM boundary).
+pub const MAX_DENSE_PARAMS: usize = 20_000;
+
+pub struct EngdDense {
+    cfg: OptimizerConfig,
+    /// EMA-accumulated Gramian (P×P), lazily initialized.
+    gramian: Option<Matrix>,
+}
+
+impl EngdDense {
+    pub fn new(o: &OptimizerConfig) -> Self {
+        EngdDense {
+            cfg: o.clone(),
+            gramian: None,
+        }
+    }
+}
+
+impl Optimizer for EngdDense {
+    fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
+        let p = env.problem.n_params;
+        if p > MAX_DENSE_PARAMS {
+            bail!(
+                "dense ENGD: P = {p} exceeds {MAX_DENSE_PARAMS} — the paper's \
+                 original ENGD runs out of memory here too (A.3); use engd_w"
+            );
+        }
+        let (r, j) = env.residuals_jacobian(theta)?;
+        let loss = 0.5 * crate::linalg::dot(&r, &r);
+        let grad = j.tr_matvec(&r);
+
+        // G_batch = Jᵀ J, then EMA into the accumulator.
+        let g_batch = j.transpose().gram();
+        let ema = self.cfg.ema;
+        let gram = match self.gramian.take() {
+            None => {
+                if self.cfg.gramian_identity_init && ema > 0.0 {
+                    // G ← ema·I + (1−ema)·G_batch
+                    let mut g = g_batch;
+                    g.scale_in_place(1.0 - ema);
+                    for i in 0..p {
+                        g[(i, i)] += ema;
+                    }
+                    g
+                } else {
+                    g_batch
+                }
+            }
+            Some(mut acc) => {
+                if ema > 0.0 {
+                    acc.scale_in_place(ema);
+                    acc.add_scaled(&g_batch, 1.0 - ema);
+                    acc
+                } else {
+                    g_batch
+                }
+            }
+        };
+
+        let ch = Cholesky::factor(&gram.add_diag(self.cfg.damping))?;
+        let phi = ch.solve(&grad);
+        self.gramian = Some(gram);
+
+        let eta = if self.cfg.line_search {
+            let ls = grid_line_search(env, theta, &phi, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)?;
+            ls.eta
+        } else {
+            self.cfg.lr
+        };
+        for (t, d) in theta.iter_mut().zip(&phi) {
+            *t -= eta * d;
+        }
+        Ok(StepInfo {
+            loss,
+            lr_used: eta,
+            extra: vec![("grad_norm".into(), crate::linalg::norm2(&grad))],
+        })
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "engd_dense(λ={:.3e}, ema={}, {})",
+            self.cfg.damping,
+            self.cfg.ema,
+            if self.cfg.line_search {
+                "line-search".to_string()
+            } else {
+                format!("lr={:.3e}", self.cfg.lr)
+            }
+        )
+    }
+}

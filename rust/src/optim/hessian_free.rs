@@ -1,0 +1,118 @@
+//! Hessian-free optimization (Martens 2010) — the matrix-free second-order
+//! baseline of the paper (§4 "Implementation"): truncated conjugate-gradient
+//! iterations on the damped Gauss–Newton system
+//!
+//! `(JᵀJ + λI) φ = ∇L`
+//!
+//! with exact Gramian-vector products `v ↦ Jᵀ(J v) + λ v`. Includes the
+//! standard Levenberg–Marquardt damping adaptation (Appendix A.1 tunes
+//! "whether to adapt damping over time"; the best 5d run adapts).
+//!
+//! The paper's point (§2 "Scalability") is that CG suffers under the
+//! Gramian's ill-conditioning — our Fig. 2 bench shows the resulting gap to
+//! ENGD-W.
+
+use anyhow::Result;
+
+use super::{grid_line_search, Optimizer, StepEnv, StepInfo};
+use crate::config::OptimizerConfig;
+use crate::linalg::cg_solve;
+
+pub struct HessianFree {
+    cfg: OptimizerConfig,
+    /// Current (possibly adapted) damping.
+    lambda: f64,
+    /// Adapt damping via the LM reduction ratio.
+    adapt: bool,
+}
+
+impl HessianFree {
+    pub fn new(o: &OptimizerConfig) -> Self {
+        HessianFree {
+            cfg: o.clone(),
+            lambda: o.damping,
+            adapt: true,
+        }
+    }
+
+    /// Disable Levenberg–Marquardt damping adaptation (A.1's "constant
+    /// damping: yes" arm).
+    pub fn with_constant_damping(mut self) -> Self {
+        self.adapt = false;
+        self
+    }
+}
+
+impl Optimizer for HessianFree {
+    fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
+        let (r, j) = env.residuals_jacobian(theta)?;
+        let loss = 0.5 * crate::linalg::dot(&r, &r);
+        let grad = j.tr_matvec(&r);
+        let lambda = self.lambda;
+
+        let out = cg_solve(
+            |v| {
+                let jv = j.matvec(v);
+                let mut jtjv = j.tr_matvec(&jv);
+                for (x, vi) in jtjv.iter_mut().zip(v) {
+                    *x += lambda * vi;
+                }
+                jtjv
+            },
+            &grad,
+            self.cfg.cg_iters,
+            self.cfg.cg_tol,
+        );
+        let phi = out.x;
+
+        let eta = if self.cfg.line_search {
+            grid_line_search(env, theta, &phi, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)?.eta
+        } else {
+            self.cfg.lr
+        };
+        let mut trial: Vec<f64> = theta.to_vec();
+        for (t, d) in trial.iter_mut().zip(&phi) {
+            *t -= eta * d;
+        }
+
+        if self.adapt {
+            // LM ratio ρ = (actual reduction)/(predicted reduction), with the
+            // quadratic model m(φ) = L − η gᵀφ + ½η² φᵀ(G+λI)φ.
+            let new_loss = env.eval_loss(&trial)?;
+            let g_phi = crate::linalg::dot(&grad, &phi);
+            let jphi = j.matvec(&phi);
+            let quad = crate::linalg::dot(&jphi, &jphi)
+                + lambda * crate::linalg::dot(&phi, &phi);
+            let predicted = eta * g_phi - 0.5 * eta * eta * quad;
+            if predicted > 0.0 {
+                let rho = (loss - new_loss) / predicted;
+                if rho > 0.75 {
+                    self.lambda *= 2.0 / 3.0;
+                } else if rho < 0.25 {
+                    self.lambda *= 1.5;
+                }
+            } else {
+                self.lambda *= 1.5;
+            }
+            self.lambda = self.lambda.clamp(1e-12, 1e6);
+        }
+
+        theta.copy_from_slice(&trial);
+        Ok(StepInfo {
+            loss,
+            lr_used: eta,
+            extra: vec![
+                ("cg_iters".into(), out.iterations as f64),
+                ("cg_rel_res".into(), out.rel_residual),
+                ("damping".into(), lambda),
+            ],
+        })
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "hessian_free(λ0={:.3e}, cg_iters={}, adapt={})",
+            self.cfg.damping, self.cfg.cg_iters, self.adapt
+        )
+    }
+}

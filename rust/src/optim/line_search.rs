@@ -1,0 +1,167 @@
+//! Line searches on the loss artifact.
+//!
+//! The original ENGD uses an "expensive line search" (paper §4; ENGD-W and
+//! SPRING in Appendix A.2 "make use of the inherited ENGD line search"): the
+//! step size is chosen by evaluating the loss at a geometric grid of
+//! candidate η and taking the argmin. Each probe is one `loss`-artifact
+//! execution, so the cost is `grid` extra forward passes per step — exactly
+//! the overhead SPRING's fixed-lr mode removes.
+//!
+//! Both searches are generic over a loss oracle `Fn(η) -> Result<f64>` so
+//! they are unit-testable without a PJRT runtime; [`StepEnv`]-based wrappers
+//! adapt them to the artifact world.
+
+use anyhow::Result;
+
+use super::StepEnv;
+
+/// Outcome of a line search.
+#[derive(Debug, Clone, Copy)]
+pub struct LineSearchResult {
+    pub eta: f64,
+    pub loss: f64,
+    /// Number of loss evaluations spent.
+    pub evals: usize,
+}
+
+/// Geometric-grid search over `η ∈ {eta_max · 2⁻ᵏ : k = 0..grid}` with η = 0
+/// as the safeguard: if every probe increases the loss the step is skipped
+/// (mirroring ENGD's stall behaviour under bad damping rather than
+/// diverging).
+pub fn grid_search(
+    mut loss_at: impl FnMut(f64) -> Result<f64>,
+    base_loss: f64,
+    eta_max: f64,
+    grid: usize,
+) -> Result<LineSearchResult> {
+    let mut best = LineSearchResult {
+        eta: 0.0,
+        loss: base_loss,
+        evals: 0,
+    };
+    let mut eta = eta_max;
+    let mut evals = 0;
+    for _ in 0..grid {
+        let loss = loss_at(eta)?;
+        evals += 1;
+        if loss.is_finite() && loss < best.loss {
+            best.eta = eta;
+            best.loss = loss;
+        }
+        eta *= 0.5;
+    }
+    best.evals = evals;
+    Ok(best)
+}
+
+/// Golden-section refinement around a bracketing interval `[lo, hi]`:
+/// assumes unimodality locally (valid near a Gauss–Newton direction) and
+/// narrows to `tol`-relative width. Used by `refine = true` callers to
+/// squeeze the last factor after the grid bracket.
+pub fn golden_section(
+    mut loss_at: impl FnMut(f64) -> Result<f64>,
+    mut lo: f64,
+    mut hi: f64,
+    iters: usize,
+) -> Result<LineSearchResult> {
+    const INV_PHI: f64 = 0.618_033_988_749_894_9;
+    let mut evals = 0;
+    let mut x1 = hi - (hi - lo) * INV_PHI;
+    let mut x2 = lo + (hi - lo) * INV_PHI;
+    let mut f1 = loss_at(x1)?;
+    let mut f2 = loss_at(x2)?;
+    evals += 2;
+    for _ in 0..iters {
+        if f1 <= f2 {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = hi - (hi - lo) * INV_PHI;
+            f1 = loss_at(x1)?;
+        } else {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = lo + (hi - lo) * INV_PHI;
+            f2 = loss_at(x2)?;
+        }
+        evals += 1;
+    }
+    let (eta, loss) = if f1 <= f2 { (x1, f1) } else { (x2, f2) };
+    Ok(LineSearchResult { eta, loss, evals })
+}
+
+/// Artifact-backed grid line search over `loss(θ − η φ)` (the optimizers'
+/// entry point).
+pub fn grid_line_search(
+    env: &StepEnv,
+    theta: &[f64],
+    phi: &[f64],
+    base_loss: f64,
+    eta_max: f64,
+    grid: usize,
+) -> Result<LineSearchResult> {
+    let mut trial = vec![0.0; theta.len()];
+    grid_search(
+        |eta| {
+            for (t, (&th, &ph)) in trial.iter_mut().zip(theta.iter().zip(phi)) {
+                *t = th - eta * ph;
+            }
+            env.eval_loss(&trial)
+        },
+        base_loss,
+        eta_max,
+        grid,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_finds_the_best_scale_of_a_quadratic() {
+        // loss(η) = (η − 0.25)²: best grid point starting from 2 is 0.25.
+        let f = |eta: f64| Ok((eta - 0.25).powi(2));
+        let out = grid_search(f, 0.25f64.powi(2) + 1.0, 2.0, 12).unwrap();
+        assert!((out.eta - 0.25).abs() < 1e-12);
+        assert_eq!(out.evals, 12);
+    }
+
+    #[test]
+    fn grid_skips_step_when_nothing_improves() {
+        // Monotonically better at η = 0 (base loss 1.0; everything else worse).
+        let f = |eta: f64| Ok(1.0 + eta);
+        let out = grid_search(f, 1.0, 1.0, 8).unwrap();
+        assert_eq!(out.eta, 0.0);
+        assert_eq!(out.loss, 1.0);
+    }
+
+    #[test]
+    fn grid_ignores_non_finite_probes() {
+        let f = |eta: f64| {
+            Ok(if eta > 0.5 {
+                f64::INFINITY
+            } else {
+                (eta - 0.25).powi(2)
+            })
+        };
+        let out = grid_search(f, 1.0, 2.0, 10).unwrap();
+        assert!((out.eta - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn golden_section_narrows_to_the_minimum() {
+        let f = |eta: f64| Ok((eta - 0.3).powi(2) + 2.0);
+        let out = golden_section(f, 0.0, 1.0, 30).unwrap();
+        assert!((out.eta - 0.3).abs() < 1e-5, "eta = {}", out.eta);
+        assert!((out.loss - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn golden_section_handles_edge_minimum() {
+        let f = |eta: f64| Ok(eta); // minimum at the lo edge
+        let out = golden_section(f, 0.0, 1.0, 25).unwrap();
+        assert!(out.eta < 1e-4);
+    }
+}

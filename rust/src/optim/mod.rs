@@ -1,0 +1,237 @@
+//! The optimizer suite (paper §3–§4).
+//!
+//! Paper contributions:
+//! * [`engd_w`] — ENGD via the Woodbury/kernel identity (eq. 5), fused-
+//!   artifact or Rust-linalg paths, with optional randomized Nyström solves
+//!   (eq. 9).
+//! * [`spring`] — SPRING momentum (eqs. 7–8, Algorithm 1) with the paper's
+//!   bias correction.
+//!
+//! Baselines the paper evaluates against (§4, Appendix A.1):
+//! * [`engd_dense`] — the original O(P³) ENGD (Müller–Zeinhofer 2023) with
+//!   Gramian EMA and identity init,
+//! * [`hessian_free`] — truncated-CG Gauss–Newton (Martens 2010),
+//! * [`sgd`] / [`adam`] — tuned first-order baselines.
+
+mod adam;
+mod engd_dense;
+mod engd_w;
+mod hessian_free;
+mod line_search;
+mod sgd;
+mod spring;
+
+pub use adam::Adam;
+pub use engd_dense::EngdDense;
+pub use engd_w::EngdW;
+pub use hessian_free::HessianFree;
+pub use line_search::{golden_section, grid_line_search, grid_search, LineSearchResult};
+pub use sgd::Sgd;
+pub use spring::Spring;
+
+use anyhow::Result;
+
+use crate::config::{OptimizerConfig, RunConfig};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::runtime::{ProblemSpec, Runtime};
+
+/// Everything an optimizer can see during one step.
+pub struct StepEnv<'a> {
+    pub rt: &'a Runtime,
+    pub problem: &'a ProblemSpec,
+    /// Interior collocation points, row-major (N_Ω × d).
+    pub x_int: &'a [f64],
+    /// Boundary points, row-major (N_∂Ω × d).
+    pub x_bnd: &'a [f64],
+    /// 1-based step index (drives SPRING's bias correction).
+    pub k: usize,
+    /// Per-run RNG stream (sketches, etc.).
+    pub rng: &'a mut Rng,
+    /// If true, this step should also compute diagnostics (d_eff).
+    pub diagnostics: bool,
+}
+
+impl StepEnv<'_> {
+    /// Evaluate the loss artifact at `theta` (used by line searches).
+    pub fn eval_loss(&self, theta: &[f64]) -> Result<f64> {
+        let art = self.rt.artifact(&self.problem.name, "loss")?;
+        Ok(art.call(&[theta, self.x_int, self.x_bnd])?[0][0])
+    }
+
+    /// Fetch `(r, J)` from the `residuals_jacobian` artifact.
+    pub fn residuals_jacobian(&self, theta: &[f64]) -> Result<(Vec<f64>, Matrix)> {
+        let art = self.rt.artifact(&self.problem.name, "residuals_jacobian")?;
+        let mut out = art.call(&[theta, self.x_int, self.x_bnd])?;
+        let j = out.pop().expect("jacobian output");
+        let r = out.pop().expect("r output");
+        let n = self.problem.n_total();
+        let p = self.problem.n_params;
+        Ok((r, Matrix::from_vec(n, p, j)))
+    }
+
+    /// Fetch `(loss, ∇L)` from the `grad` artifact.
+    pub fn loss_and_grad(&self, theta: &[f64]) -> Result<(f64, Vec<f64>)> {
+        let art = self.rt.artifact(&self.problem.name, "grad")?;
+        let mut out = art.call(&[theta, self.x_int, self.x_bnd])?;
+        let g = out.pop().expect("grad output");
+        let l = out.pop().expect("loss output")[0];
+        Ok((l, g))
+    }
+}
+
+/// Result of one optimization step.
+#[derive(Debug, Clone)]
+pub struct StepInfo {
+    /// Training loss at the *pre-update* iterate (as the artifacts report).
+    pub loss: f64,
+    /// Step size actually applied (post line search).
+    pub lr_used: f64,
+    /// Optimizer-specific scalars (d_eff, cg iterations, sketch size, ...).
+    pub extra: Vec<(String, f64)>,
+}
+
+/// A PINN optimizer: updates θ in place using the step environment.
+pub trait Optimizer {
+    fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo>;
+
+    /// Human-readable identity for logs.
+    fn describe(&self) -> String;
+
+    /// Flat auxiliary state for checkpointing (SPRING's φ; empty otherwise).
+    fn state(&self) -> Vec<f64> {
+        Vec::new()
+    }
+
+    /// Restore auxiliary state from a checkpoint (no-op by default).
+    fn restore_state(&mut self, _state: Vec<f64>) {}
+}
+
+/// Build the optimizer described by a run configuration.
+pub fn build_optimizer(cfg: &RunConfig) -> Result<Box<dyn Optimizer>> {
+    build_from_opt(&cfg.optimizer)
+}
+
+/// Build from an [`OptimizerConfig`] directly (bench harness entry point).
+pub fn build_from_opt(o: &OptimizerConfig) -> Result<Box<dyn Optimizer>> {
+    use crate::config::run::OptimizerKind::*;
+    o.validate()?;
+    Ok(match o.kind {
+        Sgd => Box::new(sgd::Sgd::new(o)),
+        Adam => Box::new(adam::Adam::new(o)),
+        EngdDense => Box::new(engd_dense::EngdDense::new(o)),
+        EngdW => Box::new(engd_w::EngdW::new(o)),
+        Spring => Box::new(spring::Spring::new(o)),
+        HessianFree => Box::new(hessian_free::HessianFree::new(o)),
+    })
+}
+
+/// Shared helper: solve the damped kernel system `(K̂+λI) a = rhs` according
+/// to the configured [`crate::config::run::SolveMode`], where `K = J Jᵀ` and
+/// the randomized modes sketch `Y = J (Jᵀ Ω)` without forming K (the O(NPℓ)
+/// shortcut that motivates eq. 9). Returns the solution plus reporting tags.
+pub(crate) fn kernel_solve(
+    j: &Matrix,
+    rhs: &[f64],
+    o: &OptimizerConfig,
+    rng: &mut Rng,
+    diagnostics: bool,
+) -> Result<(Vec<f64>, Vec<(String, f64)>)> {
+    use crate::config::run::SolveMode;
+    let n = j.rows();
+    let mut extra = Vec::new();
+    let a = match o.solve {
+        SolveMode::Exact => {
+            let k = j.gram();
+            if diagnostics {
+                let d_eff = crate::nystrom::effective_dimension(&k, o.damping)?;
+                extra.push(("d_eff".to_string(), d_eff));
+                extra.push(("d_eff_ratio".to_string(), d_eff / n as f64));
+            }
+            let ch = crate::linalg::Cholesky::factor(&k.add_diag(o.damping))?;
+            ch.solve(rhs)
+        }
+        SolveMode::NystromGpu => {
+            let nys = build_gpu_nystrom(j, o, rng, &mut extra)?;
+            crate::nystrom::NystromApprox::inv_apply(&nys, rhs)
+        }
+        SolveMode::NystromStable => {
+            let sketch = sketch_size(n, o.sketch_ratio);
+            let mut g = Matrix::zeros(n, sketch);
+            rng.fill_normal(g.data_mut());
+            let omega = crate::linalg::thin_qr(&g);
+            let jt_omega = j.transpose().matmul(&omega);
+            let y = j.matmul(&jt_omega);
+            let nys = crate::nystrom::StableNystrom::from_sketch(omega, y, o.damping)?;
+            extra.push(("sketch".to_string(), sketch as f64));
+            crate::nystrom::NystromApprox::inv_apply(&nys, rhs)
+        }
+        SolveMode::NystromPcg => {
+            // Sketch-and-precondition (paper §3.3): Nyström preconditioner +
+            // CG on the exact damped kernel, with matvecs K v = J(Jᵀv).
+            let nys = build_gpu_nystrom(j, o, rng, &mut extra)?;
+            let lam = o.damping;
+            let out = crate::nystrom::nystrom_pcg(
+                |v| {
+                    let jtv = j.tr_matvec(v);
+                    let mut kv = j.matvec(&jtv);
+                    for (kvi, vi) in kv.iter_mut().zip(v) {
+                        *kvi += lam * vi;
+                    }
+                    kv
+                },
+                &nys,
+                rhs,
+                o.cg_iters,
+                o.cg_tol.max(1e-12),
+            )?;
+            extra.push(("pcg_iters".to_string(), out.iterations as f64));
+            extra.push(("pcg_rel_res".to_string(), out.rel_residual));
+            out.x
+        }
+    };
+    Ok((a, extra))
+}
+
+pub(crate) fn sketch_size(n: usize, ratio: f64) -> usize {
+    ((n as f64 * ratio).round() as usize).clamp(1, n)
+}
+
+/// GPU-efficient Nyström of `K = J Jᵀ` from Jacobian sketches, honoring the
+/// configured rank policy (fixed = paper default, adaptive = paper §5
+/// future work).
+fn build_gpu_nystrom(
+    j: &Matrix,
+    o: &OptimizerConfig,
+    rng: &mut Rng,
+    extra: &mut Vec<(String, f64)>,
+) -> Result<crate::nystrom::GpuNystrom> {
+    use crate::config::run::RankPolicy;
+    let n = j.rows();
+    match o.rank_policy {
+        RankPolicy::Fixed => {
+            let sketch = sketch_size(n, o.sketch_ratio);
+            let mut omega = Matrix::zeros(n, sketch);
+            rng.fill_normal(omega.data_mut());
+            // Y = J (Jᵀ Ω): two tall products, never the N×N kernel.
+            let jt_omega = j.transpose().matmul(&omega);
+            let y = j.matmul(&jt_omega);
+            extra.push(("sketch".to_string(), sketch as f64));
+            crate::nystrom::GpuNystrom::from_sketch(omega, y, o.damping)
+        }
+        RankPolicy::Adaptive => {
+            let out = crate::nystrom::adaptive_nystrom_from_jacobian(
+                j,
+                o.damping,
+                o.sketch_ratio,
+                o.sketch_max_ratio,
+                10.0,
+                rng,
+            )?;
+            let sketch = crate::nystrom::NystromApprox::sketch_size(&out.approx);
+            extra.push(("sketch".to_string(), sketch as f64));
+            extra.push(("rank_retries".to_string(), (out.schedule.len() - 1) as f64));
+            Ok(out.approx)
+        }
+    }
+}

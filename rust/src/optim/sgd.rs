@@ -1,0 +1,45 @@
+//! SGD with momentum — first-order baseline (paper §4, Appendix A.1 tunes
+//! learning rate and momentum).
+
+use anyhow::Result;
+
+use super::{Optimizer, StepEnv, StepInfo};
+use crate::config::OptimizerConfig;
+
+pub struct Sgd {
+    lr: f64,
+    momentum: f64,
+    velocity: Vec<f64>,
+}
+
+impl Sgd {
+    pub fn new(o: &OptimizerConfig) -> Self {
+        Sgd {
+            lr: o.lr,
+            momentum: o.momentum,
+            velocity: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
+        let (loss, grad) = env.loss_and_grad(theta)?;
+        if self.velocity.is_empty() {
+            self.velocity = vec![0.0; theta.len()];
+        }
+        for ((v, g), t) in self.velocity.iter_mut().zip(&grad).zip(theta.iter_mut()) {
+            *v = self.momentum * *v + g;
+            *t -= self.lr * *v;
+        }
+        Ok(StepInfo {
+            loss,
+            lr_used: self.lr,
+            extra: vec![("grad_norm".into(), crate::linalg::norm2(&grad))],
+        })
+    }
+
+    fn describe(&self) -> String {
+        format!("sgd(lr={:.3e}, momentum={})", self.lr, self.momentum)
+    }
+}

@@ -1,0 +1,185 @@
+//! SPRING for PINNs (paper §3.2, eqs. 7–8, Algorithm 1).
+//!
+//! The momentum-shifted Tikhonov problem
+//!
+//! `φ_k = argmin_φ ‖J φ − r‖² + λ‖φ − μ φ_{k−1}‖²`
+//!
+//! has the closed form (eq. 8)
+//!
+//! `φ_k = μ φ_{k−1} + Jᵀ (J Jᵀ + λI)⁻¹ (r − μ J φ_{k−1})`
+//!
+//! to which the paper adds the Adam-style bias correction `1/√(1−μ^{2k})`
+//! (Algorithm 1 line 8). `BiasMode` selects between the Adam-style reading
+//! (correction scales the θ update; raw φ is carried — our default), the
+//! Algorithm-1-literal reading (corrected φ is also carried), and no
+//! correction (original SPRING); `benches/ablations` compares them.
+
+use anyhow::Result;
+
+use super::{grid_line_search, kernel_solve, Optimizer, StepEnv, StepInfo};
+use crate::config::run::{BiasMode, ExecPath, SolveMode};
+use crate::config::OptimizerConfig;
+
+pub struct Spring {
+    cfg: OptimizerConfig,
+    /// φ_{k−1} (allocated on first step).
+    phi: Vec<f64>,
+}
+
+impl Spring {
+    pub fn new(o: &OptimizerConfig) -> Self {
+        Spring {
+            cfg: o.clone(),
+            phi: Vec::new(),
+        }
+    }
+
+    fn bias_factor(&self, k: usize) -> f64 {
+        match self.cfg.bias {
+            BiasMode::None => 1.0,
+            _ => {
+                let mu2k = self.cfg.momentum.powi(2 * k as i32);
+                1.0 / (1.0 - mu2k).sqrt()
+            }
+        }
+    }
+
+    /// Finish a step given the raw direction: apply bias, line search or
+    /// fixed lr, update θ, store the configured φ state.
+    fn apply(
+        &mut self,
+        theta: &mut [f64],
+        env: &mut StepEnv,
+        phi_raw: Vec<f64>,
+        loss: f64,
+        mut extra: Vec<(String, f64)>,
+    ) -> Result<StepInfo> {
+        let bias = self.bias_factor(env.k);
+        let step_dir: Vec<f64> = phi_raw.iter().map(|p| p * bias).collect();
+        let eta = if self.cfg.line_search {
+            let ls = grid_line_search(env, theta, &step_dir, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)?;
+            extra.push(("ls_evals".into(), ls.evals as f64));
+            ls.eta
+        } else {
+            self.cfg.lr
+        };
+        for (t, p) in theta.iter_mut().zip(&step_dir) {
+            *t -= eta * p;
+        }
+        self.phi = match self.cfg.bias {
+            BiasMode::Overwrite => step_dir,
+            _ => phi_raw,
+        };
+        extra.push(("bias".into(), bias));
+        extra.push(("phi_norm".into(), crate::linalg::norm2(&self.phi)));
+        Ok(StepInfo {
+            loss,
+            lr_used: eta,
+            extra,
+        })
+    }
+
+    fn fused_step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
+        let p = env.problem.n_params;
+        if self.phi.is_empty() {
+            self.phi = vec![0.0; p];
+        }
+        if !self.cfg.line_search && self.cfg.bias != BiasMode::Overwrite {
+            // Fully fused single-artifact hot path (Algorithm 1 lines 4–9).
+            let art = env.rt.artifact(&env.problem.name, "spring_step")?;
+            let bias = self.bias_factor(env.k);
+            let out = art.call(&[
+                theta,
+                &self.phi,
+                env.x_int,
+                env.x_bnd,
+                &[self.cfg.damping],
+                &[self.cfg.momentum],
+                &[self.cfg.lr],
+                &[bias],
+            ])?;
+            theta.copy_from_slice(&out[0]);
+            self.phi = out[1].clone();
+            return Ok(StepInfo {
+                loss: out[2][0],
+                lr_used: self.cfg.lr,
+                extra: vec![("bias".into(), bias)],
+            });
+        }
+        // Direction artifact; bias/line-search applied in Rust.
+        let art = env.rt.artifact(&env.problem.name, "spring_dir")?;
+        let out = art.call(&[
+            theta,
+            &self.phi,
+            env.x_int,
+            env.x_bnd,
+            &[self.cfg.damping],
+            &[self.cfg.momentum],
+        ])?;
+        let phi_raw = out[0].clone();
+        let loss = out[1][0];
+        self.apply(theta, env, phi_raw, loss, vec![])
+    }
+
+    fn decomposed_step(
+        &mut self,
+        theta: &mut [f64],
+        env: &mut StepEnv,
+    ) -> Result<StepInfo> {
+        let (r, j) = env.residuals_jacobian(theta)?;
+        if self.phi.is_empty() {
+            self.phi = vec![0.0; j.cols()];
+        }
+        let loss = 0.5 * crate::linalg::dot(&r, &r);
+        // ζ = r − μ J φ_{k−1}  (Algorithm 1 line 6)
+        let j_phi = j.matvec(&self.phi);
+        let mu = self.cfg.momentum;
+        let zeta: Vec<f64> = r.iter().zip(&j_phi).map(|(ri, ji)| ri - mu * ji).collect();
+        // a = (K̂+λI)⁻¹ ζ  (line 7, Woodbury form; K̂ exact or Nyström)
+        let (a, extra) = kernel_solve(&j, &zeta, &self.cfg, env.rng, env.diagnostics)?;
+        // φ_raw = μ φ_{k−1} + Jᵀ a
+        let jta = j.tr_matvec(&a);
+        let phi_raw: Vec<f64> = self
+            .phi
+            .iter()
+            .zip(&jta)
+            .map(|(p, q)| mu * p + q)
+            .collect();
+        self.apply(theta, env, phi_raw, loss, extra)
+    }
+}
+
+impl Optimizer for Spring {
+    fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
+        match self.cfg.path {
+            ExecPath::Fused => self.fused_step(theta, env),
+            ExecPath::Decomposed => self.decomposed_step(theta, env),
+        }
+    }
+
+    fn state(&self) -> Vec<f64> {
+        self.phi.clone()
+    }
+
+    fn restore_state(&mut self, state: Vec<f64>) {
+        self.phi = state;
+    }
+
+    fn describe(&self) -> String {
+        let solve = match self.cfg.solve {
+            SolveMode::Exact => "exact".to_string(),
+            m => format!("{}@{:.0}%N", m.name(), self.cfg.sketch_ratio * 100.0),
+        };
+        format!(
+            "spring(λ={:.3e}, μ={}, {}, {})",
+            self.cfg.damping,
+            self.cfg.momentum,
+            if self.cfg.line_search {
+                "line-search".to_string()
+            } else {
+                format!("lr={:.3e}", self.cfg.lr)
+            },
+            solve
+        )
+    }
+}

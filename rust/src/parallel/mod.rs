@@ -1,0 +1,158 @@
+//! Thread-parallel helpers (substrate — rayon is unavailable offline).
+//!
+//! Built on `std::thread::scope`: no task queue, just chunked fork-join over
+//! index ranges, which is exactly the shape of every hot loop in the dense
+//! linear-algebra substrate (row-block matmul, Gram accumulation, column
+//! sweeps).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Number of worker threads: `ENGD_THREADS` env override, else available
+/// parallelism, clamped to [1, 64].
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(s) = std::env::var("ENGD_THREADS") {
+            if let Ok(n) = s.parse::<usize>() {
+                return n.clamp(1, 64);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .clamp(1, 64)
+    })
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on the thread pool.
+///
+/// Chunks are contiguous and balanced to within one element. `f` must be
+/// `Sync` since all threads share it.
+pub fn par_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Dynamic work-stealing variant for unevenly-sized items: each worker pulls
+/// the next index from a shared atomic counter. Used where per-item cost
+/// varies wildly (e.g. per-column Jacobi rotations).
+pub fn par_dynamic<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n == 0 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let f = &f;
+            let counter = &counter;
+            scope.spawn(move || loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Parallel map producing a Vec in input order.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SendPtr(out.as_mut_ptr());
+        par_chunks(n, |start, end| {
+            for i in start..end {
+                // SAFETY: chunks are disjoint, so each slot is written by
+                // exactly one thread; the Vec outlives the scope.
+                unsafe { *slots.get().add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Pointer wrapper that lets disjoint-index writes cross the scope boundary.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Method (not field) access, so closures capture the `Sync` wrapper.
+    #[inline]
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn par_chunks_covers_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        par_chunks(1000, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_dynamic_covers_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..777).map(|_| AtomicU64::new(0)).collect();
+        par_dynamic(777, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let v = par_map(257, |i| i * i);
+        assert_eq!(v.len(), 257);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        par_chunks(0, |s, e| assert_eq!(s, e, "n=0 must yield an empty range"));
+        let v = par_map(1, |i| i + 1);
+        assert_eq!(v, vec![1]);
+    }
+}

@@ -1,0 +1,135 @@
+//! Exact solutions u* for the benchmark PDEs and the L2-error reduction.
+//!
+//! Tags match the `pde` field of the manifest (written by
+//! `python/compile/problems.py`):
+//!   * `sine_product` — u* = Π sin(πx_i)          (2d quickstart)
+//!   * `cosine_sum`   — u* = Σ cos(πx_i)          (paper 5d, A.2)
+//!   * `harmonic`     — u* = Σ x_{2i-1} x_{2i}    (paper 10d/100d, A.3–A.4)
+//!   * `sqnorm`       — u* = ‖x‖²                 (paper §4 100d variant)
+//!   * `heat_product` — u* = e^{−2π²t} sin(πx₀)sin(πx₁)  (heat2d extension)
+
+use anyhow::{bail, Result};
+
+/// An exact solution family, evaluated pointwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExactSolution {
+    SineProduct,
+    CosineSum,
+    Harmonic,
+    SqNorm,
+    /// Heat kernel product solution; the last coordinate is time.
+    HeatProduct,
+}
+
+impl ExactSolution {
+    pub fn from_tag(tag: &str) -> Result<Self> {
+        Ok(match tag {
+            "sine_product" => Self::SineProduct,
+            "cosine_sum" => Self::CosineSum,
+            "harmonic" => Self::Harmonic,
+            "sqnorm" => Self::SqNorm,
+            "heat_product" => Self::HeatProduct,
+            _ => bail!("unknown pde tag '{tag}'"),
+        })
+    }
+
+    /// u*(x).
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        match self {
+            Self::SineProduct => x.iter().map(|&xi| (std::f64::consts::PI * xi).sin()).product(),
+            Self::CosineSum => x.iter().map(|&xi| (std::f64::consts::PI * xi).cos()).sum(),
+            Self::Harmonic => x.chunks_exact(2).map(|p| p[0] * p[1]).sum(),
+            Self::SqNorm => x.iter().map(|&xi| xi * xi).sum(),
+            Self::HeatProduct => {
+                let pi = std::f64::consts::PI;
+                let t = x[x.len() - 1];
+                (-2.0 * pi * pi * t).exp() * (pi * x[0]).sin() * (pi * x[1]).sin()
+            }
+        }
+    }
+
+    /// Batched evaluation over row-major points (m × d).
+    pub fn eval_batch(&self, xs: &[f64], dim: usize) -> Vec<f64> {
+        xs.chunks_exact(dim).map(|x| self.eval(x)).collect()
+    }
+}
+
+/// Exact solution for a manifest problem tag.
+pub fn exact_solution(tag: &str) -> Result<ExactSolution> {
+    ExactSolution::from_tag(tag)
+}
+
+/// Relative L2 error ‖u_pred − u*‖ / ‖u*‖ over the evaluation set — the
+/// paper's ranking metric (Appendix A.1).
+pub fn l2_relative_error(u_pred: &[f64], u_star: &[f64]) -> f64 {
+    assert_eq!(u_pred.len(), u_star.len());
+    let num: f64 = u_pred
+        .iter()
+        .zip(u_star)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    let den: f64 = u_star.iter().map(|b| b * b).sum();
+    if den == 0.0 {
+        num.sqrt()
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values() {
+        let e = ExactSolution::SineProduct;
+        assert!((e.eval(&[0.5, 0.5]) - 1.0).abs() < 1e-15);
+        assert!(e.eval(&[0.0, 0.3]).abs() < 1e-15);
+
+        let e = ExactSolution::CosineSum;
+        assert!((e.eval(&[0.0; 5]) - 5.0).abs() < 1e-15);
+        assert!((e.eval(&[1.0; 5]) + 5.0).abs() < 1e-12);
+
+        let e = ExactSolution::Harmonic;
+        assert!((e.eval(&[2.0, 3.0, 4.0, 5.0]) - 26.0).abs() < 1e-15);
+
+        let e = ExactSolution::SqNorm;
+        assert!((e.eval(&[3.0, 4.0]) - 25.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn batch_matches_pointwise() {
+        let e = ExactSolution::Harmonic;
+        let xs = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+        let vals = e.eval_batch(&xs, 4);
+        assert_eq!(vals.len(), 2);
+        assert!((vals[0] - e.eval(&xs[..4])).abs() < 1e-15);
+        assert!((vals[1] - e.eval(&xs[4..])).abs() < 1e-15);
+    }
+
+    #[test]
+    fn l2_error_basics() {
+        assert_eq!(l2_relative_error(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        // Doubling every entry gives relative error 1.
+        let err = l2_relative_error(&[2.0, 4.0], &[1.0, 2.0]);
+        assert!((err - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn heat_product_values() {
+        let e = ExactSolution::HeatProduct;
+        // t = 0: plain sine product.
+        assert!((e.eval(&[0.5, 0.5, 0.0]) - 1.0).abs() < 1e-15);
+        // Decay in time by e^{-2π² t}.
+        let pi = std::f64::consts::PI;
+        let want = (-2.0 * pi * pi * 0.1f64).exp();
+        assert!((e.eval(&[0.5, 0.5, 0.1]) - want).abs() < 1e-12);
+        // Zero on the spatial boundary at any time.
+        assert!(e.eval(&[0.0, 0.3, 0.7]).abs() < 1e-15);
+    }
+
+    #[test]
+    fn unknown_tag_is_error() {
+        assert!(exact_solution("nope").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PDE problem library (Rust mirror of `python/compile/problems.py`).
+//!
+//! The Python side is the source of truth for artifacts (shapes, batches);
+//! this module supplies everything the *coordinator* needs at run time:
+//! exact solutions for L2 evaluation, collocation-point samplers, and an
+//! independent MLP forward oracle used to cross-check the parameter layout
+//! against the `u_pred` artifact.
+
+mod exact;
+mod params;
+mod sampler;
+
+pub use exact::{exact_solution, l2_relative_error, ExactSolution};
+pub use params::{init_params, mlp_forward, param_count};
+pub use sampler::Sampler;

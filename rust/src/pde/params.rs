@@ -1,0 +1,102 @@
+//! Flat-parameter MLP: the Rust mirror of `python/compile/model.py`.
+//!
+//! Layout per layer ℓ: weights W_ℓ (row-major, out × in), then biases b_ℓ.
+//! `mlp_forward` is the independent oracle used to cross-check the `u_pred`
+//! artifact in integration tests; `init_params` seeds training runs with a
+//! PyTorch-default-style U(−1/√fan_in, 1/√fan_in) init, matching the paper's
+//! baseline implementation.
+
+use crate::rng::Rng;
+
+/// Number of parameters of an MLP with the given layer widths.
+pub fn param_count(arch: &[usize]) -> usize {
+    arch.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+}
+
+/// U(−1/√fan_in, 1/√fan_in) initialization over the flat layout.
+pub fn init_params(arch: &[usize], rng: &mut Rng) -> Vec<f64> {
+    let mut theta = Vec::with_capacity(param_count(arch));
+    for w in arch.windows(2) {
+        let (fan_in, fan_out) = (w[0], w[1]);
+        let bound = 1.0 / (fan_in as f64).sqrt();
+        for _ in 0..fan_in * fan_out + fan_out {
+            theta.push(rng.uniform_in(-bound, bound));
+        }
+    }
+    theta
+}
+
+/// Tanh-MLP forward pass u_θ(x) for a single point.
+pub fn mlp_forward(theta: &[f64], arch: &[usize], x: &[f64]) -> f64 {
+    assert_eq!(x.len(), arch[0], "input dim mismatch");
+    assert_eq!(theta.len(), param_count(arch), "param count mismatch");
+    let mut h: Vec<f64> = x.to_vec();
+    let mut offset = 0;
+    let last = arch.len() - 2;
+    for (layer, w) in arch.windows(2).enumerate() {
+        let (fan_in, fan_out) = (w[0], w[1]);
+        let weights = &theta[offset..offset + fan_in * fan_out];
+        offset += fan_in * fan_out;
+        let biases = &theta[offset..offset + fan_out];
+        offset += fan_out;
+        let mut next = vec![0.0; fan_out];
+        for o in 0..fan_out {
+            let row = &weights[o * fan_in..(o + 1) * fan_in];
+            let mut s = biases[o];
+            for (wi, hi) in row.iter().zip(&h) {
+                s += wi * hi;
+            }
+            next[o] = if layer == last { s } else { s.tanh() };
+        }
+        h = next;
+    }
+    h[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_known_architectures() {
+        // Paper 5d architecture: P = 10 065.
+        assert_eq!(param_count(&[5, 64, 64, 48, 48, 1]), 10_065);
+        // Paper 10d architecture: P = 118 145.
+        assert_eq!(param_count(&[10, 256, 256, 128, 128, 1]), 118_145);
+        // Paper 100d architecture: P = 1 325 057.
+        assert_eq!(param_count(&[100, 768, 768, 512, 512, 1]), 1_325_057);
+    }
+
+    #[test]
+    fn forward_identity_network() {
+        // 1-16-1 with zero weights → output is just the output bias.
+        let arch = [1usize, 16, 1];
+        let mut theta = vec![0.0; param_count(&arch)];
+        *theta.last_mut().unwrap() = 3.25;
+        assert_eq!(mlp_forward(&theta, &arch, &[0.7]), 3.25);
+    }
+
+    #[test]
+    fn forward_known_tiny_network() {
+        // 1-1-1: u(x) = w2 * tanh(w1 x + b1) + b2.
+        let arch = [1usize, 1, 1];
+        let theta = [2.0, 0.5, 3.0, -1.0]; // w1, b1, w2, b2
+        let x = 0.3f64;
+        let want = 3.0 * (2.0 * x + 0.5).tanh() - 1.0;
+        assert!((mlp_forward(&theta, &arch, &[x]) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn init_respects_bounds() {
+        let arch = [5usize, 64, 64, 48, 48, 1];
+        let mut rng = Rng::seed_from(1);
+        let theta = init_params(&arch, &mut rng);
+        assert_eq!(theta.len(), 10_065);
+        // First layer bound 1/sqrt(5).
+        let bound = 1.0 / 5f64.sqrt();
+        assert!(theta[..5 * 64 + 64].iter().all(|&x| x.abs() <= bound));
+        // Init is not degenerate.
+        let nonzero = theta.iter().filter(|&&x| x != 0.0).count();
+        assert!(nonzero > 10_000);
+    }
+}

@@ -1,0 +1,97 @@
+//! Collocation-point sampling on the unit cube [0,1]^d.
+//!
+//! Matches the paper's protocol (§4): every optimizer draws a fresh batch of
+//! interior + boundary points each iteration; the L2 evaluation set is a
+//! fixed uniform sample drawn once per run.
+
+use crate::rng::Rng;
+
+/// Sampler for one problem's domain.
+pub struct Sampler {
+    dim: usize,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        Sampler {
+            dim,
+            rng: Rng::seed_from(seed),
+        }
+    }
+
+    /// `n` interior points, uniform in (0,1)^d, row-major (n × d).
+    pub fn interior(&mut self, n: usize) -> Vec<f64> {
+        let mut pts = vec![0.0; n * self.dim];
+        self.rng.fill_uniform(&mut pts, 0.0, 1.0);
+        pts
+    }
+
+    /// `n` boundary points: pick a face (coordinate i, side 0/1) uniformly,
+    /// fix that coordinate, sample the rest uniformly.
+    pub fn boundary(&mut self, n: usize) -> Vec<f64> {
+        let mut pts = vec![0.0; n * self.dim];
+        for row in pts.chunks_exact_mut(self.dim) {
+            self.rng.fill_uniform(row, 0.0, 1.0);
+            let face = self.rng.below(self.dim);
+            let side = if self.rng.below(2) == 0 { 0.0 } else { 1.0 };
+            row[face] = side;
+        }
+        pts
+    }
+
+    /// Evaluation set: uniform interior points (matches the paper's fixed
+    /// validation set with known solution).
+    pub fn eval_set(&mut self, n: usize) -> Vec<f64> {
+        self.interior(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interior_points_are_inside() {
+        let mut s = Sampler::new(5, 1);
+        let pts = s.interior(100);
+        assert_eq!(pts.len(), 500);
+        assert!(pts.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn boundary_points_are_on_faces() {
+        let mut s = Sampler::new(4, 2);
+        let pts = s.boundary(200);
+        for row in pts.chunks_exact(4) {
+            let on_face = row.iter().any(|&x| x == 0.0 || x == 1.0);
+            assert!(on_face, "row {row:?} is not on the boundary");
+            assert!(row.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn boundary_covers_all_faces_eventually() {
+        let mut s = Sampler::new(2, 3);
+        let pts = s.boundary(400);
+        let mut seen = [false; 4]; // (dim0,lo),(dim0,hi),(dim1,lo),(dim1,hi)
+        for row in pts.chunks_exact(2) {
+            for d in 0..2 {
+                if row[d] == 0.0 {
+                    seen[2 * d] = true;
+                }
+                if row[d] == 1.0 {
+                    seen[2 * d + 1] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "faces seen: {seen:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Sampler::new(3, 7).interior(10);
+        let b = Sampler::new(3, 7).interior(10);
+        assert_eq!(a, b);
+    }
+}

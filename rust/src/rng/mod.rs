@@ -1,0 +1,192 @@
+//! PRNG substrate (the `rand` crate is unavailable offline).
+//!
+//! * [`SplitMix64`] — seeding / stream-splitting generator.
+//! * [`Xoshiro256pp`] — the workhorse: xoshiro256++ (Blackman & Vigna), the
+//!   same family JAX's host-side RNGs and `rand`'s `SmallRng` draw from.
+//! * Gaussian sampling via Box–Muller (needed for Nyström test matrices Ω),
+//!   log-uniform sampling (the paper's hyperparameter search spaces, A.1),
+//!   and Fisher–Yates shuffling.
+//!
+//! Everything is deterministic given a seed; parallel streams are derived by
+//! `split()`, which jumps through SplitMix64 so streams are uncorrelated.
+
+mod xoshiro;
+
+pub use xoshiro::{SplitMix64, Xoshiro256pp};
+
+/// Convenience alias: the default RNG used across the crate.
+pub type Rng = Xoshiro256pp;
+
+impl Xoshiro256pp {
+    /// Uniform f64 in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Log-uniform in [lo, hi] (paper Appendix A.1's `LU` distribution).
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi >= lo, "log_uniform needs 0 < lo <= hi");
+        (self.uniform_in(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Standard normal via Box–Muller (both branches used alternately).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        // Avoid u1 == 0 (log singularity).
+        let u1 = loop {
+            let u = self.uniform();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare = Some(r * s);
+        r * c
+    }
+
+    /// Fill a buffer with standard normals (Nyström test matrices).
+    pub fn fill_normal(&mut self, buf: &mut [f64]) {
+        for x in buf.iter_mut() {
+            *x = self.normal();
+        }
+    }
+
+    /// Fill a buffer with U[lo, hi) samples (collocation points).
+    pub fn fill_uniform(&mut self, buf: &mut [f64], lo: f64, hi: f64) {
+        for x in buf.iter_mut() {
+            *x = self.uniform_in(lo, hi);
+        }
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Rejection-free multiply-shift (Lemire); bias < 2^-64, fine here.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len())]
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seed_from(7);
+        let mut b = Rng::seed_from(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut a = Rng::seed_from(7);
+        let mut b = a.split();
+        let xs: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..32).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut rng = Rng::seed_from(11);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 3e-3, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 3e-3, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from(13);
+        let n = 200_000;
+        let (mut sum, mut sq, mut cube) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            sum += x;
+            sq += x * x;
+            cube += x * x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        let skew = cube / n as f64;
+        assert!(mean.abs() < 1e-2, "mean={mean}");
+        assert!((var - 1.0).abs() < 2e-2, "var={var}");
+        assert!(skew.abs() < 3e-2, "skew={skew}");
+    }
+
+    #[test]
+    fn log_uniform_respects_bounds_and_median() {
+        let mut rng = Rng::seed_from(17);
+        let (lo, hi) = (1e-10f64, 1e-3f64);
+        let mut below_geomean = 0usize;
+        let geomean = (lo.ln() + hi.ln()) / 2.0;
+        let n = 50_000;
+        for _ in 0..n {
+            let x = rng.log_uniform(lo, hi);
+            assert!(x >= lo * 0.999 && x <= hi * 1.001);
+            if x.ln() < geomean {
+                below_geomean += 1;
+            }
+        }
+        // Median of a log-uniform is the geometric mean of the bounds.
+        let frac = below_geomean as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::seed_from(19);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = rng.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Rng::seed_from(23);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

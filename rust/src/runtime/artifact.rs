@@ -1,0 +1,117 @@
+//! A compiled artifact: shape-checked f64 execution with tuple unpacking.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::ArtifactSpec;
+
+/// A compiled XLA executable plus its manifest signature.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// (calls, cumulative seconds) — feeds the coordinator's perf report.
+    stats: std::cell::RefCell<(u64, f64)>,
+}
+
+impl Artifact {
+    pub fn new(spec: ArtifactSpec, exe: xla::PjRtLoadedExecutable) -> Self {
+        Artifact {
+            spec,
+            exe,
+            stats: std::cell::RefCell::new((0, 0.0)),
+        }
+    }
+
+    /// Execute with flat f64 buffers in manifest argument order.
+    ///
+    /// Each `args[i]` must have exactly the element count of the manifest
+    /// shape (scalars are 1-element slices). Returns the flat f64 contents of
+    /// each tuple output, in manifest output order.
+    pub fn call(&self, args: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        if args.len() != self.spec.args.len() {
+            bail!(
+                "artifact {}: got {} args, manifest says {}",
+                self.spec.name,
+                args.len(),
+                self.spec.args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (a, spec) in args.iter().zip(&self.spec.args) {
+            let want: usize = spec.len().max(1);
+            if a.len() != want {
+                bail!(
+                    "artifact {}: arg '{}' has {} elements, manifest shape {:?} wants {}",
+                    self.spec.name,
+                    spec.name,
+                    a.len(),
+                    spec.shape,
+                    want
+                );
+            }
+            let lit = xla::Literal::vec1(a);
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = if spec.shape.is_empty() {
+                lit.reshape(&[])
+                    .with_context(|| format!("scalar reshape for {}", spec.name))?
+            } else {
+                lit.reshape(&dims)
+                    .with_context(|| format!("reshape {:?} for {}", dims, spec.name))?
+            };
+            literals.push(lit);
+        }
+
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact {}", self.spec.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = lit.to_tuple().context("untupling result")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {}: got {}-tuple, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (p, ospec) in parts.into_iter().zip(&self.spec.outputs) {
+            let v = p
+                .to_vec::<f64>()
+                .with_context(|| format!("output '{}' to_vec", ospec.name))?;
+            if v.len() != ospec.len().max(1) {
+                bail!(
+                    "artifact {}: output '{}' has {} elements, expected {:?}",
+                    self.spec.name,
+                    ospec.name,
+                    v.len(),
+                    ospec.shape
+                );
+            }
+            out.push(v);
+        }
+        let mut s = self.stats.borrow_mut();
+        s.0 += 1;
+        s.1 += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// (number of calls, cumulative execute seconds).
+    pub fn stats(&self) -> (u64, f64) {
+        *self.stats.borrow()
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.spec
+            .outputs
+            .iter()
+            .position(|o| o.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no output '{}'", self.spec.name, name))
+    }
+}

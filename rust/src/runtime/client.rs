@@ -1,0 +1,72 @@
+//! The PJRT CPU client wrapper: compile-once, execute-many artifact registry.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::artifact::Artifact;
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// Owns the PJRT client and a cache of compiled executables.
+///
+/// Compilation happens lazily on first use and is cached by artifact file
+/// path, so a training run pays HLO→executable compilation exactly once per
+/// artifact (the AOT analogue of jit warm-up, but in Rust and off the
+/// per-step path).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<Artifact>>>,
+    /// Cumulative wall time spent in PJRT compilation (startup cost metric).
+    pub compile_seconds: RefCell<f64>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_seconds: RefCell::new(0.0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling if needed) the executable for `problem/artifact`.
+    pub fn artifact(&self, problem: &str, name: &str) -> Result<std::rc::Rc<Artifact>> {
+        let spec = self.manifest.problem(problem)?.artifact(name)?.clone();
+        self.compile_spec(&spec)
+    }
+
+    fn compile_spec(&self, spec: &ArtifactSpec) -> Result<std::rc::Rc<Artifact>> {
+        let key = spec.file.display().to_string();
+        if let Some(a) = self.cache.borrow().get(&key) {
+            return Ok(a.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT-compiling {}", spec.file.display()))?;
+        *self.compile_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        let artifact = std::rc::Rc::new(Artifact::new(spec.clone(), exe));
+        self.cache.borrow_mut().insert(key, artifact.clone());
+        Ok(artifact)
+    }
+}

@@ -1,0 +1,198 @@
+//! Artifact manifest (`artifacts/manifest.json`) parsing.
+//!
+//! The manifest is written by `python/compile/aot.py` and fully describes
+//! every artifact: file path, argument order/shapes, output shapes. The
+//! runtime is manifest-driven — no shapes are hard-coded in Rust.
+//!
+//! Parsing uses our own minimal JSON reader (`crate::config::json`) since
+//! serde is not available offline.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::json::JsonValue;
+
+/// One artifact argument: name + static shape (scalars have empty shape).
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One lowered computation: file + typed signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// One PINN problem: dimensions, architecture, batch sizes, artifact set.
+#[derive(Debug, Clone)]
+pub struct ProblemSpec {
+    pub name: String,
+    pub dim: usize,
+    pub arch: Vec<usize>,
+    pub n_params: usize,
+    pub n_interior: usize,
+    pub n_boundary: usize,
+    pub n_eval: usize,
+    pub interior_weight: f64,
+    pub boundary_weight: f64,
+    pub pde: String,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ProblemSpec {
+    pub fn n_total(&self) -> usize {
+        self.n_interior + self.n_boundary
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "problem '{}' has no artifact '{}' (have: {:?})",
+                self.name,
+                name,
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+/// The parsed manifest: problem name → spec.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub problems: BTreeMap<String, ProblemSpec>,
+}
+
+fn parse_shape(v: &JsonValue) -> Result<Vec<usize>> {
+    v.as_array()
+        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .iter()
+        .map(|d| {
+            d.as_f64()
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow!("non-numeric dim"))
+        })
+        .collect()
+}
+
+fn parse_arg_list(v: &JsonValue) -> Result<Vec<ArgSpec>> {
+    v.as_array()
+        .ok_or_else(|| anyhow!("args is not an array"))?
+        .iter()
+        .map(|a| {
+            Ok(ArgSpec {
+                name: a
+                    .get("name")
+                    .and_then(JsonValue::as_str)
+                    .ok_or_else(|| anyhow!("arg missing name"))?
+                    .to_string(),
+                shape: parse_shape(
+                    a.get("shape").ok_or_else(|| anyhow!("arg missing shape"))?,
+                )?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `root/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = crate::config::json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+
+        let mut problems = BTreeMap::new();
+        let probs = v
+            .get("problems")
+            .and_then(JsonValue::as_object)
+            .ok_or_else(|| anyhow!("manifest missing 'problems'"))?;
+        for (pname, pv) in probs {
+            let grab = |k: &str| -> Result<f64> {
+                pv.get(k)
+                    .and_then(JsonValue::as_f64)
+                    .ok_or_else(|| anyhow!("problem {pname} missing '{k}'"))
+            };
+            let mut artifacts = BTreeMap::new();
+            let arts = pv
+                .get("artifacts")
+                .and_then(JsonValue::as_object)
+                .ok_or_else(|| anyhow!("problem {pname} missing artifacts"))?;
+            for (aname, av) in arts {
+                artifacts.insert(
+                    aname.clone(),
+                    ArtifactSpec {
+                        name: aname.clone(),
+                        file: root.join(
+                            av.get("file")
+                                .and_then(JsonValue::as_str)
+                                .ok_or_else(|| anyhow!("artifact missing file"))?,
+                        ),
+                        args: parse_arg_list(
+                            av.get("args")
+                                .ok_or_else(|| anyhow!("artifact missing args"))?,
+                        )?,
+                        outputs: parse_arg_list(
+                            av.get("outputs")
+                                .ok_or_else(|| anyhow!("artifact missing outputs"))?,
+                        )?,
+                    },
+                );
+            }
+            let arch = pv
+                .get("arch")
+                .map(parse_shape)
+                .transpose()?
+                .ok_or_else(|| anyhow!("problem {pname} missing arch"))?;
+            problems.insert(
+                pname.clone(),
+                ProblemSpec {
+                    name: pname.clone(),
+                    dim: grab("dim")? as usize,
+                    arch,
+                    n_params: grab("n_params")? as usize,
+                    n_interior: grab("n_interior")? as usize,
+                    n_boundary: grab("n_boundary")? as usize,
+                    n_eval: grab("n_eval")? as usize,
+                    interior_weight: grab("interior_weight")?,
+                    boundary_weight: grab("boundary_weight")?,
+                    pde: pv
+                        .get("pde")
+                        .and_then(JsonValue::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { root, problems })
+    }
+
+    pub fn problem(&self, name: &str) -> Result<&ProblemSpec> {
+        self.problems.get(name).ok_or_else(|| {
+            anyhow!(
+                "manifest has no problem '{}' (have: {:?})",
+                name,
+                self.problems.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}

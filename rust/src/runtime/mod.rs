@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU client.
+//!
+//! The interchange format is HLO *text* (see DESIGN.md): `HloModuleProto::
+//! from_text_file` re-parses and re-ids the module, sidestepping the 64-bit
+//! instruction-id protos that jax >= 0.5 emits and xla_extension 0.5.1 rejects.
+
+mod artifact;
+mod client;
+mod manifest;
+
+pub use artifact::Artifact;
+pub use client::Runtime;
+pub use manifest::{ArgSpec, ArtifactSpec, Manifest, ProblemSpec};

@@ -1,0 +1,172 @@
+//! Random-search hyperparameter sweeps — the paper's tuning protocol
+//! (Appendix A.1): log-uniform/uniform/choice spaces per optimizer, runs
+//! ranked by the best relative L2 error on the fixed validation set.
+//!
+//! The search spaces below are the paper's *refined* (second-stage) spaces,
+//! verbatim where given.
+
+use anyhow::Result;
+
+use crate::config::run::{BiasMode, ExecPath, OptimizerKind, SolveMode};
+use crate::config::{OptimizerConfig, RunConfig};
+use crate::coordinator::{train, TrainReport};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+
+/// A sampled hyperparameter assignment with its run outcome.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub index: usize,
+    pub optimizer: OptimizerConfig,
+    pub report: TrainReport,
+}
+
+/// Sample one optimizer configuration from the paper's A.1 search space.
+pub fn sample_config(kind: &OptimizerKind, base: &OptimizerConfig, rng: &mut Rng) -> OptimizerConfig {
+    let mut o = base.clone();
+    o.kind = kind.clone();
+    match kind {
+        OptimizerKind::Sgd => {
+            // lr ∈ LU[1e-3, 1e-2], momentum ∈ {0, 0.3, 0.6, 0.9}
+            o.lr = rng.log_uniform(1e-3, 1e-2);
+            o.momentum = *rng.choice(&[0.0, 0.3, 0.6, 0.9]);
+        }
+        OptimizerKind::Adam => {
+            // lr ∈ LU[1e-4, 5e-1]
+            o.lr = rng.log_uniform(1e-4, 5e-1);
+        }
+        OptimizerKind::EngdDense => {
+            // damping ∈ {1e-8..1e-12, 0}→(we keep >0 for the solver),
+            // ema ∈ {0, 0.3, 0.6, 0.9}, identity init ∈ {no, yes}
+            o.damping = *rng.choice(&[1e-8, 1e-9, 1e-10, 1e-11, 1e-12]);
+            o.ema = *rng.choice(&[0.0, 0.3, 0.6, 0.9]);
+            o.gramian_identity_init = rng.below(2) == 1;
+            o.path = ExecPath::Decomposed;
+        }
+        OptimizerKind::EngdW => {
+            // damping ∈ LU[1e-7, 1]; lr ∈ LU[1e-4, 1e-1] when fixed
+            o.damping = rng.log_uniform(1e-7, 1.0);
+            if !o.line_search {
+                o.lr = rng.log_uniform(1e-4, 1e-1);
+            }
+            if o.solve != SolveMode::Exact {
+                o.path = ExecPath::Decomposed;
+            }
+        }
+        OptimizerKind::Spring => {
+            // damping ∈ LU[1e-10, 1e-3]; momentum ∈ LU[0.6, 0.999]
+            // (A.2.1 narrows momentum to [0.8, 0.999] for fixed lr).
+            o.damping = rng.log_uniform(1e-10, 1e-3);
+            o.momentum = if o.line_search {
+                rng.log_uniform(0.6, 0.999)
+            } else {
+                rng.log_uniform(0.8, 0.999)
+            };
+            if !o.line_search {
+                o.lr = rng.log_uniform(1e-4, 1e-1);
+            }
+            if o.solve != SolveMode::Exact {
+                o.path = ExecPath::Decomposed;
+            }
+            o.bias = BiasMode::Adam;
+        }
+        OptimizerKind::HessianFree => {
+            // damping ∈ {100, 50, 10, 5, 1, 0.5, 0.1, 0.05},
+            // max CG iters ∈ {100, 150, ..., 350}
+            o.damping = *rng.choice(&[100.0, 50.0, 10.0, 5.0, 1.0, 0.5, 0.1, 0.05]);
+            o.cg_iters = *rng.choice(&[100.0, 150.0, 200.0, 250.0, 300.0, 350.0]) as usize;
+            o.path = ExecPath::Decomposed;
+        }
+    }
+    o
+}
+
+/// Run `trials` random-search trials of `base.optimizer.kind` and return
+/// them ranked by best L2 (ascending — best first).
+pub fn run_sweep(
+    base: &RunConfig,
+    rt: &Runtime,
+    trials: usize,
+    echo: bool,
+) -> Result<Vec<Trial>> {
+    let mut rng = Rng::seed_from(base.seed ^ 0x5377_EEB5);
+    let mut results = Vec::with_capacity(trials);
+    for index in 0..trials {
+        let optimizer = sample_config(&base.optimizer.kind, &base.optimizer, &mut rng);
+        let mut cfg = base.clone();
+        cfg.optimizer = optimizer.clone();
+        cfg.name = format!("{}-trial{index:03}", base.name);
+        cfg.seed = base.seed.wrapping_add(index as u64);
+        if echo {
+            println!(
+                "[sweep] trial {index}: {}",
+                crate::optim::build_from_opt(&optimizer)?.describe()
+            );
+        }
+        match train(cfg, rt, false) {
+            Ok(report) => {
+                if echo {
+                    println!(
+                        "[sweep]   best L2 = {:.3e} ({} steps, {:.1}s)",
+                        report.best_l2, report.steps_done, report.wall_s
+                    );
+                }
+                results.push(Trial {
+                    index,
+                    optimizer,
+                    report,
+                });
+            }
+            Err(e) => {
+                // A failed trial (e.g. non-PD at tiny damping) is a valid
+                // search outcome, not a sweep abort — record and continue.
+                if echo {
+                    println!("[sweep]   trial {index} failed: {e:#}");
+                }
+            }
+        }
+    }
+    results.sort_by(|a, b| {
+        a.report
+            .best_l2
+            .partial_cmp(&b.report.best_l2)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampled_configs_stay_in_paper_spaces() {
+        let base = OptimizerConfig::default();
+        let mut rng = Rng::seed_from(1);
+        for _ in 0..200 {
+            let o = sample_config(&OptimizerKind::Spring, &base, &mut rng);
+            assert!(o.damping >= 1e-10 * 0.999 && o.damping <= 1e-3 * 1.001);
+            assert!(o.momentum >= 0.6 * 0.999 && o.momentum < 1.0);
+            o.validate().unwrap();
+
+            let o = sample_config(&OptimizerKind::Adam, &base, &mut rng);
+            assert!(o.lr >= 1e-4 * 0.999 && o.lr <= 5e-1 * 1.001);
+
+            let o = sample_config(&OptimizerKind::HessianFree, &base, &mut rng);
+            assert!(o.cg_iters >= 100 && o.cg_iters <= 350);
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let base = OptimizerConfig::default();
+        let mut r1 = Rng::seed_from(9);
+        let mut r2 = Rng::seed_from(9);
+        for _ in 0..10 {
+            let a = sample_config(&OptimizerKind::EngdW, &base, &mut r1);
+            let b = sample_config(&OptimizerKind::EngdW, &base, &mut r2);
+            assert_eq!(a.damping, b.damping);
+            assert_eq!(a.lr, b.lr);
+        }
+    }
+}

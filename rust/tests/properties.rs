@@ -1,0 +1,271 @@
+//! Property-based tests on the coordinator/optimizer invariants, using the
+//! in-tree `engd::proptest` mini-framework (the `proptest` crate is
+//! unavailable offline; see DESIGN.md).
+//!
+//! These properties are artifact-free: they exercise the Rust linear-algebra
+//! and randomization substrates over randomized shapes/seeds/dampings.
+
+use engd::linalg::{cg_solve, dot, eigh, thin_qr, Cholesky, Matrix};
+use engd::nystrom::{
+    effective_dimension, effective_dimension_spectral, GpuNystrom, NystromApprox,
+    StableNystrom,
+};
+use engd::proptest::{assert_close, run_prop, Gen};
+use engd::rng::Rng;
+
+fn random_jacobian(g: &mut Gen, n: usize, p: usize) -> Matrix {
+    let data = g.vec_normal(n * p);
+    Matrix::from_vec(n, p, data)
+}
+
+/// Paper eq. 5 — Woodbury/push-through exactness on random Jacobians:
+/// (JᵀJ+λI)⁻¹Jᵀr == Jᵀ(JJᵀ+λI)⁻¹r for every shape and damping.
+#[test]
+fn prop_woodbury_identity() {
+    run_prop("woodbury identity", 40, |g| {
+        let n = g.usize_in(1, 40);
+        let p = g.usize_in(1, 60);
+        let lam = g.log_uniform(1e-6, 1e2);
+        let j = random_jacobian(g, n, p);
+        let r = g.vec_normal(n);
+
+        // Kernel form (ENGD-W).
+        let k = j.gram().add_diag(lam);
+        let a = Cholesky::factor(&k).map_err(|e| e.to_string())?.solve(&r);
+        let phi_w = j.tr_matvec(&a);
+
+        // Dense form (original ENGD).
+        let gmat = j.transpose().gram().add_diag(lam);
+        let grad = j.tr_matvec(&r);
+        let phi_dense = Cholesky::factor(&gmat)
+            .map_err(|e| e.to_string())?
+            .solve(&grad);
+
+        let scale = phi_dense.iter().map(|x| x.abs()).fold(0.0, f64::max);
+        assert_close(&phi_w, &phi_dense, 1e-7 * (1.0 + scale))
+    });
+}
+
+/// SPRING closed form (eq. 8) minimizes the variational problem (eq. 7):
+/// first-order optimality Jᵀ(Jφ−r) + λ(φ−μφ₋) = 0.
+#[test]
+fn prop_spring_first_order_optimality() {
+    run_prop("spring optimality", 30, |g| {
+        let n = g.usize_in(1, 30);
+        let p = g.usize_in(1, 40);
+        let lam = g.log_uniform(1e-5, 1e1);
+        let mu = g.f64_in(0.0, 0.999);
+        let j = random_jacobian(g, n, p);
+        let r = g.vec_normal(n);
+        let phi_prev = g.vec_normal(p);
+
+        // φ = μφ₋ + Jᵀ(JJᵀ+λI)⁻¹(r − μJφ₋)
+        let j_phi_prev = j.matvec(&phi_prev);
+        let zeta: Vec<f64> = r
+            .iter()
+            .zip(&j_phi_prev)
+            .map(|(ri, ji)| ri - mu * ji)
+            .collect();
+        let k = j.gram().add_diag(lam);
+        let a = Cholesky::factor(&k).map_err(|e| e.to_string())?.solve(&zeta);
+        let jta = j.tr_matvec(&a);
+        let phi: Vec<f64> = phi_prev
+            .iter()
+            .zip(&jta)
+            .map(|(pp, q)| mu * pp + q)
+            .collect();
+
+        // Gradient of ‖Jφ−r‖² + λ‖φ−μφ₋‖² at φ (×½).
+        let jphi = j.matvec(&phi);
+        let resid: Vec<f64> = jphi.iter().zip(&r).map(|(a, b)| a - b).collect();
+        let mut grad = j.tr_matvec(&resid);
+        for i in 0..p {
+            grad[i] += lam * (phi[i] - mu * phi_prev[i]);
+        }
+        let scale = phi.iter().map(|x| x.abs()).fold(1.0, f64::max);
+        assert_close(&grad, &vec![0.0; p], 1e-7 * scale * (1.0 + lam))
+    });
+}
+
+/// Nyström approximations never exceed the matrix they approximate
+/// (0 ⪯ Â ⪯ A+ν) and their inverse application is SPD-consistent
+/// (vᵀ(Â+λI)⁻¹v > 0).
+#[test]
+fn prop_nystrom_psd_sandwich() {
+    run_prop("nystrom psd sandwich", 20, |g| {
+        let n = g.usize_in(4, 28);
+        let rank = g.usize_in(1, n);
+        let sketch = g.usize_in(1, n);
+        let lam = g.log_uniform(1e-6, 1.0);
+        let low = random_jacobian(g, n, rank);
+        let a = low.gram(); // PSD, rank ≤ rank
+
+        let mut rng = Rng::seed_from(g.usize_in(0, 1 << 30) as u64);
+        let nys = GpuNystrom::build(&a, sketch, lam, &mut rng)
+            .map_err(|e| e.to_string())?;
+        let approx = nys.dense_approx();
+
+        // PSD-ness of Â.
+        let e = eigh(&approx);
+        if e.eigenvalues.iter().any(|&w| w < -1e-7) {
+            return Err(format!("Â has negative eigenvalue {:?}", e.eigenvalues[0]));
+        }
+        // Â ⪯ A (+ slack for the ν shift).
+        let mut resid = a.clone();
+        resid.add_scaled(&approx, -1.0);
+        let er = eigh(&resid);
+        if er.eigenvalues.iter().any(|&w| w < -1e-5 * (1.0 + a.frobenius_norm())) {
+            return Err(format!(
+                "Â ⪯̸ A: min residual eigenvalue {}",
+                er.eigenvalues[0]
+            ));
+        }
+        // Inverse application is positive definite.
+        let v = g.vec_normal(n);
+        let quad = dot(&v, &nys.inv_apply(&v));
+        (quad > 0.0)
+            .then_some(())
+            .ok_or_else(|| format!("vᵀ(Â+λI)⁻¹v = {quad} ≤ 0"))
+    });
+}
+
+/// Effective dimension: both computation paths agree and d_eff ∈ [0, n],
+/// decreasing in λ (paper §3.4).
+#[test]
+fn prop_effective_dimension() {
+    run_prop("effective dimension", 25, |g| {
+        let n = g.usize_in(2, 30);
+        let rank = g.usize_in(1, n);
+        let j = random_jacobian(g, n, rank);
+        let k = j.gram();
+        let lam1 = g.log_uniform(1e-8, 1e-2);
+        let lam2 = lam1 * g.f64_in(2.0, 100.0);
+
+        let d1 = effective_dimension(&k, lam1).map_err(|e| e.to_string())?;
+        let d2 = effective_dimension(&k, lam2).map_err(|e| e.to_string())?;
+        let d1s = effective_dimension_spectral(&k, lam1);
+
+        if !(0.0..=n as f64 + 1e-9).contains(&d1) {
+            return Err(format!("d_eff {d1} outside [0, {n}]"));
+        }
+        if d2 > d1 + 1e-6 * (1.0 + d1) {
+            return Err(format!("d_eff not decreasing: {d1} -> {d2}"));
+        }
+        if (d1 - d1s).abs() > 1e-5 * (1.0 + d1) {
+            return Err(format!("paths disagree: {d1} vs {d1s}"));
+        }
+        Ok(())
+    });
+}
+
+/// CG on an SPD operator converges to the Cholesky solution.
+#[test]
+fn prop_cg_matches_direct_solve() {
+    run_prop("cg vs cholesky", 25, |g| {
+        let n = g.usize_in(1, 40);
+        let j = random_jacobian(g, n, n + 5);
+        let a = j.gram().add_diag(g.log_uniform(1e-2, 1e1));
+        let b = g.vec_normal(n);
+        let direct = Cholesky::factor(&a).map_err(|e| e.to_string())?.solve(&b);
+        let out = cg_solve(|v| a.matvec(v), &b, 4 * n + 20, 1e-12);
+        let scale = direct.iter().map(|x| x.abs()).fold(1.0, f64::max);
+        assert_close(&out.x, &direct, 1e-6 * scale)
+    });
+}
+
+/// QR: Q has orthonormal columns and preserves the column space, for all
+/// tall shapes.
+#[test]
+fn prop_qr_orthonormal() {
+    run_prop("qr orthonormal", 25, |g| {
+        let n = g.usize_in(1, 50);
+        let m = n + g.usize_in(0, 30);
+        let a = random_jacobian(g, m, n);
+        let q = thin_qr(&a);
+        let qtq = q.transpose().matmul(&q);
+        let diff = qtq.max_abs_diff(&Matrix::identity(n));
+        if diff > 1e-9 {
+            return Err(format!("QᵀQ − I = {diff}"));
+        }
+        let proj = q.matmul(&q.transpose().matmul(&a));
+        let err = proj.max_abs_diff(&a);
+        (err < 1e-8 * (1.0 + a.frobenius_norm()))
+            .then_some(())
+            .ok_or_else(|| format!("projection error {err}"))
+    });
+}
+
+/// Stable and GPU-efficient Nyström agree when the sketch covers the rank.
+#[test]
+fn prop_nystrom_variants_agree_at_full_rank() {
+    run_prop("nystrom variants agree", 15, |g| {
+        let n = g.usize_in(4, 24);
+        let rank = g.usize_in(1, n / 2 + 1);
+        let low = random_jacobian(g, n, rank);
+        let a = low.gram();
+        let lam = g.log_uniform(1e-4, 1e-1);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let sketch = (rank + 3).min(n);
+
+        let mut r1 = Rng::seed_from(seed);
+        let gpu = GpuNystrom::build(&a, sketch, lam, &mut r1).map_err(|e| e.to_string())?;
+        let mut r2 = Rng::seed_from(seed.wrapping_add(1));
+        let stable =
+            StableNystrom::build(&a, sketch, lam, &mut r2).map_err(|e| e.to_string())?;
+
+        // With sketch > rank both recover A (whp): compare inverse actions.
+        let v = g.vec_normal(n);
+        let x1 = gpu.inv_apply(&v);
+        let x2 = stable.inv_apply(&v);
+        let scale = x1.iter().map(|x| x.abs()).fold(1.0, f64::max);
+        assert_close(&x1, &x2, 1e-4 * scale)
+    });
+}
+
+/// Batch sampling: shapes, ranges, boundary membership — for all dims/sizes.
+#[test]
+fn prop_sampler_invariants() {
+    run_prop("sampler invariants", 30, |g| {
+        let d = g.usize_in(1, 16);
+        let n = g.usize_in(1, 64);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let mut s = engd::pde::Sampler::new(d, seed);
+        let int = s.interior(n);
+        if int.len() != n * d {
+            return Err("interior shape".into());
+        }
+        if !int.iter().all(|&x| (0.0..1.0).contains(&x)) {
+            return Err("interior out of cube".into());
+        }
+        let bnd = s.boundary(n);
+        for row in bnd.chunks_exact(d) {
+            if !row.iter().any(|&x| x == 0.0 || x == 1.0) {
+                return Err(format!("boundary row {row:?} not on a face"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Line-search-style invariant at the linalg level: the exact ENGD-W step
+/// with a small enough η decreases the *quadratic model* (Gauss–Newton
+/// guarantee) — guards sign conventions end-to-end.
+#[test]
+fn prop_engd_direction_is_descent() {
+    run_prop("engd-w direction is descent", 30, |g| {
+        let n = g.usize_in(2, 30);
+        let p = g.usize_in(2, 40);
+        let lam = g.log_uniform(1e-6, 1e-1);
+        let j = random_jacobian(g, n, p);
+        let r = g.vec_normal(n);
+        let k = j.gram().add_diag(lam);
+        let a = Cholesky::factor(&k).map_err(|e| e.to_string())?.solve(&r);
+        let phi = j.tr_matvec(&a);
+        // ∇L = Jᵀr; descent requires ∇Lᵀφ > 0 (since θ ← θ − ηφ).
+        let grad = j.tr_matvec(&r);
+        let slope = dot(&grad, &phi);
+        (slope > 0.0)
+            .then_some(())
+            .ok_or_else(|| format!("∇Lᵀφ = {slope} ≤ 0: not a descent direction"))
+    });
+}

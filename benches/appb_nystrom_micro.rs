@@ -13,9 +13,10 @@ mod common;
 
 use std::time::Instant;
 
-use engd::linalg::Matrix;
+use engd::linalg::{Matrix, Workspace};
 use engd::metrics::Summary;
 use engd::nystrom::{GpuNystrom, NystromApprox, StableNystrom};
+use engd::optim::DenseKernel;
 use engd::rng::Rng;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -46,7 +47,8 @@ fn main() -> anyhow::Result<()> {
     let mut v = vec![0.0; n];
     rng.fill_normal(&mut v);
 
-    let mut time_variant = |tag: &str, f: &dyn Fn(&mut Rng) -> Vec<f64>| {
+    let op = DenseKernel::new(&a);
+    let mut time_variant = |tag: &str, f: &mut dyn FnMut(&mut Rng) -> Vec<f64>| {
         let mut samples = Vec::with_capacity(iters);
         for i in 0..warmup + iters {
             let t0 = Instant::now();
@@ -62,14 +64,27 @@ fn main() -> anyhow::Result<()> {
         s
     };
 
-    let stable = time_variant("stable (QR+eigh-SVD)", &|rng| {
-        let nys = StableNystrom::build(&a, sketch, lambda, rng).unwrap();
-        nys.inv_apply(&v)
+    // Each variant keeps one workspace across iterations, mirroring the
+    // trainer: the first iteration allocates, the rest run from the pool.
+    let mut ws_stable = Workspace::new();
+    let stable = time_variant("stable (QR+eigh-SVD)", &mut |rng| {
+        let nys = StableNystrom::build(&op, sketch, lambda, rng, &mut ws_stable).unwrap();
+        let x = nys.inv_apply(&v);
+        nys.recycle(&mut ws_stable);
+        x
     });
-    let gpu = time_variant("gpu-efficient (Alg 2)", &|rng| {
-        let nys = GpuNystrom::build(&a, sketch, lambda, rng).unwrap();
-        nys.inv_apply(&v)
+    let mut ws_gpu = Workspace::new();
+    let gpu = time_variant("gpu-efficient (Alg 2)", &mut |rng| {
+        let nys = GpuNystrom::build(&op, sketch, lambda, rng, &mut ws_gpu).unwrap();
+        let x = nys.inv_apply(&v);
+        nys.recycle(&mut ws_gpu);
+        x
     });
+    println!(
+        "workspace reuse: stable {:?}, gpu {:?}",
+        ws_stable.stats(),
+        ws_gpu.stats()
+    );
 
     println!(
         "\nspeedup (stable / gpu-efficient) at the median: {:.1}x \
@@ -79,10 +94,11 @@ fn main() -> anyhow::Result<()> {
 
     // Accuracy check at this sketch size: both approximations should agree
     // with each other far better than either agrees with the exact solve.
+    let mut ws = Workspace::new();
     let mut r1 = Rng::seed_from(7);
-    let nys_g = GpuNystrom::build(&a, sketch, lambda, &mut r1).unwrap();
+    let nys_g = GpuNystrom::build(&op, sketch, lambda, &mut r1, &mut ws).unwrap();
     let mut r2 = Rng::seed_from(7);
-    let nys_s = StableNystrom::build(&a, sketch, lambda, &mut r2).unwrap();
+    let nys_s = StableNystrom::build(&op, sketch, lambda, &mut r2, &mut ws).unwrap();
     let xg = nys_g.inv_apply(&v);
     let xs = nys_s.inv_apply(&v);
     let rel: f64 = xg

@@ -11,7 +11,7 @@ mod common;
 
 use std::time::Instant;
 
-use engd::linalg::{Cholesky, Matrix};
+use engd::linalg::{Cholesky, Matrix, Workspace};
 use engd::metrics::Summary;
 use engd::rng::Rng;
 
@@ -102,4 +102,65 @@ fn main() {
         let y = j.matvec(&w);
         std::hint::black_box(&y);
     });
+
+    // --- fused vs materialized transpose products ------------------------
+    //
+    // The kernel-operator layer removed every `transpose()+matmul` from the
+    // training path; these pairs keep the win measurable in the bench
+    // trajectory. Same shapes as the eq. 9 sketch pipeline.
+
+    // JᵀΩ: the sketch map (N×P)ᵀ(N×S) — the per-step Nyström product.
+    let (n, p, s) = (1024usize, 10_065usize, 102usize);
+    let mut omega = Matrix::zeros(n, s);
+    rng.fill_normal(omega.data_mut());
+    let flops_tn = 2.0 * (n * p * s) as f64;
+    time_op("JᵀΩ fused     matmul_tn", flops_tn, 5, || {
+        let c = j.matmul_tn(&omega);
+        std::hint::black_box(&c);
+    });
+    time_op("JᵀΩ material  Jᵀ then matmul", flops_tn, 5, || {
+        let c = j.transpose().matmul(&omega);
+        std::hint::black_box(&c);
+    });
+
+    // BᵀB: the ℓ×ℓ Nyström core (N×S)ᵀ(N×S).
+    let mut b = Matrix::zeros(n, s);
+    rng.fill_normal(b.data_mut());
+    let flops_core = 2.0 * (n * s * s) as f64;
+    time_op("BᵀB fused     matmul_tn", flops_core, 20, || {
+        let c = b.matmul_tn(&b);
+        std::hint::black_box(&c);
+    });
+    time_op("BᵀB material  Bᵀ then matmul", flops_core, 20, || {
+        let c = b.transpose().matmul(&b);
+        std::hint::black_box(&c);
+    });
+
+    // JᵀJ: dense ENGD's P×P Gramian at a dense-tractable size.
+    let (n2, p2) = (448usize, 2048usize);
+    let mut j2 = Matrix::zeros(n2, p2);
+    rng.fill_normal(j2.data_mut());
+    let flops_gram_t = (n2 * p2 * p2) as f64;
+    time_op("JᵀJ fused     gram_t", flops_gram_t, 5, || {
+        let g = j2.gram_t();
+        std::hint::black_box(&g);
+    });
+    time_op("JᵀJ material  Jᵀ then gram", flops_gram_t, 5, || {
+        let g = j2.transpose().gram();
+        std::hint::black_box(&g);
+    });
+
+    // Workspace-pooled gram vs per-call allocation (the step-reuse win).
+    // Scratch checkout: gram_into overwrites every element, so the pooled
+    // path pays no memset at all — same as the trainer hot path.
+    let mut ws = Workspace::new();
+    let k0 = ws.take_matrix_scratch(n, n);
+    ws.recycle_matrix(k0); // warm the pool
+    time_op("gram_into pooled (1024x10065)", (n * n) as f64 * p as f64, 5, || {
+        let mut k = ws.take_matrix_scratch(n, n);
+        j.gram_into(&mut k);
+        std::hint::black_box(&k);
+        ws.recycle_matrix(k);
+    });
+    println!("workspace stats after pooled gram: {:?}", ws.stats());
 }

@@ -4,6 +4,7 @@ use anyhow::{Context, Result};
 
 use super::checkpoint::Checkpoint;
 use crate::config::RunConfig;
+use crate::linalg::{Workspace, WorkspaceStats};
 use crate::metrics::{RunLogger, StepRecord};
 use crate::optim::{build_optimizer, Optimizer, StepEnv};
 use crate::pde::{exact_solution, init_params, l2_relative_error, Sampler};
@@ -35,6 +36,11 @@ pub struct Trainer<'a> {
     optimizer: Box<dyn Optimizer>,
     sampler: Sampler,
     rng: Rng,
+    /// Step-buffer pool shared across the whole run: Gram matrices,
+    /// sketches, and Nyström factors are checked out per step and recycled,
+    /// so steady-state steps allocate nothing for their pool-tracked dense
+    /// temporaries.
+    workspace: Workspace,
     /// Fixed evaluation set (points + exact values).
     eval_points: Vec<f64>,
     eval_exact: Vec<f64>,
@@ -89,10 +95,18 @@ impl<'a> Trainer<'a> {
             optimizer,
             sampler,
             rng,
+            workspace: Workspace::new(),
             eval_points,
             eval_exact,
             theta,
         })
+    }
+
+    /// Allocation counters of the step-buffer pool (steady-state training
+    /// must show `fresh_allocs` frozen after the first step — asserted by
+    /// the integration suite).
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        self.workspace.stats()
     }
 
     /// Save a checkpoint of the current state to
@@ -144,6 +158,7 @@ impl<'a> Trainer<'a> {
                 x_bnd: &x_bnd,
                 k,
                 rng: &mut self.rng,
+                ws: &mut self.workspace,
                 diagnostics: evaluate,
             };
             let info = self

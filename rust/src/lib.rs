@@ -15,10 +15,40 @@
 //! Python never runs at training time: the Rust binary loads the AOT
 //! artifacts through the PJRT C API and owns the entire hot path.
 //!
+//! ## The kernel-operator layer
+//!
+//! The L3 hot path is organized around three pieces introduced by the
+//! kernel-operator refactor:
+//!
+//! * [`linalg::ops`] — fused transpose products (`matmul_tn` = AᵀB,
+//!   `matmul_nt` = ABᵀ, `gram_t` = AᵀA) with `*_into` variants; no
+//!   `transpose()` copy ever appears on the training path.
+//! * [`linalg::Workspace`] — a step-buffer pool owned by the
+//!   [`coordinator::Trainer`] and threaded through [`optim::StepEnv`];
+//!   Gram matrices, sketches, and Nyström factors are recycled across
+//!   steps, so steady-state steps allocate none of their pool-tracked
+//!   dense temporaries (QR/eigh interiors on the stable-Nyström path are
+//!   the remaining exception).
+//! * [`optim::kernel::KernelOp`] — the kernel `K = JJᵀ` as an operator
+//!   (`apply`, `apply_t`, `apply_j`, `gram`, `gram_t`, `sketch_y`). Every
+//!   optimizer and every `SolveMode` branch (exact Cholesky, both Nyström
+//!   variants, sketch-and-precondition CG) consumes `&dyn KernelOp`, which
+//!   is the seam where a sharded or PJRT-backed operator drops in without
+//!   touching the optimizers.
+//!
 //! Quickstart (after `make artifacts`):
 //! ```bash
 //! cargo run --release -- train --problem poisson5d --opt spring --steps 300 --echo
 //! ```
+
+// Numeric-kernel style: index-heavy loops over row-major buffers are the
+// idiom here (they mirror the blocked BLAS structure); these pedantic lints
+// fight that idiom without making the kernels clearer.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_memcpy
+)]
 
 pub mod cli;
 pub mod config;

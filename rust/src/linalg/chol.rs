@@ -2,10 +2,10 @@
 //! (paper eq. 5) and both Cholesky steps of the GPU-efficient Nyström
 //! (paper Algorithm 2, lines 5 and 8).
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::matrix::Matrix;
-use crate::parallel::par_chunks;
+use crate::parallel::{par_chunks, SendPtr};
 
 /// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
 pub struct Cholesky {
@@ -13,17 +13,42 @@ pub struct Cholesky {
 }
 
 impl Cholesky {
-    /// Factor a symmetric positive-definite matrix.
+    /// Factor a symmetric positive-definite matrix (clones the input; use
+    /// [`Cholesky::factor_from`] to factor a workspace buffer in place).
+    pub fn factor(a: &Matrix) -> Result<Self> {
+        Self::factor_from(a.clone())
+    }
+
+    /// Factor a symmetric positive-definite matrix, consuming its storage —
+    /// the factorization happens in place, so workspace-pooled Gram/core
+    /// buffers are factored with zero extra allocation (reclaim the buffer
+    /// afterwards via [`Cholesky::into_factor`]).
+    ///
+    /// On failure the storage is dropped; retry loops that must keep their
+    /// pooled buffer alive use [`Cholesky::factor_from_recoverable`].
+    pub fn factor_from(a: Matrix) -> Result<Self> {
+        Self::factor_from_recoverable(a).map_err(|(_, e)| e)
+    }
+
+    /// Like [`Cholesky::factor_from`], but a failure hands the (partially
+    /// overwritten) storage back alongside the error, so ν-escalation retry
+    /// loops can recycle the buffer into their [`super::Workspace`] instead
+    /// of leaking it out of the pool.
     ///
     /// Right-looking column algorithm with the trailing update parallelized
     /// over rows. Fails (rather than producing NaNs) if a pivot is not
     /// strictly positive — the caller decides how to re-damp.
-    pub fn factor(a: &Matrix) -> Result<Self> {
+    pub fn factor_from_recoverable(a: Matrix) -> Result<Self, (Matrix, anyhow::Error)> {
         if a.rows() != a.cols() {
-            bail!("cholesky: matrix is {}x{}, not square", a.rows(), a.cols());
+            let e = anyhow::anyhow!(
+                "cholesky: matrix is {}x{}, not square",
+                a.rows(),
+                a.cols()
+            );
+            return Err((a, e));
         }
         let n = a.rows();
-        let mut l = a.clone();
+        let mut l = a;
         for j in 0..n {
             // Pivot: d = sqrt(A[j,j] - L[j,:j]·L[j,:j])
             let ljj = {
@@ -32,10 +57,11 @@ impl Cholesky {
                 row_j[j] - s
             };
             if ljj <= 0.0 || !ljj.is_finite() {
-                bail!(
+                let e = anyhow::anyhow!(
                     "cholesky: non-positive pivot {ljj:.3e} at column {j} \
                      (matrix is not PD at this damping)"
                 );
+                return Err((l, e));
             }
             let d = ljj.sqrt();
             l[(j, j)] = d;
@@ -44,7 +70,7 @@ impl Cholesky {
             //   L[i,j] = (A[i,j] - L[i,:j]·L[j,:j]) / d
             let cols = n;
             if n - j - 1 > 256 {
-                let lp = SendMutPtr(l.data_mut().as_mut_ptr());
+                let lp = SendPtr(l.data_mut().as_mut_ptr());
                 par_chunks(n - j - 1, |s, e| {
                     for off in s..e {
                         let i = j + 1 + off;
@@ -79,6 +105,11 @@ impl Cholesky {
 
     pub fn factor_matrix(&self) -> &Matrix {
         &self.l
+    }
+
+    /// Surrender the factor's storage (so a workspace pool can recycle it).
+    pub fn into_factor(self) -> Matrix {
+        self.l
     }
 
     /// Solve `A x = b` (forward + back substitution).
@@ -123,8 +154,11 @@ impl Cholesky {
         assert_eq!(b.rows(), n);
         let mut out = Matrix::zeros(n, b.cols());
         // Solve per column (parallelizable; columns are independent).
-        let cols: Vec<Vec<f64>> =
-            crate::parallel::par_map(b.cols(), |j| self.solve(&b.col(j)));
+        let cols: Vec<Vec<f64>> = crate::parallel::par_map(b.cols(), |j| {
+            let mut rhs = vec![0.0; n];
+            b.copy_col_into(j, &mut rhs);
+            self.solve(&rhs)
+        });
         for (j, col) in cols.iter().enumerate() {
             for i in 0..n {
                 out[(i, j)] = col[i];
@@ -139,15 +173,36 @@ impl Cholesky {
     /// Our `Cholesky` stores the *lower* factor L with A = L Lᵀ; `C = Lᵀ`.
     /// For each row b of B we solve `x Lᵀ = b  ⇔  L xᵀ = bᵀ`.
     pub fn right_solve_transpose(&self, b: &Matrix) -> Matrix {
+        let mut out = b.clone();
+        self.right_solve_transpose_in_place(&mut out);
+        out
+    }
+
+    /// In-place variant of [`Cholesky::right_solve_transpose`]: overwrites
+    /// each row of `b` with its solve, so the Nyström builders can turn a
+    /// workspace-pooled `Y_ν` into `B` with zero extra allocation.
+    ///
+    /// Forward substitution runs left-to-right within a row, so the row can
+    /// serve as both input and output; rows are independent and solved in
+    /// parallel.
+    pub fn right_solve_transpose_in_place(&self, b: &mut Matrix) {
         let n = self.l.rows();
         assert_eq!(b.cols(), n, "right_solve_transpose: width mismatch");
-        let rows: Vec<Vec<f64>> =
-            crate::parallel::par_map(b.rows(), |i| self.solve_lower(b.row(i)));
-        let mut out = Matrix::zeros(b.rows(), n);
-        for (i, row) in rows.iter().enumerate() {
-            out.row_mut(i).copy_from_slice(row);
-        }
-        out
+        let rows = b.rows();
+        let width = b.cols();
+        let b_ptr = SendPtr(b.data_mut().as_mut_ptr());
+        par_chunks(rows, |istart, iend| {
+            for i in istart..iend {
+                // SAFETY: each thread owns disjoint rows of B.
+                let row: &mut [f64] = unsafe {
+                    std::slice::from_raw_parts_mut(b_ptr.get().add(i * width), width)
+                };
+                for k in 0..n {
+                    let s = super::vec_ops::dot(&self.l.row(k)[..k], &row[..k]);
+                    row[k] = (row[k] - s) / self.l[(k, k)];
+                }
+            }
+        });
     }
 
     /// trace(A⁻¹) via the factor: Σ_j ‖L⁻¹ e_j‖² — used by the effective
@@ -169,18 +224,6 @@ impl Cholesky {
             .map(|i| self.l[(i, i)].ln())
             .sum::<f64>()
             * 2.0
-    }
-}
-
-struct SendMutPtr(*mut f64);
-unsafe impl Send for SendMutPtr {}
-unsafe impl Sync for SendMutPtr {}
-
-impl SendMutPtr {
-    /// See `matrix.rs`: method access keeps the closure capture `Sync`.
-    #[inline]
-    fn get(&self) -> *mut f64 {
-        self.0
     }
 }
 
@@ -230,7 +273,7 @@ mod tests {
         let ch = Cholesky::factor(&a).unwrap();
         let x = ch.solve_matrix(&b);
         for j in 0..5 {
-            let xj = ch.solve(&b.col(j));
+            let xj = ch.solve(&b.col_iter(j).collect::<Vec<_>>());
             for i in 0..40 {
                 assert!((x[(i, j)] - xj[i]).abs() < 1e-12);
             }
@@ -261,16 +304,50 @@ mod tests {
     }
 
     #[test]
+    fn factor_from_matches_factor_and_returns_storage() {
+        let mut rng = Rng::seed_from(6);
+        let a = spd(&mut rng, 25);
+        let by_ref = Cholesky::factor(&a).unwrap();
+        let by_move = Cholesky::factor_from(a.clone()).unwrap();
+        assert_eq!(
+            by_ref.factor_matrix().max_abs_diff(by_move.factor_matrix()),
+            0.0
+        );
+        let reclaimed = by_move.into_factor();
+        assert_eq!((reclaimed.rows(), reclaimed.cols()), (25, 25));
+    }
+
+    #[test]
+    fn in_place_right_solve_matches_allocating_variant() {
+        let mut rng = Rng::seed_from(7);
+        let a = spd(&mut rng, 20);
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut b = Matrix::zeros(8, 20);
+        rng.fill_normal(b.data_mut());
+        let want = ch.right_solve_transpose(&b);
+        ch.right_solve_transpose_in_place(&mut b);
+        assert_eq!(b.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
     fn non_pd_fails_cleanly() {
         let a = Matrix::from_fn(3, 3, |i, j| if i == j { -1.0 } else { 0.0 });
         assert!(Cholesky::factor(&a).is_err());
     }
 
     #[test]
+    fn recoverable_factor_returns_storage_on_failure() {
+        let a = Matrix::from_fn(3, 3, |i, j| if i == j { -1.0 } else { 0.0 });
+        let (back, e) = Cholesky::factor_from_recoverable(a).err().unwrap();
+        assert_eq!((back.rows(), back.cols()), (3, 3));
+        assert!(e.to_string().contains("pivot"), "{e}");
+    }
+
+    #[test]
     fn log_det_matches_eigenvalues_diag() {
         let a = Matrix::from_fn(4, 4, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
         let ch = Cholesky::factor(&a).unwrap();
-        let want = (1f64.ln() + 2f64.ln() + 3f64.ln() + 4f64.ln());
+        let want = 1f64.ln() + 2f64.ln() + 3f64.ln() + 4f64.ln();
         assert!((ch.log_det() - want).abs() < 1e-12);
     }
 }

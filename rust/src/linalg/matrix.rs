@@ -15,10 +15,11 @@ pub struct Matrix {
     data: Vec<f64>,
 }
 
-/// Panel height of A processed per thread-block (rows).
-const MC: usize = 64;
+/// Panel height of A processed per thread-block (rows). Shared with the
+/// fused product kernels in `linalg::ops`.
+pub(crate) const MC: usize = 64;
 /// Reduction-panel width kept hot in L2 (columns of A / rows of B).
-const KC: usize = 256;
+pub(crate) const KC: usize = 256;
 
 impl Matrix {
     // ----- constructors -------------------------------------------------
@@ -96,8 +97,24 @@ impl Matrix {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    pub fn col(&self, j: usize) -> Vec<f64> {
-        (0..self.rows).map(|i| self[(i, j)]).collect()
+    /// Strided, allocation-free walk down column `j` of the row-major buffer
+    /// (replaces the old `col()` which built a `Vec` element-by-element).
+    ///
+    /// Hard-asserts the column bound: a release-mode out-of-range `j` would
+    /// otherwise yield a silently short, garbage iterator.
+    #[inline]
+    pub fn col_iter(&self, j: usize) -> impl ExactSizeIterator<Item = f64> + '_ {
+        assert!(j < self.cols, "col_iter: column {j} of a {}x{} matrix", self.rows, self.cols);
+        self.data[j..].iter().step_by(self.cols).copied()
+    }
+
+    /// Gather column `j` into a caller-provided buffer (for consumers that
+    /// need a contiguous slice, e.g. triangular solves).
+    pub fn copy_col_into(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows, "copy_col_into length mismatch");
+        for (dst, src) in out.iter_mut().zip(self.col_iter(j)) {
+            *dst = src;
+        }
     }
 
     // ----- simple transforms ---------------------------------------------
@@ -120,12 +137,18 @@ impl Matrix {
 
     /// self + alpha * I (the damping shift (K + λI) of eq. 5).
     pub fn add_diag(&self, alpha: f64) -> Matrix {
-        assert_eq!(self.rows, self.cols, "add_diag needs a square matrix");
         let mut out = self.clone();
-        for i in 0..self.rows {
-            out[(i, i)] += alpha;
-        }
+        out.add_diag_in_place(alpha);
         out
+    }
+
+    /// In-place damping shift: `self += alpha * I`. The allocation-free
+    /// variant used on workspace-pooled Gram/sketch buffers.
+    pub fn add_diag_in_place(&mut self, alpha: f64) {
+        assert_eq!(self.rows, self.cols, "add_diag needs a square matrix");
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += alpha;
+        }
     }
 
     pub fn scale_in_place(&mut self, alpha: f64) {
@@ -157,6 +180,11 @@ impl Matrix {
     }
 
     // ----- products -------------------------------------------------------
+    //
+    // The blocked, thread-parallel kernels (including the fused transpose
+    // products `matmul_tn` / `matmul_nt` and the `*_into` variants that
+    // write to workspace-pooled buffers) live in `linalg::ops`; the
+    // allocating entry points here are thin wrappers.
 
     /// Blocked, multi-threaded `C = A @ B`.
     ///
@@ -164,75 +192,23 @@ impl Matrix {
     /// kernel does `C[i, :] += a_ik * B[k, :]`, which vectorizes cleanly on
     /// row-major data and streams B once per KC panel.
     pub fn matmul(&self, b: &Matrix) -> Matrix {
-        assert_eq!(
-            self.cols, b.rows,
-            "matmul shape mismatch: {}x{} @ {}x{}",
-            self.rows, self.cols, b.rows, b.cols
-        );
-        let mut c = Matrix::zeros(self.rows, b.cols);
-        let n = b.cols;
-        let c_ptr = SendMutPtr(c.data.as_mut_ptr());
-        par_chunks(self.rows.div_ceil(MC), |pstart, pend| {
-            for panel in pstart..pend {
-                let i0 = panel * MC;
-                let i1 = (i0 + MC).min(self.rows);
-                for k0 in (0..self.cols).step_by(KC) {
-                    let k1 = (k0 + KC).min(self.cols);
-                    for i in i0..i1 {
-                        // SAFETY: each thread owns disjoint row panels of C.
-                        let c_row: &mut [f64] = unsafe {
-                            std::slice::from_raw_parts_mut(c_ptr.get().add(i * n), n)
-                        };
-                        let a_row = self.row(i);
-                        for k in k0..k1 {
-                            let aik = a_row[k];
-                            if aik == 0.0 {
-                                continue;
-                            }
-                            let b_row = b.row(k);
-                            for j in 0..n {
-                                c_row[j] += aik * b_row[j];
-                            }
-                        }
-                    }
-                }
-            }
-        });
+        let mut c = Matrix::zeros(self.rows, b.cols());
+        self.matmul_into(b, &mut c);
         c
     }
 
     /// Symmetric Gram product `K = A @ Aᵀ` exploiting symmetry (the Rust-side
     /// analogue of the L1 Pallas gram kernel, used on the decomposed path).
-    ///
-    /// Computes the lower triangle in parallel over row blocks and mirrors.
     pub fn gram(&self) -> Matrix {
-        let n = self.rows;
-        let mut k = Matrix::zeros(n, n);
-        let k_ptr = SendMutPtr(k.data.as_mut_ptr());
-        par_chunks(n, |istart, iend| {
-            for i in istart..iend {
-                let ai = self.row(i);
-                // SAFETY: thread writes only rows in [istart, iend).
-                let k_row: &mut [f64] =
-                    unsafe { std::slice::from_raw_parts_mut(k_ptr.get().add(i * n), n) };
-                for j in 0..=i {
-                    k_row[j] = dot_slices(ai, self.row(j));
-                }
-            }
-        });
-        // Mirror the strict lower triangle.
-        for i in 0..n {
-            for j in (i + 1)..n {
-                k[(i, j)] = k[(j, i)];
-            }
-        }
+        let mut k = Matrix::zeros(self.rows, self.rows);
+        self.gram_into(&mut k);
         k
     }
 
     /// `y = A @ x` (thread-parallel over rows).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, x.len(), "matvec shape mismatch");
-        crate::parallel::par_map(self.rows, |i| dot_slices(self.row(i), x))
+        crate::parallel::par_map(self.rows, |i| super::vec_ops::dot(self.row(i), x))
     }
 
     /// `y = Aᵀ @ x` without forming the transpose (accumulates rows).
@@ -240,7 +216,7 @@ impl Matrix {
         assert_eq!(self.rows, x.len(), "tr_matvec shape mismatch");
         // Parallel over column chunks to keep writes disjoint.
         let mut y = vec![0.0; self.cols];
-        let y_ptr = SendMutPtr(y.as_mut_ptr());
+        let y_ptr = crate::parallel::SendPtr(y.as_mut_ptr());
         let cols = self.cols;
         par_chunks(self.cols.div_ceil(512), |cstart, cend| {
             let j0 = cstart * 512;
@@ -268,39 +244,6 @@ impl Matrix {
     /// Effective FLOP count of `matmul` with `other` (perf reporting).
     pub fn matmul_flops(&self, b: &Matrix) -> f64 {
         2.0 * self.rows as f64 * self.cols as f64 * b.cols as f64
-    }
-}
-
-#[inline]
-fn dot_slices(a: &[f64], b: &[f64]) -> f64 {
-    // 4-way unrolled dot; the compiler turns this into packed FMA.
-    let n = a.len();
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    let chunks = n / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
-}
-
-struct SendMutPtr(*mut f64);
-unsafe impl Send for SendMutPtr {}
-unsafe impl Sync for SendMutPtr {}
-
-impl SendMutPtr {
-    /// Method (not field) access, so edition-2021 closures capture the whole
-    /// `Sync` wrapper rather than the raw pointer field.
-    #[inline]
-    fn get(&self) -> *mut f64 {
-        self.0
     }
 }
 
@@ -409,6 +352,24 @@ mod tests {
             for j in 0..12 {
                 let want = a[(i, j)] + if i == j { 2.5 } else { 0.0 };
                 assert_eq!(b[(i, j)], want);
+            }
+        }
+    }
+
+    #[test]
+    fn col_iter_walks_columns_without_copying() {
+        let mut rng = Rng::seed_from(6);
+        let a = random_matrix(&mut rng, 9, 5);
+        for j in 0..5 {
+            let it = a.col_iter(j);
+            assert_eq!(it.len(), 9);
+            for (i, v) in it.enumerate() {
+                assert_eq!(v, a[(i, j)]);
+            }
+            let mut buf = vec![0.0; 9];
+            a.copy_col_into(j, &mut buf);
+            for i in 0..9 {
+                assert_eq!(buf[i], a[(i, j)]);
             }
         }
     }

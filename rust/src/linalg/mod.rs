@@ -6,8 +6,14 @@
 //! Contents:
 //! * [`Matrix`] — row-major dense matrix with blocked, multi-threaded
 //!   products (`matmul`, `gram`, `matvec`, ...).
+//! * [`ops`] — fused BLAS-style transpose products (`matmul_tn` = AᵀB,
+//!   `matmul_nt` = ABᵀ, `gram_t` = AᵀA) plus `*_into` variants writing to
+//!   caller-provided buffers; no transpose is ever materialized.
+//! * [`Workspace`] — the step-buffer pool the trainer threads through
+//!   `StepEnv` so per-step Gram/sketch/factor allocations are recycled.
 //! * [`chol`] — Cholesky factorization + triangular/multi-RHS solves (the
-//!   exact kernel solve of ENGD-W, paper eq. 5).
+//!   exact kernel solve of ENGD-W, paper eq. 5), with in-place `factor_from`
+//!   over pooled buffers.
 //! * [`eigh`] — cyclic Jacobi symmetric eigendecomposition (the SVD-class
 //!   factorization used by the *standard stable* Nyström baseline and the
 //!   spectral diagnostics).
@@ -20,8 +26,10 @@ mod cg;
 mod chol;
 mod eigh;
 mod matrix;
+pub mod ops;
 mod qr;
 mod vec_ops;
+mod workspace;
 
 pub use cg::{cg_solve, CgOutcome};
 pub use chol::Cholesky;
@@ -29,3 +37,4 @@ pub use eigh::{eigh, Eigh};
 pub use matrix::Matrix;
 pub use qr::thin_qr;
 pub use vec_ops::{axpy, dot, norm2, scale, sub};
+pub use workspace::{Workspace, WorkspaceStats};

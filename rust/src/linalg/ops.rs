@@ -1,0 +1,372 @@
+//! Fused BLAS-style product kernels: transpose products without transposes.
+//!
+//! The paper's cost model (eq. 5, Alg. 1, eq. 9) assumes `JᵀΩ`, `JᵀJ`, and
+//! `BᵀB` are *single* passes over row-major data — but the seed code spelled
+//! them `j.transpose().matmul(..)`, materializing an O(N·P) copy on every
+//! optimizer step. This module adds the fused forms:
+//!
+//! * [`Matrix::matmul_tn`] — `C = AᵀB` (the sketch product `JᵀΩ`, the
+//!   Nyström cores `ΩᵀY` and `BᵀB`),
+//! * [`Matrix::matmul_nt`] — `C = ABᵀ` (dense reconstructions `BBᵀ`),
+//! * [`Matrix::gram_t`] — `G = AᵀA` (dense ENGD's P×P Gramian),
+//! * [`Matrix::gram_into`] and the other `*_into` variants, which write
+//!   into caller-provided buffers so the trainer's [`super::Workspace`]
+//!   can recycle them across steps.
+//!
+//! All kernels are blocked over [`MC`]×[`KC`] panels and thread-parallel via
+//! [`par_chunks`]/[`par_dynamic`], exactly like the original `matmul`; the
+//! accumulation order per output element matches the j-innermost axpy
+//! schedule, so fused and materialized paths agree to rounding.
+
+use super::matrix::{Matrix, KC, MC};
+use crate::parallel::{par_chunks, par_dynamic, SendPtr};
+
+impl Matrix {
+    /// Blocked, multi-threaded `C = A @ B` into a caller-provided buffer.
+    ///
+    /// `out` must be `self.rows() × b.cols()`; its previous contents are
+    /// overwritten.
+    pub fn matmul_into(&self, b: &Matrix, out: &mut Matrix) {
+        let (m, k_dim) = (self.rows(), self.cols());
+        let n = b.cols();
+        assert_eq!(
+            k_dim,
+            b.rows(),
+            "matmul shape mismatch: {}x{} @ {}x{}",
+            m,
+            k_dim,
+            b.rows(),
+            n
+        );
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (m, n),
+            "matmul_into output must be {m}x{n}, got {}x{}",
+            out.rows(),
+            out.cols()
+        );
+        out.data_mut().fill(0.0);
+        let c_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        par_chunks(m.div_ceil(MC), |pstart, pend| {
+            for panel in pstart..pend {
+                let i0 = panel * MC;
+                let i1 = (i0 + MC).min(m);
+                for k0 in (0..k_dim).step_by(KC) {
+                    let k1 = (k0 + KC).min(k_dim);
+                    for i in i0..i1 {
+                        // SAFETY: each thread owns disjoint row panels of C.
+                        let c_row: &mut [f64] = unsafe {
+                            std::slice::from_raw_parts_mut(c_ptr.get().add(i * n), n)
+                        };
+                        let a_row = self.row(i);
+                        for k in k0..k1 {
+                            let aik = a_row[k];
+                            if aik == 0.0 {
+                                continue;
+                            }
+                            let b_row = b.row(k);
+                            for (c, &bv) in c_row.iter_mut().zip(b_row) {
+                                *c += aik * bv;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    /// Fused transpose product `C = Aᵀ @ B` (no transpose is materialized).
+    ///
+    /// `self` is K×M, `b` is K×N, the result M×N. This is the sketch map
+    /// `JᵀΩ` of eq. 9 and the Nyström cores `ΩᵀY`, `BᵀB` of Algorithm 2.
+    pub fn matmul_tn(&self, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(self.cols(), b.cols());
+        self.matmul_tn_into(b, &mut c);
+        c
+    }
+
+    /// `C = Aᵀ @ B` into a caller-provided M×N buffer (overwritten).
+    ///
+    /// Row k of A and row k of B contribute the rank-1 update
+    /// `C[i, :] += A[k, i] · B[k, :]`; both operands stream row-major, and
+    /// threads own disjoint row panels of C (disjoint column ranges of A).
+    pub fn matmul_tn_into(&self, b: &Matrix, out: &mut Matrix) {
+        let (k_dim, m) = (self.rows(), self.cols());
+        let n = b.cols();
+        assert_eq!(
+            k_dim,
+            b.rows(),
+            "matmul_tn shape mismatch: ({}x{})ᵀ @ {}x{}",
+            k_dim,
+            m,
+            b.rows(),
+            n
+        );
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (m, n),
+            "matmul_tn_into output must be {m}x{n}, got {}x{}",
+            out.rows(),
+            out.cols()
+        );
+        out.data_mut().fill(0.0);
+        let c_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        par_chunks(m.div_ceil(MC), |pstart, pend| {
+            for panel in pstart..pend {
+                let i0 = panel * MC;
+                let i1 = (i0 + MC).min(m);
+                for k0 in (0..k_dim).step_by(KC) {
+                    let k1 = (k0 + KC).min(k_dim);
+                    for k in k0..k1 {
+                        let a_row = self.row(k);
+                        let b_row = b.row(k);
+                        for i in i0..i1 {
+                            let aki = a_row[i];
+                            if aki == 0.0 {
+                                continue;
+                            }
+                            // SAFETY: disjoint C row panels per thread.
+                            let c_row: &mut [f64] = unsafe {
+                                std::slice::from_raw_parts_mut(c_ptr.get().add(i * n), n)
+                            };
+                            for (c, &bv) in c_row.iter_mut().zip(b_row) {
+                                *c += aki * bv;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    /// Fused transpose product `C = A @ Bᵀ` (no transpose is materialized).
+    ///
+    /// `self` is M×K, `b` is N×K, the result M×N: pure row-dot form, the
+    /// friendliest access pattern row-major data allows.
+    pub fn matmul_nt(&self, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(self.rows(), b.rows());
+        self.matmul_nt_into(b, &mut c);
+        c
+    }
+
+    /// `C = A @ Bᵀ` into a caller-provided M×N buffer (overwritten).
+    pub fn matmul_nt_into(&self, b: &Matrix, out: &mut Matrix) {
+        let (m, k_dim) = (self.rows(), self.cols());
+        let n = b.rows();
+        assert_eq!(
+            k_dim,
+            b.cols(),
+            "matmul_nt shape mismatch: {}x{} @ ({}x{})ᵀ",
+            m,
+            k_dim,
+            n,
+            b.cols()
+        );
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (m, n),
+            "matmul_nt_into output must be {m}x{n}, got {}x{}",
+            out.rows(),
+            out.cols()
+        );
+        let c_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        par_chunks(m, |istart, iend| {
+            for i in istart..iend {
+                let a_row = self.row(i);
+                // SAFETY: thread writes only rows in [istart, iend).
+                let c_row: &mut [f64] =
+                    unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(i * n), n) };
+                for (j, c) in c_row.iter_mut().enumerate() {
+                    *c = super::vec_ops::dot(a_row, b.row(j));
+                }
+            }
+        });
+    }
+
+    /// Symmetric Gram product `K = A @ Aᵀ` into a caller-provided buffer
+    /// (the kernel build of eq. 5 on a workspace-pooled N×N matrix).
+    ///
+    /// Computes the lower triangle in parallel over row blocks and mirrors.
+    pub fn gram_into(&self, out: &mut Matrix) {
+        let n = self.rows();
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (n, n),
+            "gram_into output must be {n}x{n}, got {}x{}",
+            out.rows(),
+            out.cols()
+        );
+        let k_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        par_chunks(n, |istart, iend| {
+            for i in istart..iend {
+                let ai = self.row(i);
+                // SAFETY: thread writes only rows in [istart, iend).
+                let k_row: &mut [f64] =
+                    unsafe { std::slice::from_raw_parts_mut(k_ptr.get().add(i * n), n) };
+                for j in 0..=i {
+                    k_row[j] = super::vec_ops::dot(ai, self.row(j));
+                }
+            }
+        });
+        // Mirror the strict lower triangle.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                out[(i, j)] = out[(j, i)];
+            }
+        }
+    }
+
+    /// Fused column Gramian `G = Aᵀ @ A` (dense ENGD's P×P matrix, eq. 1)
+    /// without materializing `Aᵀ`.
+    pub fn gram_t(&self) -> Matrix {
+        let mut g = Matrix::zeros(self.cols(), self.cols());
+        self.gram_t_into(&mut g);
+        g
+    }
+
+    /// `G = Aᵀ @ A` into a caller-provided P×P buffer (overwritten).
+    ///
+    /// Each row `a_k` of A contributes the rank-1 update `G += a_k a_kᵀ`;
+    /// only the upper triangle is accumulated (then mirrored). Work is
+    /// stolen in MC-row panels of G because triangular panels are uneven.
+    pub fn gram_t_into(&self, out: &mut Matrix) {
+        let p = self.cols();
+        let n_rows = self.rows();
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (p, p),
+            "gram_t_into output must be {p}x{p}, got {}x{}",
+            out.rows(),
+            out.cols()
+        );
+        out.data_mut().fill(0.0);
+        let g_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        par_dynamic(p.div_ceil(MC), |panel| {
+            let i0 = panel * MC;
+            let i1 = (i0 + MC).min(p);
+            for k in 0..n_rows {
+                let a_row = self.row(k);
+                for i in i0..i1 {
+                    let aki = a_row[i];
+                    if aki == 0.0 {
+                        continue;
+                    }
+                    // SAFETY: disjoint G row panels per work item; only the
+                    // suffix [i, p) of row i (the upper triangle) is written.
+                    let g_row: &mut [f64] = unsafe {
+                        std::slice::from_raw_parts_mut(g_ptr.get().add(i * p + i), p - i)
+                    };
+                    for (g, &av) in g_row.iter_mut().zip(&a_row[i..]) {
+                        *g += aki * av;
+                    }
+                }
+            }
+        });
+        // Mirror the strict upper triangle down.
+        for i in 0..p {
+            for j in (i + 1)..p {
+                out[(j, i)] = out[(i, j)];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(m.data_mut());
+        m
+    }
+
+    /// Shapes spanning square, tall (N≫P), and wide (N≪P) regimes.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 2),
+        (17, 33, 9),
+        (2, 70, 40),
+        (70, 2, 40),
+        (128, 64, 96),
+    ];
+
+    #[test]
+    fn matmul_tn_matches_materialized_transpose() {
+        let mut rng = Rng::seed_from(1);
+        for &(k, m, n) in SHAPES {
+            let a = random_matrix(&mut rng, k, m);
+            let b = random_matrix(&mut rng, k, n);
+            let fused = a.matmul_tn(&b);
+            let reference = a.transpose().matmul(&b);
+            assert!(
+                fused.max_abs_diff(&reference) < 1e-10,
+                "tn ({k},{m},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_materialized_transpose() {
+        let mut rng = Rng::seed_from(2);
+        for &(m, k, n) in SHAPES {
+            let a = random_matrix(&mut rng, m, k);
+            let b = random_matrix(&mut rng, n, k);
+            let fused = a.matmul_nt(&b);
+            let reference = a.matmul(&b.transpose());
+            assert!(
+                fused.max_abs_diff(&reference) < 1e-10,
+                "nt ({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn gram_t_matches_materialized_transpose() {
+        let mut rng = Rng::seed_from(3);
+        for &(n, p) in &[(1usize, 4usize), (7, 3), (33, 65), (64, 128), (100, 50)] {
+            let a = random_matrix(&mut rng, n, p);
+            let fused = a.gram_t();
+            let reference = a.transpose().gram();
+            assert!(fused.max_abs_diff(&reference) < 1e-10, "({n},{p})");
+            for i in 0..p {
+                for j in 0..p {
+                    assert_eq!(fused[(i, j)], fused[(j, i)], "asymmetry at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_overwrite_stale_contents() {
+        let mut rng = Rng::seed_from(4);
+        let a = random_matrix(&mut rng, 20, 12);
+        let b = random_matrix(&mut rng, 20, 7);
+        let mut out = Matrix::from_fn(12, 7, |_, _| f64::NAN);
+        a.matmul_tn_into(&b, &mut out);
+        assert!(out.data().iter().all(|x| x.is_finite()));
+        assert!(out.max_abs_diff(&a.transpose().matmul(&b)) < 1e-10);
+
+        let mut k = Matrix::from_fn(20, 20, |_, _| f64::NAN);
+        a.gram_into(&mut k);
+        assert!(k.max_abs_diff(&a.matmul(&a.transpose())) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_tn shape mismatch")]
+    fn tn_shape_mismatch_panics() {
+        let a = Matrix::zeros(3, 2);
+        let b = Matrix::zeros(4, 2);
+        let _ = a.matmul_tn(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_tn_into output must be")]
+    fn tn_into_output_shape_panics() {
+        let a = Matrix::zeros(3, 2);
+        let b = Matrix::zeros(3, 5);
+        let mut out = Matrix::zeros(2, 4);
+        a.matmul_tn_into(&b, &mut out);
+    }
+}

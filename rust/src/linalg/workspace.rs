@@ -1,0 +1,282 @@
+//! Step-workspace buffer pool.
+//!
+//! The decomposed optimizer paths allocate several large temporaries per
+//! step — the N×N Gram matrix, Gaussian sketches Ω, sketch products Y, the
+//! Nyström factors B/U, and ℓ×ℓ cores. At a few hundred steps per run those
+//! allocations (and the page faults behind them) are pure overhead: the
+//! shapes repeat every step. [`Workspace`] is a trivially simple checkout /
+//! check-in pool owned by the trainer and threaded through
+//! [`crate::optim::StepEnv`]: `take` hands out a recycled buffer when one
+//! with enough capacity exists, `recycle` returns it for the next step.
+//!
+//! The pool tracks [`WorkspaceStats`] so tests (and the perf harness) can
+//! assert steady-state behavior: after the first step of a fixed-shape
+//! training loop, `fresh_allocs` must stop growing — everything later is a
+//! reuse. See `rust/tests/properties.rs::prop_kernel_solve_reuses_workspace`.
+//!
+//! Scope: the invariant covers *pool-tracked* buffers — everything the
+//! solve paths check out via `take*`. Routines with their own interiors
+//! (`thin_qr`'s Q, `eigh`'s eigenvector matrix) still allocate internally
+//! on the stable-Nyström path; `*_into` variants for those are future work.
+
+use super::matrix::Matrix;
+
+/// Allocation counters for pool-behavior assertions and perf reporting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// `take` calls that had to allocate a brand-new buffer.
+    pub fresh_allocs: usize,
+    /// `take` calls served from the pool without growing capacity.
+    pub reuses: usize,
+    /// `take` calls served from the pool but forced to grow capacity.
+    pub grown: usize,
+}
+
+impl WorkspaceStats {
+    /// Total checkouts.
+    pub fn takes(&self) -> usize {
+        self.fresh_allocs + self.reuses + self.grown
+    }
+}
+
+/// A checkout/check-in pool of `Vec<f64>` buffers (and `Matrix` wrappers).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Returned buffers, unordered; `take` picks the best (tightest) fit.
+    free: Vec<Vec<f64>>,
+    stats: WorkspaceStats,
+}
+
+/// Pool-size cap: a single solve keeps at most a handful of buffers in
+/// flight, so anything beyond this is drift (e.g. a fresh QR output checked
+/// in every step). Past the cap, `recycle` keeps the largest buffers and
+/// drops the rest, bounding pool memory for arbitrarily long runs.
+const MAX_POOLED_BUFFERS: usize = 32;
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pull the best-fitting buffer out of the pool (stats-tracked), with
+    /// unspecified length/contents.
+    ///
+    /// Fit policy: the free buffer with the smallest sufficient capacity is
+    /// reused; if none is large enough but the pool is non-empty, the
+    /// largest free buffer is grown (counted in [`WorkspaceStats::grown`]);
+    /// only an empty pool allocates from scratch.
+    fn checkout(&mut self, len: usize) -> Vec<f64> {
+        let best = self
+            .free
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.capacity() >= len)
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        match best {
+            Some(i) => {
+                self.stats.reuses += 1;
+                self.free.swap_remove(i)
+            }
+            None => {
+                let largest = self
+                    .free
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, b)| b.capacity())
+                    .map(|(i, _)| i);
+                match largest {
+                    Some(i) => {
+                        self.stats.grown += 1;
+                        self.free.swap_remove(i)
+                    }
+                    None => {
+                        self.stats.fresh_allocs += 1;
+                        Vec::new()
+                    }
+                }
+            }
+        }
+    }
+
+    /// Check out a zero-filled buffer of exactly `len` elements.
+    pub fn take(&mut self, len: usize) -> Vec<f64> {
+        let mut buf = self.checkout(len);
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Check out a buffer of exactly `len` elements *without* zeroing —
+    /// contents are unspecified stale values. For consumers that overwrite
+    /// every element anyway (the `*_into` kernels, `copy_from_slice`,
+    /// `fill_normal`), this skips a redundant O(len) memset per checkout on
+    /// the hot path.
+    pub fn take_scratch(&mut self, len: usize) -> Vec<f64> {
+        let mut buf = self.checkout(len);
+        if buf.len() > len {
+            buf.truncate(len);
+        } else {
+            buf.resize(len, 0.0);
+        }
+        buf
+    }
+
+    /// Check out a zero-filled `rows × cols` matrix.
+    pub fn take_matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take(rows * cols))
+    }
+
+    /// Check out a `rows × cols` matrix with unspecified contents (see
+    /// [`Workspace::take_scratch`]); the caller must overwrite every
+    /// element before reading.
+    pub fn take_matrix_scratch(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take_scratch(rows * cols))
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn recycle(&mut self, buf: Vec<f64>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        if self.free.len() < MAX_POOLED_BUFFERS {
+            self.free.push(buf);
+            return;
+        }
+        // At capacity: keep the larger of (incoming, smallest pooled).
+        let smallest = self
+            .free
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        if let Some(i) = smallest {
+            if self.free[i].capacity() < buf.capacity() {
+                self.free[i] = buf;
+            }
+        }
+    }
+
+    /// Return a matrix's backing buffer to the pool.
+    pub fn recycle_matrix(&mut self, m: Matrix) {
+        self.recycle(m.into_vec());
+    }
+
+    /// Allocation counters since creation.
+    pub fn stats(&self) -> WorkspaceStats {
+        self.stats
+    }
+
+    /// Number of buffers currently checked in.
+    pub fn pooled_buffers(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Total pooled capacity in elements (f64s).
+    pub fn pooled_capacity(&self) -> usize {
+        self.free.iter().map(|b| b.capacity()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_take_of_same_shape_reuses() {
+        let mut ws = Workspace::new();
+        let a = ws.take(128);
+        ws.recycle(a);
+        let b = ws.take(128);
+        assert_eq!(
+            ws.stats(),
+            WorkspaceStats {
+                fresh_allocs: 1,
+                reuses: 1,
+                grown: 0
+            }
+        );
+        assert_eq!(b.len(), 128);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn best_fit_prefers_tightest_buffer() {
+        let mut ws = Workspace::new();
+        let big = ws.take(1000);
+        let small = ws.take(10);
+        ws.recycle(big);
+        ws.recycle(small);
+        let c = ws.take(8); // must come from the 10-capacity buffer
+        assert!(c.capacity() < 1000);
+        assert_eq!(ws.pooled_buffers(), 1);
+        assert_eq!(ws.pooled_capacity(), 1000);
+    }
+
+    #[test]
+    fn growth_is_counted_not_hidden() {
+        let mut ws = Workspace::new();
+        let a = ws.take(16);
+        ws.recycle(a);
+        let b = ws.take(64); // pool non-empty but too small: grow
+        assert_eq!(b.len(), 64);
+        let s = ws.stats();
+        assert_eq!((s.fresh_allocs, s.grown), (1, 1));
+    }
+
+    #[test]
+    fn take_matrix_round_trips_through_pool() {
+        let mut ws = Workspace::new();
+        let m = ws.take_matrix(6, 7);
+        assert_eq!((m.rows(), m.cols()), (6, 7));
+        ws.recycle_matrix(m);
+        let m2 = ws.take_matrix(7, 6);
+        assert_eq!(ws.stats().reuses, 1);
+        assert!(m2.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pool_is_bounded_and_prefers_large_buffers() {
+        let mut ws = Workspace::new();
+        for _ in 0..MAX_POOLED_BUFFERS {
+            ws.recycle(vec![0.0; 4]);
+        }
+        assert_eq!(ws.pooled_buffers(), MAX_POOLED_BUFFERS);
+        // Past the cap a big buffer displaces a small one...
+        ws.recycle(vec![0.0; 512]);
+        assert_eq!(ws.pooled_buffers(), MAX_POOLED_BUFFERS);
+        assert!(ws.pooled_capacity() >= 512 + 4 * (MAX_POOLED_BUFFERS - 1));
+        // ...and a small one is simply dropped.
+        let before = ws.pooled_capacity();
+        ws.recycle(vec![0.0; 1]);
+        assert_eq!(ws.pooled_capacity(), before);
+    }
+
+    #[test]
+    fn stale_contents_are_zeroed_on_reuse() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(32);
+        a.iter_mut().for_each(|x| *x = f64::NAN);
+        ws.recycle(a);
+        let b = ws.take(32);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scratch_checkout_skips_the_memset() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(16);
+        a.iter_mut().for_each(|x| *x = 7.0);
+        ws.recycle(a);
+        // Same-size scratch reuse keeps the stale contents (no zero pass).
+        let b = ws.take_scratch(16);
+        assert_eq!(b.len(), 16);
+        assert!(b.iter().all(|&x| x == 7.0));
+        ws.recycle(b);
+        // Shrinking truncates; growing within capacity zero-extends the
+        // tail only.
+        let c = ws.take_scratch(8);
+        assert_eq!(c.len(), 8);
+        assert!(c.iter().all(|&x| x == 7.0));
+    }
+}

@@ -14,12 +14,17 @@
 //! λ̂ bounds follow from the Cholesky pivots of `R = BᵀB + λI`, whose
 //! smallest squared pivot tracks the smallest eigenvalue of `BᵀB` within a
 //! factor of the (well-conditioned, Gaussian-sketch) basis.
+//!
+//! Like every Nyström builder, the adaptive scheme consumes a [`KernelOp`]
+//! plus a [`Workspace`]: rejected sketches recycle their factors before the
+//! next (doubled) attempt, so even the growth loop allocates nothing after
+//! the first step at each rank.
 
 use anyhow::Result;
 
 use super::gpu_efficient::GpuNystrom;
-use super::NystromApprox;
-use crate::linalg::Matrix;
+use crate::linalg::Workspace;
+use crate::optim::kernel::KernelOp;
 use crate::rng::Rng;
 
 /// Outcome of the adaptive construction.
@@ -30,51 +35,56 @@ pub struct AdaptiveNystrom {
 }
 
 /// Smallest eigenvalue estimate of `BᵀB` from the factorization.
-fn min_captured_eigenvalue(nys: &GpuNystrom, lambda: f64) -> f64 {
+fn min_captured_eigenvalue(nys: &GpuNystrom, lambda: f64, ws: &mut Workspace) -> f64 {
     // R = BᵀB + λI; eigenvalues of BᵀB ≥ min-pivot² of chol(R) − λ (loose but
     // monotone; we only need an order-of-magnitude trigger).
     let b = nys.factor();
-    // Rayleigh probe with the last column of B (cheap, deterministic).
+    // Rayleigh probe with the last column of B (cheap, deterministic):
+    // one strided gather into pooled scratch, then contiguous math.
     let ell = b.cols();
-    let col = b.col(ell - 1);
+    let mut col = ws.take_scratch(b.rows());
+    b.copy_col_into(ell - 1, &mut col);
     let denom = crate::linalg::dot(&col, &col);
     if denom == 0.0 {
+        ws.recycle(col);
         return 0.0;
     }
     // ‖B(Bᵀc)‖/‖c‖ underestimates λ_max but for the *trailing* basis vector
     // tracks the tail magnitude; combine with the exact trace/ℓ average.
     let bt_c = b.tr_matvec(&col);
+    ws.recycle(col);
     let quad = crate::linalg::dot(&bt_c, &bt_c) / denom;
     let _ = lambda;
     quad.min(denom / ell as f64)
 }
 
-/// Build a GPU-efficient Nyström approximation of `K = J Jᵀ` (via sketches
-/// `Y = J(JᵀΩ)`, never forming K) growing the rank until the captured tail
-/// reaches the damping floor.
-pub fn adaptive_nystrom_from_jacobian(
-    j: &Matrix,
+/// Build a GPU-efficient Nyström approximation of the operator's kernel
+/// (via sketches `Y = J(JᵀΩ)`, never forming K) growing the rank until the
+/// captured tail reaches the damping floor.
+pub fn adaptive_nystrom(
+    op: &dyn KernelOp,
     lambda: f64,
     start_ratio: f64,
     max_ratio: f64,
     tail_factor: f64,
     rng: &mut Rng,
+    ws: &mut Workspace,
 ) -> Result<AdaptiveNystrom> {
-    let n = j.rows();
+    let n = op.size();
     let mut ell = ((n as f64 * start_ratio).round() as usize).clamp(1, n);
     let max_ell = ((n as f64 * max_ratio).round() as usize).clamp(ell, n);
     let mut schedule = Vec::new();
     loop {
         schedule.push(ell);
-        let mut omega = Matrix::zeros(n, ell);
+        let mut omega = ws.take_matrix_scratch(n, ell);
         rng.fill_normal(omega.data_mut());
-        let jt_omega = j.transpose().matmul(&omega);
-        let y = j.matmul(&jt_omega);
-        let approx = GpuNystrom::from_sketch(omega, y, lambda)?;
-        let tail = min_captured_eigenvalue(&approx, lambda);
+        let y = op.sketch_y(&omega, ws);
+        let approx = GpuNystrom::from_sketch(omega, y, lambda, ws)?;
+        let tail = min_captured_eigenvalue(&approx, lambda, ws);
         if tail <= tail_factor * lambda || ell >= max_ell {
             return Ok(AdaptiveNystrom { approx, schedule });
         }
+        approx.recycle(ws);
         ell = (ell * 2).min(max_ell);
     }
 }
@@ -82,6 +92,29 @@ pub fn adaptive_nystrom_from_jacobian(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
+    use crate::nystrom::NystromApprox;
+    use crate::optim::kernel::JacobianKernel;
+
+    fn adaptive_from_jacobian(
+        j: &Matrix,
+        lambda: f64,
+        start_ratio: f64,
+        max_ratio: f64,
+    ) -> AdaptiveNystrom {
+        let mut rng = Rng::seed_from(1 + j.rows() as u64);
+        let mut ws = Workspace::new();
+        adaptive_nystrom(
+            &JacobianKernel::new(j),
+            lambda,
+            start_ratio,
+            max_ratio,
+            10.0,
+            &mut rng,
+            &mut ws,
+        )
+        .unwrap()
+    }
 
     /// Low-rank J: the adaptive scheme should stop quickly (tail hits the
     /// floor once rank is covered).
@@ -90,8 +123,7 @@ mod tests {
         let mut rng = Rng::seed_from(1);
         let mut j = Matrix::zeros(64, 8); // K has rank ≤ 8
         rng.fill_normal(j.data_mut());
-        let out =
-            adaptive_nystrom_from_jacobian(&j, 1e-6, 0.25, 1.0, 10.0, &mut rng).unwrap();
+        let out = adaptive_from_jacobian(&j, 1e-6, 0.25, 1.0);
         // Started at 16 ≥ rank: no growth needed beyond at most one doubling.
         assert!(out.schedule.len() <= 2, "schedule {:?}", out.schedule);
     }
@@ -103,8 +135,7 @@ mod tests {
         let mut rng = Rng::seed_from(2);
         let mut j = Matrix::zeros(48, 200);
         rng.fill_normal(j.data_mut());
-        let out =
-            adaptive_nystrom_from_jacobian(&j, 1e-10, 0.1, 0.75, 10.0, &mut rng).unwrap();
+        let out = adaptive_from_jacobian(&j, 1e-10, 0.1, 0.75);
         assert!(
             out.schedule.len() >= 2,
             "expected growth, schedule {:?}",
@@ -122,8 +153,7 @@ mod tests {
         let mut j = Matrix::zeros(32, 100);
         rng.fill_normal(j.data_mut());
         let lam = 1e-4;
-        let out =
-            adaptive_nystrom_from_jacobian(&j, lam, 0.25, 1.0, 10.0, &mut rng).unwrap();
+        let out = adaptive_from_jacobian(&j, lam, 0.25, 1.0);
         let mut v = vec![0.0; 32];
         rng.fill_normal(&mut v);
         let x = out.approx.inv_apply(&v);

@@ -1,6 +1,7 @@
 //! GPU-efficient randomized Nyström approximation — paper Algorithm 2.
 //!
-//! Given PSD `A ∈ R^{n×n}`, target rank ℓ and regularizer λ:
+//! Given a PSD kernel operator `A ∈ R^{n×n}`, target rank ℓ and regularizer
+//! λ:
 //!
 //! ```text
 //! 1: Ω ← randn(n, ℓ)
@@ -22,6 +23,12 @@
 //! steps the paper found to dominate wall time on GPU. Everything here is two
 //! ℓ×ℓ Cholesky factorizations plus matmuls.
 //!
+//! The builder consumes a [`KernelOp`] (line 2 is `op.sketch_y`, i.e.
+//! `J(JᵀΩ)` on the training path — the kernel is never formed) and draws
+//! every buffer from the caller's [`Workspace`]: `Y_ν` is turned into `B` by
+//! an in-place triangular solve, the cores are pooled ℓ×ℓ matrices, and
+//! [`GpuNystrom::recycle`] returns the factors for the next step.
+//!
 //! Note on line 3: the paper prints `ν ← exp(‖Y‖_F)`, which cannot be meant
 //! literally (it would overwhelm A); following Frangella–Tropp–Udell (whose
 //! stable algorithm the paper modifies) we read it as the machine-epsilon
@@ -30,7 +37,8 @@
 use anyhow::{Context, Result};
 
 use super::NystromApprox;
-use crate::linalg::{Cholesky, Matrix};
+use crate::linalg::{Cholesky, Matrix, Workspace};
+use crate::optim::kernel::KernelOp;
 use crate::rng::Rng;
 
 /// Factorized GPU-efficient Nyström approximation.
@@ -45,66 +53,56 @@ pub struct GpuNystrom {
 }
 
 impl GpuNystrom {
-    /// Build from an explicit PSD matrix.
-    pub fn build(a: &Matrix, sketch: usize, lambda: f64, rng: &mut Rng) -> Result<Self> {
-        let n = a.rows();
-        assert_eq!(a.rows(), a.cols(), "Nyström needs a square PSD matrix");
+    /// Build from a kernel operator: sample Ω, sketch `Y = AΩ` through the
+    /// operator, factorize. Buffers come from (and should eventually return
+    /// to) `ws` — see [`GpuNystrom::recycle`].
+    pub fn build(
+        op: &dyn KernelOp,
+        sketch: usize,
+        lambda: f64,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<Self> {
+        let n = op.size();
         let sketch = sketch.clamp(1, n);
 
         // 1: Gaussian test matrix Ω (n × ℓ).
-        let mut omega = Matrix::zeros(n, sketch);
+        let mut omega = ws.take_matrix_scratch(n, sketch);
         rng.fill_normal(omega.data_mut());
 
-        // 2: Y = A Ω.
-        let y = a.matmul(&omega);
-        Self::from_sketch(omega, y, lambda)
+        // 2: Y = A Ω (two tall products on the Jacobian path).
+        let y = op.sketch_y(&omega, ws);
+        Self::from_sketch(omega, y, lambda, ws)
     }
 
     /// Build from a precomputed sketch pair (Ω, Y = AΩ). This is the entry
     /// point used by the optimizers on the decomposed path, where `Y = J(JᵀΩ)`
     /// is formed without materializing the kernel (two O(NPℓ) products
     /// instead of the O(N²P) kernel build — the whole point of sketching).
-    pub fn from_sketch(omega: Matrix, y: Matrix, lambda: f64) -> Result<Self> {
+    ///
+    /// Consumes both inputs; their storage is recycled into `ws`.
+    pub fn from_sketch(
+        omega: Matrix,
+        y: Matrix,
+        lambda: f64,
+        ws: &mut Workspace,
+    ) -> Result<Self> {
         let n = y.rows();
         let sketch = y.cols();
 
-        // 3–4: tiny shift for numerical PD-ness, embedded as A + νI.
-        //
-        // When rank(A) < ℓ the core ΩᵀYν is numerically singular and the ulp
-        // shift may not suffice for a strict Cholesky; escalate ν by 10³ per
-        // retry (still ≪ any eigenvalue of interest) until the factorization
-        // succeeds — low-rank inputs are legitimate (Appendix B's test matrix
-        // is low-rank by construction).
-        let base_nu = (n as f64).sqrt() * ulp(y.frobenius_norm());
-        let mut attempt = 0;
-        let (y_nu, c, nu) = loop {
-            let nu = base_nu * 1000f64.powi(attempt);
-            let mut y_nu = y.clone();
-            y_nu.add_scaled(&omega, nu);
-            // 5: C = chol(Ωᵀ Y_ν), symmetrized first: it equals Ωᵀ(A+νI)Ω in
-            // exact arithmetic but floating point leaves skew parts.
-            let mut core = omega.transpose().matmul(&y_nu);
-            symmetrize(&mut core);
-            match Cholesky::factor(&core) {
-                Ok(c) => break (y_nu, c, nu),
-                Err(e) if attempt < 5 => {
-                    let _ = e;
-                    attempt += 1;
-                }
-                Err(e) => {
-                    return Err(e).context(
-                        "Nyström core ΩᵀYν is not PD even after ν escalation",
-                    )
-                }
-            }
-        };
+        // 3–6: the shared ν-escalation core (see `super::sketch_to_factor`):
+        // when rank(A) < ℓ the core ΩᵀYν is numerically singular and the ulp
+        // shift may not suffice for a strict Cholesky; ν escalates by 10³
+        // per retry (still ≪ any eigenvalue of interest) — low-rank inputs
+        // are legitimate (Appendix B's test matrix is low-rank by
+        // construction). The pooled Y_ν buffer comes back as B = Y_ν C⁻¹.
+        let (b, nu) = super::sketch_to_factor(omega, y, "Nyström", ws)?;
 
-        // 6: B = Y_ν C⁻¹ with C = Lᵀ (upper). Solve B Lᵀ = Y_ν row-wise.
-        let b = c.right_solve_transpose(&y_nu);
-
-        // 7–8: R = BᵀB + λI, L = chol(R).
-        let r = b.transpose().matmul(&b).add_diag(lambda);
-        let l = Cholesky::factor(&r).context("Nyström R = BᵀB+λI is not PD")?;
+        // 7–8: R = BᵀB + λI (fused, pooled), L = chol(R).
+        let mut r = ws.take_matrix_scratch(sketch, sketch);
+        b.matmul_tn_into(&b, &mut r);
+        r.add_diag_in_place(lambda);
+        let l = Cholesky::factor_from(r).context("Nyström R = BᵀB+λI is not PD")?;
 
         debug_assert_eq!(b.rows(), n);
         debug_assert_eq!(b.cols(), sketch);
@@ -114,6 +112,13 @@ impl GpuNystrom {
     /// The low-rank factor B (n × ℓ).
     pub fn factor(&self) -> &Matrix {
         &self.b
+    }
+
+    /// Return the factor storage to the workspace pool (call when the step
+    /// is done with the approximation).
+    pub fn recycle(self, ws: &mut Workspace) {
+        ws.recycle_matrix(self.b);
+        ws.recycle_matrix(self.l.into_factor());
     }
 }
 
@@ -134,27 +139,8 @@ impl NystromApprox for GpuNystrom {
     }
 
     fn dense_approx(&self) -> Matrix {
-        self.b.matmul(&self.b.transpose())
-    }
-}
-
-/// Unit in the last place at magnitude `x` (the `eps(x)` of line 3).
-fn ulp(x: f64) -> f64 {
-    if x == 0.0 {
-        return f64::MIN_POSITIVE;
-    }
-    let bits = x.abs().to_bits();
-    f64::from_bits(bits + 1) - x.abs()
-}
-
-fn symmetrize(m: &mut Matrix) {
-    let n = m.rows();
-    for i in 0..n {
-        for j in i + 1..n {
-            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
-            m[(i, j)] = avg;
-            m[(j, i)] = avg;
-        }
+        // B Bᵀ is symmetric: gram() does half the flops of matmul_nt(self).
+        self.b.gram()
     }
 }
 
@@ -162,6 +148,7 @@ fn symmetrize(m: &mut Matrix) {
 mod tests {
     use super::*;
     use crate::linalg::eigh;
+    use crate::optim::kernel::DenseKernel;
 
     /// PSD test matrix with controlled spectral decay: K = G diag(w) Gᵀ.
     fn decaying_psd(rng: &mut Rng, n: usize, decay: f64) -> Matrix {
@@ -175,7 +162,17 @@ mod tests {
                 k[(i, j)] = q[(i, j)] * w;
             }
         }
-        k.matmul(&q.transpose())
+        k.matmul_nt(&q)
+    }
+
+    fn build_dense(
+        a: &Matrix,
+        sketch: usize,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<GpuNystrom> {
+        let mut ws = Workspace::new();
+        GpuNystrom::build(&DenseKernel::new(a), sketch, lambda, rng, &mut ws)
     }
 
     #[test]
@@ -183,7 +180,7 @@ mod tests {
         let mut rng = Rng::seed_from(1);
         let a = decaying_psd(&mut rng, 40, 0.3);
         let lam = 1e-6;
-        let nys = GpuNystrom::build(&a, 40, lam, &mut rng).unwrap();
+        let nys = build_dense(&a, 40, lam, &mut rng).unwrap();
         // With ℓ = n the approximation is essentially exact: compare the
         // inverse application against a direct damped solve.
         let mut v = vec![0.0; 40];
@@ -205,7 +202,7 @@ mod tests {
         let a = decaying_psd(&mut rng, 60, 0.25);
         let mut errs = Vec::new();
         for sketch in [5, 15, 40] {
-            let nys = GpuNystrom::build(&a, sketch, 1e-8, &mut rng).unwrap();
+            let nys = build_dense(&a, sketch, 1e-8, &mut rng).unwrap();
             errs.push(a.max_abs_diff(&nys.dense_approx()));
         }
         assert!(errs[0] > errs[1] && errs[1] > errs[2], "errs={errs:?}");
@@ -216,7 +213,7 @@ mod tests {
         // Nyström approximations satisfy 0 ⪯ Â ⪯ A (+ν). Check eigenvalues.
         let mut rng = Rng::seed_from(3);
         let a = decaying_psd(&mut rng, 30, 0.2);
-        let nys = GpuNystrom::build(&a, 10, 1e-8, &mut rng).unwrap();
+        let nys = build_dense(&a, 10, 1e-8, &mut rng).unwrap();
         let approx = nys.dense_approx();
         let e = eigh(&approx);
         assert!(e.eigenvalues.iter().all(|&w| w > -1e-8), "not PSD");
@@ -236,7 +233,7 @@ mod tests {
         let mut rng = Rng::seed_from(4);
         let a = decaying_psd(&mut rng, 25, 0.4);
         let lam = 1e-3;
-        let nys = GpuNystrom::build(&a, 12, lam, &mut rng).unwrap();
+        let nys = build_dense(&a, 12, lam, &mut rng).unwrap();
         let dense = nys.dense_approx().add_diag(lam);
         let mut v = vec![0.0; 25];
         rng.fill_normal(&mut v);
@@ -248,9 +245,23 @@ mod tests {
     }
 
     #[test]
-    fn ulp_is_tiny_but_positive() {
-        assert!(ulp(1.0) > 0.0 && ulp(1.0) < 1e-15);
-        assert!(ulp(1e10) < 1e-5);
-        assert!(ulp(0.0) > 0.0);
+    fn rebuild_from_recycled_workspace_allocates_nothing_new() {
+        let mut rng = Rng::seed_from(5);
+        let a = decaying_psd(&mut rng, 32, 0.3);
+        let op = DenseKernel::new(&a);
+        let mut ws = Workspace::new();
+
+        let nys = GpuNystrom::build(&op, 12, 1e-6, &mut rng, &mut ws).unwrap();
+        nys.recycle(&mut ws);
+        let fresh_after_first = ws.stats().fresh_allocs;
+
+        let nys = GpuNystrom::build(&op, 12, 1e-6, &mut rng, &mut ws).unwrap();
+        nys.recycle(&mut ws);
+        assert_eq!(
+            ws.stats().fresh_allocs,
+            fresh_after_first,
+            "second build must reuse every pooled buffer"
+        );
+        assert!(ws.stats().reuses > 0);
     }
 }

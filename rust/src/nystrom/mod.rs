@@ -8,6 +8,11 @@
 //!   SVD-class factorization is our Jacobi `eigh` (DESIGN.md §Substitutions).
 //! * [`effective_dim`] — d_eff(A) = Tr(A (A+λI)⁻¹) (paper §3.4), computed
 //!   exactly via a Cholesky inverse-trace, plus the spectral variant.
+//!
+//! Every builder consumes a [`crate::optim::kernel::KernelOp`] (the kernel
+//! is sketched through the operator, never formed) plus a
+//! [`crate::linalg::Workspace`] whose buffers it checks out and — via each
+//! type's `recycle` — returns for reuse on the next training step.
 
 mod adaptive;
 mod effective_dim;
@@ -15,11 +20,124 @@ mod gpu_efficient;
 mod pcg;
 mod stable;
 
-pub use adaptive::{adaptive_nystrom_from_jacobian, AdaptiveNystrom};
+pub use adaptive::{adaptive_nystrom, AdaptiveNystrom};
 pub use effective_dim::{effective_dimension, effective_dimension_spectral};
 pub use gpu_efficient::GpuNystrom;
 pub use pcg::{nystrom_pcg, PcgOutcome};
 pub use stable::StableNystrom;
+
+use anyhow::{Context, Result};
+
+use crate::linalg::{Cholesky, Matrix, Workspace};
+
+/// Shared ν-escalation core of both Nyström builders (Algorithm 2 lines
+/// 3–6 / alg. 2.1 lines 3–5): embed `A + νI` via `Y_ν = Y + νΩ`, factor the
+/// sketch core `ΩᵀY_ν`, and turn `Y_ν` into `B = Y_ν C⁻¹` by an in-place
+/// triangular solve — escalating ν by 10³ per attempt when rank-deficient
+/// sketches leave the core numerically non-PD.
+///
+/// Consumes (Ω, Y) and recycles both into `ws`; the returned B lives in
+/// pooled storage (rejected attempts recycle theirs before retrying).
+/// Returns `(B, ν)`.
+pub(crate) fn sketch_to_factor(
+    omega: Matrix,
+    y: Matrix,
+    tag: &str,
+    ws: &mut Workspace,
+) -> Result<(Matrix, f64)> {
+    let n = y.rows();
+    let sketch = y.cols();
+    let base_nu = (n as f64).sqrt() * ulp(y.frobenius_norm());
+    let mut attempt = 0;
+    let (mut b, c, nu) = loop {
+        let nu = base_nu * 1000f64.powi(attempt);
+        let mut y_nu = ws.take_matrix_scratch(n, sketch);
+        y_nu.data_mut().copy_from_slice(y.data());
+        y_nu.add_scaled(&omega, nu);
+        // Core C = chol(Ωᵀ Y_ν) — fused transpose product into a pooled
+        // ℓ×ℓ buffer, symmetrized first: it equals Ωᵀ(A+νI)Ω in exact
+        // arithmetic but floating point leaves skew parts.
+        let mut core = ws.take_matrix_scratch(sketch, sketch);
+        omega.matmul_tn_into(&y_nu, &mut core);
+        symmetrize(&mut core);
+        match Cholesky::factor_from_recoverable(core) {
+            Ok(c) => break (y_nu, c, nu),
+            Err((core, _)) if attempt < 5 => {
+                // Keep the pooled buffers alive across the retry.
+                ws.recycle_matrix(core);
+                ws.recycle_matrix(y_nu);
+                attempt += 1;
+            }
+            Err((core, e)) => {
+                ws.recycle_matrix(core);
+                ws.recycle_matrix(y_nu);
+                return Err(e).with_context(|| {
+                    format!("{tag} core ΩᵀYν is not PD even after ν escalation")
+                });
+            }
+        }
+    };
+    ws.recycle_matrix(y);
+    ws.recycle_matrix(omega);
+
+    // B = Y_ν C⁻¹ with C = Lᵀ (upper): in-place row-wise solve, so the
+    // pooled Y_ν buffer *becomes* B.
+    c.right_solve_transpose_in_place(&mut b);
+    ws.recycle_matrix(c.into_factor());
+    Ok((b, nu))
+}
+
+/// Unit in the last place at magnitude `x` (the `eps(x)` of the ν shift).
+pub(crate) fn ulp(x: f64) -> f64 {
+    if x == 0.0 {
+        return f64::MIN_POSITIVE;
+    }
+    let bits = x.abs().to_bits();
+    f64::from_bits(bits + 1) - x.abs()
+}
+
+pub(crate) fn symmetrize(m: &mut Matrix) {
+    let n = m.rows();
+    for i in 0..n {
+        for j in i + 1..n {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ulp_is_tiny_but_positive() {
+        assert!(ulp(1.0) > 0.0 && ulp(1.0) < 1e-15);
+        assert!(ulp(1e10) < 1e-5);
+        assert!(ulp(0.0) > 0.0);
+    }
+
+    #[test]
+    fn sketch_to_factor_handles_low_rank_sketches() {
+        use crate::rng::Rng;
+        let mut rng = Rng::seed_from(1);
+        // Rank-3 kernel sketched at width 8: the core is singular at the
+        // base ν, forcing the escalation path — it must still factor and
+        // keep the workspace pool balanced.
+        let mut j = Matrix::zeros(20, 3);
+        rng.fill_normal(j.data_mut());
+        let a = j.gram();
+        let mut ws = Workspace::new();
+        let mut omega = ws.take_matrix_scratch(20, 8);
+        rng.fill_normal(omega.data_mut());
+        let y = a.matmul(&omega);
+        let (b, nu) = sketch_to_factor(omega, y, "test", &mut ws).unwrap();
+        assert_eq!((b.rows(), b.cols()), (20, 8));
+        assert!(nu > 0.0);
+        assert!(b.data().iter().all(|x| x.is_finite()));
+    }
+}
 
 /// Common interface: a factorized approximation of `A_nys + λI` that can
 /// apply its inverse to vectors (the only operation the optimizers need).

@@ -5,15 +5,17 @@
 //! The paper *rejects* this approach for PINNs: each CG iteration needs a
 //! matvec with the kernel `K = J Jᵀ`, which on the fused path would require
 //! extra differentiation passes through the PDE operator L, "nullifying any
-//! performance benefit". On our decomposed path the matvec is two explicit
-//! products `J(Jᵀv)` (O(NP) each) — still the dominant cost, so the bench
-//! (`ablations`) reproduces the paper's conclusion quantitatively: the
-//! preconditioner slashes the iteration count but each iteration costs as
-//! much as the whole sketch, so sketch-and-solve wins at equal budget.
+//! performance benefit". On our decomposed path the matvec is the
+//! [`KernelOp::apply`] pair `J(Jᵀv)` (O(NP) each) — still the dominant
+//! cost, so the bench (`ablations`) reproduces the paper's conclusion
+//! quantitatively: the preconditioner slashes the iteration count but each
+//! iteration costs as much as the whole sketch, so sketch-and-solve wins at
+//! equal budget.
 
 use anyhow::Result;
 
 use super::NystromApprox;
+use crate::optim::kernel::KernelOp;
 
 /// Outcome of a preconditioned CG solve.
 #[derive(Debug, Clone)]
@@ -24,18 +26,26 @@ pub struct PcgOutcome {
     pub converged: bool,
 }
 
-/// Solve `A x = b` with CG preconditioned by `(Â_nys + λI)⁻¹`.
-///
-/// `apply` computes `A v` (here `A = K + λI` via `J(Jᵀv) + λv`);
-/// `precond` is any [`NystromApprox`].
+/// Solve `(K + λI) x = b` with CG preconditioned by `(Â_nys + λI)⁻¹`,
+/// where `K` is applied through the operator (`op.apply(v) = J(Jᵀv)` on the
+/// training path — the kernel is never formed) and `precond` is any
+/// [`NystromApprox`].
 pub fn nystrom_pcg(
-    apply: impl Fn(&[f64]) -> Vec<f64>,
+    op: &dyn KernelOp,
+    lambda: f64,
     precond: &dyn NystromApprox,
     b: &[f64],
     max_iters: usize,
     tol: f64,
 ) -> Result<PcgOutcome> {
     let n = b.len();
+    let apply = |v: &[f64]| -> Vec<f64> {
+        let mut kv = op.apply(v);
+        for (kvi, vi) in kv.iter_mut().zip(v) {
+            *kvi += lambda * vi;
+        }
+        kv
+    };
     let bnorm = crate::linalg::norm2(b);
     if bnorm == 0.0 {
         return Ok(PcgOutcome {
@@ -87,8 +97,9 @@ pub fn nystrom_pcg(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{cg_solve, Cholesky, Matrix};
+    use crate::linalg::{cg_solve, Cholesky, Matrix, Workspace};
     use crate::nystrom::GpuNystrom;
+    use crate::optim::kernel::DenseKernel;
     use crate::rng::Rng;
 
     fn decaying_psd(rng: &mut Rng, n: usize, decay: f64) -> Matrix {
@@ -102,7 +113,7 @@ mod tests {
                 k[(i, j)] = q[(i, j)] * w;
             }
         }
-        k.matmul(&q.transpose())
+        k.matmul_nt(&q)
     }
 
     #[test]
@@ -113,8 +124,10 @@ mod tests {
         let damped = a.add_diag(lam);
         let mut b = vec![0.0; 50];
         rng.fill_normal(&mut b);
-        let pre = GpuNystrom::build(&a, 25, lam, &mut rng).unwrap();
-        let out = nystrom_pcg(|v| damped.matvec(v), &pre, &b, 200, 1e-10).unwrap();
+        let op = DenseKernel::new(&a);
+        let mut ws = Workspace::new();
+        let pre = GpuNystrom::build(&op, 25, lam, &mut rng, &mut ws).unwrap();
+        let out = nystrom_pcg(&op, lam, &pre, &b, 200, 1e-10).unwrap();
         assert!(out.converged, "rel = {}", out.rel_residual);
         let direct = Cholesky::factor(&damped).unwrap().solve(&b);
         for (x, d) in out.x.iter().zip(&direct) {
@@ -135,8 +148,10 @@ mod tests {
         rng.fill_normal(&mut b);
 
         let plain = cg_solve(|v| damped.matvec(v), &b, 500, 1e-8);
-        let pre = GpuNystrom::build(&a, 40, lam, &mut rng).unwrap();
-        let pcg = nystrom_pcg(|v| damped.matvec(v), &pre, &b, 500, 1e-8).unwrap();
+        let op = DenseKernel::new(&a);
+        let mut ws = Workspace::new();
+        let pre = GpuNystrom::build(&op, 40, lam, &mut rng, &mut ws).unwrap();
+        let pcg = nystrom_pcg(&op, lam, &pre, &b, 500, 1e-8).unwrap();
         assert!(pcg.converged);
         assert!(
             pcg.iterations * 2 < plain.iterations.max(2),
@@ -150,8 +165,10 @@ mod tests {
     fn zero_rhs_short_circuits() {
         let mut rng = Rng::seed_from(3);
         let a = decaying_psd(&mut rng, 10, 0.5);
-        let pre = GpuNystrom::build(&a, 5, 1e-4, &mut rng).unwrap();
-        let out = nystrom_pcg(|v| v.to_vec(), &pre, &[0.0; 10], 10, 1e-10).unwrap();
+        let op = DenseKernel::new(&a);
+        let mut ws = Workspace::new();
+        let pre = GpuNystrom::build(&op, 5, 1e-4, &mut rng, &mut ws).unwrap();
+        let out = nystrom_pcg(&op, 1e-4, &pre, &[0.0; 10], 10, 1e-10).unwrap();
         assert!(out.converged);
         assert_eq!(out.iterations, 0);
     }

@@ -19,11 +19,17 @@
 //! The economy SVD of B (n × ℓ) is computed from the eigendecomposition of
 //! the ℓ×ℓ Gram matrix BᵀB via our Jacobi `eigh` — the SVD-class
 //! factorization whose cost Appendix B measures (DESIGN.md §Substitutions).
+//!
+//! Like the GPU-efficient builder, this one consumes a [`KernelOp`] + a
+//! [`Workspace`]: all transpose products are fused (`matmul_tn`), `Y_ν`
+//! becomes `B` by an in-place triangular solve, and intermediates return to
+//! the pool.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::NystromApprox;
-use crate::linalg::{eigh, thin_qr, Cholesky, Matrix};
+use crate::linalg::{eigh, thin_qr, Matrix, Workspace};
+use crate::optim::kernel::KernelOp;
 use crate::rng::Rng;
 
 /// Eigendecomposition-form stable Nyström approximation.
@@ -37,56 +43,56 @@ pub struct StableNystrom {
 }
 
 impl StableNystrom {
-    pub fn build(a: &Matrix, sketch: usize, lambda: f64, rng: &mut Rng) -> Result<Self> {
-        let n = a.rows();
-        assert_eq!(a.rows(), a.cols(), "Nyström needs a square PSD matrix");
+    /// Build from a kernel operator: orthonormal test matrix, operator
+    /// sketch, eigendecomposition.
+    pub fn build(
+        op: &dyn KernelOp,
+        sketch: usize,
+        lambda: f64,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<Self> {
+        let n = op.size();
         let sketch = sketch.clamp(1, n);
 
         // 1: orthonormal test matrix.
-        let mut g = Matrix::zeros(n, sketch);
+        let mut g = ws.take_matrix_scratch(n, sketch);
         rng.fill_normal(g.data_mut());
         let omega = thin_qr(&g);
+        ws.recycle_matrix(g);
 
-        // 2: sketch.
-        let y = a.matmul(&omega);
-        Self::from_sketch(omega, y, lambda)
+        // 2: sketch through the operator.
+        let y = op.sketch_y(&omega, ws);
+        Self::from_sketch(omega, y, lambda, ws)
     }
 
-    /// Build from a precomputed (orthonormal Ω, Y = AΩ) pair.
-    pub fn from_sketch(omega: Matrix, y: Matrix, lambda: f64) -> Result<Self> {
+    /// Build from a precomputed (orthonormal Ω, Y = AΩ) pair. Consumes both;
+    /// their storage is recycled into `ws`.
+    pub fn from_sketch(
+        omega: Matrix,
+        y: Matrix,
+        lambda: f64,
+        ws: &mut Workspace,
+    ) -> Result<Self> {
         let n = y.rows();
+        let sketch = y.cols();
 
-        // 3: shift — with ν escalation on rank-deficient sketches, as in
-        // `gpu_efficient` (see the comment there).
-        let base_nu = (n as f64).sqrt() * ulp(y.frobenius_norm());
-        let mut attempt = 0;
-        let (y_nu, c, nu) = loop {
-            let nu = base_nu * 1000f64.powi(attempt);
-            let mut y_nu = y.clone();
-            y_nu.add_scaled(&omega, nu);
-            // 4: core Cholesky.
-            let mut core = omega.transpose().matmul(&y_nu);
-            symmetrize(&mut core);
-            match Cholesky::factor(&core) {
-                Ok(c) => break (y_nu, c, nu),
-                Err(_) if attempt < 5 => attempt += 1,
-                Err(e) => {
-                    return Err(e)
-                        .context("stable Nyström core ΩᵀYν is not PD even after ν escalation")
-                }
-            }
-        };
-        // 5: triangular solve.
-        let b = c.right_solve_transpose(&y_nu);
+        // 3–5: the shared ν-escalation core (`super::sketch_to_factor`):
+        // embed A+νI, factor the core, solve B = Y_ν C⁻¹ in place over the
+        // pooled buffer.
+        let (b, nu) = super::sketch_to_factor(omega, y, "stable Nyström", ws)?;
 
         // 6: economy SVD of B from eigh(BᵀB): BᵀB = V Σ² Vᵀ, U = B V Σ⁻¹.
-        let btb = b.transpose().matmul(&b);
+        let mut btb = ws.take_matrix_scratch(sketch, sketch);
+        b.matmul_tn_into(&b, &mut btb);
         let e = eigh(&btb);
-        let ell = btb.rows();
+        ws.recycle_matrix(btb);
+        let ell = sketch;
         // Descending order is conventional for SVD; eigh returns ascending.
-        let mut u = Matrix::zeros(n, ell);
+        let mut u = ws.take_matrix(n, ell);
         let mut lam_diag = vec![0.0; ell];
-        let bv = b.matmul(&e.eigenvectors);
+        let mut bv = ws.take_matrix_scratch(n, ell);
+        b.matmul_into(&e.eigenvectors, &mut bv);
         for (col, k) in (0..ell).rev().enumerate() {
             let sigma2 = e.eigenvalues[k].max(0.0);
             let sigma = sigma2.sqrt();
@@ -98,6 +104,8 @@ impl StableNystrom {
                 }
             }
         }
+        ws.recycle_matrix(bv);
+        ws.recycle_matrix(b);
         Ok(StableNystrom {
             u,
             lam_diag,
@@ -109,6 +117,11 @@ impl StableNystrom {
     /// The approximation's eigenvalues (descending).
     pub fn eigenvalues(&self) -> &[f64] {
         &self.lam_diag
+    }
+
+    /// Return the eigenvector storage to the workspace pool.
+    pub fn recycle(self, ws: &mut Workspace) {
+        ws.recycle_matrix(self.u);
     }
 }
 
@@ -140,32 +153,15 @@ impl NystromApprox for StableNystrom {
                 ul[(i, j)] *= w;
             }
         }
-        ul.matmul(&self.u.transpose())
-    }
-}
-
-fn ulp(x: f64) -> f64 {
-    if x == 0.0 {
-        return f64::MIN_POSITIVE;
-    }
-    let bits = x.abs().to_bits();
-    f64::from_bits(bits + 1) - x.abs()
-}
-
-fn symmetrize(m: &mut Matrix) {
-    let n = m.rows();
-    for i in 0..n {
-        for j in i + 1..n {
-            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
-            m[(i, j)] = avg;
-            m[(j, i)] = avg;
-        }
+        ul.matmul_nt(&self.u)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Cholesky;
+    use crate::optim::kernel::DenseKernel;
 
     fn decaying_psd(rng: &mut Rng, n: usize, decay: f64) -> Matrix {
         let mut g = Matrix::zeros(n, n);
@@ -178,14 +174,24 @@ mod tests {
                 k[(i, j)] = q[(i, j)] * w;
             }
         }
-        k.matmul(&q.transpose())
+        k.matmul_nt(&q)
+    }
+
+    fn build_dense(
+        a: &Matrix,
+        sketch: usize,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<StableNystrom> {
+        let mut ws = Workspace::new();
+        StableNystrom::build(&DenseKernel::new(a), sketch, lambda, rng, &mut ws)
     }
 
     #[test]
     fn full_sketch_recovers_matrix() {
         let mut rng = Rng::seed_from(1);
         let a = decaying_psd(&mut rng, 30, 0.3);
-        let nys = StableNystrom::build(&a, 30, 1e-8, &mut rng).unwrap();
+        let nys = build_dense(&a, 30, 1e-8, &mut rng).unwrap();
         assert!(a.max_abs_diff(&nys.dense_approx()) < 1e-7);
     }
 
@@ -194,7 +200,7 @@ mod tests {
         let mut rng = Rng::seed_from(2);
         let a = decaying_psd(&mut rng, 25, 0.4);
         let lam = 1e-3;
-        let nys = StableNystrom::build(&a, 12, lam, &mut rng).unwrap();
+        let nys = build_dense(&a, 12, lam, &mut rng).unwrap();
         let dense = nys.dense_approx().add_diag(lam);
         let mut v = vec![0.0; 25];
         rng.fill_normal(&mut v);
@@ -212,8 +218,10 @@ mod tests {
         // the paper's claim that skipping QR/SVD costs little accuracy.
         let mut rng = Rng::seed_from(3);
         let a = decaying_psd(&mut rng, 40, 0.5);
-        let stable = StableNystrom::build(&a, 25, 1e-6, &mut rng).unwrap();
-        let gpu = super::super::GpuNystrom::build(&a, 25, 1e-6, &mut rng).unwrap();
+        let mut ws = Workspace::new();
+        let op = DenseKernel::new(&a);
+        let stable = StableNystrom::build(&op, 25, 1e-6, &mut rng, &mut ws).unwrap();
+        let gpu = super::super::GpuNystrom::build(&op, 25, 1e-6, &mut rng, &mut ws).unwrap();
         let d = stable.dense_approx().max_abs_diff(&gpu.dense_approx());
         let scale = a.frobenius_norm();
         assert!(d / scale < 1e-4, "relative divergence {}", d / scale);
@@ -223,7 +231,7 @@ mod tests {
     fn eigenvalues_are_nonnegative_descending() {
         let mut rng = Rng::seed_from(4);
         let a = decaying_psd(&mut rng, 30, 0.2);
-        let nys = StableNystrom::build(&a, 15, 1e-8, &mut rng).unwrap();
+        let nys = build_dense(&a, 15, 1e-8, &mut rng).unwrap();
         let w = nys.eigenvalues();
         assert!(w.iter().all(|&x| x >= 0.0));
         for k in 1..w.len() {

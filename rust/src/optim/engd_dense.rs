@@ -13,7 +13,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{grid_line_search, Optimizer, StepEnv, StepInfo};
+use super::{grid_line_search, JacobianKernel, KernelOp, Optimizer, StepEnv, StepInfo};
 use crate::config::OptimizerConfig;
 use crate::linalg::{Cholesky, Matrix};
 
@@ -47,10 +47,13 @@ impl Optimizer for EngdDense {
         }
         let (r, j) = env.residuals_jacobian(theta)?;
         let loss = 0.5 * crate::linalg::dot(&r, &r);
-        let grad = j.tr_matvec(&r);
+        let op = JacobianKernel::new(&j);
+        let grad = op.apply_t(&r);
 
-        // G_batch = Jᵀ J, then EMA into the accumulator.
-        let g_batch = j.transpose().gram();
+        // G_batch = Jᵀ J through the operator (fused — Jᵀ is never
+        // materialized), drawn from the step workspace, then EMA'd into the
+        // accumulator.
+        let g_batch = op.gram_t(env.ws);
         let ema = self.cfg.ema;
         let gram = match self.gramian.take() {
             None => {
@@ -70,15 +73,23 @@ impl Optimizer for EngdDense {
                 if ema > 0.0 {
                     acc.scale_in_place(ema);
                     acc.add_scaled(&g_batch, 1.0 - ema);
+                    env.ws.recycle_matrix(g_batch);
                     acc
                 } else {
+                    env.ws.recycle_matrix(acc);
                     g_batch
                 }
             }
         };
 
-        let ch = Cholesky::factor(&gram.add_diag(self.cfg.damping))?;
+        // Damped copy in a pooled buffer, factored in place — the persistent
+        // EMA accumulator itself is left untouched.
+        let mut damped = env.ws.take_matrix_scratch(p, p);
+        damped.data_mut().copy_from_slice(gram.data());
+        damped.add_diag_in_place(self.cfg.damping);
+        let ch = Cholesky::factor_from(damped)?;
         let phi = ch.solve(&grad);
+        env.ws.recycle_matrix(ch.into_factor());
         self.gramian = Some(gram);
 
         let eta = if self.cfg.line_search {

@@ -17,7 +17,9 @@
 
 use anyhow::Result;
 
-use super::{grid_line_search, kernel_solve, Optimizer, StepEnv, StepInfo};
+use super::{
+    grid_line_search, kernel_solve, JacobianKernel, KernelOp, Optimizer, StepEnv, StepInfo,
+};
 use crate::config::run::{ExecPath, SolveMode};
 use crate::config::OptimizerConfig;
 
@@ -67,9 +69,10 @@ impl EngdW {
     fn decomposed_step(&self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         let (r, j) = env.residuals_jacobian(theta)?;
         let loss = 0.5 * crate::linalg::dot(&r, &r);
+        let op = JacobianKernel::new(&j);
         let (a, mut extra) =
-            kernel_solve(&j, &r, &self.cfg, env.rng, env.diagnostics)?;
-        let phi = j.tr_matvec(&a);
+            kernel_solve(&op, &r, &self.cfg, env.rng, env.ws, env.diagnostics)?;
+        let phi = op.apply_t(&a);
         let eta = if self.cfg.line_search {
             let ls = grid_line_search(env, theta, &phi, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)?;
             extra.push(("ls_evals".into(), ls.evals as f64));

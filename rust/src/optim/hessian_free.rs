@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 
-use super::{grid_line_search, Optimizer, StepEnv, StepInfo};
+use super::{grid_line_search, JacobianKernel, KernelOp, Optimizer, StepEnv, StepInfo};
 use crate::config::OptimizerConfig;
 use crate::linalg::cg_solve;
 
@@ -47,13 +47,15 @@ impl Optimizer for HessianFree {
     fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         let (r, j) = env.residuals_jacobian(theta)?;
         let loss = 0.5 * crate::linalg::dot(&r, &r);
-        let grad = j.tr_matvec(&r);
+        let op = JacobianKernel::new(&j);
+        let grad = op.apply_t(&r);
         let lambda = self.lambda;
 
         let out = cg_solve(
             |v| {
-                let jv = j.matvec(v);
-                let mut jtjv = j.tr_matvec(&jv);
+                // Gauss–Newton product (JᵀJ + λI)v through the operator.
+                let jv = op.apply_j(v);
+                let mut jtjv = op.apply_t(&jv);
                 for (x, vi) in jtjv.iter_mut().zip(v) {
                     *x += lambda * vi;
                 }
@@ -80,7 +82,7 @@ impl Optimizer for HessianFree {
             // quadratic model m(φ) = L − η gᵀφ + ½η² φᵀ(G+λI)φ.
             let new_loss = env.eval_loss(&trial)?;
             let g_phi = crate::linalg::dot(&grad, &phi);
-            let jphi = j.matvec(&phi);
+            let jphi = op.apply_j(&phi);
             let quad = crate::linalg::dot(&jphi, &jphi)
                 + lambda * crate::linalg::dot(&phi, &phi);
             let predicted = eta * g_phi - 0.5 * eta * eta * quad;

@@ -1,0 +1,273 @@
+//! The kernel-operator abstraction: `K = J Jᵀ` as an operator, not a matrix.
+//!
+//! Every second-order path in the paper touches the kernel only through a
+//! handful of primitives — apply it (`Kv`), map back (`Jᵀa`), push forward
+//! (`Jw`), densify it (eq. 5's exact solve), or sketch it (`Y = KΩ`,
+//! eq. 9 / Algorithm 2, formed as two tall products `J(JᵀΩ)` without ever
+//! building K). [`KernelOp`] names exactly those primitives, so
+//!
+//! * the optimizers (`EngdW`, `Spring`, `EngdDense`, `HessianFree`) and all
+//!   four [`crate::config::run::SolveMode`] branches are written once
+//!   against `&dyn KernelOp`,
+//! * the Nyström builders consume the operator + a [`Workspace`] instead of
+//!   a concrete `&Matrix`,
+//! * and a sharded or PJRT-backed operator (jtv/jv artifacts, ROADMAP) can
+//!   drop in later without touching any optimizer.
+//!
+//! Two implementations ship today: [`JacobianKernel`] (dense row-major J —
+//! the decomposed training path) and [`DenseKernel`] (an explicit PSD
+//! matrix — tests, Appendix-B micro-benchmarks).
+
+use crate::linalg::{Matrix, Workspace};
+
+/// A symmetric PSD kernel operator `K ∈ R^{N×N}` of Gram form `K = J Jᵀ`
+/// with `J ∈ R^{N×P}`, exposed through the primitives the optimizer suite
+/// needs. All dense outputs are drawn from the caller's [`Workspace`].
+pub trait KernelOp {
+    /// Kernel dimension N (number of residuals / collocation points).
+    fn size(&self) -> usize;
+
+    /// Parameter dimension P.
+    fn params(&self) -> usize;
+
+    /// `K v = J (Jᵀ v)` — the sample-space operator application (PCG
+    /// matvecs, eq. 9's iterative alternative).
+    fn apply(&self, v: &[f64]) -> Vec<f64>;
+
+    /// `Jᵀ a` — map a kernel-space solution back to parameter space
+    /// (the φ = Jᵀa step of eq. 5 / Algorithm 1 line 8).
+    fn apply_t(&self, a: &[f64]) -> Vec<f64>;
+
+    /// `J w` — parameter→sample push-forward (SPRING's ζ shift, line 6;
+    /// Hessian-free's Gauss–Newton products).
+    fn apply_j(&self, w: &[f64]) -> Vec<f64>;
+
+    /// Densify `K = J Jᵀ` into a workspace buffer (the exact path of
+    /// eq. 5). Recycle the returned matrix when done.
+    fn gram(&self, ws: &mut Workspace) -> Matrix;
+
+    /// Densify the parameter-space Gramian `G = Jᵀ J` (dense ENGD, eq. 1)
+    /// into a workspace buffer.
+    fn gram_t(&self, ws: &mut Workspace) -> Matrix;
+
+    /// Sketch `Y = K Ω` into a workspace buffer, without forming K: two
+    /// tall products `J (Jᵀ Ω)` — O(NPℓ), the whole point of eq. 9.
+    fn sketch_y(&self, omega: &Matrix, ws: &mut Workspace) -> Matrix;
+}
+
+/// The dense-Jacobian kernel operator: `K = J Jᵀ` for a row-major
+/// N×P Jacobian produced by the `residuals_jacobian` artifact.
+pub struct JacobianKernel<'a> {
+    j: &'a Matrix,
+}
+
+impl<'a> JacobianKernel<'a> {
+    pub fn new(j: &'a Matrix) -> Self {
+        JacobianKernel { j }
+    }
+
+    /// The underlying Jacobian.
+    pub fn jacobian(&self) -> &Matrix {
+        self.j
+    }
+}
+
+impl KernelOp for JacobianKernel<'_> {
+    fn size(&self) -> usize {
+        self.j.rows()
+    }
+
+    fn params(&self) -> usize {
+        self.j.cols()
+    }
+
+    fn apply(&self, v: &[f64]) -> Vec<f64> {
+        let jtv = self.j.tr_matvec(v);
+        self.j.matvec(&jtv)
+    }
+
+    fn apply_t(&self, a: &[f64]) -> Vec<f64> {
+        self.j.tr_matvec(a)
+    }
+
+    fn apply_j(&self, w: &[f64]) -> Vec<f64> {
+        self.j.matvec(w)
+    }
+
+    fn gram(&self, ws: &mut Workspace) -> Matrix {
+        let n = self.j.rows();
+        let mut k = ws.take_matrix_scratch(n, n);
+        self.j.gram_into(&mut k);
+        k
+    }
+
+    fn gram_t(&self, ws: &mut Workspace) -> Matrix {
+        let p = self.j.cols();
+        let mut g = ws.take_matrix_scratch(p, p);
+        self.j.gram_t_into(&mut g);
+        g
+    }
+
+    fn sketch_y(&self, omega: &Matrix, ws: &mut Workspace) -> Matrix {
+        let ell = omega.cols();
+        let mut jt_omega = ws.take_matrix_scratch(self.j.cols(), ell);
+        self.j.matmul_tn_into(omega, &mut jt_omega);
+        let mut y = ws.take_matrix_scratch(self.j.rows(), ell);
+        self.j.matmul_into(&jt_omega, &mut y);
+        ws.recycle_matrix(jt_omega);
+        y
+    }
+}
+
+/// An explicit symmetric PSD kernel (already-formed `A ≈ J Jᵀ`): the
+/// operator the Appendix-B Nyström micro-benchmarks and the linalg tests
+/// exercise, where no Jacobian factorization is available. `params()`
+/// equals `size()` (J is implicitly A^{1/2}).
+pub struct DenseKernel<'a> {
+    a: &'a Matrix,
+}
+
+impl<'a> DenseKernel<'a> {
+    /// Wrap a square symmetric PSD matrix.
+    pub fn new(a: &'a Matrix) -> Self {
+        assert_eq!(
+            a.rows(),
+            a.cols(),
+            "DenseKernel needs a square matrix, got {}x{}",
+            a.rows(),
+            a.cols()
+        );
+        DenseKernel { a }
+    }
+}
+
+impl KernelOp for DenseKernel<'_> {
+    fn size(&self) -> usize {
+        self.a.rows()
+    }
+
+    fn params(&self) -> usize {
+        self.a.rows()
+    }
+
+    fn apply(&self, v: &[f64]) -> Vec<f64> {
+        self.a.matvec(v)
+    }
+
+    fn apply_t(&self, a: &[f64]) -> Vec<f64> {
+        // Symmetric: Aᵀ = A.
+        self.a.matvec(a)
+    }
+
+    fn apply_j(&self, w: &[f64]) -> Vec<f64> {
+        self.a.matvec(w)
+    }
+
+    fn gram(&self, ws: &mut Workspace) -> Matrix {
+        let n = self.a.rows();
+        let mut k = ws.take_matrix_scratch(n, n);
+        k.data_mut().copy_from_slice(self.a.data());
+        k
+    }
+
+    fn gram_t(&self, ws: &mut Workspace) -> Matrix {
+        self.gram(ws)
+    }
+
+    fn sketch_y(&self, omega: &Matrix, ws: &mut Workspace) -> Matrix {
+        let mut y = ws.take_matrix_scratch(self.a.rows(), omega.cols());
+        self.a.matmul_into(omega, &mut y);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(m.data_mut());
+        m
+    }
+
+    /// Naive O(nmp) reference for AᵀA / AAᵀ products (kept transpose-free:
+    /// this module is part of the no-materialized-transpose zone).
+    fn naive_gram(j: &Matrix, of_columns: bool) -> Matrix {
+        let dim = if of_columns { j.cols() } else { j.rows() };
+        Matrix::from_fn(dim, dim, |a, b| {
+            if of_columns {
+                (0..j.rows()).map(|k| j[(k, a)] * j[(k, b)]).sum()
+            } else {
+                (0..j.cols()).map(|k| j[(a, k)] * j[(b, k)]).sum()
+            }
+        })
+    }
+
+    #[test]
+    fn jacobian_kernel_matches_explicit_products() {
+        let mut rng = Rng::seed_from(1);
+        let j = random_matrix(&mut rng, 12, 30);
+        let op = JacobianKernel::new(&j);
+        assert_eq!((op.size(), op.params()), (12, 30));
+
+        let mut ws = Workspace::new();
+        let k = op.gram(&mut ws);
+        let k_ref = naive_gram(&j, false);
+        assert!(k.max_abs_diff(&k_ref) < 1e-10);
+
+        let g = op.gram_t(&mut ws);
+        let g_ref = naive_gram(&j, true);
+        assert!(g.max_abs_diff(&g_ref) < 1e-10);
+
+        let mut v = vec![0.0; 12];
+        rng.fill_normal(&mut v);
+        let kv = op.apply(&v);
+        let kv_ref = k_ref.matvec(&v);
+        for (a, b) in kv.iter().zip(&kv_ref) {
+            assert!((a - b).abs() < 1e-9);
+        }
+
+        let omega = random_matrix(&mut rng, 12, 5);
+        let y = op.sketch_y(&omega, &mut ws);
+        let y_ref = k_ref.matmul(&omega);
+        assert!(y.max_abs_diff(&y_ref) < 1e-9);
+    }
+
+    #[test]
+    fn dense_kernel_sketch_matches_direct_product() {
+        let mut rng = Rng::seed_from(2);
+        let base = random_matrix(&mut rng, 10, 10);
+        let a = base.gram();
+        let op = DenseKernel::new(&a);
+        let mut ws = Workspace::new();
+        let omega = random_matrix(&mut rng, 10, 4);
+        let y = op.sketch_y(&omega, &mut ws);
+        assert!(y.max_abs_diff(&a.matmul(&omega)) < 1e-10);
+        let k = op.gram(&mut ws);
+        assert_eq!(k.max_abs_diff(&a), 0.0);
+    }
+
+    #[test]
+    fn sketch_y_reuses_workspace_buffers_across_calls() {
+        let mut rng = Rng::seed_from(3);
+        let j = random_matrix(&mut rng, 16, 40);
+        let op = JacobianKernel::new(&j);
+        let mut ws = Workspace::new();
+        let omega = random_matrix(&mut rng, 16, 6);
+
+        let y1 = op.sketch_y(&omega, &mut ws);
+        ws.recycle_matrix(y1);
+        let fresh_after_first = ws.stats().fresh_allocs;
+
+        let y2 = op.sketch_y(&omega, &mut ws);
+        ws.recycle_matrix(y2);
+        assert_eq!(
+            ws.stats().fresh_allocs,
+            fresh_after_first,
+            "second sketch must be served entirely from the pool"
+        );
+        assert!(ws.stats().reuses >= 2);
+    }
+}

@@ -12,11 +12,17 @@
 //!   Gramian EMA and identity init,
 //! * [`hessian_free`] — truncated-CG Gauss–Newton (Martens 2010),
 //! * [`sgd`] / [`adam`] — tuned first-order baselines.
+//!
+//! All second-order paths are written against the [`KernelOp`] operator
+//! abstraction (see [`kernel`]) and draw their dense temporaries from the
+//! trainer-owned [`Workspace`] threaded through [`StepEnv`], so the hot
+//! loop never materializes a transpose and reuses its buffers every step.
 
 mod adam;
 mod engd_dense;
 mod engd_w;
 mod hessian_free;
+pub mod kernel;
 mod line_search;
 mod sgd;
 mod spring;
@@ -25,6 +31,7 @@ pub use adam::Adam;
 pub use engd_dense::EngdDense;
 pub use engd_w::EngdW;
 pub use hessian_free::HessianFree;
+pub use kernel::{DenseKernel, JacobianKernel, KernelOp};
 pub use line_search::{golden_section, grid_line_search, grid_search, LineSearchResult};
 pub use sgd::Sgd;
 pub use spring::Spring;
@@ -32,7 +39,7 @@ pub use spring::Spring;
 use anyhow::Result;
 
 use crate::config::{OptimizerConfig, RunConfig};
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, Workspace};
 use crate::rng::Rng;
 use crate::runtime::{ProblemSpec, Runtime};
 
@@ -48,6 +55,9 @@ pub struct StepEnv<'a> {
     pub k: usize,
     /// Per-run RNG stream (sketches, etc.).
     pub rng: &'a mut Rng,
+    /// Trainer-owned step-buffer pool: Gram matrices, sketches, and Nyström
+    /// factors are checked out here and recycled across steps.
+    pub ws: &'a mut Workspace,
     /// If true, this step should also compute diagnostics (d_eff).
     pub diagnostics: bool,
 }
@@ -126,60 +136,65 @@ pub fn build_from_opt(o: &OptimizerConfig) -> Result<Box<dyn Optimizer>> {
     })
 }
 
-/// Shared helper: solve the damped kernel system `(K̂+λI) a = rhs` according
-/// to the configured [`crate::config::run::SolveMode`], where `K = J Jᵀ` and
-/// the randomized modes sketch `Y = J (Jᵀ Ω)` without forming K (the O(NPℓ)
-/// shortcut that motivates eq. 9). Returns the solution plus reporting tags.
-pub(crate) fn kernel_solve(
-    j: &Matrix,
+/// Unified solve path: solve the damped kernel system `(K̂+λI) a = rhs`
+/// according to the configured [`crate::config::run::SolveMode`], where the
+/// kernel is presented as a [`KernelOp`] — so the same code serves the dense
+/// Jacobian path today and a sharded/PJRT-backed operator later. Dense
+/// temporaries (Gram, sketches, Nyström factors) come from — and return to —
+/// the caller's [`Workspace`], so repeated calls with fixed shapes allocate
+/// only on the first. Returns the solution plus reporting tags.
+pub fn kernel_solve(
+    op: &dyn KernelOp,
     rhs: &[f64],
     o: &OptimizerConfig,
     rng: &mut Rng,
+    ws: &mut Workspace,
     diagnostics: bool,
 ) -> Result<(Vec<f64>, Vec<(String, f64)>)> {
     use crate::config::run::SolveMode;
-    let n = j.rows();
+    let n = op.size();
     let mut extra = Vec::new();
     let a = match o.solve {
         SolveMode::Exact => {
-            let k = j.gram();
+            let mut k = op.gram(ws);
             if diagnostics {
                 let d_eff = crate::nystrom::effective_dimension(&k, o.damping)?;
                 extra.push(("d_eff".to_string(), d_eff));
                 extra.push(("d_eff_ratio".to_string(), d_eff / n as f64));
             }
-            let ch = crate::linalg::Cholesky::factor(&k.add_diag(o.damping))?;
-            ch.solve(rhs)
+            k.add_diag_in_place(o.damping);
+            let ch = crate::linalg::Cholesky::factor_from(k)?;
+            let x = ch.solve(rhs);
+            ws.recycle_matrix(ch.into_factor());
+            x
         }
         SolveMode::NystromGpu => {
-            let nys = build_gpu_nystrom(j, o, rng, &mut extra)?;
-            crate::nystrom::NystromApprox::inv_apply(&nys, rhs)
+            let nys = build_gpu_nystrom(op, o, rng, ws, &mut extra)?;
+            let x = crate::nystrom::NystromApprox::inv_apply(&nys, rhs);
+            nys.recycle(ws);
+            x
         }
         SolveMode::NystromStable => {
             let sketch = sketch_size(n, o.sketch_ratio);
-            let mut g = Matrix::zeros(n, sketch);
+            let mut g = ws.take_matrix_scratch(n, sketch);
             rng.fill_normal(g.data_mut());
             let omega = crate::linalg::thin_qr(&g);
-            let jt_omega = j.transpose().matmul(&omega);
-            let y = j.matmul(&jt_omega);
-            let nys = crate::nystrom::StableNystrom::from_sketch(omega, y, o.damping)?;
+            ws.recycle_matrix(g);
+            let y = op.sketch_y(&omega, ws);
+            let nys = crate::nystrom::StableNystrom::from_sketch(omega, y, o.damping, ws)?;
             extra.push(("sketch".to_string(), sketch as f64));
-            crate::nystrom::NystromApprox::inv_apply(&nys, rhs)
+            let x = crate::nystrom::NystromApprox::inv_apply(&nys, rhs);
+            nys.recycle(ws);
+            x
         }
         SolveMode::NystromPcg => {
             // Sketch-and-precondition (paper §3.3): Nyström preconditioner +
-            // CG on the exact damped kernel, with matvecs K v = J(Jᵀv).
-            let nys = build_gpu_nystrom(j, o, rng, &mut extra)?;
-            let lam = o.damping;
+            // CG on the exact damped kernel, with matvecs K v = J(Jᵀv)
+            // supplied by the operator.
+            let nys = build_gpu_nystrom(op, o, rng, ws, &mut extra)?;
             let out = crate::nystrom::nystrom_pcg(
-                |v| {
-                    let jtv = j.tr_matvec(v);
-                    let mut kv = j.matvec(&jtv);
-                    for (kvi, vi) in kv.iter_mut().zip(v) {
-                        *kvi += lam * vi;
-                    }
-                    kv
-                },
+                op,
+                o.damping,
                 &nys,
                 rhs,
                 o.cg_iters,
@@ -187,6 +202,7 @@ pub(crate) fn kernel_solve(
             )?;
             extra.push(("pcg_iters".to_string(), out.iterations as f64));
             extra.push(("pcg_rel_res".to_string(), out.rel_residual));
+            nys.recycle(ws);
             out.x
         }
     };
@@ -197,36 +213,37 @@ pub(crate) fn sketch_size(n: usize, ratio: f64) -> usize {
     ((n as f64 * ratio).round() as usize).clamp(1, n)
 }
 
-/// GPU-efficient Nyström of `K = J Jᵀ` from Jacobian sketches, honoring the
-/// configured rank policy (fixed = paper default, adaptive = paper §5
+/// GPU-efficient Nyström of the operator's kernel from sketches, honoring
+/// the configured rank policy (fixed = paper default, adaptive = paper §5
 /// future work).
 fn build_gpu_nystrom(
-    j: &Matrix,
+    op: &dyn KernelOp,
     o: &OptimizerConfig,
     rng: &mut Rng,
+    ws: &mut Workspace,
     extra: &mut Vec<(String, f64)>,
 ) -> Result<crate::nystrom::GpuNystrom> {
     use crate::config::run::RankPolicy;
-    let n = j.rows();
+    let n = op.size();
     match o.rank_policy {
         RankPolicy::Fixed => {
             let sketch = sketch_size(n, o.sketch_ratio);
-            let mut omega = Matrix::zeros(n, sketch);
+            let mut omega = ws.take_matrix_scratch(n, sketch);
             rng.fill_normal(omega.data_mut());
             // Y = J (Jᵀ Ω): two tall products, never the N×N kernel.
-            let jt_omega = j.transpose().matmul(&omega);
-            let y = j.matmul(&jt_omega);
+            let y = op.sketch_y(&omega, ws);
             extra.push(("sketch".to_string(), sketch as f64));
-            crate::nystrom::GpuNystrom::from_sketch(omega, y, o.damping)
+            crate::nystrom::GpuNystrom::from_sketch(omega, y, o.damping, ws)
         }
         RankPolicy::Adaptive => {
-            let out = crate::nystrom::adaptive_nystrom_from_jacobian(
-                j,
+            let out = crate::nystrom::adaptive_nystrom(
+                op,
                 o.damping,
                 o.sketch_ratio,
                 o.sketch_max_ratio,
                 10.0,
                 rng,
+                ws,
             )?;
             let sketch = crate::nystrom::NystromApprox::sketch_size(&out.approx);
             extra.push(("sketch".to_string(), sketch as f64));

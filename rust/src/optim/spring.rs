@@ -16,7 +16,9 @@
 
 use anyhow::Result;
 
-use super::{grid_line_search, kernel_solve, Optimizer, StepEnv, StepInfo};
+use super::{
+    grid_line_search, kernel_solve, JacobianKernel, KernelOp, Optimizer, StepEnv, StepInfo,
+};
 use crate::config::run::{BiasMode, ExecPath, SolveMode};
 use crate::config::OptimizerConfig;
 
@@ -131,14 +133,15 @@ impl Spring {
             self.phi = vec![0.0; j.cols()];
         }
         let loss = 0.5 * crate::linalg::dot(&r, &r);
+        let op = JacobianKernel::new(&j);
         // ζ = r − μ J φ_{k−1}  (Algorithm 1 line 6)
-        let j_phi = j.matvec(&self.phi);
+        let j_phi = op.apply_j(&self.phi);
         let mu = self.cfg.momentum;
         let zeta: Vec<f64> = r.iter().zip(&j_phi).map(|(ri, ji)| ri - mu * ji).collect();
         // a = (K̂+λI)⁻¹ ζ  (line 7, Woodbury form; K̂ exact or Nyström)
-        let (a, extra) = kernel_solve(&j, &zeta, &self.cfg, env.rng, env.diagnostics)?;
+        let (a, extra) = kernel_solve(&op, &zeta, &self.cfg, env.rng, env.ws, env.diagnostics)?;
         // φ_raw = μ φ_{k−1} + Jᵀ a
-        let jta = j.tr_matvec(&a);
+        let jta = op.apply_t(&a);
         let phi_raw: Vec<f64> = self
             .phi
             .iter()

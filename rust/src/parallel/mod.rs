@@ -103,14 +103,16 @@ where
 }
 
 /// Pointer wrapper that lets disjoint-index writes cross the scope boundary.
-struct SendPtr<T>(*mut T);
+/// Shared by every blocked kernel in `linalg` (matmul, gram, Cholesky) —
+/// each user is responsible for keeping its writes disjoint per thread.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Sync for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
     /// Method (not field) access, so closures capture the `Sync` wrapper.
     #[inline]
-    fn get(&self) -> *mut T {
+    pub(crate) fn get(&self) -> *mut T {
         self.0
     }
 }

@@ -7,7 +7,7 @@
 
 use engd::config::run::{ExecPath, OptimizerKind, SolveMode};
 use engd::config::RunConfig;
-use engd::linalg::{Cholesky, Matrix};
+use engd::linalg::{Cholesky, Matrix, Workspace};
 use engd::optim::{build_from_opt, StepEnv};
 use engd::pde::{exact_solution, init_params, mlp_forward, Sampler};
 use engd::rng::Rng;
@@ -205,6 +205,8 @@ fn spring_fused_and_decomposed_paths_agree() {
 
     let mut theta_f = theta0.clone();
     let mut theta_d = theta0.clone();
+    let mut ws_f = Workspace::new();
+    let mut ws_d = Workspace::new();
     let mut sampler = Sampler::new(p.dim, 19);
     for k in 1..=3 {
         let xi = sampler.interior(p.n_interior);
@@ -217,6 +219,7 @@ fn spring_fused_and_decomposed_paths_agree() {
             x_bnd: &xb,
             k,
             rng: &mut rng_f,
+            ws: &mut ws_f,
             diagnostics: false,
         };
         let inf = fused.step(&mut theta_f, &mut env).unwrap();
@@ -228,6 +231,7 @@ fn spring_fused_and_decomposed_paths_agree() {
             x_bnd: &xb,
             k,
             rng: &mut rng_d,
+            ws: &mut ws_d,
             diagnostics: false,
         };
         let ind = dec.step(&mut theta_d, &mut env).unwrap();
@@ -303,6 +307,7 @@ fn randomized_solves_track_exact_at_large_sketch() {
     let xi = sampler.interior(p.n_interior);
     let xb = sampler.boundary(p.n_boundary);
 
+    let mut ws = Workspace::new();
     let mut phis: Vec<Vec<f64>> = Vec::new();
     for solve in [
         SolveMode::Exact,
@@ -330,6 +335,7 @@ fn randomized_solves_track_exact_at_large_sketch() {
             x_bnd: &xb,
             k: 1,
             rng: &mut rng_s,
+            ws: &mut ws,
             diagnostics: false,
         };
         let info = opt.step(&mut theta_copy, &mut env).unwrap();
@@ -367,6 +373,7 @@ fn randomized_solves_track_exact_at_large_sketch() {
             x_bnd: &xb,
             k: 1,
             rng: &mut rng_s,
+            ws: &mut ws,
             diagnostics: false,
         };
         opt.step(&mut theta_copy, &mut env).unwrap();
@@ -377,6 +384,7 @@ fn randomized_solves_track_exact_at_large_sketch() {
             x_bnd: &xb,
             k: 2,
             rng: &mut rng_s,
+            ws: &mut ws,
             diagnostics: false,
         };
         losses.push(env.eval_loss(&theta_copy).unwrap());
@@ -386,6 +394,59 @@ fn randomized_solves_track_exact_at_large_sketch() {
         assert!(
             *l <= exact * 3.0 + 1.0,
             "variant {i}: post-step loss {l} far above exact {exact}"
+        );
+    }
+}
+
+/// The trainer's step-buffer pool must reach steady state after step 1: a
+/// two-step decomposed run may not allocate any fresh workspace buffer in
+/// its second step (same problem ⇒ same shapes ⇒ pure reuse).
+#[test]
+fn trainer_workspace_is_reused_not_regrown_across_steps() {
+    let Some(rt) = runtime() else { return };
+    for solve in [SolveMode::Exact, SolveMode::NystromGpu] {
+        let mut cfg = RunConfig {
+            name: format!("itest-ws-{}", solve.name()),
+            problem: "poisson2d".into(),
+            steps: 1,
+            // NB: the final step always evaluates (k == steps), so both runs
+            // end with one diagnostics step; diagnostics allocate outside
+            // the workspace, leaving the pool comparison valid.
+            eval_every: 100,
+            out_dir: std::env::temp_dir()
+                .join("engd-itest")
+                .display()
+                .to_string(),
+            ..RunConfig::default()
+        };
+        cfg.optimizer.kind = OptimizerKind::EngdW;
+        cfg.optimizer.path = ExecPath::Decomposed;
+        cfg.optimizer.solve = solve;
+        cfg.optimizer.line_search = false;
+        cfg.optimizer.lr = 1e-3;
+        cfg.optimizer.damping = 1e-6;
+        cfg.optimizer.validate().unwrap();
+
+        let mut one = engd::coordinator::Trainer::new(cfg.clone(), &rt).unwrap();
+        one.run(false).unwrap();
+        let after_one = one.workspace_stats();
+
+        cfg.steps = 2;
+        let mut two = engd::coordinator::Trainer::new(cfg, &rt).unwrap();
+        two.run(false).unwrap();
+        let after_two = two.workspace_stats();
+
+        assert_eq!(
+            (after_two.fresh_allocs, after_two.grown),
+            (after_one.fresh_allocs, after_one.grown),
+            "{}: step 2 allocated or regrew buffers instead of reusing the \
+             pool (after one step {after_one:?}, after two {after_two:?})",
+            solve.name()
+        );
+        assert!(
+            after_two.reuses > after_one.reuses,
+            "{}: step 2 did not draw from the pool ({after_two:?})",
+            solve.name()
         );
     }
 }

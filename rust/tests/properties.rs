@@ -5,11 +5,14 @@
 //! These properties are artifact-free: they exercise the Rust linear-algebra
 //! and randomization substrates over randomized shapes/seeds/dampings.
 
-use engd::linalg::{cg_solve, dot, eigh, thin_qr, Cholesky, Matrix};
+use engd::config::run::SolveMode;
+use engd::config::OptimizerConfig;
+use engd::linalg::{cg_solve, dot, eigh, thin_qr, Cholesky, Matrix, Workspace};
 use engd::nystrom::{
     effective_dimension, effective_dimension_spectral, GpuNystrom, NystromApprox,
     StableNystrom,
 };
+use engd::optim::{kernel_solve, DenseKernel, JacobianKernel};
 use engd::proptest::{assert_close, run_prop, Gen};
 use engd::rng::Rng;
 
@@ -101,7 +104,8 @@ fn prop_nystrom_psd_sandwich() {
         let a = low.gram(); // PSD, rank ≤ rank
 
         let mut rng = Rng::seed_from(g.usize_in(0, 1 << 30) as u64);
-        let nys = GpuNystrom::build(&a, sketch, lam, &mut rng)
+        let mut ws = Workspace::new();
+        let nys = GpuNystrom::build(&DenseKernel::new(&a), sketch, lam, &mut rng, &mut ws)
             .map_err(|e| e.to_string())?;
         let approx = nys.dense_approx();
 
@@ -207,11 +211,14 @@ fn prop_nystrom_variants_agree_at_full_rank() {
         let seed = g.usize_in(0, 1 << 30) as u64;
         let sketch = (rank + 3).min(n);
 
+        let op = DenseKernel::new(&a);
+        let mut ws = Workspace::new();
         let mut r1 = Rng::seed_from(seed);
-        let gpu = GpuNystrom::build(&a, sketch, lam, &mut r1).map_err(|e| e.to_string())?;
+        let gpu =
+            GpuNystrom::build(&op, sketch, lam, &mut r1, &mut ws).map_err(|e| e.to_string())?;
         let mut r2 = Rng::seed_from(seed.wrapping_add(1));
-        let stable =
-            StableNystrom::build(&a, sketch, lam, &mut r2).map_err(|e| e.to_string())?;
+        let stable = StableNystrom::build(&op, sketch, lam, &mut r2, &mut ws)
+            .map_err(|e| e.to_string())?;
 
         // With sketch > rank both recover A (whp): compare inverse actions.
         let v = g.vec_normal(n);
@@ -244,6 +251,155 @@ fn prop_sampler_invariants() {
             }
         }
         Ok(())
+    });
+}
+
+/// The fused transpose products must agree with the materialized
+/// `transpose()+matmul` references on every shape — including the extreme
+/// aspect ratios of the training path (N ≪ P wide Jacobians and P ≪ N tall
+/// sketches), where panel/blocking edge cases live.
+#[test]
+fn prop_fused_transpose_products_match_materialized() {
+    run_prop("fused tn/nt/gram_t vs materialized", 30, |g| {
+        // Draw one dimension small and one large to hit both regimes.
+        let small = g.usize_in(1, 4);
+        let large = g.usize_in(1, 90);
+        let (rows, cols) = if g.bool() {
+            (small, large)
+        } else {
+            (large, small)
+        };
+        let inner = g.usize_in(1, 24);
+
+        // AᵀB with A: rows×cols, B: rows×inner.
+        let a = random_jacobian(g, rows, cols);
+        let b = random_jacobian(g, rows, inner);
+        let tn = a.matmul_tn(&b);
+        let tn_ref = a.transpose().matmul(&b);
+        let scale = 1.0 + tn_ref.frobenius_norm();
+        if tn.max_abs_diff(&tn_ref) > 1e-10 * scale {
+            return Err(format!(
+                "matmul_tn diverged at ({rows}x{cols})ᵀ({rows}x{inner})"
+            ));
+        }
+
+        // ABᵀ with A: cols×rows, B: inner×rows.
+        let a2 = random_jacobian(g, cols, rows);
+        let b2 = random_jacobian(g, inner, rows);
+        let nt = a2.matmul_nt(&b2);
+        let nt_ref = a2.matmul(&b2.transpose());
+        if nt.max_abs_diff(&nt_ref) > 1e-10 * (1.0 + nt_ref.frobenius_norm()) {
+            return Err(format!(
+                "matmul_nt diverged at ({cols}x{rows})({inner}x{rows})ᵀ"
+            ));
+        }
+
+        // AᵀA and the `_into` path through a dirty reused buffer.
+        let gt = a.gram_t();
+        let gt_ref = a.transpose().matmul(&a);
+        if gt.max_abs_diff(&gt_ref) > 1e-10 * (1.0 + gt_ref.frobenius_norm()) {
+            return Err(format!("gram_t diverged at ({rows}x{cols})"));
+        }
+        let mut dirty = Matrix::from_fn(rows, rows, |_, _| f64::NAN);
+        a.gram_into(&mut dirty);
+        let k_ref = a.matmul(&a.transpose());
+        if dirty.max_abs_diff(&k_ref) > 1e-10 * (1.0 + k_ref.frobenius_norm()) {
+            return Err(format!("gram_into diverged at ({rows}x{cols})"));
+        }
+        Ok(())
+    });
+}
+
+/// The unified solve path must serve every `SolveMode` from the workspace
+/// pool at steady state: a second identically-shaped solve may not allocate
+/// a single fresh buffer. This is the harness-level statement of the
+/// trainer invariant (the trainer holds one `Workspace` for the whole run),
+/// checked here without needing PJRT artifacts.
+#[test]
+fn prop_kernel_solve_reuses_workspace() {
+    run_prop("kernel_solve workspace reuse", 8, |g| {
+        let n = g.usize_in(8, 24);
+        let p = n + g.usize_in(1, 20); // full-row-rank J w.h.p.: no ν retries
+        let j = random_jacobian(g, n, p);
+        let rhs = g.vec_normal(n);
+        let op = JacobianKernel::new(&j);
+        let mut rng = Rng::seed_from(g.usize_in(0, 1 << 30) as u64);
+
+        for solve in [
+            SolveMode::Exact,
+            SolveMode::NystromGpu,
+            SolveMode::NystromStable,
+            SolveMode::NystromPcg,
+        ] {
+            let o = OptimizerConfig {
+                solve,
+                damping: 1e-2,
+                sketch_ratio: 0.5,
+                ..OptimizerConfig::default()
+            };
+            let mut ws = Workspace::new();
+            let (x1, _) = kernel_solve(&op, &rhs, &o, &mut rng, &mut ws, false)
+                .map_err(|e| e.to_string())?;
+            let after_first = ws.stats();
+            let (x2, _) = kernel_solve(&op, &rhs, &o, &mut rng, &mut ws, false)
+                .map_err(|e| e.to_string())?;
+            let after_second = ws.stats();
+
+            // `grown` must freeze too: a pool that keeps reallocating an
+            // undersized buffer every step is a hidden per-step allocation
+            // even though fresh_allocs stays flat.
+            if after_second.fresh_allocs != after_first.fresh_allocs
+                || after_second.grown != after_first.grown
+            {
+                return Err(format!(
+                    "{}: second solve allocated or regrew buffers \
+                     (first {after_first:?}, second {after_second:?})",
+                    solve.name()
+                ));
+            }
+            if after_second.reuses <= after_first.reuses {
+                return Err(format!(
+                    "{}: second solve did not draw from the pool ({after_second:?})",
+                    solve.name()
+                ));
+            }
+            if !x1.iter().all(|v| v.is_finite()) || !x2.iter().all(|v| v.is_finite()) {
+                return Err(format!("{}: non-finite solution", solve.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Routing the exact solve through `KernelOp` + workspace must be
+/// numerically identical to the hand-rolled Woodbury solve it replaced.
+#[test]
+fn prop_kernel_solve_exact_matches_direct_woodbury() {
+    run_prop("kernel_solve exact vs direct", 25, |g| {
+        let n = g.usize_in(1, 30);
+        let p = g.usize_in(1, 45);
+        let lam = g.log_uniform(1e-5, 1e1);
+        let j = random_jacobian(g, n, p);
+        let r = g.vec_normal(n);
+
+        let o = OptimizerConfig {
+            solve: SolveMode::Exact,
+            damping: lam,
+            ..OptimizerConfig::default()
+        };
+        let mut ws = Workspace::new();
+        let mut rng = Rng::seed_from(1);
+        let op = JacobianKernel::new(&j);
+        let (a_ws, _) = kernel_solve(&op, &r, &o, &mut rng, &mut ws, false)
+            .map_err(|e| e.to_string())?;
+        let phi_ws = op.apply_t(&a_ws);
+
+        let k = j.gram().add_diag(lam);
+        let a_direct = Cholesky::factor(&k).map_err(|e| e.to_string())?.solve(&r);
+        let phi_direct = j.tr_matvec(&a_direct);
+
+        let scale = phi_direct.iter().map(|x| x.abs()).fold(1.0, f64::max);
+        assert_close(&phi_ws, &phi_direct, 1e-9 * scale)
     });
 }
 

@@ -1,0 +1,204 @@
+//! Vendored, minimal re-implementation of the `anyhow` error-handling API.
+//!
+//! The real crates.io `anyhow` is unavailable in the offline build
+//! environment, so this crate provides the (small) subset the workspace
+//! actually uses with compatible semantics:
+//!
+//! * [`Error`] — a message-chain error value; `Display` shows the outermost
+//!   context, `{:#}` (alternate) shows the whole chain joined by `": "`,
+//!   matching anyhow's formatting contract that the codebase relies on for
+//!   `eprintln!("error: {e:#}")`-style reporting.
+//! * [`Result`] — `Result<T, Error>` alias with the same default parameter.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both `Result`
+//!   and `Option`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros.
+//!
+//! Conversions: any `E: std::error::Error + Send + Sync + 'static` converts
+//! into [`Error`] (so `?` works on io/fmt/utf8/xla-stub errors), and the
+//! error's `source()` chain is preserved as context lines.
+
+use std::fmt;
+
+/// A chain-of-context error. `chain[0]` is the outermost (most recently
+/// attached) message; the last element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Attach an outer context message (the anyhow wrap operation).
+    pub fn context(mut self, context: impl fmt::Display) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root-cause message (innermost of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("root {}", 42)).context("outer")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root 42");
+        assert_eq!(e.root_cause(), "root 42");
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn inner() -> Result<String> {
+            let bytes = vec![0xFF, 0xFE];
+            Ok(std::str::from_utf8(&bytes).map(str::to_string)?)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn option_context_and_ensure() {
+        fn f(x: Option<u32>) -> Result<u32> {
+            let v = x.context("missing value")?;
+            ensure!(v < 10, "v too big: {v}");
+            Ok(v)
+        }
+        assert_eq!(f(Some(3)).unwrap(), 3);
+        assert_eq!(f(None).unwrap_err().to_string(), "missing value");
+        assert!(f(Some(11)).unwrap_err().to_string().contains("11"));
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f() -> Result<()> {
+            bail!("bad {}", "news");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "bad news");
+    }
+}

@@ -1,0 +1,171 @@
+//! PJRT API stub (offline build).
+//!
+//! The runtime layer (`engd::runtime`) is written against the `xla` crate's
+//! PJRT surface: a CPU client that compiles HLO modules into loaded
+//! executables and runs them over `Literal` buffers. The real bindings need
+//! a local `xla_extension` C library, which is not available in this build
+//! environment — so this crate provides the same *types and signatures* but
+//! fails fast (with a clear message) at [`PjRtClient::cpu`].
+//!
+//! Everything downstream of client creation is therefore statically checked
+//! but dynamically unreachable; artifact-dependent tests and benches detect
+//! the missing runtime (no `artifacts/manifest.json`, or the client error)
+//! and skip. To use a real PJRT runtime, point Cargo at genuine bindings:
+//!
+//! ```toml
+//! [patch.crates-io]        # or replace the path dependency directly
+//! xla = { path = "../xla-rs" }
+//! ```
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the bindings' error enum (message-only here).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "xla stub: {what} requires the real PJRT bindings (xla_extension), \
+             which are not bundled in this offline build"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element types transferable through [`Literal::to_vec`].
+pub trait ArrayElement: Copy {}
+impl ArrayElement for f64 {}
+impl ArrayElement for f32 {}
+
+/// A host-side tensor value.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f64>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 f64 literal from a slice.
+    pub fn vec1(data: &[f64]) -> Self {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: data.to_vec(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "xla stub: cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Unpack a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error::unavailable("tuple literals"))
+    }
+
+    /// Copy out the flat element buffer.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable("literal transfer"))
+    }
+
+    /// The literal's dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO-text file into a module proto.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self, Error> {
+        Err(Error::unavailable("HLO parsing"))
+    }
+}
+
+/// A computation ready for PJRT compilation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Transfer the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable("device-to-host transfer"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute over one replica; returns per-device, per-output buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable("execution"))
+    }
+}
+
+/// The PJRT client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub — callers treat this
+    /// exactly like a missing `artifacts/` directory and skip gracefully.
+    pub fn cpu() -> Result<Self, Error> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable("compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_with_clear_message() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("PJRT"), "{err}");
+    }
+
+    #[test]
+    fn literal_reshape_checks_element_count() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(l.dims(), &[4]);
+    }
+}

@@ -14,10 +14,9 @@ mod common;
 use common::{budget_seconds, print_table, run_arms, Arm};
 use engd::config::run::{BiasMode, ExecPath, OptimizerKind, SolveMode};
 use engd::config::OptimizerConfig;
-use engd::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
+    let backend = common::backend()?;
     let budget = budget_seconds(15.0);
 
     // --- 1: bias-correction mode ---
@@ -42,7 +41,7 @@ fn main() -> anyhow::Result<()> {
             ..spring.clone()
         }),
     ];
-    let reports = run_arms("ablation-bias", &rt, &arms, budget, 100_000);
+    let reports = run_arms("ablation-bias", backend.as_ref(), &arms, budget, 100_000);
     print_table(
         "Ablation 1 — SPRING bias correction (Algorithm 1 line 8 readings)",
         &arms,
@@ -66,7 +65,7 @@ fn main() -> anyhow::Result<()> {
             ..OptimizerConfig::default()
         }),
     ];
-    let reports = run_arms("ablation-path", &rt, &arms, budget, 100_000);
+    let reports = run_arms("ablation-path", backend.as_ref(), &arms, budget, 100_000);
     print_table(
         "Ablation 2 — fused XLA step vs decomposed Rust-linalg step \
          (same update; step-rate gap = J-transfer + Rust solve overhead)",
@@ -104,7 +103,7 @@ fn main() -> anyhow::Result<()> {
         path: ExecPath::Decomposed,
         ..OptimizerConfig::default()
     }));
-    let reports = run_arms("ablation-sketch", &rt, &arms, budget, 100_000);
+    let reports = run_arms("ablation-sketch", backend.as_ref(), &arms, budget, 100_000);
     print_table(
         "Ablation 3 — Nyström sketch-size sweep on N=1024 (paper §4: speedup \
          at 10%, none above 25%)",

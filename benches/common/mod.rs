@@ -12,15 +12,25 @@
 
 use std::time::Instant;
 
+use engd::backend::Evaluator;
 use engd::config::{OptimizerConfig, RunConfig};
 use engd::coordinator::{train, TrainReport};
-use engd::runtime::Runtime;
 
 pub fn budget_seconds(default: f64) -> f64 {
     std::env::var("ENGD_BENCH_BUDGET")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(default)
+}
+
+/// The bench backend: `ENGD_BACKEND` env override (pjrt|native|auto), else
+/// auto — PJRT over `artifacts/` when a usable manifest exists, otherwise
+/// the pure-Rust native backend (so every bench runs offline too).
+pub fn backend() -> anyhow::Result<Box<dyn Evaluator>> {
+    let kind = std::env::var("ENGD_BACKEND").unwrap_or_else(|_| "auto".into());
+    let be = engd::backend::select(&kind, "artifacts")?;
+    println!("[bench] backend: {}", be.backend_name());
+    Ok(be)
 }
 
 /// One bench arm: a named optimizer config on a problem.
@@ -45,7 +55,7 @@ impl Arm {
 /// error printed — a legitimate outcome (the paper's dense ENGD also OOMs).
 pub fn run_arms(
     bench: &str,
-    rt: &Runtime,
+    eval: &dyn Evaluator,
     arms: &[Arm],
     budget_s: f64,
     max_steps: usize,
@@ -65,7 +75,7 @@ pub fn run_arms(
         cfg.optimizer.validate().expect("arm config");
         println!("\n--- arm: {} on {} (budget {budget_s:.0}s) ---", arm.tag, arm.problem);
         let t0 = Instant::now();
-        match train(cfg, rt, false) {
+        match train(cfg, eval, false) {
             Ok(r) => {
                 println!(
                     "    {} steps in {:.1}s — best L2 {:.3e}, final loss {:.3e}",

@@ -13,10 +13,9 @@ mod common;
 use common::{budget_seconds, print_table, run_arms, speedup_at_equal_l2, Arm};
 use engd::config::run::{ExecPath, OptimizerKind};
 use engd::config::OptimizerConfig;
-use engd::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
+    let backend = common::backend()?;
     let budget = budget_seconds(30.0);
     let problem = "poisson5d";
 
@@ -58,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         }),
     ];
 
-    let reports = run_arms("fig2", &rt, &arms, budget, 100_000);
+    let reports = run_arms("fig2", backend.as_ref(), &arms, budget, 100_000);
     print_table(
         "Fig. 2 — 5d Poisson, equal time budget (paper: ENGD-W wins, dense ENGD \
          step-starved, first-order plateaus)",

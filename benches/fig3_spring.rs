@@ -10,10 +10,9 @@ mod common;
 use common::{budget_seconds, print_table, run_arms, Arm};
 use engd::config::run::OptimizerKind;
 use engd::config::OptimizerConfig;
-use engd::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
+    let backend = common::backend()?;
     let budget = budget_seconds(30.0);
     let base = OptimizerConfig::default();
 
@@ -49,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             ..base.clone()
         }),
     ];
-    let reports5 = run_arms("fig3-5d", &rt, &arms5, budget, 100_000);
+    let reports5 = run_arms("fig3-5d", backend.as_ref(), &arms5, budget, 100_000);
     print_table(
         "Fig. 3 (left) — 5d: SPRING vs ENGD-W (paper: SPRING converges faster, \
          no line search needed)",
@@ -73,7 +72,7 @@ fn main() -> anyhow::Result<()> {
             ..base.clone()
         }),
     ];
-    let reports10 = run_arms("fig3-10d", &rt, &arms10, budget, 100_000);
+    let reports10 = run_arms("fig3-10d", backend.as_ref(), &arms10, budget, 100_000);
     print_table("Fig. 11/12 — 10d: SPRING vs ENGD-W", &arms10, &reports10);
 
     // --- 100d (paper A.4 line-search bests) ---
@@ -92,7 +91,7 @@ fn main() -> anyhow::Result<()> {
             ..base.clone()
         }),
     ];
-    let reports100 = run_arms("fig3-100d", &rt, &arms100, budget, 100_000);
+    let reports100 = run_arms("fig3-100d", backend.as_ref(), &arms100, budget, 100_000);
     print_table(
         "Fig. 3 (right) — 100d: SPRING vs ENGD-W (paper: SPRING reaches L2 \
          errors 'not previously seen')",

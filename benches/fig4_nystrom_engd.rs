@@ -12,10 +12,9 @@ mod common;
 use common::{budget_seconds, print_table, run_arms, Arm};
 use engd::config::run::{ExecPath, OptimizerKind, SolveMode};
 use engd::config::OptimizerConfig;
-use engd::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
+    let backend = common::backend()?;
     let budget = budget_seconds(25.0);
 
     for problem in ["poisson5d_n512", "poisson5d_n1024", "poisson5d_n2048"] {
@@ -35,7 +34,7 @@ fn main() -> anyhow::Result<()> {
             mk("nystrom_gpu", SolveMode::NystromGpu),
             mk("nystrom_stable", SolveMode::NystromStable),
         ];
-        let reports = run_arms(&format!("fig4-{problem}"), &rt, &arms, budget, 100_000);
+        let reports = run_arms(&format!("fig4-{problem}"), backend.as_ref(), &arms, budget, 100_000);
         print_table(
             &format!(
                 "Fig. 4 — {problem}: exact vs randomized ENGD-W, sketch 10% N \

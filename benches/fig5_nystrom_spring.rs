@@ -12,10 +12,9 @@ mod common;
 use common::{budget_seconds, print_table, run_arms, Arm};
 use engd::config::run::{ExecPath, OptimizerKind, SolveMode};
 use engd::config::OptimizerConfig;
-use engd::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
+    let backend = common::backend()?;
     let budget = budget_seconds(25.0);
     let problem = "poisson100d";
 
@@ -47,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         mk("spring-nystrom_gpu", SolveMode::NystromGpu),
         mk("spring-nystrom_stable", SolveMode::NystromStable),
     ];
-    let reports = run_arms("fig5", &rt, &arms, budget, 100_000);
+    let reports = run_arms("fig5", backend.as_ref(), &arms, budget, 100_000);
     print_table(
         "Fig. 5 — 100d SPRING: exact vs randomized (paper: randomized ≈ or \
          worse than exact; operator differentiation dominates)",

@@ -11,10 +11,9 @@ mod common;
 use common::{budget_seconds, run_arms, Arm};
 use engd::config::run::{ExecPath, OptimizerKind};
 use engd::config::OptimizerConfig;
-use engd::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
+    let backend = common::backend()?;
     let budget = budget_seconds(25.0);
 
     let arms = vec![
@@ -38,7 +37,7 @@ fn main() -> anyhow::Result<()> {
             ..OptimizerConfig::default()
         }),
     ];
-    let reports = run_arms("fig6", &rt, &arms, budget, 100_000);
+    let reports = run_arms("fig6", backend.as_ref(), &arms, budget, 100_000);
 
     println!("\n=== Fig. 6 — d_eff/N over training (diagnostics every 5 steps) ===");
     for (arm, rep) in arms.iter().zip(&reports) {

@@ -7,23 +7,22 @@
 //! (kernel, Woodbury, momentum, line search) is untouched.
 //!
 //! ```bash
-//! cargo run --release --example heat [steps]
+//! cargo run --release --example heat [steps] [--backend native]
 //! ```
 
 use anyhow::Result;
 
+use engd::backend::Evaluator;
+use engd::cli::Args;
 use engd::config::run::OptimizerKind;
 use engd::config::RunConfig;
 use engd::coordinator::train;
-use engd::runtime::Runtime;
 
 fn main() -> Result<()> {
-    let steps: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(150);
-    let rt = Runtime::new("artifacts")?;
-    let p = rt.manifest().problem("heat2d")?;
+    let args = Args::parse(&[])?;
+    let steps: usize = args.leading_usize().unwrap_or(150);
+    let backend = engd::backend::select_from_args(&args)?;
+    let p = backend.problem("heat2d")?;
     println!(
         "heat2d: u_t = Δu on [0,1]²x[0,1], arch {:?}, P = {}",
         p.arch, p.n_params
@@ -41,7 +40,7 @@ fn main() -> Result<()> {
     cfg.optimizer.momentum = 0.8;
     cfg.optimizer.line_search = true;
 
-    let report = train(cfg, &rt, true)?;
+    let report = train(cfg, backend.as_ref(), true)?;
     println!(
         "\nheat2d finished: {} steps, {:.1}s, final loss {:.3e}, best L2 {:.3e}",
         report.steps_done, report.wall_s, report.final_loss, report.best_l2

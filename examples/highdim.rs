@@ -13,18 +13,17 @@
 
 use anyhow::Result;
 
+use engd::backend::Evaluator;
+use engd::cli::Args;
 use engd::config::run::OptimizerKind;
 use engd::config::RunConfig;
 use engd::coordinator::train;
-use engd::runtime::Runtime;
 
 fn main() -> Result<()> {
-    let steps: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(120);
-    let rt = Runtime::new("artifacts")?;
-    let p = rt.manifest().problem("poisson100d")?;
+    let args = Args::parse(&[])?;
+    let steps: usize = args.leading_usize().unwrap_or(120);
+    let backend = engd::backend::select_from_args(&args)?;
+    let p = backend.problem("poisson100d")?;
     println!(
         "100d Poisson (harmonic): arch {:?}, P = {}, batch {}+{} — scaled from \
          the paper's P = 1.3M (DESIGN.md §Substitutions)",
@@ -57,9 +56,9 @@ fn main() -> Result<()> {
     spring_cfg.optimizer.lr = 0.092362;
 
     println!("\n=== ENGD-W (100d) ===");
-    let engd = train(engd_cfg, &rt, true)?;
+    let engd = train(engd_cfg, backend.as_ref(), true)?;
     println!("\n=== SPRING (100d) ===");
-    let spring = train(spring_cfg, &rt, true)?;
+    let spring = train(spring_cfg, backend.as_ref(), true)?;
 
     println!("\n=== summary ===");
     println!(

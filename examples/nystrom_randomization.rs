@@ -12,19 +12,18 @@
 
 use anyhow::Result;
 
+use engd::backend::Evaluator;
+use engd::cli::Args;
 use engd::config::run::{ExecPath, OptimizerKind, SolveMode};
 use engd::config::RunConfig;
 use engd::coordinator::train;
-use engd::runtime::Runtime;
 
 fn main() -> Result<()> {
-    let steps: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(40);
-    let rt = Runtime::new("artifacts")?;
+    let args = Args::parse(&[])?;
+    let steps: usize = args.leading_usize().unwrap_or(40);
+    let backend = engd::backend::select_from_args(&args)?;
     let problem = "poisson5d_n1024";
-    let p = rt.manifest().problem(problem)?;
+    let p = backend.problem(problem)?;
     println!(
         "{problem}: N = {} (sketch 10% = {}), P = {}",
         p.n_total(),
@@ -53,7 +52,7 @@ fn main() -> Result<()> {
         cfg.optimizer.sketch_ratio = 0.10;
         cfg.optimizer.path = ExecPath::Decomposed;
         println!("\n=== {tag} ===");
-        let r = train(cfg, &rt, true)?;
+        let r = train(cfg, backend.as_ref(), true)?;
         println!(
             "{tag}: best L2 {:.3e}, {:.2}s for {} steps ({:.3}s/step)",
             r.best_l2,

@@ -12,18 +12,17 @@
 
 use anyhow::Result;
 
+use engd::backend::Evaluator;
+use engd::cli::Args;
 use engd::config::run::OptimizerKind;
 use engd::config::RunConfig;
 use engd::coordinator::train;
-use engd::runtime::Runtime;
 
 fn main() -> Result<()> {
-    let steps: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(300);
-    let rt = Runtime::new("artifacts")?;
-    let p = rt.manifest().problem("poisson5d")?;
+    let args = Args::parse(&[])?;
+    let steps: usize = args.leading_usize().unwrap_or(300);
+    let backend = engd::backend::select_from_args(&args)?;
+    let p = backend.problem("poisson5d")?;
     println!(
         "5d Poisson: arch {:?}, P = {}, batch {}+{}",
         p.arch, p.n_params, p.n_interior, p.n_boundary
@@ -58,9 +57,9 @@ fn main() -> Result<()> {
     spring_cfg.optimizer.line_search = true;
 
     println!("\n=== ENGD-W ===");
-    let engd = train(engd_cfg, &rt, true)?;
+    let engd = train(engd_cfg, backend.as_ref(), true)?;
     println!("\n=== SPRING ===");
-    let spring = train(spring_cfg, &rt, true)?;
+    let spring = train(spring_cfg, backend.as_ref(), true)?;
 
     println!("\n=== summary (results/e2e-*.csv hold the full curves) ===");
     for r in [&engd, &spring] {

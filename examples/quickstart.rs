@@ -1,23 +1,27 @@
 //! Quickstart: train a PINN on the 2d Poisson problem with SPRING.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart                      # auto backend
+//! cargo run --release --example quickstart -- --backend native  # no artifacts needed
 //! ```
 //!
-//! Demonstrates the whole public API surface in ~30 lines: load the PJRT
-//! runtime, configure a run, train, evaluate. Finishes in well under a
-//! minute on a laptop-class CPU and reaches L2 error < 5e-2.
+//! Demonstrates the whole public API surface in ~30 lines: pick a backend
+//! (PJRT artifacts or pure-Rust native AD), configure a run, train,
+//! evaluate. Finishes in well under a minute on a laptop-class CPU and
+//! reaches L2 error < 1e-2.
 
 use anyhow::Result;
 
+use engd::backend::Evaluator;
+use engd::cli::Args;
 use engd::config::run::OptimizerKind;
 use engd::config::RunConfig;
 use engd::coordinator::train;
-use engd::runtime::Runtime;
 
 fn main() -> Result<()> {
-    let rt = Runtime::new("artifacts")?;
-    println!("PJRT platform: {}", rt.platform());
+    let args = Args::parse(&[])?;
+    let backend = engd::backend::select_from_args(&args)?;
+    println!("backend: {}", backend.backend_name());
 
     let mut cfg = RunConfig {
         name: "quickstart".into(),
@@ -26,20 +30,22 @@ fn main() -> Result<()> {
         eval_every: 10,
         ..RunConfig::default()
     };
+    // The paper's A.2 line-search SPRING (damping 2.09e-10, momentum 0.312)
+    // — reaches L2 ≈ 5e-5 on this problem within the step budget.
     cfg.optimizer.kind = OptimizerKind::Spring;
-    cfg.optimizer.damping = 1e-6;
-    cfg.optimizer.momentum = 0.8;
+    cfg.optimizer.damping = 2.086287e-10;
+    cfg.optimizer.momentum = 0.311542;
     cfg.optimizer.line_search = true;
 
-    let report = train(cfg, &rt, true)?;
+    let report = train(cfg, backend.as_ref(), true)?;
 
     println!(
-        "\nquickstart finished: {} steps, {:.1}s, final loss {:.3e}, best L2 {:.3e}",
-        report.steps_done, report.wall_s, report.final_loss, report.best_l2
+        "\nquickstart finished ({}): {} steps, {:.1}s, final loss {:.3e}, best L2 {:.3e}",
+        report.backend, report.steps_done, report.wall_s, report.final_loss, report.best_l2
     );
     anyhow::ensure!(
-        report.best_l2 < 5e-2,
-        "expected L2 < 5e-2, got {:.3e}",
+        report.best_l2 < 1e-2,
+        "expected L2 < 1e-2, got {:.3e}",
         report.best_l2
     );
     println!("curve written to results/quickstart.csv");

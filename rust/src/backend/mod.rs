@@ -1,0 +1,121 @@
+//! The backend seam: every way the trainer can evaluate the PINN.
+//!
+//! [`Evaluator`] names exactly the computations [`crate::optim::StepEnv`]
+//! and the [`crate::coordinator::Trainer`] consume — the loss, the
+//! per-sample residual Jacobian `(r, J)`, the plain gradient, and the
+//! evaluation-set prediction. Two implementations ship:
+//!
+//! * **PJRT** ([`crate::runtime::Runtime`]) — executes the AOT-lowered XLA
+//!   artifacts (the paper-faithful path; also the only one offering the
+//!   fused single-artifact steps);
+//! * **native** ([`NativeBackend`]) — evaluates the tanh-MLP and its PDE
+//!   operators in pure Rust: second-order forward-mode duals for the
+//!   Laplacian, hand-rolled reverse mode for the per-sample Jacobian rows.
+//!   No artifacts, no PJRT client, runs anywhere `cargo test` does.
+//!
+//! The optimizers' *fused* execution path is artifact-specific by nature;
+//! on a backend with no PJRT runtime they transparently fall back to the
+//! decomposed path (same update up to floating point — paper eq. 5).
+
+pub mod native;
+mod pjrt;
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{Matrix, Workspace};
+use crate::pde::ProblemSpec;
+use crate::runtime::Runtime;
+
+pub use native::NativeBackend;
+
+/// A backend able to evaluate the PINN model and its PDE residuals.
+///
+/// All batched point sets are row-major (`n × dim`). Implementations must
+/// agree with each other up to floating point; the integration suite
+/// cross-checks PJRT against native whenever artifacts are present.
+pub trait Evaluator {
+    /// Short identity for logs/reports ("pjrt", "native").
+    fn backend_name(&self) -> &'static str;
+
+    /// Resolve a problem by name (manifest-backed or built-in).
+    fn problem(&self, name: &str) -> Result<ProblemSpec>;
+
+    /// Names of every problem this backend can serve.
+    fn problem_names(&self) -> Vec<String>;
+
+    /// `L(θ) = ½‖r(θ)‖²` on the given batch (line-search probes).
+    fn loss(&self, p: &ProblemSpec, theta: &[f64], x_int: &[f64], x_bnd: &[f64])
+        -> Result<f64>;
+
+    /// `(L, ∇L)` without materializing J — the SGD/Adam path.
+    fn loss_and_grad(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+    ) -> Result<(f64, Vec<f64>)>;
+
+    /// `(r, J)` with `J = ∂r/∂θ ∈ R^{N×P}` — the object Woodbury lives on.
+    /// Dense J storage is drawn from the caller's [`Workspace`] where the
+    /// backend materializes it host-side; recycle it when done.
+    fn residuals_jacobian(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+        ws: &mut Workspace,
+    ) -> Result<(Vec<f64>, Matrix)>;
+
+    /// Network prediction `u_θ` on an evaluation set.
+    fn u_pred(&self, p: &ProblemSpec, theta: &[f64], x_eval: &[f64]) -> Result<Vec<f64>>;
+
+    /// Cumulative wall seconds spent compiling (PJRT warm-up; 0 natively).
+    fn compile_seconds(&self) -> f64 {
+        0.0
+    }
+
+    /// Downcast to the PJRT runtime, when this backend is one — the hook
+    /// the fused optimizer paths use to reach their step artifacts.
+    fn as_pjrt(&self) -> Option<&Runtime> {
+        None
+    }
+}
+
+/// Build the backend named by `kind`:
+///
+/// * `"pjrt"`   — PJRT runtime over `artifacts_dir` (errors when missing);
+/// * `"native"` — pure-Rust evaluation, no artifacts required;
+/// * `"auto"`   — PJRT when `artifacts_dir/manifest.json` exists *and* a
+///   PJRT client can be created, otherwise native. The default everywhere.
+pub fn select(kind: &str, artifacts_dir: &str) -> Result<Box<dyn Evaluator>> {
+    match kind {
+        "pjrt" => Ok(Box::new(Runtime::new(artifacts_dir)?)),
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "auto" | "" => {
+            let manifest = std::path::Path::new(artifacts_dir).join("manifest.json");
+            if manifest.exists() {
+                match Runtime::new(artifacts_dir) {
+                    Ok(rt) => return Ok(Box::new(rt)),
+                    Err(e) => eprintln!(
+                        "note: PJRT runtime unavailable ({e:#}); falling back to the \
+                         native backend"
+                    ),
+                }
+            }
+            Ok(Box::new(NativeBackend::new()))
+        }
+        other => bail!("unknown backend '{other}' (expected pjrt|native|auto)"),
+    }
+}
+
+/// [`select`] driven by the standard CLI flags: `--backend` (default
+/// "auto") and `--artifacts` (default "artifacts"). Shared by the `engd`
+/// binary and every example.
+pub fn select_from_args(args: &crate::cli::Args) -> Result<Box<dyn Evaluator>> {
+    select(
+        args.get_or("backend", "auto"),
+        args.get_or("artifacts", "artifacts"),
+    )
+}

@@ -1,0 +1,526 @@
+//! The native backend: artifact-free evaluation of the PINN training
+//! objective in pure Rust.
+//!
+//! Everything PJRT does for the trainer — `loss`, `(r, J)`, `∇L`,
+//! `u_pred` — is computed here with the hand-rolled AD in [`tape`]:
+//! per-coordinate second-order forward duals give the PDE operator
+//! (Laplacian / heat), and a structured reverse pass gives per-sample
+//! Jacobian rows written straight into `Workspace`-pooled row-major
+//! storage. Work is parallelized over collocation points with
+//! [`crate::parallel`]; each worker thread owns one [`Tape`], so threads
+//! share nothing but the read-only inputs and their disjoint output rows.
+//!
+//! Residual convention (paper §3, mirrored from `python/compile/model.py`):
+//!
+//! ```text
+//! r_Ω,i  = √(ω_Ω/N_Ω)   · (L u_θ(x_i) − f(x_i))
+//! r_∂Ω,j = √(ω_∂Ω/N_∂Ω) · (u_θ(x_j) − g(x_j))
+//! L(θ)   = ½‖r‖²,   J = ∂r/∂θ  (interior rows first)
+//! ```
+//!
+//! with `L = −Δ` (Poisson) or `∂_t − Δ_x` (heat, time = last coordinate).
+
+mod tape;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::Evaluator;
+use crate::linalg::{Matrix, Workspace};
+use crate::parallel::{self, SendPtr};
+use crate::pde::{
+    builtin_problem_map, exact_solution, ExactSolution, PdeOperator, ProblemSpec,
+};
+
+pub use tape::Tape;
+
+/// Pure-Rust implementation of [`Evaluator`]. Stateless apart from its
+/// problem catalogue (built-ins by default; custom specs for tests).
+pub struct NativeBackend {
+    problems: BTreeMap<String, ProblemSpec>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    /// Backend over the built-in problem catalogue
+    /// ([`crate::pde::builtin_problems`]).
+    pub fn new() -> Self {
+        NativeBackend {
+            problems: builtin_problem_map(),
+        }
+    }
+
+    /// Backend over a custom problem set (property tests use tiny nets).
+    pub fn with_problems(problems: Vec<ProblemSpec>) -> Self {
+        NativeBackend {
+            problems: problems.into_iter().map(|p| (p.name.clone(), p)).collect(),
+        }
+    }
+}
+
+/// Per-problem evaluation context: everything a worker needs, precomputed.
+struct Ctx {
+    arch: Vec<usize>,
+    dim: usize,
+    operator: PdeOperator,
+    exact: ExactSolution,
+    /// √(ω_Ω/N_Ω), √(ω_∂Ω/N_∂Ω).
+    scale_int: f64,
+    scale_bnd: f64,
+    n_int: usize,
+    n_bnd: usize,
+    n_params: usize,
+}
+
+impl Ctx {
+    fn new(p: &ProblemSpec) -> Result<Ctx> {
+        ensure!(p.n_interior > 0 && p.n_boundary > 0, "empty batch in '{}'", p.name);
+        ensure!(
+            p.arch.first() == Some(&p.dim) && p.arch.last() == Some(&1),
+            "problem '{}': arch {:?} must run dim -> 1",
+            p.name,
+            p.arch
+        );
+        ensure!(
+            p.n_params == crate::pde::param_count(&p.arch),
+            "problem '{}': n_params {} != param_count(arch) {}",
+            p.name,
+            p.n_params,
+            crate::pde::param_count(&p.arch)
+        );
+        ensure!(
+            p.operator != PdeOperator::Heat || p.dim >= 2,
+            "heat operator needs at least one spatial + one time coordinate"
+        );
+        Ok(Ctx {
+            arch: p.arch.clone(),
+            dim: p.dim,
+            operator: p.operator,
+            exact: exact_solution(&p.pde)?,
+            scale_int: (p.interior_weight / p.n_interior as f64).sqrt(),
+            scale_bnd: (p.boundary_weight / p.n_boundary as f64).sqrt(),
+            n_int: p.n_interior,
+            n_bnd: p.n_boundary,
+            n_params: p.n_params,
+        })
+    }
+
+    fn check_inputs(&self, theta: &[f64], x_int: &[f64], x_bnd: &[f64]) -> Result<()> {
+        ensure!(
+            theta.len() == self.n_params,
+            "θ has {} params, problem wants {}",
+            theta.len(),
+            self.n_params
+        );
+        ensure!(
+            x_int.len() == self.n_int * self.dim,
+            "interior batch has {} values, problem wants {}×{}",
+            x_int.len(),
+            self.n_int,
+            self.dim
+        );
+        ensure!(
+            x_bnd.len() == self.n_bnd * self.dim,
+            "boundary batch has {} values, problem wants {}×{}",
+            x_bnd.len(),
+            self.n_bnd,
+            self.dim
+        );
+        Ok(())
+    }
+}
+
+/// What the reverse pass should accumulate for a residual `r`.
+#[derive(Clone, Copy, PartialEq)]
+enum Seed {
+    /// `out += ∇_θ r` — one Jacobian row.
+    Row,
+    /// `out += r·∇_θ r` — this point's contribution to `∇L = Jᵀr`.
+    Loss,
+}
+
+/// One worker thread's state: the AD tape plus reusable seed buffers.
+struct Worker {
+    tape: Tape,
+    gamma: Vec<f64>,
+    beta: Vec<f64>,
+}
+
+impl Worker {
+    fn new(ctx: &Ctx) -> Worker {
+        Worker {
+            tape: Tape::new(&ctx.arch),
+            gamma: vec![0.0; ctx.dim],
+            beta: vec![0.0; ctx.dim],
+        }
+    }
+
+    /// Interior residual at `x`; with `grad = Some((out, seed))` the tape's
+    /// reverse pass also accumulates the seeded θ-gradient (one forward,
+    /// one backward — never two forwards).
+    fn interior(
+        &mut self,
+        ctx: &Ctx,
+        theta: &[f64],
+        x: &[f64],
+        grad: Option<(&mut [f64], Seed)>,
+    ) -> f64 {
+        let d = ctx.dim;
+        self.tape.forward(theta, x, d);
+        let s = ctx.scale_int;
+        let f = ctx.exact.forcing(x);
+        let n_lap = match ctx.operator {
+            PdeOperator::Poisson => d,
+            PdeOperator::Heat => d - 1,
+        };
+        let mut lap = 0.0;
+        for i in 0..n_lap {
+            lap += self.tape.d2(i);
+        }
+        let val = match ctx.operator {
+            PdeOperator::Poisson => s * (-lap - f),
+            PdeOperator::Heat => s * (self.tape.d1(d - 1) - lap - f),
+        };
+        if let Some((out, seed)) = grad {
+            let c = s * match seed {
+                Seed::Row => 1.0,
+                Seed::Loss => val,
+            };
+            for g in self.gamma.iter_mut() {
+                *g = 0.0;
+            }
+            for b in self.beta.iter_mut() {
+                *b = 0.0;
+            }
+            for i in 0..n_lap {
+                self.gamma[i] = -c;
+            }
+            if ctx.operator == PdeOperator::Heat {
+                self.beta[d - 1] = c;
+            }
+            self.tape.backward(theta, 0.0, &self.beta, &self.gamma, out);
+        }
+        val
+    }
+
+    /// Boundary residual at `x`; optionally accumulates its seeded θ-grad.
+    fn boundary(
+        &mut self,
+        ctx: &Ctx,
+        theta: &[f64],
+        x: &[f64],
+        grad: Option<(&mut [f64], Seed)>,
+    ) -> f64 {
+        self.tape.forward(theta, x, 0);
+        let val = ctx.scale_bnd * (self.tape.value() - ctx.exact.boundary(x));
+        if let Some((out, seed)) = grad {
+            let alpha = ctx.scale_bnd
+                * match seed {
+                    Seed::Row => 1.0,
+                    Seed::Loss => val,
+                };
+            self.tape.backward(theta, alpha, &[], &[], out);
+        }
+        val
+    }
+
+    /// Residual of batch row `idx` (interior rows first, then boundary).
+    fn residual(
+        &mut self,
+        ctx: &Ctx,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+        idx: usize,
+        grad: Option<(&mut [f64], Seed)>,
+    ) -> f64 {
+        let d = ctx.dim;
+        if idx < ctx.n_int {
+            self.interior(ctx, theta, &x_int[idx * d..(idx + 1) * d], grad)
+        } else {
+            let b = idx - ctx.n_int;
+            self.boundary(ctx, theta, &x_bnd[b * d..(b + 1) * d], grad)
+        }
+    }
+}
+
+/// Split `n` items into one contiguous chunk per worker thread.
+fn thread_chunks(n: usize) -> (usize, usize) {
+    let workers = parallel::num_threads().min(n.max(1));
+    (workers, n.div_ceil(workers.max(1)))
+}
+
+impl Evaluator for NativeBackend {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn problem(&self, name: &str) -> Result<ProblemSpec> {
+        self.problems.get(name).cloned().ok_or_else(|| {
+            anyhow!(
+                "native backend has no problem '{}' (have: {:?})",
+                name,
+                self.problems.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    fn problem_names(&self) -> Vec<String> {
+        self.problems.keys().cloned().collect()
+    }
+
+    fn loss(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+    ) -> Result<f64> {
+        let ctx = Ctx::new(p)?;
+        ctx.check_inputs(theta, x_int, x_bnd)?;
+        let n = ctx.n_int + ctx.n_bnd;
+        let (workers, chunk) = thread_chunks(n);
+        // Fixed chunk→partial mapping keeps the reduction order (and thus
+        // the f64 sum) deterministic for a given thread count.
+        let partials = parallel::par_map(workers, |w| {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            let mut worker = Worker::new(&ctx);
+            let mut acc = 0.0;
+            for idx in start..end {
+                let r = worker.residual(&ctx, theta, x_int, x_bnd, idx, None);
+                acc += r * r;
+            }
+            acc
+        });
+        Ok(0.5 * partials.iter().sum::<f64>())
+    }
+
+    fn loss_and_grad(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+    ) -> Result<(f64, Vec<f64>)> {
+        let ctx = Ctx::new(p)?;
+        ctx.check_inputs(theta, x_int, x_bnd)?;
+        let n = ctx.n_int + ctx.n_bnd;
+        let np = ctx.n_params;
+        let (workers, chunk) = thread_chunks(n);
+        // ∇L = Jᵀ r accumulated per thread with no J materialization:
+        // each point's reverse pass is seeded by its own residual value.
+        let partials: Vec<(f64, Vec<f64>)> = parallel::par_map(workers, |w| {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            let mut worker = Worker::new(&ctx);
+            let mut grad = vec![0.0; np];
+            let mut acc = 0.0;
+            for idx in start..end {
+                let r = worker.residual(
+                    &ctx,
+                    theta,
+                    x_int,
+                    x_bnd,
+                    idx,
+                    Some((&mut grad, Seed::Loss)),
+                );
+                acc += r * r;
+            }
+            (acc, grad)
+        });
+        let mut grad = vec![0.0; np];
+        let mut loss = 0.0;
+        for (acc, g) in &partials {
+            loss += acc;
+            for (total, gi) in grad.iter_mut().zip(g) {
+                *total += gi;
+            }
+        }
+        Ok((0.5 * loss, grad))
+    }
+
+    fn residuals_jacobian(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+        ws: &mut Workspace,
+    ) -> Result<(Vec<f64>, Matrix)> {
+        let ctx = Ctx::new(p)?;
+        ctx.check_inputs(theta, x_int, x_bnd)?;
+        let n = ctx.n_int + ctx.n_bnd;
+        let np = ctx.n_params;
+        // Zero-filled pooled storage: the reverse pass accumulates (+=)
+        // into its row.
+        let mut j = ws.take_matrix(n, np);
+        let mut r = vec![0.0; n];
+        {
+            let jptr = SendPtr(j.data_mut().as_mut_ptr());
+            let rptr = SendPtr(r.as_mut_ptr());
+            parallel::par_chunks(n, |start, end| {
+                let mut worker = Worker::new(&ctx);
+                for idx in start..end {
+                    // SAFETY: chunks are disjoint, so row `idx` of J and
+                    // entry `idx` of r are each written by exactly one
+                    // thread; both buffers outlive the scope.
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(jptr.get().add(idx * np), np)
+                    };
+                    let val = worker.residual(
+                        &ctx,
+                        theta,
+                        x_int,
+                        x_bnd,
+                        idx,
+                        Some((row, Seed::Row)),
+                    );
+                    unsafe { *rptr.get().add(idx) = val };
+                }
+            });
+        }
+        Ok((r, j))
+    }
+
+    fn u_pred(&self, p: &ProblemSpec, theta: &[f64], x_eval: &[f64]) -> Result<Vec<f64>> {
+        let ctx = Ctx::new(p)?;
+        ensure!(
+            theta.len() == ctx.n_params,
+            "θ has {} params, problem wants {}",
+            theta.len(),
+            ctx.n_params
+        );
+        ensure!(
+            x_eval.len() % ctx.dim == 0,
+            "evaluation set length {} is not a multiple of dim {}",
+            x_eval.len(),
+            ctx.dim
+        );
+        let m = x_eval.len() / ctx.dim;
+        let mut out = vec![0.0; m];
+        {
+            let optr = SendPtr(out.as_mut_ptr());
+            parallel::par_chunks(m, |start, end| {
+                let mut tape = Tape::new(&ctx.arch);
+                for i in start..end {
+                    tape.forward(theta, &x_eval[i * ctx.dim..(i + 1) * ctx.dim], 0);
+                    // SAFETY: disjoint chunks — each slot written once.
+                    unsafe { *optr.get().add(i) = tape.value() };
+                }
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::{builtin_problem, init_params, mlp_forward};
+    use crate::rng::Rng;
+
+    #[test]
+    fn u_pred_matches_mlp_oracle() {
+        let be = NativeBackend::new();
+        let p = be.problem("poisson2d").unwrap();
+        let mut rng = Rng::seed_from(42);
+        let theta = init_params(&p.arch, &mut rng);
+        let mut xs = vec![0.0; 33 * p.dim];
+        rng.fill_uniform(&mut xs, 0.0, 1.0);
+        let u = be.u_pred(&p, &theta, &xs).unwrap();
+        for (i, x) in xs.chunks_exact(p.dim).enumerate() {
+            let want = mlp_forward(&theta, &p.arch, x);
+            assert!((u[i] - want).abs() < 1e-13, "point {i}: {} vs {want}", u[i]);
+        }
+    }
+
+    #[test]
+    fn loss_is_half_residual_norm() {
+        let be = NativeBackend::new();
+        let p = be.problem("poisson1d").unwrap();
+        let mut rng = Rng::seed_from(3);
+        let theta = init_params(&p.arch, &mut rng);
+        let mut xi = vec![0.0; p.n_interior * p.dim];
+        let mut xb = vec![0.0; p.n_boundary * p.dim];
+        rng.fill_uniform(&mut xi, 0.0, 1.0);
+        for (k, v) in xb.iter_mut().enumerate() {
+            *v = (k % 2) as f64; // alternate the two 1d boundary points
+        }
+        let mut ws = Workspace::new();
+        let (r, _j) = be.residuals_jacobian(&p, &theta, &xi, &xb, &mut ws).unwrap();
+        let want = 0.5 * r.iter().map(|x| x * x).sum::<f64>();
+        let loss = be.loss(&p, &theta, &xi, &xb).unwrap();
+        assert!(
+            (loss - want).abs() < 1e-12 * (1.0 + want),
+            "loss {loss} vs ½‖r‖² {want}"
+        );
+    }
+
+    #[test]
+    fn grad_matches_jacobian_transpose_times_r() {
+        let be = NativeBackend::new();
+        let p = builtin_problem("poisson2d").unwrap();
+        let mut rng = Rng::seed_from(17);
+        let theta = init_params(&p.arch, &mut rng);
+        let mut xi = vec![0.0; p.n_interior * p.dim];
+        let mut xb = vec![0.0; p.n_boundary * p.dim];
+        rng.fill_uniform(&mut xi, 0.0, 1.0);
+        rng.fill_uniform(&mut xb, 0.0, 1.0);
+        for row in xb.chunks_exact_mut(p.dim) {
+            row[0] = 0.0;
+        }
+        let mut ws = Workspace::new();
+        let (r, j) = be.residuals_jacobian(&p, &theta, &xi, &xb, &mut ws).unwrap();
+        let want = j.tr_matvec(&r);
+        let (loss, grad) = be.loss_and_grad(&p, &theta, &xi, &xb).unwrap();
+        assert!(loss.is_finite());
+        let scale = want.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1.0);
+        for (a, b) in grad.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-10 * scale, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn heat_operator_runs_end_to_end() {
+        let be = NativeBackend::new();
+        let p = be.problem("heat2d").unwrap();
+        let mut rng = Rng::seed_from(5);
+        let theta = init_params(&p.arch, &mut rng);
+        let mut xi = vec![0.0; p.n_interior * p.dim];
+        let mut xb = vec![0.0; p.n_boundary * p.dim];
+        rng.fill_uniform(&mut xi, 0.0, 1.0);
+        rng.fill_uniform(&mut xb, 0.0, 1.0);
+        let mut ws = Workspace::new();
+        let (r, j) = be.residuals_jacobian(&p, &theta, &xi, &xb, &mut ws).unwrap();
+        assert_eq!(r.len(), p.n_total());
+        assert_eq!((j.rows(), j.cols()), (p.n_total(), p.n_params));
+        assert!(r.iter().all(|x| x.is_finite()));
+        assert!(j.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn jacobian_storage_is_pooled_across_calls() {
+        let be = NativeBackend::new();
+        let p = be.problem("poisson1d").unwrap();
+        let mut rng = Rng::seed_from(9);
+        let theta = init_params(&p.arch, &mut rng);
+        let mut xi = vec![0.0; p.n_interior * p.dim];
+        let mut xb = vec![0.0; p.n_boundary * p.dim];
+        rng.fill_uniform(&mut xi, 0.0, 1.0);
+        rng.fill_uniform(&mut xb, 0.0, 1.0);
+        let mut ws = Workspace::new();
+        let (_r, j) = be.residuals_jacobian(&p, &theta, &xi, &xb, &mut ws).unwrap();
+        ws.recycle_matrix(j);
+        let fresh = ws.stats().fresh_allocs;
+        let (_r, j) = be.residuals_jacobian(&p, &theta, &xi, &xb, &mut ws).unwrap();
+        ws.recycle_matrix(j);
+        assert_eq!(ws.stats().fresh_allocs, fresh, "second J must reuse the pool");
+    }
+}

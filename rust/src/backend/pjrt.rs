@@ -1,0 +1,82 @@
+//! [`Evaluator`] over the PJRT artifact runtime.
+//!
+//! Thin adapter: every method is one artifact execution with the manifest-
+//! declared signature (`python/compile/aot.py` lowers them). Semantics are
+//! unchanged from the pre-trait runtime — the trait only names the calls.
+
+use anyhow::Result;
+
+use super::Evaluator;
+use crate::linalg::{Matrix, Workspace};
+use crate::pde::ProblemSpec;
+use crate::runtime::Runtime;
+
+impl Evaluator for Runtime {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn problem(&self, name: &str) -> Result<ProblemSpec> {
+        Ok(self.manifest().problem(name)?.clone())
+    }
+
+    fn problem_names(&self) -> Vec<String> {
+        self.manifest().problems.keys().cloned().collect()
+    }
+
+    fn loss(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+    ) -> Result<f64> {
+        let art = self.artifact(&p.name, "loss")?;
+        Ok(art.call(&[theta, x_int, x_bnd])?[0][0])
+    }
+
+    fn loss_and_grad(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+    ) -> Result<(f64, Vec<f64>)> {
+        let art = self.artifact(&p.name, "grad")?;
+        let mut out = art.call(&[theta, x_int, x_bnd])?;
+        let g = out.pop().expect("grad output");
+        let l = out.pop().expect("loss output")[0];
+        Ok((l, g))
+    }
+
+    fn residuals_jacobian(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+        _ws: &mut Workspace,
+    ) -> Result<(Vec<f64>, Matrix)> {
+        // The artifact hands back freshly transferred buffers; J wraps the
+        // transfer directly (no pooled copy would save anything here).
+        let art = self.artifact(&p.name, "residuals_jacobian")?;
+        let mut out = art.call(&[theta, x_int, x_bnd])?;
+        let j = out.pop().expect("jacobian output");
+        let r = out.pop().expect("r output");
+        Ok((r, Matrix::from_vec(p.n_total(), p.n_params, j)))
+    }
+
+    fn u_pred(&self, p: &ProblemSpec, theta: &[f64], x_eval: &[f64]) -> Result<Vec<f64>> {
+        let art = self.artifact(&p.name, "u_pred")?;
+        let mut out = art.call(&[theta, x_eval])?;
+        Ok(out.pop().expect("u_pred output"))
+    }
+
+    fn compile_seconds(&self) -> f64 {
+        *self.compile_seconds.borrow()
+    }
+
+    fn as_pjrt(&self) -> Option<&Runtime> {
+        Some(self)
+    }
+}

@@ -96,6 +96,16 @@ impl Args {
     pub fn flags(&self) -> impl Iterator<Item = (&str, &str)> {
         self.flags.iter().map(|(k, v)| (k.as_str(), v.as_str()))
     }
+
+    /// A leading bare number, wherever the grammar put it: a numeric first
+    /// token parses as the `command`, later ones as positionals. Used by
+    /// the examples' `[steps]` argument.
+    pub fn leading_usize(&self) -> Option<usize> {
+        self.command
+            .parse()
+            .ok()
+            .or_else(|| self.positional.first().and_then(|s| s.parse().ok()))
+    }
 }
 
 #[cfg(test)]

@@ -274,6 +274,9 @@ impl OptimizerConfig {
 pub struct RunConfig {
     pub name: String,
     pub problem: String,
+    /// Evaluation backend: "pjrt", "native", or "auto" (PJRT when a usable
+    /// artifact manifest exists, native otherwise).
+    pub backend: String,
     pub artifacts_dir: String,
     pub steps: usize,
     pub seed: u64,
@@ -294,6 +297,7 @@ impl Default for RunConfig {
         RunConfig {
             name: "run".into(),
             problem: "poisson5d".into(),
+            backend: "auto".into(),
             artifacts_dir: "artifacts".into(),
             steps: 200,
             seed: 42,
@@ -323,6 +327,7 @@ impl RunConfig {
             match k.as_str() {
                 "name" => c.name = req_str(val, k)?,
                 "problem" => c.problem = req_str(val, k)?,
+                "backend" => c.backend = req_str(val, k)?,
                 "artifacts" | "artifacts_dir" => c.artifacts_dir = req_str(val, k)?,
                 "steps" => c.steps = num(val, k)? as usize,
                 "seed" => c.seed = num(val, k)? as u64,

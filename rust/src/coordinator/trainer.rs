@@ -1,55 +1,88 @@
 //! The training loop.
+//!
+//! Backend-agnostic since the native-backend refactor: the trainer drives
+//! any [`Evaluator`] (PJRT artifacts or pure-Rust native AD) and never
+//! touches an artifact directly — evaluation cost is attributed to the
+//! backend in [`TrainReport::eval_s`].
+//!
+//! Determinism contract: the collocation batch and the optimizer RNG
+//! stream of step `k` are derived from `(cfg.seed, k)` alone, not from a
+//! sequential stream. A run resumed from a step-`m` checkpoint therefore
+//! replays steps `m+1..` with exactly the batches and sketches of the
+//! uninterrupted run, reproducing its loss trajectory bit-for-bit (the
+//! integration suite asserts this).
+
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use super::checkpoint::Checkpoint;
+use crate::backend::Evaluator;
 use crate::config::RunConfig;
 use crate::linalg::{Workspace, WorkspaceStats};
 use crate::metrics::{RunLogger, StepRecord};
 use crate::optim::{build_optimizer, Optimizer, StepEnv};
-use crate::pde::{exact_solution, init_params, l2_relative_error, Sampler};
-use crate::rng::Rng;
-use crate::runtime::{ProblemSpec, Runtime};
+use crate::pde::{exact_solution, init_params, l2_relative_error, ProblemSpec, Sampler};
+use crate::rng::{Rng, SplitMix64};
 
 /// Summary of a finished run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
     pub name: String,
+    /// Which backend evaluated the model ("pjrt", "native").
+    pub backend: String,
     pub steps_done: usize,
     pub wall_s: f64,
     pub final_loss: f64,
+    /// Per-step training losses, in step order (bit-exact resume checks).
+    pub losses: Vec<f64>,
     pub best_l2: f64,
     /// (threshold, seconds) pairs for time-to-accuracy reporting.
     pub time_to: Vec<(f64, f64)>,
     /// Wall-clock seconds spent inside PJRT compilation (excluded from the
     /// per-step budget, like jit warm-up in the paper's PyTorch runs).
     pub compile_s: f64,
+    /// Wall-clock seconds spent in L2 evaluation (`u_pred`), per backend.
+    pub eval_s: f64,
 }
 
-/// A reusable training driver bound to one runtime + problem.
+/// Derive the seed of an independent per-step RNG stream from the run seed,
+/// the 1-based step index, and a purpose salt.
+fn step_stream_seed(seed: u64, step: usize, salt: u64) -> u64 {
+    let mixed = seed
+        ^ salt.rotate_left(31)
+        ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    SplitMix64::new(mixed).next_u64()
+}
+
+/// Purpose salts for the per-step streams.
+const SALT_SAMPLER: u64 = 0x5350_4C31; // "SPL1"
+const SALT_OPT_RNG: u64 = 0x534B_4348; // "SKCH"
+
+/// A reusable training driver bound to one backend + problem.
 pub struct Trainer<'a> {
     /// First step index to run (resumes advance this past 1).
     start_step: usize,
     pub cfg: RunConfig,
-    pub rt: &'a Runtime,
+    pub eval: &'a dyn Evaluator,
     problem: ProblemSpec,
     optimizer: Box<dyn Optimizer>,
-    sampler: Sampler,
-    rng: Rng,
     /// Step-buffer pool shared across the whole run: Gram matrices,
-    /// sketches, and Nyström factors are checked out per step and recycled,
-    /// so steady-state steps allocate nothing for their pool-tracked dense
-    /// temporaries.
+    /// sketches, Nyström factors, and native-backend Jacobians are checked
+    /// out per step and recycled, so steady-state steps allocate nothing
+    /// for their pool-tracked dense temporaries.
     workspace: Workspace,
     /// Fixed evaluation set (points + exact values).
     eval_points: Vec<f64>,
     eval_exact: Vec<f64>,
+    /// Cumulative seconds spent in `u_pred` evaluation.
+    eval_seconds: f64,
     pub theta: Vec<f64>,
 }
 
 impl<'a> Trainer<'a> {
-    pub fn new(cfg: RunConfig, rt: &'a Runtime) -> Result<Self> {
-        let problem = rt.manifest().problem(&cfg.problem)?.clone();
+    pub fn new(cfg: RunConfig, eval: &'a dyn Evaluator) -> Result<Self> {
+        let problem = eval.problem(&cfg.problem)?;
         let optimizer = build_optimizer(&cfg)?;
         let mut rng = Rng::seed_from(cfg.seed);
         let mut sampler = Sampler::new(problem.dim, cfg.seed ^ 0xA5A5_A5A5);
@@ -60,7 +93,7 @@ impl<'a> Trainer<'a> {
         let mut theta = init_params(&arch, &mut rng);
         anyhow::ensure!(
             theta.len() == problem.n_params,
-            "architecture/param-count mismatch: {} vs manifest {}",
+            "architecture/param-count mismatch: {} vs problem spec {}",
             theta.len(),
             problem.n_params
         );
@@ -77,7 +110,7 @@ impl<'a> Trainer<'a> {
             );
             anyhow::ensure!(
                 ck.theta.len() == problem.n_params,
-                "checkpoint θ has {} params, manifest says {}",
+                "checkpoint θ has {} params, problem spec says {}",
                 ck.theta.len(),
                 problem.n_params
             );
@@ -90,14 +123,13 @@ impl<'a> Trainer<'a> {
         Ok(Trainer {
             start_step,
             cfg,
-            rt,
+            eval,
             problem,
             optimizer,
-            sampler,
-            rng,
             workspace: Workspace::new(),
             eval_points,
             eval_exact,
+            eval_seconds: 0.0,
             theta,
         })
     }
@@ -124,11 +156,16 @@ impl<'a> Trainer<'a> {
         ck.save(path)
     }
 
-    /// Relative L2 error of the current iterate on the fixed validation set.
-    pub fn evaluate_l2(&self) -> Result<f64> {
-        let art = self.rt.artifact(&self.problem.name, "u_pred")?;
-        let out = art.call(&[&self.theta, &self.eval_points])?;
-        Ok(l2_relative_error(&out[0], &self.eval_exact))
+    /// Relative L2 error of the current iterate on the fixed validation
+    /// set, via the backend's `u_pred`. Time spent is accumulated into
+    /// [`TrainReport::eval_s`].
+    pub fn evaluate_l2(&mut self) -> Result<f64> {
+        let t0 = Instant::now();
+        let u = self
+            .eval
+            .u_pred(&self.problem, &self.theta, &self.eval_points)?;
+        self.eval_seconds += t0.elapsed().as_secs_f64();
+        Ok(l2_relative_error(&u, &self.eval_exact))
     }
 
     /// Run the configured number of steps (or until the time budget runs
@@ -137,27 +174,37 @@ impl<'a> Trainer<'a> {
         let mut logger = RunLogger::create(&self.cfg.out_dir, &self.cfg.name, echo)
             .context("creating run logger")?;
 
-        // Warm the artifact cache before the clock matters: compile time is
-        // a startup cost, not a per-step cost (DESIGN.md §Perf).
+        // Warm the backend before the clock matters: PJRT compile time is a
+        // startup cost, not a per-step cost (DESIGN.md §Perf); the native
+        // backend just pays one cheap evaluation.
         let _ = self.evaluate_l2()?;
 
         let mut final_loss = f64::NAN;
+        let mut losses = Vec::with_capacity(self.cfg.steps);
         let mut steps_done = 0;
         let end = self.start_step + self.cfg.steps - 1;
         for k in self.start_step..=end {
             if self.cfg.time_budget_s > 0.0 && logger.elapsed() > self.cfg.time_budget_s {
                 break;
             }
-            let x_int = self.sampler.interior(self.problem.n_interior);
-            let x_bnd = self.sampler.boundary(self.problem.n_boundary);
-            let evaluate = k % self.cfg.eval_every.max(1) == 0 || k == self.cfg.steps;
+            // Step-keyed streams: batch and sketches depend on (seed, k)
+            // only, so checkpoint resume replays the exact trajectory.
+            let mut sampler = Sampler::new(
+                self.problem.dim,
+                step_stream_seed(self.cfg.seed, k, SALT_SAMPLER),
+            );
+            let x_int = sampler.interior(self.problem.n_interior);
+            let x_bnd = sampler.boundary(self.problem.n_boundary);
+            let mut step_rng =
+                Rng::seed_from(step_stream_seed(self.cfg.seed, k, SALT_OPT_RNG));
+            let evaluate = k % self.cfg.eval_every.max(1) == 0 || k == end;
             let mut env = StepEnv {
-                rt: self.rt,
+                eval: self.eval,
                 problem: &self.problem,
                 x_int: &x_int,
                 x_bnd: &x_bnd,
                 k,
-                rng: &mut self.rng,
+                rng: &mut step_rng,
                 ws: &mut self.workspace,
                 diagnostics: evaluate,
             };
@@ -166,6 +213,7 @@ impl<'a> Trainer<'a> {
                 .step(&mut self.theta, &mut env)
                 .with_context(|| format!("step {k}"))?;
             final_loss = info.loss;
+            losses.push(info.loss);
             steps_done = k;
 
             let l2 = if evaluate {
@@ -194,17 +242,20 @@ impl<'a> Trainer<'a> {
             .collect();
         Ok(TrainReport {
             name: self.cfg.name.clone(),
+            backend: self.eval.backend_name().to_string(),
             steps_done,
             wall_s: logger.elapsed(),
             final_loss,
+            losses,
             best_l2: logger.best_l2(),
             time_to,
-            compile_s: *self.rt.compile_seconds.borrow(),
+            compile_s: self.eval.compile_seconds(),
+            eval_s: self.eval_seconds,
         })
     }
 }
 
 /// One-call convenience: build a trainer and run it.
-pub fn train(cfg: RunConfig, rt: &Runtime, echo: bool) -> Result<TrainReport> {
-    Trainer::new(cfg, rt)?.run(echo)
+pub fn train(cfg: RunConfig, eval: &dyn Evaluator, echo: bool) -> Result<TrainReport> {
+    Trainer::new(cfg, eval)?.run(echo)
 }

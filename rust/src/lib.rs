@@ -15,6 +15,22 @@
 //! Python never runs at training time: the Rust binary loads the AOT
 //! artifacts through the PJRT C API and owns the entire hot path.
 //!
+//! ## The backend seam
+//!
+//! Model evaluation goes through [`backend::Evaluator`], with two
+//! implementations:
+//!
+//! * **PJRT** ([`runtime::Runtime`]) — executes the AOT artifacts; the
+//!   paper-faithful path, and the only one with fused single-artifact
+//!   optimizer steps;
+//! * **native** ([`backend::NativeBackend`]) — pure-Rust evaluation of the
+//!   tanh-MLP and its PDE operators: per-coordinate second-order forward
+//!   duals for the Laplacian, hand-rolled reverse mode for per-sample
+//!   Jacobian rows, parallelized over collocation points. No artifacts, no
+//!   PJRT client — the full ENGD-W/SPRING/Nyström pipeline trains and is
+//!   tested offline (`--backend native`, the default wherever no artifact
+//!   manifest exists).
+//!
 //! ## The kernel-operator layer
 //!
 //! The L3 hot path is organized around three pieces introduced by the
@@ -50,6 +66,7 @@
     clippy::manual_memcpy
 )]
 
+pub mod backend;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

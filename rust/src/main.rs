@@ -4,22 +4,27 @@
 //!   train      train a PINN (from --config TOML or --problem + flags)
 //!   sweep      random-search hyperparameters (paper Appendix A.1 protocol)
 //!   eff-dim    track the kernel's effective dimension over training (Fig. 6)
-//!   list       show the problems/artifacts in the manifest
-//!   smoke      end-to-end sanity check of the artifact pipeline
+//!   list       show the problems (and artifacts, on PJRT) of the backend
+//!   smoke      end-to-end sanity check of the training pipeline
+//!
+//! Every command takes `--backend {pjrt,native,auto}` (default auto): the
+//! PJRT backend executes AOT artifacts from `--artifacts DIR`; the native
+//! backend evaluates the model in pure Rust and needs no artifacts at all.
 //!
 //! Examples:
 //!   engd train --problem poisson5d --opt spring --steps 300 --echo
+//!   engd train --problem poisson2d --backend native --opt engd_w --steps 200
 //!   engd train --config configs/spring_5d.toml --echo
 //!   engd sweep --problem poisson5d --opt engd_w --trials 10 --steps 100
 //!   engd eff-dim --problem poisson5d --steps 50 --damping 1e-8
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use engd::backend::Evaluator;
 use engd::cli::Args;
 use engd::config::run::{BiasMode, ExecPath, OptimizerKind, SolveMode};
 use engd::config::RunConfig;
 use engd::coordinator::train;
-use engd::runtime::Runtime;
 
 const SWITCHES: &[&str] = &["echo", "line-search", "diag", "help"];
 
@@ -68,19 +73,22 @@ fn print_help() {
          \x20 train     train a PINN\n\
          \x20 sweep     random-search hyperparameters (paper A.1 protocol)\n\
          \x20 eff-dim   track kernel effective dimension (paper Fig. 6)\n\
-         \x20 list      show problems/artifacts in the manifest\n\
+         \x20 list      show the backend's problems (and artifacts on PJRT)\n\
          \x20 smoke     end-to-end pipeline sanity check\n\
          \x20 report    summarize results/ CSVs as a markdown table\n\
          \n\
          COMMON FLAGS\n\
-         \x20 --artifacts DIR   artifact directory (default: artifacts)\n\
+         \x20 --backend KIND    pjrt|native|auto (default auto: PJRT when\n\
+         \x20                   artifacts exist, else pure-Rust native AD)\n\
+         \x20 --artifacts DIR   artifact directory for PJRT (default: artifacts)\n\
          \x20 --config FILE     TOML run config (train)\n\
-         \x20 --problem NAME    problem from the manifest\n\
+         \x20 --problem NAME    problem name (manifest or built-in catalogue)\n\
          \x20 --opt KIND        sgd|adam|engd_dense|engd_w|spring|hessian_free\n\
          \x20 --steps N         training steps\n\
          \x20 --lr X --damping X --momentum X --sketch X\n\
-         \x20 --solve MODE      exact|nystrom_gpu|nystrom_stable\n\
-         \x20 --path MODE       fused|decomposed\n\
+         \x20 --solve MODE      exact|nystrom_gpu|nystrom_stable|nystrom_pcg\n\
+         \x20 --path MODE       fused|decomposed (fused is PJRT-only and\n\
+         \x20                   falls back to decomposed elsewhere)\n\
          \x20 --bias MODE       adam|overwrite|none\n\
          \x20 --line-search     use the grid line search\n\
          \x20 --seed N --eval-every N --time-budget S --out DIR --name NAME\n\
@@ -97,6 +105,9 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     };
     if let Some(p) = args.get("problem") {
         cfg.problem = p.to_string();
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.to_string();
     }
     if let Some(a) = args.get("artifacts") {
         cfg.artifacts_dir = a.to_string();
@@ -168,19 +179,33 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
+/// The backend named by the config (pjrt | native | auto).
+fn backend_for(cfg: &RunConfig) -> Result<Box<dyn Evaluator>> {
+    engd::backend::select(&cfg.backend, &cfg.artifacts_dir)
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::new(&cfg.artifacts_dir)
-        .with_context(|| format!("loading artifacts from '{}'", cfg.artifacts_dir))?;
+    let backend = backend_for(&cfg)?;
     let opt_desc = engd::optim::build_optimizer(&cfg)?.describe();
     println!(
-        "[train] {} on {} ({} steps, seed {})",
-        opt_desc, cfg.problem, cfg.steps, cfg.seed
+        "[train] {} on {} ({} steps, seed {}, backend {})",
+        opt_desc,
+        cfg.problem,
+        cfg.steps,
+        cfg.seed,
+        backend.backend_name()
     );
-    let report = train(cfg, &rt, args.has("echo"))?;
+    let report = train(cfg, backend.as_ref(), args.has("echo"))?;
     println!(
-        "[train] done: {} steps in {:.1}s (+{:.1}s compile) — final loss {:.4e}, best L2 {:.4e}",
-        report.steps_done, report.wall_s, report.compile_s, report.final_loss, report.best_l2
+        "[train] done: {} steps in {:.1}s (+{:.1}s compile, {:.1}s eval) — \
+         final loss {:.4e}, best L2 {:.4e}",
+        report.steps_done,
+        report.wall_s,
+        report.compile_s,
+        report.eval_s,
+        report.final_loss,
+        report.best_l2
     );
     for (thr, s) in &report.time_to {
         println!("[train]   reached L2 <= {thr:.0e} at t = {s:.2}s");
@@ -194,15 +219,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         cfg.name = format!("sweep-{}-{}", cfg.problem, cfg.optimizer.kind.name());
     }
     let trials = args.get_usize("trials")?.unwrap_or(10);
-    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let backend = backend_for(&cfg)?;
     println!(
-        "[sweep] {} trials of {} on {} ({} steps each)",
+        "[sweep] {} trials of {} on {} ({} steps each, backend {})",
         trials,
         cfg.optimizer.kind.name(),
         cfg.problem,
-        cfg.steps
+        cfg.steps,
+        backend.backend_name()
     );
-    let trials = engd::sweep::run_sweep(&cfg, &rt, trials, true)?;
+    let trials = engd::sweep::run_sweep(&cfg, backend.as_ref(), trials, true)?;
     println!("\n[sweep] ranking (best L2 ascending):");
     for t in trials.iter().take(5) {
         println!(
@@ -223,14 +249,14 @@ fn cmd_eff_dim(args: &Args) -> Result<()> {
     let mut cfg = config_from_args(args)?;
     // d_eff tracking needs the decomposed path + diagnostics at every eval.
     cfg.optimizer.path = ExecPath::Decomposed;
-    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let backend = backend_for(&cfg)?;
     println!(
         "[eff-dim] tracking d_eff of (K + lambda*I), lambda = {:.3e}, problem {}",
         cfg.optimizer.damping, cfg.problem
     );
     cfg.eval_every = args.get_usize("eval-every")?.unwrap_or(5);
     cfg.name = format!("effdim-{}", cfg.problem);
-    let report = train(cfg, &rt, true)?;
+    let report = train(cfg, backend.as_ref(), true)?;
     println!(
         "[eff-dim] done; per-step d_eff is in results/{}.csv (d_eff, d_eff_ratio columns)",
         report.name
@@ -239,16 +265,38 @@ fn cmd_eff_dim(args: &Args) -> Result<()> {
 }
 
 fn cmd_list(args: &Args) -> Result<()> {
-    let dir = args.get_or("artifacts", "artifacts");
-    let rt = Runtime::new(dir)?;
-    println!("platform: {}", rt.platform());
-    for (name, p) in &rt.manifest().problems {
-        println!(
-            "{name}: d={} arch={:?} P={} N={}+{} eval={} pde={}",
-            p.dim, p.arch, p.n_params, p.n_interior, p.n_boundary, p.n_eval, p.pde
-        );
-        let arts: Vec<&str> = p.artifacts.keys().map(|s| s.as_str()).collect();
-        println!("   artifacts: {}", arts.join(", "));
+    let backend = engd::backend::select_from_args(args)?;
+    match backend.as_pjrt() {
+        Some(rt) => {
+            println!("backend: pjrt (platform {})", rt.platform());
+            for (name, p) in &rt.manifest().problems {
+                println!(
+                    "{name}: d={} arch={:?} P={} N={}+{} eval={} pde={}",
+                    p.dim, p.arch, p.n_params, p.n_interior, p.n_boundary, p.n_eval, p.pde
+                );
+                println!(
+                    "   artifacts: {}",
+                    rt.manifest().artifact_names(name).join(", ")
+                );
+            }
+        }
+        None => {
+            println!("backend: {} (built-in problem catalogue)", backend.backend_name());
+            for name in backend.problem_names() {
+                let p = backend.problem(&name)?;
+                println!(
+                    "{name}: d={} arch={:?} P={} N={}+{} eval={} pde={} op={}",
+                    p.dim,
+                    p.arch,
+                    p.n_params,
+                    p.n_interior,
+                    p.n_boundary,
+                    p.n_eval,
+                    p.pde,
+                    p.operator.name()
+                );
+            }
+        }
     }
     Ok(())
 }
@@ -265,13 +313,12 @@ fn cmd_report(args: &Args) -> Result<()> {
 }
 
 fn cmd_smoke(args: &Args) -> Result<()> {
-    let dir = args.get_or("artifacts", "artifacts");
-    let rt = Runtime::new(dir)?;
-    println!("[smoke] platform = {}", rt.platform());
+    let backend = engd::backend::select_from_args(args)?;
+    println!("[smoke] backend = {}", backend.backend_name());
     let problem = args.get_or("problem", "poisson2d");
     let mut cfg = RunConfig {
         problem: problem.to_string(),
-        artifacts_dir: dir.to_string(),
+        artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
         name: "smoke".into(),
         steps: 10,
         eval_every: 5,
@@ -281,7 +328,7 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     cfg.optimizer.line_search = true;
     cfg.optimizer.momentum = 0.8;
     cfg.optimizer.damping = 1e-6;
-    let report = train(cfg, &rt, true)?;
+    let report = train(cfg, backend.as_ref(), true)?;
     anyhow::ensure!(report.steps_done == 10, "expected 10 steps");
     anyhow::ensure!(report.final_loss.is_finite(), "loss diverged");
     println!(

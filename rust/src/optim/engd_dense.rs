@@ -91,6 +91,8 @@ impl Optimizer for EngdDense {
         let phi = ch.solve(&grad);
         env.ws.recycle_matrix(ch.into_factor());
         self.gramian = Some(gram);
+        drop(op);
+        env.ws.recycle_matrix(j);
 
         let eta = if self.cfg.line_search {
             let ls = grid_line_search(env, theta, &phi, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)?;

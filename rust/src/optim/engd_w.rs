@@ -11,9 +11,11 @@
 //! * **Fused** (default): the `engd_w_dir` / `engd_w_step` artifacts run the
 //!   full pipeline (Jacobian → Pallas gram → Cholesky → map-back) as one XLA
 //!   program; Rust contributes only the line search and the θ update.
-//! * **Decomposed**: the `residuals_jacobian` artifact supplies (r, J) and
-//!   all linear algebra runs in `crate::linalg` / `crate::nystrom`; required
-//!   for the randomized solves (eq. 9) and the d_eff diagnostics (§3.4).
+//!   PJRT-only — on other backends the step transparently decomposes.
+//! * **Decomposed**: the backend supplies (r, J) and all linear algebra
+//!   runs in `crate::linalg` / `crate::nystrom`; required for the
+//!   randomized solves (eq. 9) and the d_eff diagnostics (§3.4). Works on
+//!   every backend.
 
 use anyhow::Result;
 
@@ -35,7 +37,7 @@ impl EngdW {
     fn fused_step(&self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         if !self.cfg.line_search {
             // Single-artifact hot path: θ' computed inside XLA.
-            let art = env.rt.artifact(&env.problem.name, "engd_w_step")?;
+            let art = env.artifact("engd_w_step")?;
             let out = art.call(&[
                 theta,
                 env.x_int,
@@ -50,8 +52,8 @@ impl EngdW {
                 extra: vec![],
             });
         }
-        // Direction artifact + grid line search on the loss artifact.
-        let art = env.rt.artifact(&env.problem.name, "engd_w_dir")?;
+        // Direction artifact + grid line search on the backend loss.
+        let art = env.artifact("engd_w_dir")?;
         let out = art.call(&[theta, env.x_int, env.x_bnd, &[self.cfg.damping]])?;
         let phi = &out[0];
         let loss = out[1][0];
@@ -73,6 +75,8 @@ impl EngdW {
         let (a, mut extra) =
             kernel_solve(&op, &r, &self.cfg, env.rng, env.ws, env.diagnostics)?;
         let phi = op.apply_t(&a);
+        drop(op);
+        env.ws.recycle_matrix(j);
         let eta = if self.cfg.line_search {
             let ls = grid_line_search(env, theta, &phi, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)?;
             extra.push(("ls_evals".into(), ls.evals as f64));
@@ -95,8 +99,10 @@ impl EngdW {
 impl Optimizer for EngdW {
     fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         match self.cfg.path {
-            ExecPath::Fused => self.fused_step(theta, env),
-            ExecPath::Decomposed => self.decomposed_step(theta, env),
+            // Fused artifacts exist only on the PJRT backend; elsewhere the
+            // decomposed path computes the identical update (paper eq. 5).
+            ExecPath::Fused if env.fused_available() => self.fused_step(theta, env),
+            _ => self.decomposed_step(theta, env),
         }
     }
 

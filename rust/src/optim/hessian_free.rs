@@ -98,6 +98,8 @@ impl Optimizer for HessianFree {
             }
             self.lambda = self.lambda.clamp(1e-12, 1e6);
         }
+        drop(op);
+        env.ws.recycle_matrix(j);
 
         theta.copy_from_slice(&trial);
         Ok(StepInfo {

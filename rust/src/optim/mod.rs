@@ -17,6 +17,12 @@
 //! abstraction (see [`kernel`]) and draw their dense temporaries from the
 //! trainer-owned [`Workspace`] threaded through [`StepEnv`], so the hot
 //! loop never materializes a transpose and reuses its buffers every step.
+//!
+//! Model evaluation goes through the [`crate::backend::Evaluator`] seam:
+//! optimizers see only `loss` / `(r, J)` / `∇L`, so the same suite runs on
+//! the PJRT artifact runtime and on the pure-Rust native backend. Fused
+//! single-artifact steps remain PJRT-specific and fall back to the
+//! decomposed path elsewhere.
 
 mod adam;
 mod engd_dense;
@@ -36,16 +42,18 @@ pub use line_search::{golden_section, grid_line_search, grid_search, LineSearchR
 pub use sgd::Sgd;
 pub use spring::Spring;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
+use crate::backend::Evaluator;
 use crate::config::{OptimizerConfig, RunConfig};
 use crate::linalg::{Matrix, Workspace};
+use crate::pde::ProblemSpec;
 use crate::rng::Rng;
-use crate::runtime::{ProblemSpec, Runtime};
 
 /// Everything an optimizer can see during one step.
 pub struct StepEnv<'a> {
-    pub rt: &'a Runtime,
+    /// The evaluation backend (PJRT artifacts or native Rust AD).
+    pub eval: &'a dyn Evaluator,
     pub problem: &'a ProblemSpec,
     /// Interior collocation points, row-major (N_Ω × d).
     pub x_int: &'a [f64],
@@ -53,40 +61,52 @@ pub struct StepEnv<'a> {
     pub x_bnd: &'a [f64],
     /// 1-based step index (drives SPRING's bias correction).
     pub k: usize,
-    /// Per-run RNG stream (sketches, etc.).
+    /// Per-step RNG stream (sketches, etc.), derived from (run seed, k) so
+    /// resumed runs reproduce the uninterrupted trajectory bit-for-bit.
     pub rng: &'a mut Rng,
-    /// Trainer-owned step-buffer pool: Gram matrices, sketches, and Nyström
-    /// factors are checked out here and recycled across steps.
+    /// Trainer-owned step-buffer pool: Gram matrices, sketches, Nyström
+    /// factors, and native-backend Jacobians are checked out here and
+    /// recycled across steps.
     pub ws: &'a mut Workspace,
     /// If true, this step should also compute diagnostics (d_eff).
     pub diagnostics: bool,
 }
 
 impl StepEnv<'_> {
-    /// Evaluate the loss artifact at `theta` (used by line searches).
+    /// Evaluate `L(θ)` on this step's batch (used by line searches).
     pub fn eval_loss(&self, theta: &[f64]) -> Result<f64> {
-        let art = self.rt.artifact(&self.problem.name, "loss")?;
-        Ok(art.call(&[theta, self.x_int, self.x_bnd])?[0][0])
+        self.eval.loss(self.problem, theta, self.x_int, self.x_bnd)
     }
 
-    /// Fetch `(r, J)` from the `residuals_jacobian` artifact.
-    pub fn residuals_jacobian(&self, theta: &[f64]) -> Result<(Vec<f64>, Matrix)> {
-        let art = self.rt.artifact(&self.problem.name, "residuals_jacobian")?;
-        let mut out = art.call(&[theta, self.x_int, self.x_bnd])?;
-        let j = out.pop().expect("jacobian output");
-        let r = out.pop().expect("r output");
-        let n = self.problem.n_total();
-        let p = self.problem.n_params;
-        Ok((r, Matrix::from_vec(n, p, j)))
+    /// `(r, J)` on this step's batch; dense J storage comes from the step
+    /// workspace — recycle it (`env.ws.recycle_matrix(j)`) when done.
+    pub fn residuals_jacobian(&mut self, theta: &[f64]) -> Result<(Vec<f64>, Matrix)> {
+        self.eval
+            .residuals_jacobian(self.problem, theta, self.x_int, self.x_bnd, self.ws)
     }
 
-    /// Fetch `(loss, ∇L)` from the `grad` artifact.
+    /// `(loss, ∇L)` on this step's batch (the first-order path).
     pub fn loss_and_grad(&self, theta: &[f64]) -> Result<(f64, Vec<f64>)> {
-        let art = self.rt.artifact(&self.problem.name, "grad")?;
-        let mut out = art.call(&[theta, self.x_int, self.x_bnd])?;
-        let g = out.pop().expect("grad output");
-        let l = out.pop().expect("loss output")[0];
-        Ok((l, g))
+        self.eval
+            .loss_and_grad(self.problem, theta, self.x_int, self.x_bnd)
+    }
+
+    /// Whether the backend offers fused step artifacts (PJRT only). The
+    /// fused optimizer paths fall back to decomposed when it doesn't.
+    pub fn fused_available(&self) -> bool {
+        self.eval.as_pjrt().is_some()
+    }
+
+    /// A fused step artifact by name (errors on non-PJRT backends — guard
+    /// with [`StepEnv::fused_available`]).
+    pub fn artifact(&self, name: &str) -> Result<std::rc::Rc<crate::runtime::Artifact>> {
+        let rt = self.eval.as_pjrt().ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' requested on the '{}' backend (fused paths are PJRT-only)",
+                self.eval.backend_name()
+            )
+        })?;
+        rt.artifact(&self.problem.name, name)
     }
 }
 

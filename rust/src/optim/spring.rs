@@ -88,7 +88,7 @@ impl Spring {
         }
         if !self.cfg.line_search && self.cfg.bias != BiasMode::Overwrite {
             // Fully fused single-artifact hot path (Algorithm 1 lines 4–9).
-            let art = env.rt.artifact(&env.problem.name, "spring_step")?;
+            let art = env.artifact("spring_step")?;
             let bias = self.bias_factor(env.k);
             let out = art.call(&[
                 theta,
@@ -109,7 +109,7 @@ impl Spring {
             });
         }
         // Direction artifact; bias/line-search applied in Rust.
-        let art = env.rt.artifact(&env.problem.name, "spring_dir")?;
+        let art = env.artifact("spring_dir")?;
         let out = art.call(&[
             theta,
             &self.phi,
@@ -142,6 +142,8 @@ impl Spring {
         let (a, extra) = kernel_solve(&op, &zeta, &self.cfg, env.rng, env.ws, env.diagnostics)?;
         // φ_raw = μ φ_{k−1} + Jᵀ a
         let jta = op.apply_t(&a);
+        drop(op);
+        env.ws.recycle_matrix(j);
         let phi_raw: Vec<f64> = self
             .phi
             .iter()
@@ -155,8 +157,10 @@ impl Spring {
 impl Optimizer for Spring {
     fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         match self.cfg.path {
-            ExecPath::Fused => self.fused_step(theta, env),
-            ExecPath::Decomposed => self.decomposed_step(theta, env),
+            // Fused artifacts are PJRT-only; the decomposed path computes
+            // the identical update (eq. 8) on every backend.
+            ExecPath::Fused if env.fused_available() => self.fused_step(theta, env),
+            _ => self.decomposed_step(theta, env),
         }
     }
 

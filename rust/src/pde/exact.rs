@@ -52,6 +52,39 @@ impl ExactSolution {
     pub fn eval_batch(&self, xs: &[f64], dim: usize) -> Vec<f64> {
         xs.chunks_exact(dim).map(|x| self.eval(x)).collect()
     }
+
+    /// Manufactured forcing `f` of the benchmark problem built on this
+    /// family: `f = −Δu*` for the Poisson problems, `f = ∂_t u* − Δ_x u*`
+    /// for the heat problem (zero: u* solves the homogeneous equation).
+    /// Mirrors the `f` callables in `python/compile/problems.py`.
+    pub fn forcing(&self, x: &[f64]) -> f64 {
+        let pi = std::f64::consts::PI;
+        match self {
+            // −Δ Πsin(πx_i) = d·π²·Πsin(πx_i)
+            Self::SineProduct => {
+                x.len() as f64
+                    * pi
+                    * pi
+                    * x.iter().map(|&xi| (pi * xi).sin()).product::<f64>()
+            }
+            // −Δ Σcos(πx_i) = π² Σcos(πx_i)
+            Self::CosineSum => pi * pi * x.iter().map(|&xi| (pi * xi).cos()).sum::<f64>(),
+            // Harmonic: −Δu* = 0.
+            Self::Harmonic => 0.0,
+            // −Δ‖x‖² = −2d.
+            Self::SqNorm => -2.0 * x.len() as f64,
+            // u* solves u_t = Δ_x u exactly.
+            Self::HeatProduct => 0.0,
+        }
+    }
+
+    /// Dirichlet boundary data `g` of the benchmark problem: the trace of
+    /// the exact solution (`python/compile/problems.py` uses `g = u*`; the
+    /// 2d quickstart's literal `g = 0` equals the trace up to one ulp of
+    /// `sin(π·1)`).
+    pub fn boundary(&self, x: &[f64]) -> f64 {
+        self.eval(x)
+    }
 }
 
 /// Exact solution for a manifest problem tag.
@@ -131,5 +164,57 @@ mod tests {
     #[test]
     fn unknown_tag_is_error() {
         assert!(exact_solution("nope").is_err());
+    }
+
+    /// Central-difference Laplacian of u* must match the manufactured
+    /// forcing (f = −Δu*) for every Poisson family.
+    #[test]
+    fn forcing_matches_fd_laplacian() {
+        let cases: &[(ExactSolution, &[f64])] = &[
+            (ExactSolution::SineProduct, &[0.31, 0.62]),
+            (ExactSolution::CosineSum, &[0.1, 0.2, 0.3, 0.4, 0.5]),
+            (ExactSolution::Harmonic, &[0.3, 0.7, 0.2, 0.9]),
+            (ExactSolution::SqNorm, &[0.25, 0.5, 0.75]),
+        ];
+        let h = 1e-4;
+        for (e, x) in cases {
+            let d = x.len();
+            let mut lap = 0.0;
+            for i in 0..d {
+                let mut xp = x.to_vec();
+                let mut xm = x.to_vec();
+                xp[i] += h;
+                xm[i] -= h;
+                lap += (e.eval(&xp) - 2.0 * e.eval(x) + e.eval(&xm)) / (h * h);
+            }
+            let want = -lap;
+            let got = e.forcing(x);
+            assert!(
+                (got - want).abs() < 1e-5 * (1.0 + want.abs()),
+                "{e:?}: forcing {got} vs -lap(u*) {want}"
+            );
+        }
+    }
+
+    /// Heat family: ∂_t u* − Δ_x u* = 0 by finite differences.
+    #[test]
+    fn heat_family_is_homogeneous() {
+        let e = ExactSolution::HeatProduct;
+        let x = [0.37, 0.61, 0.23];
+        let h = 1e-4;
+        let mut xt_p = x;
+        let mut xt_m = x;
+        xt_p[2] += h;
+        xt_m[2] -= h;
+        let ut = (e.eval(&xt_p) - e.eval(&xt_m)) / (2.0 * h);
+        let mut lap = 0.0;
+        for i in 0..2 {
+            let mut xp = x;
+            let mut xm = x;
+            xp[i] += h;
+            xm[i] -= h;
+            lap += (e.eval(&xp) - 2.0 * e.eval(&x) + e.eval(&xm)) / (h * h);
+        }
+        assert!((ut - lap - e.forcing(&x)).abs() < 1e-5, "residual {}", ut - lap);
     }
 }

@@ -1,15 +1,31 @@
-//! PDE problem library (Rust mirror of `python/compile/problems.py`).
+//! PDE problem library — the backend-neutral core of the stack.
 //!
-//! The Python side is the source of truth for artifacts (shapes, batches);
-//! this module supplies everything the *coordinator* needs at run time:
-//! exact solutions for L2 evaluation, collocation-point samplers, and an
-//! independent MLP forward oracle used to cross-check the parameter layout
-//! against the `u_pred` artifact.
+//! Historically this module was a thin run-time mirror of
+//! `python/compile/problems.py`: exact solutions for L2 evaluation,
+//! collocation samplers, and an independent MLP "forward oracle" used only
+//! to cross-check the parameter layout against the `u_pred` artifact.
+//!
+//! The native-backend refactor promoted it to the shared problem layer:
+//!
+//! * [`ProblemSpec`] / [`PdeOperator`] — the problem definition itself,
+//!   consumed by every backend (the PJRT manifest parses specs from JSON;
+//!   [`builtin_problems`] serves the same catalogue with no files at all);
+//! * [`mlp_forward`] — no longer just a cross-check: it is the reference
+//!   semantics for `crate::backend::native`, whose taped forward pass and
+//!   hand-rolled AD are property-tested against it and against finite
+//!   differences;
+//! * [`ExactSolution::forcing`] / [`ExactSolution::boundary`] — the
+//!   manufactured right-hand sides, so residuals can be evaluated entirely
+//!   in Rust.
 
 mod exact;
 mod params;
+mod problems;
 mod sampler;
 
 pub use exact::{exact_solution, l2_relative_error, ExactSolution};
 pub use params::{init_params, mlp_forward, param_count};
+pub use problems::{
+    builtin_problem, builtin_problem_map, builtin_problems, PdeOperator, ProblemSpec,
+};
 pub use sampler::Sampler;

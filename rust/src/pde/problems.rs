@@ -1,0 +1,248 @@
+//! The problem catalogue: every benchmark PDE as a [`ProblemSpec`].
+//!
+//! This is the Rust mirror of `python/compile/problems.py` (which remains
+//! the source of truth for *artifact* shapes). Moving the spec type here —
+//! out of the PJRT manifest — makes the problem definition a PDE-level
+//! concept shared by every backend: the PJRT runtime parses specs from
+//! `artifacts/manifest.json`, while the native backend serves them from
+//! [`builtin_problems`] with no files on disk at all.
+//!
+//! Batch sizes and architectures are the scaled CPU variants (see
+//! DESIGN.md §Substitutions); the `*_full` entries keep the paper's exact
+//! setups. `poisson1d` is a native-only warm-up problem (no artifact set
+//! exists for it) used by the end-to-end convergence suite.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::params::param_count;
+
+/// The differential operator of a problem's residual.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PdeOperator {
+    /// `−Δu = f` on the unit cube (paper §2).
+    Poisson,
+    /// `∂_t u − Δ_x u = f` with time as the last coordinate.
+    Heat,
+}
+
+impl PdeOperator {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "poisson" => Self::Poisson,
+            "heat" => Self::Heat,
+            _ => bail!("unknown PDE operator '{s}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Poisson => "poisson",
+            Self::Heat => "heat",
+        }
+    }
+
+    /// Operator implied by an exact-solution family tag (used when a
+    /// manifest predates the explicit `operator` field).
+    pub fn from_pde_tag(tag: &str) -> Self {
+        if tag == "heat_product" {
+            Self::Heat
+        } else {
+            Self::Poisson
+        }
+    }
+}
+
+/// One PINN problem: dimensions, architecture, batch sizes, loss weights.
+///
+/// Backend-neutral: the PJRT runtime attaches its artifact set separately
+/// (see `crate::runtime::Manifest`), and the native backend needs nothing
+/// beyond these fields plus the `pde` tag's exact-solution family.
+#[derive(Debug, Clone)]
+pub struct ProblemSpec {
+    pub name: String,
+    pub dim: usize,
+    pub arch: Vec<usize>,
+    pub n_params: usize,
+    pub n_interior: usize,
+    pub n_boundary: usize,
+    pub n_eval: usize,
+    pub interior_weight: f64,
+    pub boundary_weight: f64,
+    /// Exact-solution family tag (see [`super::exact::ExactSolution`]).
+    pub pde: String,
+    pub operator: PdeOperator,
+}
+
+impl ProblemSpec {
+    pub fn n_total(&self) -> usize {
+        self.n_interior + self.n_boundary
+    }
+}
+
+fn spec(
+    name: &str,
+    dim: usize,
+    arch: &[usize],
+    n_interior: usize,
+    n_boundary: usize,
+    n_eval: usize,
+    pde: &str,
+    operator: PdeOperator,
+) -> ProblemSpec {
+    ProblemSpec {
+        name: name.to_string(),
+        dim,
+        arch: arch.to_vec(),
+        n_params: param_count(arch),
+        n_interior,
+        n_boundary,
+        n_eval,
+        interior_weight: 1.0,
+        boundary_weight: 1.0,
+        pde: pde.to_string(),
+        operator,
+    }
+}
+
+/// The built-in problem set served by the native backend — the mirror of
+/// `python/compile/problems.py` plus the native-only `poisson1d`.
+pub fn builtin_problems() -> Vec<ProblemSpec> {
+    use PdeOperator::{Heat, Poisson};
+    let mut out = vec![
+        // Native-only 1d warm-up: u* = sin(πx), tiny net, converges in a
+        // handful of ENGD steps — the convergence suite's fastest case.
+        spec("poisson1d", 1, &[1, 24, 24, 1], 64, 16, 256, "sine_product", Poisson),
+        spec("poisson2d", 2, &[2, 32, 32, 1], 128, 32, 512, "sine_product", Poisson),
+        spec("poisson5d", 5, &[5, 64, 64, 48, 48, 1], 384, 64, 2000, "cosine_sum", Poisson),
+        spec(
+            "poisson5d_full",
+            5,
+            &[5, 64, 64, 48, 48, 1],
+            3000,
+            500,
+            2000,
+            "cosine_sum",
+            Poisson,
+        ),
+        spec("poisson10d", 10, &[10, 96, 96, 64, 64, 1], 256, 64, 2000, "harmonic", Poisson),
+        spec(
+            "poisson10d_full",
+            10,
+            &[10, 256, 256, 128, 128, 1],
+            3000,
+            1000,
+            2000,
+            "harmonic",
+            Poisson,
+        ),
+        spec(
+            "poisson100d",
+            100,
+            &[100, 192, 192, 128, 128, 1],
+            128,
+            32,
+            1000,
+            "harmonic",
+            Poisson,
+        ),
+        spec(
+            "poisson100d_sq",
+            100,
+            &[100, 192, 192, 128, 128, 1],
+            128,
+            32,
+            1000,
+            "sqnorm",
+            Poisson,
+        ),
+        spec("heat2d", 3, &[3, 48, 48, 1], 192, 64, 1000, "heat_product", Heat),
+    ];
+    // Large-batch variants for the randomization experiments (Fig. 4/9/10),
+    // batch splits exactly as in problems.py.
+    for n in [512usize, 1024, 2048] {
+        let ni = n * 6 / 7;
+        out.push(spec(
+            &format!("poisson5d_n{n}"),
+            5,
+            &[5, 64, 64, 48, 48, 1],
+            ni,
+            n - ni,
+            2000,
+            "cosine_sum",
+            Poisson,
+        ));
+    }
+    for n in [1024usize, 4096] {
+        let ni = n * 8 / 10;
+        out.push(spec(
+            &format!("poisson2d_n{n}"),
+            2,
+            &[2, 32, 32, 1],
+            ni,
+            n - ni,
+            512,
+            "sine_product",
+            Poisson,
+        ));
+    }
+    out
+}
+
+/// Built-in problems as a name-keyed map.
+pub fn builtin_problem_map() -> BTreeMap<String, ProblemSpec> {
+    builtin_problems()
+        .into_iter()
+        .map(|p| (p.name.clone(), p))
+        .collect()
+}
+
+/// Look up one built-in problem by name.
+pub fn builtin_problem(name: &str) -> Result<ProblemSpec> {
+    builtin_problems()
+        .into_iter()
+        .find(|p| p.name == name)
+        .ok_or_else(|| {
+            anyhow!(
+                "no built-in problem '{name}' (have: {:?})",
+                builtin_problems().iter().map(|p| p.name.clone()).collect::<Vec<_>>()
+            )
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_specs_are_consistent() {
+        for p in builtin_problems() {
+            assert_eq!(p.arch[0], p.dim, "{}: arch[0] != dim", p.name);
+            assert_eq!(*p.arch.last().unwrap(), 1, "{}: head width != 1", p.name);
+            assert_eq!(p.n_params, param_count(&p.arch), "{}", p.name);
+            assert!(p.n_interior > 0 && p.n_boundary > 0 && p.n_eval > 0, "{}", p.name);
+            // Every tag resolves to an exact solution.
+            super::super::exact_solution(&p.pde).unwrap();
+            assert_eq!(p.operator, PdeOperator::from_pde_tag(&p.pde), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn mirrors_python_batch_splits() {
+        let m = builtin_problem_map();
+        // problems.py: poisson5d_n1024 uses int(1024*6/7) = 877 interior.
+        assert_eq!(m["poisson5d_n1024"].n_interior, 877);
+        assert_eq!(m["poisson5d_n1024"].n_boundary, 147);
+        assert_eq!(m["poisson2d_n4096"].n_interior, 3276);
+        assert_eq!(m["poisson2d_n4096"].n_boundary, 820);
+        // Paper architectures keep their parameter counts.
+        assert_eq!(m["poisson5d"].n_params, 10_065);
+        assert_eq!(m["poisson10d_full"].n_params, 118_145);
+    }
+
+    #[test]
+    fn unknown_builtin_is_an_error() {
+        assert!(builtin_problem("nope").is_err());
+    }
+}

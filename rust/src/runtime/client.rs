@@ -47,7 +47,7 @@ impl Runtime {
 
     /// Get (compiling if needed) the executable for `problem/artifact`.
     pub fn artifact(&self, problem: &str, name: &str) -> Result<std::rc::Rc<Artifact>> {
-        let spec = self.manifest.problem(problem)?.artifact(name)?.clone();
+        let spec = self.manifest.artifact(problem, name)?.clone();
         self.compile_spec(&spec)
     }
 

@@ -4,6 +4,10 @@
 //! every artifact: file path, argument order/shapes, output shapes. The
 //! runtime is manifest-driven — no shapes are hard-coded in Rust.
 //!
+//! Problem definitions parse into the backend-neutral
+//! [`crate::pde::ProblemSpec`]; the artifact sets (a PJRT-only concern)
+//! are kept here, keyed by problem name.
+//!
 //! Parsing uses our own minimal JSON reader (`crate::config::json`) since
 //! serde is not available offline.
 
@@ -13,6 +17,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::json::JsonValue;
+use crate::pde::{PdeOperator, ProblemSpec};
 
 /// One artifact argument: name + static shape (scalars have empty shape).
 #[derive(Debug, Clone)]
@@ -39,44 +44,13 @@ pub struct ArtifactSpec {
     pub outputs: Vec<ArgSpec>,
 }
 
-/// One PINN problem: dimensions, architecture, batch sizes, artifact set.
-#[derive(Debug, Clone)]
-pub struct ProblemSpec {
-    pub name: String,
-    pub dim: usize,
-    pub arch: Vec<usize>,
-    pub n_params: usize,
-    pub n_interior: usize,
-    pub n_boundary: usize,
-    pub n_eval: usize,
-    pub interior_weight: f64,
-    pub boundary_weight: f64,
-    pub pde: String,
-    pub artifacts: BTreeMap<String, ArtifactSpec>,
-}
-
-impl ProblemSpec {
-    pub fn n_total(&self) -> usize {
-        self.n_interior + self.n_boundary
-    }
-
-    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
-        self.artifacts.get(name).ok_or_else(|| {
-            anyhow!(
-                "problem '{}' has no artifact '{}' (have: {:?})",
-                self.name,
-                name,
-                self.artifacts.keys().collect::<Vec<_>>()
-            )
-        })
-    }
-}
-
-/// The parsed manifest: problem name → spec.
+/// The parsed manifest: problem specs plus per-problem artifact sets.
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub root: PathBuf,
     pub problems: BTreeMap<String, ProblemSpec>,
+    /// problem name → artifact name → spec.
+    artifact_sets: BTreeMap<String, BTreeMap<String, ArtifactSpec>>,
 }
 
 fn parse_shape(v: &JsonValue) -> Result<Vec<usize>> {
@@ -121,6 +95,7 @@ impl Manifest {
             .with_context(|| format!("parsing {}", path.display()))?;
 
         let mut problems = BTreeMap::new();
+        let mut artifact_sets = BTreeMap::new();
         let probs = v
             .get("problems")
             .and_then(JsonValue::as_object)
@@ -162,6 +137,18 @@ impl Manifest {
                 .map(parse_shape)
                 .transpose()?
                 .ok_or_else(|| anyhow!("problem {pname} missing arch"))?;
+            let pde = pv
+                .get("pde")
+                .and_then(JsonValue::as_str)
+                .unwrap_or("")
+                .to_string();
+            // Older manifests carry no explicit operator; infer it from the
+            // exact-solution family tag.
+            let operator = match pv.get("operator").and_then(JsonValue::as_str) {
+                Some(s) => PdeOperator::parse(s)
+                    .with_context(|| format!("problem {pname} operator"))?,
+                None => PdeOperator::from_pde_tag(&pde),
+            };
             problems.insert(
                 pname.clone(),
                 ProblemSpec {
@@ -174,16 +161,17 @@ impl Manifest {
                     n_eval: grab("n_eval")? as usize,
                     interior_weight: grab("interior_weight")?,
                     boundary_weight: grab("boundary_weight")?,
-                    pde: pv
-                        .get("pde")
-                        .and_then(JsonValue::as_str)
-                        .unwrap_or("")
-                        .to_string(),
-                    artifacts,
+                    pde,
+                    operator,
                 },
             );
+            artifact_sets.insert(pname.clone(), artifacts);
         }
-        Ok(Manifest { root, problems })
+        Ok(Manifest {
+            root,
+            problems,
+            artifact_sets,
+        })
     }
 
     pub fn problem(&self, name: &str) -> Result<&ProblemSpec> {
@@ -194,5 +182,32 @@ impl Manifest {
                 self.problems.keys().collect::<Vec<_>>()
             )
         })
+    }
+
+    /// The artifact spec for `problem/name`.
+    pub fn artifact(&self, problem: &str, name: &str) -> Result<&ArtifactSpec> {
+        let set = self.artifact_sets.get(problem).ok_or_else(|| {
+            anyhow!(
+                "manifest has no problem '{}' (have: {:?})",
+                problem,
+                self.artifact_sets.keys().collect::<Vec<_>>()
+            )
+        })?;
+        set.get(name).ok_or_else(|| {
+            anyhow!(
+                "problem '{}' has no artifact '{}' (have: {:?})",
+                problem,
+                name,
+                set.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Names of the artifacts lowered for `problem` (empty when unknown).
+    pub fn artifact_names(&self, problem: &str) -> Vec<String> {
+        self.artifact_sets
+            .get(problem)
+            .map(|set| set.keys().cloned().collect())
+            .unwrap_or_default()
     }
 }

@@ -10,4 +10,7 @@ mod manifest;
 
 pub use artifact::Artifact;
 pub use client::Runtime;
-pub use manifest::{ArgSpec, ArtifactSpec, Manifest, ProblemSpec};
+pub use manifest::{ArgSpec, ArtifactSpec, Manifest};
+// `ProblemSpec` moved to the backend-neutral `pde` module in the native-
+// backend refactor; re-exported here for existing call sites.
+pub use crate::pde::ProblemSpec;

@@ -7,11 +7,11 @@
 
 use anyhow::Result;
 
+use crate::backend::Evaluator;
 use crate::config::run::{BiasMode, ExecPath, OptimizerKind, SolveMode};
 use crate::config::{OptimizerConfig, RunConfig};
 use crate::coordinator::{train, TrainReport};
 use crate::rng::Rng;
-use crate::runtime::Runtime;
 
 /// A sampled hyperparameter assignment with its run outcome.
 #[derive(Debug, Clone)]
@@ -85,7 +85,7 @@ pub fn sample_config(kind: &OptimizerKind, base: &OptimizerConfig, rng: &mut Rng
 /// them ranked by best L2 (ascending — best first).
 pub fn run_sweep(
     base: &RunConfig,
-    rt: &Runtime,
+    eval: &dyn Evaluator,
     trials: usize,
     echo: bool,
 ) -> Result<Vec<Trial>> {
@@ -103,7 +103,7 @@ pub fn run_sweep(
                 crate::optim::build_from_opt(&optimizer)?.describe()
             );
         }
-        match train(cfg, rt, false) {
+        match train(cfg, eval, false) {
             Ok(report) => {
                 if echo {
                     println!(

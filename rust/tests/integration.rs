@@ -213,7 +213,7 @@ fn spring_fused_and_decomposed_paths_agree() {
         let xb = sampler.boundary(p.n_boundary);
         let mut rng_f = Rng::seed_from(1000 + k as u64);
         let mut env = StepEnv {
-            rt: &rt,
+            eval: &rt,
             problem: &p,
             x_int: &xi,
             x_bnd: &xb,
@@ -225,7 +225,7 @@ fn spring_fused_and_decomposed_paths_agree() {
         let inf = fused.step(&mut theta_f, &mut env).unwrap();
         let mut rng_d = Rng::seed_from(1000 + k as u64);
         let mut env = StepEnv {
-            rt: &rt,
+            eval: &rt,
             problem: &p,
             x_int: &xi,
             x_bnd: &xb,
@@ -329,7 +329,7 @@ fn randomized_solves_track_exact_at_large_sketch() {
         let mut theta_copy = theta.clone();
         let mut rng_s = Rng::seed_from(99);
         let mut env = StepEnv {
-            rt: &rt,
+            eval: &rt,
             problem: &p,
             x_int: &xi,
             x_bnd: &xb,
@@ -367,7 +367,7 @@ fn randomized_solves_track_exact_at_large_sketch() {
         let mut theta_copy = theta.clone();
         let mut rng_s = Rng::seed_from(99);
         let mut env = StepEnv {
-            rt: &rt,
+            eval: &rt,
             problem: &p,
             x_int: &xi,
             x_bnd: &xb,
@@ -378,7 +378,7 @@ fn randomized_solves_track_exact_at_large_sketch() {
         };
         opt.step(&mut theta_copy, &mut env).unwrap();
         let env = StepEnv {
-            rt: &rt,
+            eval: &rt,
             problem: &p,
             x_int: &xi,
             x_bnd: &xb,
@@ -460,4 +460,54 @@ fn manifest_pde_tags_resolve() {
         assert_eq!(p.arch[0], p.dim, "{name}: arch[0] != dim");
         assert_eq!(*p.arch.last().unwrap(), 1, "{name}: arch must end at 1");
     }
+}
+
+/// Cross-backend agreement: the native backend's `u_pred`, `loss`, and
+/// `(r, J)` must match the PJRT artifacts on the same inputs — the seam
+/// contract of `backend::Evaluator`. (Artifact-free native correctness is
+/// covered by `rust/tests/native.rs`; this pins the two implementations to
+/// each other whenever artifacts exist.)
+#[test]
+fn native_backend_matches_pjrt_artifacts() {
+    use engd::backend::{Evaluator, NativeBackend};
+
+    let Some(rt) = runtime() else { return };
+    let native = NativeBackend::new();
+    let p = Evaluator::problem(&rt, "poisson2d").unwrap();
+    let mut rng = Rng::seed_from(2024);
+    let theta = init_params(&p.arch, &mut rng);
+    let mut sampler = Sampler::new(p.dim, 31);
+    let xi = sampler.interior(p.n_interior);
+    let xb = sampler.boundary(p.n_boundary);
+
+    // u_pred.
+    let xs = sampler.eval_set(64);
+    let u_pjrt = rt.u_pred(&p, &theta, &xs).unwrap();
+    let u_nat = native.u_pred(&p, &theta, &xs).unwrap();
+    for (a, b) in u_pjrt.iter().zip(&u_nat) {
+        assert!((a - b).abs() < 1e-9, "u_pred: {a} vs {b}");
+    }
+
+    // loss.
+    let l_pjrt = Evaluator::loss(&rt, &p, &theta, &xi, &xb).unwrap();
+    let l_nat = Evaluator::loss(&native, &p, &theta, &xi, &xb).unwrap();
+    assert!(
+        (l_pjrt - l_nat).abs() < 1e-8 * (1.0 + l_pjrt.abs()),
+        "loss: {l_pjrt} vs {l_nat}"
+    );
+
+    // (r, J).
+    let mut ws = Workspace::new();
+    let (r_p, j_p) = rt.residuals_jacobian(&p, &theta, &xi, &xb, &mut ws).unwrap();
+    let (r_n, j_n) = native
+        .residuals_jacobian(&p, &theta, &xi, &xb, &mut ws)
+        .unwrap();
+    for (a, b) in r_p.iter().zip(&r_n) {
+        assert!((a - b).abs() < 1e-8, "r: {a} vs {b}");
+    }
+    assert!(
+        j_p.max_abs_diff(&j_n) < 1e-6,
+        "J mismatch: {:.3e}",
+        j_p.max_abs_diff(&j_n)
+    );
 }

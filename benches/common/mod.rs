@@ -23,9 +23,11 @@ pub fn budget_seconds(default: f64) -> f64 {
         .unwrap_or(default)
 }
 
-/// The bench backend: `ENGD_BACKEND` env override (pjrt|native|auto), else
-/// auto — PJRT over `artifacts/` when a usable manifest exists, otherwise
-/// the pure-Rust native backend (so every bench runs offline too).
+/// The bench backend: `ENGD_BACKEND` env override
+/// (pjrt|native|sharded[:n]|auto), else auto — PJRT over `artifacts/` when
+/// a usable manifest exists, otherwise the pure-Rust native backend (so
+/// every bench runs offline too). `sharded:n` exercises the batch-sharded
+/// composite, bitwise-identical to native.
 pub fn backend() -> anyhow::Result<Box<dyn Evaluator>> {
     let kind = std::env::var("ENGD_BACKEND").unwrap_or_else(|_| "auto".into());
     let be = engd::backend::select(&kind, "artifacts")?;

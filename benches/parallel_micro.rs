@@ -1,0 +1,123 @@
+//! Worker-pool microbenchmarks — the §Perf harness for the execution
+//! substrate itself.
+//!
+//! Two questions the pool refactor must answer with numbers:
+//!
+//! 1. **Dispatch overhead**: what does handing a job to parked workers cost
+//!    versus spawning fresh scoped threads per call (the previous
+//!    substrate), across job granularities?
+//! 2. **Tape reuse**: what does keeping per-worker `Tape` state alive
+//!    across calls buy on repeated native `loss_and_grad` / line-search
+//!    style `loss` evaluations (cold first call vs steady state)?
+
+use std::hint::black_box;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use engd::backend::{Evaluator, NativeBackend};
+use engd::metrics::Summary;
+use engd::pde::{init_params, Sampler};
+use engd::rng::Rng;
+
+fn time_reps(reps: usize, mut f: impl FnMut()) -> Summary {
+    f(); // warm-up
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// The previous substrate, reproduced as a baseline: fresh scoped threads
+/// per call, same chunk grid as `parallel::par_chunks`.
+fn scoped_spawn_chunks(n: usize, workers: usize, f: impl Fn(usize, usize) + Sync) {
+    if workers <= 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(start, end));
+        }
+    });
+}
+
+fn main() {
+    let threads = engd::parallel::num_threads();
+    println!("threads: {threads}");
+
+    // --- dispatch overhead: pool vs scoped spawn -------------------------
+    //
+    // Work item: sum a strided range (enough arithmetic that the compiler
+    // can't erase it, little enough that dispatch cost dominates at small n).
+    for n in [1_000usize, 100_000, 10_000_000] {
+        let acc = AtomicUsize::new(0);
+        let body = |s: usize, e: usize| {
+            let mut local = 0usize;
+            for i in s..e {
+                local = local.wrapping_add(i ^ (i >> 3));
+            }
+            acc.fetch_add(local, Ordering::Relaxed);
+        };
+        let reps = if n >= 10_000_000 { 20 } else { 500 };
+        let pool = time_reps(reps, || engd::parallel::par_chunks(n, body));
+        let scoped = time_reps(reps, || scoped_spawn_chunks(n, threads, body));
+        black_box(acc.load(Ordering::Relaxed));
+        println!(
+            "par_chunks n={n:<9} pool {:>10.2}us  scoped-spawn {:>10.2}us  ({:.1}x)",
+            pool.median * 1e6,
+            scoped.median * 1e6,
+            scoped.median / pool.median.max(1e-12),
+        );
+    }
+    let stats = engd::parallel::pool_stats();
+    println!(
+        "pool stats: {} threads spawned, {} dispatches, {} serial fallbacks",
+        stats.threads_spawned, stats.dispatches, stats.serial_fallbacks
+    );
+
+    // --- tape reuse on the native backend --------------------------------
+    //
+    // Steady-state repeated evaluations (line-search pattern). The first
+    // call per problem pays the tape builds; every later call must reuse.
+    let be = NativeBackend::new();
+    for problem in ["poisson2d", "poisson10d"] {
+        let p = be.problem(problem).unwrap();
+        let mut rng = Rng::seed_from(42);
+        let theta = init_params(&p.arch, &mut rng);
+        let mut sampler = Sampler::new(p.dim, 7);
+        let x_int = sampler.interior(p.n_interior);
+        let x_bnd = sampler.boundary(p.n_boundary);
+
+        let builds_before = engd::backend::native::tape_builds();
+        let t0 = Instant::now();
+        black_box(be.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap());
+        let cold = t0.elapsed().as_secs_f64();
+        let cold_builds = engd::backend::native::tape_builds() - builds_before;
+
+        let after_cold = engd::backend::native::tape_builds();
+        let warm_grad = time_reps(10, || {
+            black_box(be.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap());
+        });
+        let warm_loss = time_reps(20, || {
+            black_box(be.loss(&p, &theta, &x_int, &x_bnd).unwrap());
+        });
+        let steady_builds = engd::backend::native::tape_builds() - after_cold;
+        println!(
+            "{problem:<12} loss_and_grad cold {:>9.3}ms ({cold_builds} tape builds)  \
+             warm {:>9.3}ms  loss warm {:>9.3}ms  (steady-state builds: {steady_builds})",
+            cold * 1e3,
+            warm_grad.median * 1e3,
+            warm_loss.median * 1e3,
+        );
+    }
+}

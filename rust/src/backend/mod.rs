@@ -13,12 +13,22 @@
 //!   Laplacian, hand-rolled reverse mode for the per-sample Jacobian rows.
 //!   No artifacts, no PJRT client, runs anywhere `cargo test` does.
 //!
+//! plus one composite:
+//!
+//! * **sharded** ([`ShardedEvaluator`]) — the collocation batch split into
+//!   contiguous shards across inner native evaluators, each writing its
+//!   Jacobian row-block / residual range straight into the shared
+//!   workspace output; reductions follow a fixed shard order so results
+//!   are bitwise-identical to the unsharded native backend for any shard
+//!   count (`--backend sharded:<n>`).
+//!
 //! The optimizers' *fused* execution path is artifact-specific by nature;
 //! on a backend with no PJRT runtime they transparently fall back to the
 //! decomposed path (same update up to floating point — paper eq. 5).
 
 pub mod native;
 mod pjrt;
+pub mod sharded;
 
 use anyhow::{bail, Result};
 
@@ -27,6 +37,7 @@ use crate::pde::ProblemSpec;
 use crate::runtime::Runtime;
 
 pub use native::NativeBackend;
+pub use sharded::ShardedEvaluator;
 
 /// A backend able to evaluate the PINN model and its PDE residuals.
 ///
@@ -85,14 +96,29 @@ pub trait Evaluator {
 
 /// Build the backend named by `kind`:
 ///
-/// * `"pjrt"`   — PJRT runtime over `artifacts_dir` (errors when missing);
-/// * `"native"` — pure-Rust evaluation, no artifacts required;
-/// * `"auto"`   — PJRT when `artifacts_dir/manifest.json` exists *and* a
+/// * `"pjrt"`    — PJRT runtime over `artifacts_dir` (errors when missing);
+/// * `"native"`  — pure-Rust evaluation, no artifacts required;
+/// * `"sharded"` / `"sharded:<n>"` — the batch-sharded composite over `n`
+///   inner native evaluators (default: one per worker thread); results are
+///   bitwise-identical to `"native"`;
+/// * `"auto"`    — PJRT when `artifacts_dir/manifest.json` exists *and* a
 ///   PJRT client can be created, otherwise native. The default everywhere.
 pub fn select(kind: &str, artifacts_dir: &str) -> Result<Box<dyn Evaluator>> {
     match kind {
         "pjrt" => Ok(Box::new(Runtime::new(artifacts_dir)?)),
         "native" => Ok(Box::new(NativeBackend::new())),
+        "sharded" => Ok(Box::new(ShardedEvaluator::new(
+            crate::parallel::num_threads(),
+        ))),
+        k if k.starts_with("sharded:") => {
+            let n: usize = k["sharded:".len()..].parse().map_err(|_| {
+                anyhow::anyhow!("bad shard count in '{k}' (expected sharded:<n>)")
+            })?;
+            if n == 0 {
+                bail!("shard count must be at least 1 (got '{k}')");
+            }
+            Ok(Box::new(ShardedEvaluator::new(n)))
+        }
         "auto" | "" => {
             let manifest = std::path::Path::new(artifacts_dir).join("manifest.json");
             if manifest.exists() {
@@ -106,7 +132,7 @@ pub fn select(kind: &str, artifacts_dir: &str) -> Result<Box<dyn Evaluator>> {
             }
             Ok(Box::new(NativeBackend::new()))
         }
-        other => bail!("unknown backend '{other}' (expected pjrt|native|auto)"),
+        other => bail!("unknown backend '{other}' (expected pjrt|native|sharded[:n]|auto)"),
     }
 }
 

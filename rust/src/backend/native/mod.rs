@@ -7,8 +7,20 @@
 //! (Laplacian / heat), and a structured reverse pass gives per-sample
 //! Jacobian rows written straight into `Workspace`-pooled row-major
 //! storage. Work is parallelized over collocation points with
-//! [`crate::parallel`]; each worker thread owns one [`Tape`], so threads
-//! share nothing but the read-only inputs and their disjoint output rows.
+//! [`crate::parallel`]; each worker thread owns one [`Tape`] *persistently*
+//! — the tape lives in the thread's [`crate::parallel::with_scratch`] slot
+//! and survives across evaluations and training steps, so a warmed-up step
+//! (including every line-search loss probe) rebuilds zero tape buffers and
+//! spawns zero threads. Threads share nothing but the read-only inputs and
+//! their disjoint output rows.
+//!
+//! Determinism: the loss / gradient reductions are laid out on a *chunk
+//! grid* that depends only on `ENGD_THREADS` and the batch size (see
+//! [`thread_chunks`]), never on runtime scheduling — and the same grid is
+//! what [`super::sharded::ShardedEvaluator`] partitions across inner
+//! evaluators, which is why sharded results are bitwise-identical to this
+//! backend for any shard count. The `shard_*` methods below are that
+//! protocol.
 //!
 //! Residual convention (paper §3, mirrored from `python/compile/model.py`):
 //!
@@ -33,7 +45,7 @@ use crate::pde::{
     builtin_problem_map, exact_solution, ExactSolution, PdeOperator, ProblemSpec,
 };
 
-pub use tape::Tape;
+pub use tape::{tape_builds, Tape};
 
 /// Pure-Rust implementation of [`Evaluator`]. Stateless apart from its
 /// problem catalogue (built-ins by default; custom specs for tests).
@@ -61,6 +73,131 @@ impl NativeBackend {
         NativeBackend {
             problems: problems.into_iter().map(|p| (p.name.clone(), p)).collect(),
         }
+    }
+
+    // --- sharded-evaluator protocol ------------------------------------
+    //
+    // These evaluate a *slice* of the global batch while keeping every
+    // global quantity (residual scaling √(ω/N), the reduction chunk grid)
+    // exactly as the unsharded backend computes it, so a ShardedEvaluator
+    // composed of these calls is bitwise-identical to one NativeBackend.
+
+    /// Loss partials of the global reduction chunks `[c0, c1)` (see
+    /// [`thread_chunks`]): `out[k] = Σ r_i²` over chunk `c0 + k`, rows in
+    /// order. `out` must have `c1 - c0` entries.
+    pub(crate) fn shard_loss_partials(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+        c0: usize,
+        c1: usize,
+        out: &mut [f64],
+    ) -> Result<()> {
+        let ctx = Ctx::new(p)?;
+        ctx.check_inputs(theta, x_int, x_bnd)?;
+        let n = ctx.n_int + ctx.n_bnd;
+        let (chunks, chunk) = thread_chunks(n);
+        ensure!(c0 <= c1 && c1 <= chunks, "chunk range [{c0}, {c1}) of {chunks}");
+        ensure!(out.len() == c1 - c0, "partial buffer length mismatch");
+        for (k, c) in (c0..c1).enumerate() {
+            let start = c * chunk;
+            let end = ((c + 1) * chunk).min(n);
+            out[k] = chunk_loss(&ctx, theta, x_int, x_bnd, start, end);
+        }
+        Ok(())
+    }
+
+    /// Loss+gradient partials of the global reduction chunks `[c0, c1)`:
+    /// `out[k] = (Σ r_i², Σ r_i ∇r_i)` over chunk `c0 + k`.
+    pub(crate) fn shard_loss_grad_partials(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+        c0: usize,
+        c1: usize,
+        out: &mut [(f64, Vec<f64>)],
+    ) -> Result<()> {
+        let ctx = Ctx::new(p)?;
+        ctx.check_inputs(theta, x_int, x_bnd)?;
+        let n = ctx.n_int + ctx.n_bnd;
+        let (chunks, chunk) = thread_chunks(n);
+        ensure!(c0 <= c1 && c1 <= chunks, "chunk range [{c0}, {c1}) of {chunks}");
+        ensure!(out.len() == c1 - c0, "partial buffer length mismatch");
+        for (k, c) in (c0..c1).enumerate() {
+            let start = c * chunk;
+            let end = ((c + 1) * chunk).min(n);
+            out[k] = chunk_loss_grad(&ctx, theta, x_int, x_bnd, start, end);
+        }
+        Ok(())
+    }
+
+    /// Residual entries and Jacobian rows of the global row range
+    /// `[row0, row1)`, written into caller slices: `r_out` gets the
+    /// `row1 - row0` residuals, `j_out` the matching row-major
+    /// `(row1 - row0) × n_params` block. `j_out` must be zeroed (the
+    /// reverse pass accumulates). Rows are pointwise-deterministic, so any
+    /// contiguous partition reproduces the unsharded Jacobian bitwise.
+    pub(crate) fn shard_rows_into(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+        row0: usize,
+        row1: usize,
+        r_out: &mut [f64],
+        j_out: &mut [f64],
+    ) -> Result<()> {
+        let ctx = Ctx::new(p)?;
+        ctx.check_inputs(theta, x_int, x_bnd)?;
+        let n = ctx.n_int + ctx.n_bnd;
+        let np = ctx.n_params;
+        ensure!(row0 <= row1 && row1 <= n, "row range [{row0}, {row1}) of {n}");
+        ensure!(r_out.len() == row1 - row0, "residual slice length mismatch");
+        ensure!(j_out.len() == (row1 - row0) * np, "Jacobian slice length mismatch");
+        with_worker(&ctx, |worker| {
+            for (k, idx) in (row0..row1).enumerate() {
+                let row = &mut j_out[k * np..(k + 1) * np];
+                r_out[k] = worker.residual(&ctx, theta, x_int, x_bnd, idx, Some((row, Seed::Row)));
+            }
+        });
+        Ok(())
+    }
+
+    /// Predictions `u_θ` for evaluation points `[i0, i1)` of a row-major
+    /// point set, written into `out` (`i1 - i0` entries).
+    pub(crate) fn shard_u_pred_into(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_eval: &[f64],
+        i0: usize,
+        i1: usize,
+        out: &mut [f64],
+    ) -> Result<()> {
+        let ctx = Ctx::new(p)?;
+        ensure!(
+            theta.len() == ctx.n_params,
+            "θ has {} params, problem wants {}",
+            theta.len(),
+            ctx.n_params
+        );
+        ensure!(
+            x_eval.len() % ctx.dim == 0 && i1 * ctx.dim <= x_eval.len() && i0 <= i1,
+            "evaluation range [{i0}, {i1}) outside the point set"
+        );
+        ensure!(out.len() == i1 - i0, "prediction slice length mismatch");
+        with_worker(&ctx, |worker| {
+            for (k, i) in (i0..i1).enumerate() {
+                worker.tape.forward(theta, &x_eval[i * ctx.dim..(i + 1) * ctx.dim], 0);
+                out[k] = worker.tape.value();
+            }
+        });
+        Ok(())
     }
 }
 
@@ -250,10 +387,77 @@ impl Worker {
     }
 }
 
-/// Split `n` items into one contiguous chunk per worker thread.
-fn thread_chunks(n: usize) -> (usize, usize) {
+/// The canonical `(chunks, chunk_len)` reduction grid for an `n`-row batch:
+/// one contiguous chunk per worker slot, a pure function of `ENGD_THREADS`
+/// and `n`. Every floating-point reduction in this backend (and in the
+/// sharded evaluator, which partitions these same chunks across inner
+/// evaluators) sums per-chunk partials in chunk order, so results are
+/// bitwise-reproducible for a fixed `ENGD_THREADS` regardless of scheduling
+/// or shard count.
+pub(crate) fn thread_chunks(n: usize) -> (usize, usize) {
     let workers = parallel::num_threads().min(n.max(1));
     (workers, n.div_ceil(workers.max(1)))
+}
+
+/// A thread's persistent worker-state slot: the tape plus seed buffers,
+/// keyed by architecture and rebuilt only when the evaluated arch changes.
+#[derive(Default)]
+struct WorkerSlot {
+    arch: Vec<usize>,
+    worker: Option<Worker>,
+}
+
+/// Run `f` with this thread's persistent [`Worker`] for `ctx`'s
+/// architecture (building it on first use / arch change).
+fn with_worker<R>(ctx: &Ctx, f: impl FnOnce(&mut Worker) -> R) -> R {
+    parallel::with_scratch::<WorkerSlot, R>(|slot| {
+        if slot.worker.is_none() || slot.arch != ctx.arch {
+            slot.worker = Some(Worker::new(ctx));
+            slot.arch = ctx.arch.clone();
+        }
+        f(slot.worker.as_mut().expect("worker slot populated above"))
+    })
+}
+
+/// `Σ r_i²` over global rows `[start, end)` — one reduction chunk's loss
+/// partial, accumulated in row order.
+fn chunk_loss(
+    ctx: &Ctx,
+    theta: &[f64],
+    x_int: &[f64],
+    x_bnd: &[f64],
+    start: usize,
+    end: usize,
+) -> f64 {
+    with_worker(ctx, |worker| {
+        let mut acc = 0.0;
+        for idx in start..end {
+            let r = worker.residual(ctx, theta, x_int, x_bnd, idx, None);
+            acc += r * r;
+        }
+        acc
+    })
+}
+
+/// One reduction chunk's `(Σ r_i², Σ r_i ∇r_i)` partial — the loss and the
+/// chunk's contribution to `∇L = Jᵀr`, with no J materialization.
+fn chunk_loss_grad(
+    ctx: &Ctx,
+    theta: &[f64],
+    x_int: &[f64],
+    x_bnd: &[f64],
+    start: usize,
+    end: usize,
+) -> (f64, Vec<f64>) {
+    with_worker(ctx, |worker| {
+        let mut grad = vec![0.0; ctx.n_params];
+        let mut acc = 0.0;
+        for idx in start..end {
+            let r = worker.residual(ctx, theta, x_int, x_bnd, idx, Some((&mut grad, Seed::Loss)));
+            acc += r * r;
+        }
+        (acc, grad)
+    })
 }
 
 impl Evaluator for NativeBackend {
@@ -287,17 +491,11 @@ impl Evaluator for NativeBackend {
         let n = ctx.n_int + ctx.n_bnd;
         let (workers, chunk) = thread_chunks(n);
         // Fixed chunk→partial mapping keeps the reduction order (and thus
-        // the f64 sum) deterministic for a given thread count.
+        // the f64 sum) deterministic for a given `ENGD_THREADS`.
         let partials = parallel::par_map(workers, |w| {
             let start = w * chunk;
             let end = ((w + 1) * chunk).min(n);
-            let mut worker = Worker::new(&ctx);
-            let mut acc = 0.0;
-            for idx in start..end {
-                let r = worker.residual(&ctx, theta, x_int, x_bnd, idx, None);
-                acc += r * r;
-            }
-            acc
+            chunk_loss(&ctx, theta, x_int, x_bnd, start, end)
         });
         Ok(0.5 * partials.iter().sum::<f64>())
     }
@@ -314,26 +512,13 @@ impl Evaluator for NativeBackend {
         let n = ctx.n_int + ctx.n_bnd;
         let np = ctx.n_params;
         let (workers, chunk) = thread_chunks(n);
-        // ∇L = Jᵀ r accumulated per thread with no J materialization:
-        // each point's reverse pass is seeded by its own residual value.
+        // ∇L = Jᵀ r accumulated per reduction chunk with no J
+        // materialization: each point's reverse pass is seeded by its own
+        // residual value.
         let partials: Vec<(f64, Vec<f64>)> = parallel::par_map(workers, |w| {
             let start = w * chunk;
             let end = ((w + 1) * chunk).min(n);
-            let mut worker = Worker::new(&ctx);
-            let mut grad = vec![0.0; np];
-            let mut acc = 0.0;
-            for idx in start..end {
-                let r = worker.residual(
-                    &ctx,
-                    theta,
-                    x_int,
-                    x_bnd,
-                    idx,
-                    Some((&mut grad, Seed::Loss)),
-                );
-                acc += r * r;
-            }
-            (acc, grad)
+            chunk_loss_grad(&ctx, theta, x_int, x_bnd, start, end)
         });
         let mut grad = vec![0.0; np];
         let mut loss = 0.0;
@@ -366,24 +551,25 @@ impl Evaluator for NativeBackend {
             let jptr = SendPtr(j.data_mut().as_mut_ptr());
             let rptr = SendPtr(r.as_mut_ptr());
             parallel::par_chunks(n, |start, end| {
-                let mut worker = Worker::new(&ctx);
-                for idx in start..end {
-                    // SAFETY: chunks are disjoint, so row `idx` of J and
-                    // entry `idx` of r are each written by exactly one
-                    // thread; both buffers outlive the scope.
-                    let row = unsafe {
-                        std::slice::from_raw_parts_mut(jptr.get().add(idx * np), np)
-                    };
-                    let val = worker.residual(
-                        &ctx,
-                        theta,
-                        x_int,
-                        x_bnd,
-                        idx,
-                        Some((row, Seed::Row)),
-                    );
-                    unsafe { *rptr.get().add(idx) = val };
-                }
+                with_worker(&ctx, |worker| {
+                    for idx in start..end {
+                        // SAFETY: chunks are disjoint, so row `idx` of J and
+                        // entry `idx` of r are each written by exactly one
+                        // thread; both buffers outlive the dispatch.
+                        let row = unsafe {
+                            std::slice::from_raw_parts_mut(jptr.get().add(idx * np), np)
+                        };
+                        let val = worker.residual(
+                            &ctx,
+                            theta,
+                            x_int,
+                            x_bnd,
+                            idx,
+                            Some((row, Seed::Row)),
+                        );
+                        unsafe { *rptr.get().add(idx) = val };
+                    }
+                });
             });
         }
         Ok((r, j))
@@ -408,12 +594,13 @@ impl Evaluator for NativeBackend {
         {
             let optr = SendPtr(out.as_mut_ptr());
             parallel::par_chunks(m, |start, end| {
-                let mut tape = Tape::new(&ctx.arch);
-                for i in start..end {
-                    tape.forward(theta, &x_eval[i * ctx.dim..(i + 1) * ctx.dim], 0);
-                    // SAFETY: disjoint chunks — each slot written once.
-                    unsafe { *optr.get().add(i) = tape.value() };
-                }
+                with_worker(&ctx, |worker| {
+                    for i in start..end {
+                        worker.tape.forward(theta, &x_eval[i * ctx.dim..(i + 1) * ctx.dim], 0);
+                        // SAFETY: disjoint chunks — each slot written once.
+                        unsafe { *optr.get().add(i) = worker.tape.value() };
+                    }
+                });
             });
         }
         Ok(out)

@@ -29,11 +29,24 @@
 //! central finite differences by unit + property tests (this module and
 //! `rust/tests/native.rs`).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::pde::param_count;
 
-/// Per-point forward/reverse AD scratch for one architecture. Reused across
-/// points (and across steps) by a single thread; all buffers are allocated
-/// once at construction.
+/// Process-wide count of [`Tape`] constructions. The worker-pool contract
+/// says a warmed-up training step rebuilds zero tapes; `rust/tests/pool.rs`
+/// asserts this counter freezes after the first step.
+static TAPE_BUILDS: AtomicUsize = AtomicUsize::new(0);
+
+/// How many tapes have ever been built in this process.
+pub fn tape_builds() -> usize {
+    TAPE_BUILDS.load(Ordering::Relaxed)
+}
+
+/// Per-point forward/reverse AD scratch for one architecture. Owned by one
+/// worker thread and reused across points, evaluations, and training steps
+/// (it lives in the thread's `parallel::with_scratch` slot); all buffers
+/// are allocated once at construction.
 pub struct Tape {
     arch: Vec<usize>,
     /// Flat-θ offset of each layer's weight block (biases follow it).
@@ -63,6 +76,7 @@ pub struct Tape {
 
 impl Tape {
     pub fn new(arch: &[usize]) -> Self {
+        TAPE_BUILDS.fetch_add(1, Ordering::Relaxed);
         assert!(arch.len() >= 2, "MLP needs at least one layer");
         assert_eq!(*arch.last().unwrap(), 1, "scalar-output MLP expected");
         let d = arch[0];

@@ -1,0 +1,259 @@
+//! A sharded [`Evaluator`]: the collocation batch split into contiguous
+//! shards across inner evaluators.
+//!
+//! This is the batch-partitioned execution layout of Dual Natural Gradient
+//! Descent (Jnini & Vella, 2025) and the randomized-NLA ENGD line (Bioli et
+//! al., 2025) — per-sample residual/Jacobian work scales by splitting the
+//! collocation batch across executors, while the kernel solve stays global.
+//! Today the inner evaluators are in-process [`NativeBackend`] instances
+//! dispatched on the [`crate::parallel`] worker pool; the shard protocol
+//! (`NativeBackend::shard_*`) is shaped so the same composite can later
+//! front per-process or per-device executors.
+//!
+//! ## Bitwise contract
+//!
+//! `ShardedEvaluator` results are **bitwise identical** to the unsharded
+//! [`NativeBackend`] for any shard count, because nothing about the math
+//! depends on the shard layout:
+//!
+//! * residuals, Jacobian rows, and predictions are pointwise — each shard
+//!   computes its rows exactly as the unsharded backend would and writes
+//!   them into disjoint ranges of the shared output (`Workspace`-pooled J,
+//!   the residual vector, the prediction buffer);
+//! * the loss / gradient reductions reuse the native backend's global
+//!   chunk grid (`thread_chunks`, a pure function of `ENGD_THREADS` and
+//!   the batch size): shards compute whole chunks' partials and the final
+//!   sum runs over chunks in fixed order, so the f64 reduction sequence is
+//!   byte-for-byte the unsharded one.
+//!
+//! `rust/tests/pool.rs` cross-checks all four evaluation entry points (and
+//! a whole training trajectory) against the unsharded backend bitwise.
+
+use anyhow::{bail, Result};
+
+use super::native::{thread_chunks, NativeBackend};
+use super::Evaluator;
+use crate::linalg::{Matrix, Workspace};
+use crate::parallel::{self, SendPtr};
+use crate::pde::ProblemSpec;
+
+/// Composite evaluator: `shards` inner native evaluators, each serving a
+/// contiguous slice of every batch.
+pub struct ShardedEvaluator {
+    inner: Vec<NativeBackend>,
+}
+
+impl ShardedEvaluator {
+    /// `shards` inner evaluators over the built-in problem catalogue
+    /// (clamped to ≥ 1). `parallel::num_threads()` shards saturate the
+    /// worker pool; more simply makes shards finer.
+    pub fn new(shards: usize) -> Self {
+        Self::build(shards, NativeBackend::new)
+    }
+
+    /// Sharded evaluator over a custom problem set (tests).
+    pub fn with_problems(problems: Vec<ProblemSpec>, shards: usize) -> Self {
+        Self::build(shards, || NativeBackend::with_problems(problems.clone()))
+    }
+
+    fn build(shards: usize, mk: impl Fn() -> NativeBackend) -> Self {
+        ShardedEvaluator {
+            inner: (0..shards.max(1)).map(|_| mk()).collect(),
+        }
+    }
+
+    /// Number of shards the batch is split into.
+    pub fn shards(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// Contiguous, balanced range of work units owned by shard `s`.
+    fn shard_range(units: usize, shards: usize, s: usize) -> (usize, usize) {
+        (units * s / shards, units * (s + 1) / shards)
+    }
+
+    /// Dispatch `f(shard, lo, hi)` for every shard's slice of `units` work
+    /// units across the pool, surfacing the first shard failure (if any).
+    fn for_shards(
+        &self,
+        units: usize,
+        f: impl Fn(usize, usize, usize) -> Result<()> + Sync,
+    ) -> Result<()> {
+        let shards = self.inner.len();
+        let failures = parallel::par_map(shards, |s| {
+            let (lo, hi) = Self::shard_range(units, shards, s);
+            f(s, lo, hi).err().map(|e| format!("shard {s}: {e:#}"))
+        });
+        if let Some(msg) = failures.into_iter().flatten().next() {
+            bail!("{msg}");
+        }
+        Ok(())
+    }
+}
+
+impl Evaluator for ShardedEvaluator {
+    fn backend_name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn problem(&self, name: &str) -> Result<ProblemSpec> {
+        self.inner[0].problem(name)
+    }
+
+    fn problem_names(&self) -> Vec<String> {
+        self.inner[0].problem_names()
+    }
+
+    fn loss(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+    ) -> Result<f64> {
+        let n = p.n_total();
+        let (chunks, _) = thread_chunks(n);
+        let mut partials = vec![0.0; chunks];
+        {
+            let pptr = SendPtr(partials.as_mut_ptr());
+            self.for_shards(chunks, |s, c0, c1| {
+                // SAFETY: shards own disjoint chunk ranges of `partials`,
+                // which outlives the dispatch.
+                let out = unsafe {
+                    std::slice::from_raw_parts_mut(pptr.get().add(c0), c1 - c0)
+                };
+                self.inner[s].shard_loss_partials(p, theta, x_int, x_bnd, c0, c1, out)
+            })?;
+        }
+        // Fixed chunk order — the unsharded backend's exact reduction.
+        Ok(0.5 * partials.iter().sum::<f64>())
+    }
+
+    fn loss_and_grad(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+    ) -> Result<(f64, Vec<f64>)> {
+        let n = p.n_total();
+        let np = p.n_params;
+        let (chunks, _) = thread_chunks(n);
+        let mut partials: Vec<(f64, Vec<f64>)> =
+            (0..chunks).map(|_| (0.0, Vec::new())).collect();
+        {
+            let pptr = SendPtr(partials.as_mut_ptr());
+            self.for_shards(chunks, |s, c0, c1| {
+                // SAFETY: disjoint chunk ranges per shard (see `loss`).
+                let out = unsafe {
+                    std::slice::from_raw_parts_mut(pptr.get().add(c0), c1 - c0)
+                };
+                self.inner[s].shard_loss_grad_partials(p, theta, x_int, x_bnd, c0, c1, out)
+            })?;
+        }
+        let mut grad = vec![0.0; np];
+        let mut loss = 0.0;
+        for (acc, g) in &partials {
+            loss += acc;
+            for (total, gi) in grad.iter_mut().zip(g) {
+                *total += gi;
+            }
+        }
+        Ok((0.5 * loss, grad))
+    }
+
+    fn residuals_jacobian(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+        ws: &mut Workspace,
+    ) -> Result<(Vec<f64>, Matrix)> {
+        let n = p.n_total();
+        let np = p.n_params;
+        // One shared output: shards write disjoint Jacobian row-blocks and
+        // residual ranges straight into the pooled storage.
+        let mut j = ws.take_matrix(n, np);
+        let mut r = vec![0.0; n];
+        {
+            let jptr = SendPtr(j.data_mut().as_mut_ptr());
+            let rptr = SendPtr(r.as_mut_ptr());
+            self.for_shards(n, |s, row0, row1| {
+                // SAFETY: shards own disjoint row ranges of J and r; both
+                // buffers outlive the dispatch.
+                let (r_out, j_out) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(rptr.get().add(row0), row1 - row0),
+                        std::slice::from_raw_parts_mut(
+                            jptr.get().add(row0 * np),
+                            (row1 - row0) * np,
+                        ),
+                    )
+                };
+                self.inner[s].shard_rows_into(p, theta, x_int, x_bnd, row0, row1, r_out, j_out)
+            })?;
+        }
+        Ok((r, j))
+    }
+
+    fn u_pred(&self, p: &ProblemSpec, theta: &[f64], x_eval: &[f64]) -> Result<Vec<f64>> {
+        let m = x_eval.len() / p.dim.max(1);
+        let mut out = vec![0.0; m];
+        {
+            let optr = SendPtr(out.as_mut_ptr());
+            self.for_shards(m, |s, i0, i1| {
+                // SAFETY: disjoint prediction ranges per shard.
+                let slice = unsafe {
+                    std::slice::from_raw_parts_mut(optr.get().add(i0), i1 - i0)
+                };
+                self.inner[s].shard_u_pred_into(p, theta, x_eval, i0, i1, slice)
+            })?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::init_params;
+    use crate::rng::Rng;
+
+    #[test]
+    fn shard_ranges_cover_and_balance() {
+        for units in [0usize, 1, 5, 17, 64, 100] {
+            for shards in [1usize, 2, 3, 7, 16] {
+                let mut next = 0;
+                for s in 0..shards {
+                    let (lo, hi) = ShardedEvaluator::shard_range(units, shards, s);
+                    assert_eq!(lo, next, "gap at shard {s} ({units} units, {shards} shards)");
+                    assert!(hi >= lo);
+                    assert!(hi - lo <= units.div_ceil(shards), "imbalanced shard {s}");
+                    next = hi;
+                }
+                assert_eq!(next, units);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_loss_matches_native_bitwise_smoke() {
+        // The full cross-check matrix lives in rust/tests/pool.rs; this is
+        // the in-module smoke version on one problem.
+        let native = NativeBackend::new();
+        let sharded = ShardedEvaluator::new(3);
+        let p = native.problem("poisson1d").unwrap();
+        let mut rng = Rng::seed_from(11);
+        let theta = init_params(&p.arch, &mut rng);
+        let mut xi = vec![0.0; p.n_interior * p.dim];
+        let mut xb = vec![0.0; p.n_boundary * p.dim];
+        rng.fill_uniform(&mut xi, 0.0, 1.0);
+        for (k, v) in xb.iter_mut().enumerate() {
+            *v = (k % 2) as f64;
+        }
+        let a = native.loss(&p, &theta, &xi, &xb).unwrap();
+        let b = sharded.loss(&p, &theta, &xi, &xb).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+    }
+}

@@ -274,8 +274,9 @@ impl OptimizerConfig {
 pub struct RunConfig {
     pub name: String,
     pub problem: String,
-    /// Evaluation backend: "pjrt", "native", or "auto" (PJRT when a usable
-    /// artifact manifest exists, native otherwise).
+    /// Evaluation backend: "pjrt", "native", "sharded[:n]" (batch-sharded
+    /// composite, bitwise-identical to native), or "auto" (PJRT when a
+    /// usable artifact manifest exists, native otherwise).
     pub backend: String,
     pub artifacts_dir: String,
     pub steps: usize,

@@ -19,11 +19,17 @@ const MAGIC: &[u8; 8] = b"ENGDCKP1";
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub problem: String,
+    /// Optimizer kind (`OptimizerKind::name`) that produced `phi`. The
+    /// state layout is optimizer-specific, so resume refuses a mismatch
+    /// rather than misinterpreting the vector. Empty in pre-PR-3
+    /// checkpoints (accepted, unvalidated).
+    pub optimizer: String,
     /// 1-based index of the last completed step.
     pub step: usize,
     pub seed: u64,
     pub theta: Vec<f64>,
-    /// SPRING momentum state (empty for other optimizers).
+    /// Optimizer auxiliary state (SPRING's φ, Adam's [t, m, v], SGD's
+    /// velocity, Hessian-free's [λ, warm start]; empty when stateless).
     pub phi: Vec<f64>,
 }
 
@@ -31,6 +37,7 @@ impl Checkpoint {
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let header = JsonValue::Object(vec![
             ("problem".into(), JsonValue::String(self.problem.clone())),
+            ("optimizer".into(), JsonValue::String(self.optimizer.clone())),
             ("step".into(), JsonValue::Number(self.step as f64)),
             ("seed".into(), JsonValue::Number(self.seed as f64)),
             ("theta_len".into(), JsonValue::Number(self.theta.len() as f64)),
@@ -89,6 +96,12 @@ impl Checkpoint {
                 .and_then(JsonValue::as_str)
                 .unwrap_or_default()
                 .to_string(),
+            // Absent in pre-PR-3 checkpoints: loads as "" (unvalidated).
+            optimizer: header
+                .get("optimizer")
+                .and_then(JsonValue::as_str)
+                .unwrap_or_default()
+                .to_string(),
             step: get("step")? as usize,
             seed: get("seed")? as u64,
             theta,
@@ -105,6 +118,7 @@ mod tests {
     fn round_trips_exactly() {
         let ck = Checkpoint {
             problem: "poisson5d".into(),
+            optimizer: "spring".into(),
             step: 123,
             seed: 42,
             theta: (0..257).map(|i| (i as f64).sin() * 1e-3).collect(),
@@ -121,6 +135,7 @@ mod tests {
     fn empty_phi_is_fine() {
         let ck = Checkpoint {
             problem: "p".into(),
+            optimizer: String::new(),
             step: 1,
             seed: 7,
             theta: vec![1.0, 2.0],

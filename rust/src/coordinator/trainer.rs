@@ -108,6 +108,15 @@ impl<'a> Trainer<'a> {
                 ck.problem,
                 cfg.problem
             );
+            // The state vector's layout is optimizer-specific; feeding
+            // SPRING's φ into Adam (etc.) would silently corrupt the run.
+            // Legacy checkpoints record no kind and load unvalidated.
+            anyhow::ensure!(
+                ck.optimizer.is_empty() || ck.optimizer == cfg.optimizer.kind.name(),
+                "checkpoint was written by optimizer '{}', run uses '{}'",
+                ck.optimizer,
+                cfg.optimizer.kind.name()
+            );
             anyhow::ensure!(
                 ck.theta.len() == problem.n_params,
                 "checkpoint θ has {} params, problem spec says {}",
@@ -146,6 +155,7 @@ impl<'a> Trainer<'a> {
     pub fn save_checkpoint(&self, step: usize) -> Result<()> {
         let ck = Checkpoint {
             problem: self.cfg.problem.clone(),
+            optimizer: self.cfg.optimizer.kind.name().to_string(),
             step,
             seed: self.cfg.seed,
             theta: self.theta.clone(),

@@ -31,6 +31,26 @@
 //!   tested offline (`--backend native`, the default wherever no artifact
 //!   manifest exists).
 //!
+//! On top of the seam sits [`backend::ShardedEvaluator`]
+//! (`--backend sharded:<n>`): the collocation batch split into contiguous
+//! shards across inner native evaluators, each writing its Jacobian
+//! row-block / residual range straight into the shared workspace output,
+//! with reductions in fixed shard order — bitwise-identical to the
+//! unsharded native backend for any shard count.
+//!
+//! ## The execution substrate
+//!
+//! All parallel work — blocked linalg kernels, native AD over collocation
+//! points, shard dispatch — runs on [`parallel`]'s persistent worker pool:
+//! `ENGD_THREADS − 1` parked workers fed per-call through mailbox/condvar
+//! handoff, with a thread-local scratch-slot API
+//! ([`parallel::with_scratch`]) that keeps each worker's AD `Tape` alive
+//! across evaluations. A warmed-up training step — line-search loss probes
+//! included — spawns zero threads and rebuilds zero tape buffers
+//! (`rust/tests/pool.rs` asserts both), and the loss/gradient reduction
+//! grids depend only on `ENGD_THREADS`, so trajectories are bitwise
+//! reproducible per thread-count setting.
+//!
 //! ## The kernel-operator layer
 //!
 //! The L3 hot path is organized around three pieces introduced by the
@@ -41,10 +61,10 @@
 //!   `transpose()` copy ever appears on the training path.
 //! * [`linalg::Workspace`] — a step-buffer pool owned by the
 //!   [`coordinator::Trainer`] and threaded through [`optim::StepEnv`];
-//!   Gram matrices, sketches, and Nyström factors are recycled across
-//!   steps, so steady-state steps allocate none of their pool-tracked
-//!   dense temporaries (QR/eigh interiors on the stable-Nyström path are
-//!   the remaining exception).
+//!   Gram matrices, sketches, Nyström factors, and (via
+//!   `thin_qr_into`/`eigh_into`) the stable-Nyström QR/eigendecomposition
+//!   interiors are all recycled across steps, so steady-state steps
+//!   allocate none of their dense temporaries.
 //! * [`optim::kernel::KernelOp`] — the kernel `K = JJᵀ` as an operator
 //!   (`apply`, `apply_t`, `apply_j`, `gram`, `gram_t`, `sketch_y`). Every
 //!   optimizer and every `SolveMode` branch (exact Cholesky, both Nyström

@@ -26,6 +26,21 @@ pub fn cg_solve(
     max_iters: usize,
     tol: f64,
 ) -> CgOutcome {
+    cg_solve_warm(apply, b, None, max_iters, tol)
+}
+
+/// [`cg_solve`] with an optional warm-start iterate `x0` (Martens 2010
+/// §4.8: Hessian-free restarts CG from the previous step's solution, which
+/// the optimizer checkpoints for bit-exact resume). `x0 = None` — or an
+/// all-zero `x0` — reproduces the cold-start solve bitwise, with no extra
+/// operator application.
+pub fn cg_solve_warm(
+    apply: impl Fn(&[f64]) -> Vec<f64>,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    max_iters: usize,
+    tol: f64,
+) -> CgOutcome {
     let n = b.len();
     let bnorm = super::vec_ops::norm2(b);
     if bnorm == 0.0 {
@@ -36,8 +51,17 @@ pub fn cg_solve(
             converged: true,
         };
     }
-    let mut x = vec![0.0; n];
-    let mut r = b.to_vec();
+    if let Some(x0) = x0 {
+        assert_eq!(x0.len(), n, "cg warm-start length mismatch");
+    }
+    let (mut x, mut r) = match x0 {
+        Some(x0) if x0.iter().any(|&v| v != 0.0) => {
+            let ax = apply(x0);
+            let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+            (x0.to_vec(), r)
+        }
+        _ => (vec![0.0; n], b.to_vec()),
+    };
     let mut p = r.clone();
     let mut rs = super::vec_ops::dot(&r, &r);
 
@@ -108,6 +132,33 @@ mod tests {
         let out = cg_solve(|v| a.matvec(v), &b, 5, 1e-14);
         assert_eq!(out.iterations, 5);
         assert!(!out.converged);
+    }
+
+    #[test]
+    fn warm_start_matches_cold_on_zero_guess_and_converges_faster() {
+        let mut rng = Rng::seed_from(3);
+        let n = 40;
+        let mut g = Matrix::zeros(n, n);
+        rng.fill_normal(g.data_mut());
+        let a = g.gram().add_diag(1.0);
+        let mut b = vec![0.0; n];
+        rng.fill_normal(&mut b);
+        // All-zero x0 must reproduce the cold start bitwise.
+        let cold = cg_solve(|v| a.matvec(v), &b, 2 * n, 1e-10);
+        let zero = vec![0.0; n];
+        let warm0 = cg_solve_warm(|v| a.matvec(v), &b, Some(&zero), 2 * n, 1e-10);
+        assert_eq!(cold.iterations, warm0.iterations);
+        for (x, y) in cold.x.iter().zip(&warm0.x) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Warm-starting from the solution itself converges immediately.
+        let warm = cg_solve_warm(|v| a.matvec(v), &b, Some(&cold.x), 2 * n, 1e-8);
+        assert!(warm.converged);
+        assert!(
+            warm.iterations <= 1,
+            "restart from the solution took {} iterations",
+            warm.iterations
+        );
     }
 
     #[test]

@@ -8,8 +8,15 @@
 //! pipelines but unconditionally robust and embarrassingly simple to verify —
 //! and its cost *is the point* of the paper's Appendix-B benchmark: the
 //! GPU-efficient variant exists precisely to avoid paying for it.
+//!
+//! [`eigh_into`] is the workspace variant: the Jacobi working copy and the
+//! rotation accumulator come from — and return to — the caller's
+//! [`Workspace`], so the stable-Nyström solve path allocates no dense
+//! factorization temporaries at steady state. [`eigh`] wraps it with owned
+//! buffers; both produce bitwise-identical results.
 
 use super::matrix::Matrix;
+use super::workspace::Workspace;
 
 /// Eigendecomposition `A = V diag(w) Vᵀ` with eigenvalues ascending.
 pub struct Eigh {
@@ -22,16 +29,44 @@ pub struct Eigh {
 /// Cyclic Jacobi with threshold sweeps. Converges quadratically once
 /// off-diagonal mass is small; we cap at 30 sweeps (typ. ≤ 12 for our sizes).
 pub fn eigh(a: &Matrix) -> Eigh {
+    let n = a.rows();
+    let mut eigenvalues = vec![0.0; n];
+    let mut eigenvectors = Matrix::zeros(n, n);
+    let mut ws = Workspace::new();
+    eigh_into(a, &mut eigenvalues, &mut eigenvectors, &mut ws);
+    Eigh {
+        eigenvalues,
+        eigenvectors,
+    }
+}
+
+/// [`eigh`] into caller-provided outputs (`eigenvalues` of length n,
+/// `eigenvectors` n×n, both overwritten), with the Jacobi scratch drawn
+/// from `ws`.
+pub fn eigh_into(
+    a: &Matrix,
+    eigenvalues: &mut [f64],
+    eigenvectors: &mut Matrix,
+    ws: &mut Workspace,
+) {
     assert_eq!(a.rows(), a.cols(), "eigh needs a square matrix");
     let n = a.rows();
-    let mut m = a.clone();
-    let mut v = Matrix::identity(n);
-
+    assert_eq!(eigenvalues.len(), n, "eigh_into needs {n} eigenvalue slots");
+    assert_eq!(
+        (eigenvectors.rows(), eigenvectors.cols()),
+        (n, n),
+        "eigh_into eigenvector output must be {n}x{n}"
+    );
     if n == 0 {
-        return Eigh {
-            eigenvalues: vec![],
-            eigenvectors: v,
-        };
+        return;
+    }
+
+    let mut m = ws.take_matrix_scratch(n, n);
+    m.data_mut().copy_from_slice(a.data());
+    let mut v = ws.take_matrix_scratch(n, n);
+    v.data_mut().fill(0.0);
+    for i in 0..n {
+        v[(i, i)] = 1.0;
     }
 
     for _sweep in 0..30 {
@@ -87,20 +122,17 @@ pub fn eigh(a: &Matrix) -> Eigh {
         }
     }
 
-    // Sort ascending.
+    // Sort ascending, permuting V's columns into the output.
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&i, &j| m[(i, i)].partial_cmp(&m[(j, j)]).unwrap());
-    let eigenvalues: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
-    let mut eigenvectors = Matrix::zeros(n, n);
     for (new_j, &old_j) in order.iter().enumerate() {
+        eigenvalues[new_j] = m[(old_j, old_j)];
         for i in 0..n {
             eigenvectors[(i, new_j)] = v[(i, old_j)];
         }
     }
-    Eigh {
-        eigenvalues,
-        eigenvectors,
-    }
+    ws.recycle_matrix(v);
+    ws.recycle_matrix(m);
 }
 
 #[cfg(test)]
@@ -170,5 +202,35 @@ mod tests {
         rng.fill_normal(b.data_mut());
         let e = eigh(&b.gram());
         assert!(e.eigenvalues.iter().all(|&w| w > -1e-9));
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_bitwise_and_reuses_pool() {
+        let mut rng = Rng::seed_from(5);
+        let a = random_symmetric(&mut rng, 18);
+        let reference = eigh(&a);
+
+        let mut ws = Workspace::new();
+        let mut evals = vec![0.0; 18];
+        let mut evecs = ws.take_matrix_scratch(18, 18);
+        eigh_into(&a, &mut evals, &mut evecs, &mut ws);
+        for (x, y) in evals.iter().zip(&reference.eigenvalues) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(evecs.max_abs_diff(&reference.eigenvectors), 0.0);
+
+        // Steady state: a second decomposition of the same shape draws its
+        // scratch entirely from the pool.
+        let fresh = ws.stats().fresh_allocs;
+        eigh_into(&a, &mut evals, &mut evecs, &mut ws);
+        assert_eq!(ws.stats().fresh_allocs, fresh, "second eigh allocated");
+    }
+
+    #[test]
+    fn empty_matrix_is_fine() {
+        let a = Matrix::zeros(0, 0);
+        let e = eigh(&a);
+        assert!(e.eigenvalues.is_empty());
+        assert_eq!((e.eigenvectors.rows(), e.eigenvectors.cols()), (0, 0));
     }
 }

@@ -31,10 +31,10 @@ mod qr;
 mod vec_ops;
 mod workspace;
 
-pub use cg::{cg_solve, CgOutcome};
+pub use cg::{cg_solve, cg_solve_warm, CgOutcome};
 pub use chol::Cholesky;
-pub use eigh::{eigh, Eigh};
+pub use eigh::{eigh, eigh_into, Eigh};
 pub use matrix::Matrix;
-pub use qr::thin_qr;
+pub use qr::{thin_qr, thin_qr_into};
 pub use vec_ops::{axpy, dot, norm2, scale, sub};
 pub use workspace::{Workspace, WorkspaceStats};

@@ -15,9 +15,10 @@
 //! reuse. See `rust/tests/properties.rs::prop_kernel_solve_reuses_workspace`.
 //!
 //! Scope: the invariant covers *pool-tracked* buffers — everything the
-//! solve paths check out via `take*`. Routines with their own interiors
-//! (`thin_qr`'s Q, `eigh`'s eigenvector matrix) still allocate internally
-//! on the stable-Nyström path; `*_into` variants for those are future work.
+//! solve paths check out via `take*`. Since the `thin_qr_into`/`eigh_into`
+//! refactor the stable-Nyström path draws its QR and eigendecomposition
+//! interiors from the pool as well, so no dense temporary on any
+//! `SolveMode` branch escapes the accounting.
 
 use super::matrix::Matrix;
 

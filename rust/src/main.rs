@@ -7,9 +7,11 @@
 //!   list       show the problems (and artifacts, on PJRT) of the backend
 //!   smoke      end-to-end sanity check of the training pipeline
 //!
-//! Every command takes `--backend {pjrt,native,auto}` (default auto): the
-//! PJRT backend executes AOT artifacts from `--artifacts DIR`; the native
-//! backend evaluates the model in pure Rust and needs no artifacts at all.
+//! Every command takes `--backend {pjrt,native,sharded[:N],auto}` (default
+//! auto): the PJRT backend executes AOT artifacts from `--artifacts DIR`;
+//! the native backend evaluates the model in pure Rust and needs no
+//! artifacts at all; `sharded:N` splits every collocation batch across N
+//! inner native evaluators (bitwise-identical results).
 //!
 //! Examples:
 //!   engd train --problem poisson5d --opt spring --steps 300 --echo
@@ -78,8 +80,11 @@ fn print_help() {
          \x20 report    summarize results/ CSVs as a markdown table\n\
          \n\
          COMMON FLAGS\n\
-         \x20 --backend KIND    pjrt|native|auto (default auto: PJRT when\n\
-         \x20                   artifacts exist, else pure-Rust native AD)\n\
+         \x20 --backend KIND    pjrt|native|sharded[:N]|auto (default auto:\n\
+         \x20                   PJRT when artifacts exist, else pure-Rust\n\
+         \x20                   native AD; sharded:N splits each batch\n\
+         \x20                   across N inner evaluators, bitwise-identical\n\
+         \x20                   to native)\n\
          \x20 --artifacts DIR   artifact directory for PJRT (default: artifacts)\n\
          \x20 --config FILE     TOML run config (train)\n\
          \x20 --problem NAME    problem name (manifest or built-in catalogue)\n\

@@ -22,13 +22,15 @@
 //!
 //! Like the GPU-efficient builder, this one consumes a [`KernelOp`] + a
 //! [`Workspace`]: all transpose products are fused (`matmul_tn`), `Y_ν`
-//! becomes `B` by an in-place triangular solve, and intermediates return to
-//! the pool.
+//! becomes `B` by an in-place triangular solve, and intermediates —
+//! including the QR and eigendecomposition interiors, via `thin_qr_into` /
+//! `eigh_into` — return to the pool, so steady-state stable-Nyström solves
+//! allocate nothing dense.
 
 use anyhow::Result;
 
 use super::NystromApprox;
-use crate::linalg::{eigh, thin_qr, Matrix, Workspace};
+use crate::linalg::{eigh_into, thin_qr_into, Matrix, Workspace};
 use crate::optim::kernel::KernelOp;
 use crate::rng::Rng;
 
@@ -55,10 +57,11 @@ impl StableNystrom {
         let n = op.size();
         let sketch = sketch.clamp(1, n);
 
-        // 1: orthonormal test matrix.
+        // 1: orthonormal test matrix (QR interiors pooled too).
         let mut g = ws.take_matrix_scratch(n, sketch);
         rng.fill_normal(g.data_mut());
-        let omega = thin_qr(&g);
+        let mut omega = ws.take_matrix_scratch(n, sketch);
+        thin_qr_into(&g, &mut omega, ws);
         ws.recycle_matrix(g);
 
         // 2: sketch through the operator.
@@ -82,19 +85,23 @@ impl StableNystrom {
         // pooled buffer.
         let (b, nu) = super::sketch_to_factor(omega, y, "stable Nyström", ws)?;
 
-        // 6: economy SVD of B from eigh(BᵀB): BᵀB = V Σ² Vᵀ, U = B V Σ⁻¹.
+        // 6: economy SVD of B from eigh(BᵀB): BᵀB = V Σ² Vᵀ, U = B V Σ⁻¹
+        // (eigh interiors pooled via eigh_into).
         let mut btb = ws.take_matrix_scratch(sketch, sketch);
         b.matmul_tn_into(&b, &mut btb);
-        let e = eigh(&btb);
+        let mut evals = ws.take(sketch);
+        let mut evecs = ws.take_matrix_scratch(sketch, sketch);
+        eigh_into(&btb, &mut evals, &mut evecs, ws);
         ws.recycle_matrix(btb);
         let ell = sketch;
         // Descending order is conventional for SVD; eigh returns ascending.
         let mut u = ws.take_matrix(n, ell);
-        let mut lam_diag = vec![0.0; ell];
+        let mut lam_diag = ws.take(ell);
         let mut bv = ws.take_matrix_scratch(n, ell);
-        b.matmul_into(&e.eigenvectors, &mut bv);
+        b.matmul_into(&evecs, &mut bv);
+        ws.recycle_matrix(evecs);
         for (col, k) in (0..ell).rev().enumerate() {
-            let sigma2 = e.eigenvalues[k].max(0.0);
+            let sigma2 = evals[k].max(0.0);
             let sigma = sigma2.sqrt();
             // 7: Λ = max(0, Σ² − ν).
             lam_diag[col] = (sigma2 - nu).max(0.0);
@@ -104,6 +111,7 @@ impl StableNystrom {
                 }
             }
         }
+        ws.recycle(evals);
         ws.recycle_matrix(bv);
         ws.recycle_matrix(b);
         Ok(StableNystrom {
@@ -119,9 +127,10 @@ impl StableNystrom {
         &self.lam_diag
     }
 
-    /// Return the eigenvector storage to the workspace pool.
+    /// Return the eigenvector and eigenvalue storage to the workspace pool.
     pub fn recycle(self, ws: &mut Workspace) {
         ws.recycle_matrix(self.u);
+        ws.recycle(self.lam_diag);
     }
 }
 
@@ -160,7 +169,7 @@ impl NystromApprox for StableNystrom {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::Cholesky;
+    use crate::linalg::{thin_qr, Cholesky};
     use crate::optim::kernel::DenseKernel;
 
     fn decaying_psd(rng: &mut Rng, n: usize, decay: f64) -> Matrix {

@@ -11,6 +11,9 @@ pub struct Adam {
     beta1: f64,
     beta2: f64,
     eps: f64,
+    /// Number of updates applied (drives the bias corrections; checkpointed
+    /// so resumed runs correct with the true global step count).
+    t: usize,
     m: Vec<f64>,
     v: Vec<f64>,
 }
@@ -22,6 +25,7 @@ impl Adam {
             beta1: 0.9,
             beta2: 0.999,
             eps: 1e-8,
+            t: 0,
             m: Vec::new(),
             v: Vec::new(),
         }
@@ -35,7 +39,8 @@ impl Optimizer for Adam {
             self.m = vec![0.0; theta.len()];
             self.v = vec![0.0; theta.len()];
         }
-        let k = env.k as i32;
+        self.t += 1;
+        let k = self.t as i32;
         let bc1 = 1.0 - self.beta1.powi(k);
         let bc2 = 1.0 - self.beta2.powi(k);
         for i in 0..theta.len() {
@@ -50,6 +55,30 @@ impl Optimizer for Adam {
             lr_used: self.lr,
             extra: vec![("grad_norm".into(), crate::linalg::norm2(&grad))],
         })
+    }
+
+    /// Checkpoint layout: `[t, m…, v…]` — everything a resumed run needs to
+    /// reproduce the uninterrupted update sequence bit-for-bit.
+    fn state(&self) -> Vec<f64> {
+        if self.m.is_empty() {
+            return Vec::new();
+        }
+        let mut s = Vec::with_capacity(1 + self.m.len() + self.v.len());
+        s.push(self.t as f64);
+        s.extend_from_slice(&self.m);
+        s.extend_from_slice(&self.v);
+        s
+    }
+
+    fn restore_state(&mut self, state: Vec<f64>) {
+        if state.is_empty() {
+            return;
+        }
+        self.t = state[0] as usize;
+        let rest = &state[1..];
+        let half = rest.len() / 2;
+        self.m = rest[..half].to_vec();
+        self.v = rest[half..].to_vec();
     }
 
     fn describe(&self) -> String {

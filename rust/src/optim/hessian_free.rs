@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use super::{grid_line_search, JacobianKernel, KernelOp, Optimizer, StepEnv, StepInfo};
 use crate::config::OptimizerConfig;
-use crate::linalg::cg_solve;
+use crate::linalg::cg_solve_warm;
 
 pub struct HessianFree {
     cfg: OptimizerConfig,
@@ -24,6 +24,10 @@ pub struct HessianFree {
     lambda: f64,
     /// Adapt damping via the LM reduction ratio.
     adapt: bool,
+    /// Previous step's CG solution — the warm-start iterate (Martens 2010
+    /// §4.8). Empty before the first step; checkpointed for bit-exact
+    /// resume.
+    phi_prev: Vec<f64>,
 }
 
 impl HessianFree {
@@ -32,6 +36,7 @@ impl HessianFree {
             cfg: o.clone(),
             lambda: o.damping,
             adapt: true,
+            phi_prev: Vec::new(),
         }
     }
 
@@ -51,7 +56,8 @@ impl Optimizer for HessianFree {
         let grad = op.apply_t(&r);
         let lambda = self.lambda;
 
-        let out = cg_solve(
+        let warm = (!self.phi_prev.is_empty()).then_some(self.phi_prev.as_slice());
+        let out = cg_solve_warm(
             |v| {
                 // Gauss–Newton product (JᵀJ + λI)v through the operator.
                 let jv = op.apply_j(v);
@@ -62,6 +68,7 @@ impl Optimizer for HessianFree {
                 jtjv
             },
             &grad,
+            warm,
             self.cfg.cg_iters,
             self.cfg.cg_tol,
         );
@@ -102,6 +109,7 @@ impl Optimizer for HessianFree {
         env.ws.recycle_matrix(j);
 
         theta.copy_from_slice(&trial);
+        self.phi_prev = phi;
         Ok(StepInfo {
             loss,
             lr_used: eta,
@@ -111,6 +119,24 @@ impl Optimizer for HessianFree {
                 ("damping".into(), lambda),
             ],
         })
+    }
+
+    /// Checkpoint layout: `[λ, φ_prev…]` — the adapted LM damping plus the
+    /// CG warm-start vector, so a resumed run replays the uninterrupted
+    /// trajectory bit-for-bit.
+    fn state(&self) -> Vec<f64> {
+        let mut s = Vec::with_capacity(1 + self.phi_prev.len());
+        s.push(self.lambda);
+        s.extend_from_slice(&self.phi_prev);
+        s
+    }
+
+    fn restore_state(&mut self, state: Vec<f64>) {
+        if state.is_empty() {
+            return;
+        }
+        self.lambda = state[0];
+        self.phi_prev = state[1..].to_vec();
     }
 
     fn describe(&self) -> String {

@@ -128,7 +128,9 @@ pub trait Optimizer {
     /// Human-readable identity for logs.
     fn describe(&self) -> String;
 
-    /// Flat auxiliary state for checkpointing (SPRING's φ; empty otherwise).
+    /// Flat auxiliary state for checkpointing, sufficient for bit-exact
+    /// resume: SPRING's φ, Adam's `[t, m, v]`, SGD's velocity,
+    /// Hessian-free's `[λ, CG warm start]`; empty for stateless optimizers.
     fn state(&self) -> Vec<f64> {
         Vec::new()
     }
@@ -198,7 +200,8 @@ pub fn kernel_solve(
             let sketch = sketch_size(n, o.sketch_ratio);
             let mut g = ws.take_matrix_scratch(n, sketch);
             rng.fill_normal(g.data_mut());
-            let omega = crate::linalg::thin_qr(&g);
+            let mut omega = ws.take_matrix_scratch(n, sketch);
+            crate::linalg::thin_qr_into(&g, &mut omega, ws);
             ws.recycle_matrix(g);
             let y = op.sketch_y(&omega, ws);
             let nys = crate::nystrom::StableNystrom::from_sketch(omega, y, o.damping, ws)?;

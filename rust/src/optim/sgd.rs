@@ -39,6 +39,17 @@ impl Optimizer for Sgd {
         })
     }
 
+    /// Checkpoint layout: the momentum velocity buffer (empty until the
+    /// first step) — sufficient for bit-exact resume since batches and
+    /// gradients are step-keyed by the trainer.
+    fn state(&self) -> Vec<f64> {
+        self.velocity.clone()
+    }
+
+    fn restore_state(&mut self, state: Vec<f64>) {
+        self.velocity = state;
+    }
+
     fn describe(&self) -> String {
         format!("sgd(lr={:.3e}, momentum={})", self.lr, self.momentum)
     }

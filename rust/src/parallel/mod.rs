@@ -1,15 +1,73 @@
-//! Thread-parallel helpers (substrate — rayon is unavailable offline).
+//! Persistent worker-pool substrate (rayon is unavailable offline).
 //!
-//! Built on `std::thread::scope`: no task queue, just chunked fork-join over
-//! index ranges, which is exactly the shape of every hot loop in the dense
-//! linear-algebra substrate (row-block matmul, Gram accumulation, column
-//! sweeps).
+//! Every hot loop in the dense linear-algebra layer and the native autodiff
+//! backend is chunked fork-join over index ranges. The first generation of
+//! this module spawned fresh scoped threads per call, which meant each
+//! native `loss`/`loss_and_grad`/`residuals_jacobian` evaluation paid a
+//! thread spawn *and* rebuilt its per-thread `Tape` buffers (multi-MB on
+//! poisson100d) — pathological under line search, where one training step
+//! evaluates the loss a dozen times. This generation keeps a long-lived
+//! pool of parked workers instead.
+//!
+//! ## Lifecycle
+//!
+//! `num_threads() − 1` workers are spawned lazily on the first parallel
+//! call and then live for the whole process, parked on a per-worker
+//! mailbox (`Mutex<Option<Task>>` + `Condvar`). A dispatch hands each
+//! worker a `(job, slot)` pair through its mailbox; the **calling thread
+//! always executes slot 0** itself, so `ENGD_THREADS=1` never touches the
+//! pool and a warm pool adds only a wake/park round-trip per call. The
+//! caller blocks on a latch until every helper slot has finished, which is
+//! what makes it sound to run borrowed (non-`'static`) closures on the
+//! pool. Worker panics are caught, flagged on the latch, and re-raised on
+//! the calling thread after the barrier.
+//!
+//! If the pool is busy — a nested parallel call from inside a pool job, or
+//! a second dispatching thread (`cargo test` runs tests concurrently) —
+//! the dispatch falls back to running every slot inline on the caller.
+//! This degrades parallelism, never correctness, and cannot deadlock.
+//!
+//! ## Determinism
+//!
+//! * `par_chunks(n, f)` builds the same chunk grid for a given
+//!   `ENGD_THREADS`: `workers = num_threads().min(n)` contiguous chunks,
+//!   balanced to within one element, chunk `w` on slot `w`. (Under the
+//!   test-only [`with_thread_limit`] cap the grid follows the narrowed
+//!   width — which is why a per-chunk f64 reduction through `par_chunks`
+//!   alone is NOT width-independent.)
+//! * Kernels that write each output element from exactly one slot
+//!   (`matmul`, `gram`, `tr_matvec`, `par_map`, Jacobian rows) are bitwise
+//!   deterministic for *any* execution width; `rust/tests/pool.rs` asserts
+//!   this across widths.
+//! * Callers that reduce floating-point partials must key their partial
+//!   layout off [`num_threads`] themselves — the native backend's
+//!   `thread_chunks` grid does exactly this — so the reduction order, and
+//!   hence the f64 sum, is a pure function of `ENGD_THREADS` no matter how
+//!   many threads actually execute.
+//! * `par_dynamic` steals work in nondeterministic order and is reserved
+//!   for callers whose per-item writes are disjoint and order-free.
+//!
+//! ## Scratch slots
+//!
+//! [`with_scratch`] gives each worker (and the calling thread) a typed,
+//! thread-local slot that persists across dispatches — this is how the
+//! native backend keeps one `Tape` per worker alive across evaluations.
+//! Safety contract: the slot is keyed by `TypeId` per thread, so a value
+//! never migrates between threads (hence only `T: Send` is required, not
+//! `Sync`), and re-entrant use of the *same* type on the same thread sees
+//! a fresh default value (the outer value is checked back in afterwards).
+//! Callers must therefore treat the slot as a cache, never as an owner of
+//! state that is expensive to lose or that must be unique process-wide.
 
+use std::any::{Any, TypeId};
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Number of worker threads: `ENGD_THREADS` env override, else available
-/// parallelism, clamped to [1, 64].
+/// Number of worker slots: `ENGD_THREADS` env override, else available
+/// parallelism, clamped to [1, 64]. Fixed for the process lifetime; this is
+/// both the pool capacity and the deterministic chunk-grid width.
 pub fn num_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
@@ -25,41 +83,275 @@ pub fn num_threads() -> usize {
     })
 }
 
-/// Run `f(start, end)` over disjoint chunks of `0..n` on the thread pool.
+/// Test-only execution-width cap (0 = none). Narrows how many slots run
+/// concurrently; per-element kernels and reductions keyed off
+/// [`num_threads`] stay bitwise-identical at every width (a reduction
+/// keyed off `par_chunks`'s own grid would not — see the module docs).
+static WIDTH_LIMIT: AtomicUsize = AtomicUsize::new(0);
+
+/// Execution width for the next dispatch: `num_threads()` unless narrowed
+/// by [`with_thread_limit`].
+fn active_threads() -> usize {
+    match WIDTH_LIMIT.load(Ordering::Relaxed) {
+        0 => num_threads(),
+        w => w.min(num_threads()),
+    }
+}
+
+/// Run `f` with at most `width` slots executing concurrently. Per-element
+/// kernels, and reductions whose partial grids are keyed off
+/// [`num_threads`] (the native backend's), produce bitwise-identical
+/// results at every width — the pool test suite relies on this.
+/// Process-global: callers serialize their own use.
+pub fn with_thread_limit<R>(width: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            WIDTH_LIMIT.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(WIDTH_LIMIT.swap(width.max(1), Ordering::Relaxed));
+    f()
+}
+
+/// Pool observability counters (tests assert steady-state: after warmup a
+/// training step must not grow `threads_spawned`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// OS threads ever spawned by the pool (grows once, at first use).
+    pub threads_spawned: usize,
+    /// Dispatches served by the parked workers.
+    pub dispatches: usize,
+    /// Dispatches that ran inline because the pool was busy (nested
+    /// parallelism or a concurrent dispatcher).
+    pub serial_fallbacks: usize,
+}
+
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+static DISPATCHES: AtomicUsize = AtomicUsize::new(0);
+static SERIAL_FALLBACKS: AtomicUsize = AtomicUsize::new(0);
+
+/// Current pool counters.
+pub fn pool_stats() -> PoolStats {
+    PoolStats {
+        threads_spawned: SPAWNED.load(Ordering::Relaxed),
+        dispatches: DISPATCHES.load(Ordering::Relaxed),
+        serial_fallbacks: SERIAL_FALLBACKS.load(Ordering::Relaxed),
+    }
+}
+
+/// One unit of handed-off work: run `job(slot)`, then release the latch.
+/// The `'static` on the closure reference is a lifetime erasure, upheld by
+/// the dispatch protocol: the dispatcher blocks on the latch (even while
+/// unwinding) before the borrowed closure leaves scope.
+struct Task {
+    job: &'static (dyn Fn(usize) + Sync),
+    slot: usize,
+    latch: Arc<Latch>,
+}
+
+/// What a worker hands back when its job unwinds: the caught panic
+/// payload, re-raised on the dispatching thread so caller diagnostics (the
+/// failing assertion message, not a generic string) survive the pool —
+/// matching what the old scoped-thread substrate propagated.
+type PanicPayload = Box<dyn std::any::Any + Send>;
+
+/// Completion barrier for one dispatch. The remaining count and the first
+/// panic payload live under the mutex so the final count-down and the
+/// waiter's wake-up are fully serialized; workers hold an `Arc`, so the
+/// latch cannot be freed while a worker is still inside `count_down`.
+struct Latch {
+    state: Mutex<(usize, Option<PanicPayload>)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Arc<Self> {
+        Arc::new(Latch {
+            state: Mutex::new((remaining, None)),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn count_down(&self, panicked: Option<PanicPayload>) {
+        let mut g = self.state.lock().unwrap();
+        g.0 -= 1;
+        if g.1.is_none() {
+            g.1 = panicked;
+        }
+        if g.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every helper finished; returns the first panic payload.
+    fn wait(&self) -> Option<PanicPayload> {
+        let mut g = self.state.lock().unwrap();
+        while g.0 > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.1.take()
+    }
+}
+
+/// A parked worker's mailbox.
+struct Mailbox {
+    slot: Mutex<Option<Task>>,
+    cv: Condvar,
+}
+
+fn worker_loop(mb: Arc<Mailbox>) {
+    loop {
+        let task = {
+            let mut g = mb.slot.lock().unwrap();
+            loop {
+                if let Some(t) = g.take() {
+                    break t;
+                }
+                g = mb.cv.wait(g).unwrap();
+            }
+        };
+        let job = task.job;
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            job(task.slot)
+        }))
+        .err();
+        task.latch.count_down(panicked);
+    }
+}
+
+/// The process-wide pool: one mailbox per helper worker plus a dispatch
+/// lease that serializes dispatchers (and detects nested parallelism).
+struct Pool {
+    mailboxes: Vec<Arc<Mailbox>>,
+    lease: Mutex<()>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let helpers = num_threads().saturating_sub(1);
+        let mut mailboxes = Vec::with_capacity(helpers);
+        for w in 0..helpers {
+            let mb = Arc::new(Mailbox {
+                slot: Mutex::new(None),
+                cv: Condvar::new(),
+            });
+            let mb2 = Arc::clone(&mb);
+            std::thread::Builder::new()
+                .name(format!("engd-pool-{w}"))
+                .spawn(move || worker_loop(mb2))
+                .expect("spawning pool worker");
+            SPAWNED.fetch_add(1, Ordering::Relaxed);
+            mailboxes.push(mb);
+        }
+        Pool {
+            mailboxes,
+            lease: Mutex::new(()),
+        }
+    })
+}
+
+/// Execute `job(w)` for every slot `w < slots`, helpers on the pool and
+/// slot 0 on the calling thread; returns after all slots finish.
+fn run_job(slots: usize, job: &(dyn Fn(usize) + Sync)) {
+    if slots <= 1 {
+        job(0);
+        return;
+    }
+    let pool = pool();
+    debug_assert!(slots <= pool.mailboxes.len() + 1, "slots exceed pool capacity");
+    // Busy pool (nested call, or a concurrent dispatcher): run every slot
+    // inline. Same work, same outputs, no deadlock. A *poisoned* lease is
+    // recovered, not treated as busy — it guards no data, and a panic that
+    // unwound through a previous dispatch (e.g. a failed test assertion
+    // inside a pool job) must not silently serialize the rest of the
+    // process.
+    let _lease = match pool.lease.try_lock() {
+        Ok(guard) => guard,
+        Err(std::sync::TryLockError::Poisoned(poisoned)) => poisoned.into_inner(),
+        Err(std::sync::TryLockError::WouldBlock) => {
+            SERIAL_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+            for w in 0..slots {
+                job(w);
+            }
+            return;
+        }
+    };
+    DISPATCHES.fetch_add(1, Ordering::Relaxed);
+    let latch = Latch::new(slots - 1);
+    // SAFETY: lifetime erasure only — the latch wait below (which runs even
+    // if slot 0 unwinds) guarantees no worker touches `job` after this
+    // frame ends, so the borrow never actually outlives the closure.
+    let job_erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(job) };
+    for w in 1..slots {
+        let task = Task {
+            job: job_erased,
+            slot: w,
+            latch: Arc::clone(&latch),
+        };
+        let mb = &pool.mailboxes[w - 1];
+        let mut g = mb.slot.lock().unwrap();
+        *g = Some(task);
+        mb.cv.notify_one();
+    }
+    // Wait even if slot 0 panics: the helpers borrow `job` from this stack
+    // frame, so unwinding past them would be a use-after-free. (The guard
+    // discards any helper payload — slot 0's own panic is already in
+    // flight.)
+    struct WaitGuard<'a>(&'a Latch);
+    impl Drop for WaitGuard<'_> {
+        fn drop(&mut self) {
+            self.0.wait();
+        }
+    }
+    let guard = WaitGuard(&*latch);
+    job(0);
+    // Normal path: defuse the guard (it holds no resources) and do the
+    // barrier wait ourselves so the helper payload isn't consumed twice.
+    std::mem::forget(guard);
+    if let Some(payload) = latch.wait() {
+        // Re-raise the helper's panic on the dispatching thread with its
+        // original payload (assertion text and all).
+        std::panic::resume_unwind(payload);
+    }
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on the worker pool.
 ///
-/// Chunks are contiguous and balanced to within one element. `f` must be
-/// `Sync` since all threads share it.
+/// Chunks are contiguous and balanced to within one element; the grid has
+/// one chunk per executing slot (`ENGD_THREADS`, unless narrowed by
+/// [`with_thread_limit`]), so callers needing a width-independent
+/// reduction layout must build their own grid from [`num_threads`]. `f`
+/// must be `Sync` since all slots share it.
 pub fn par_chunks<F>(n: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    let workers = num_threads().min(n.max(1));
+    let workers = active_threads().min(n.max(1));
     if workers <= 1 || n == 0 {
         f(0, n);
         return;
     }
     let chunk = n.div_ceil(workers);
-    std::thread::scope(|scope| {
-        for w in 0..workers {
-            let start = w * chunk;
-            let end = ((w + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
-            let f = &f;
-            scope.spawn(move || f(start, end));
+    run_job(workers, &move |w| {
+        let start = w * chunk;
+        let end = ((w + 1) * chunk).min(n);
+        if start < end {
+            f(start, end);
         }
     });
 }
 
-/// Dynamic work-stealing variant for unevenly-sized items: each worker pulls
+/// Dynamic work-stealing variant for unevenly-sized items: each slot pulls
 /// the next index from a shared atomic counter. Used where per-item cost
-/// varies wildly (e.g. per-column Jacobi rotations).
+/// varies wildly (e.g. triangular Gram panels); item order is
+/// nondeterministic, so callers must write disjoint, order-free outputs.
 pub fn par_dynamic<F>(n: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
-    let workers = num_threads().min(n.max(1));
+    let workers = active_threads().min(n.max(1));
     if workers <= 1 || n == 0 {
         for i in 0..n {
             f(i);
@@ -67,22 +359,17 @@ where
         return;
     }
     let counter = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let f = &f;
-            let counter = &counter;
-            scope.spawn(move || loop {
-                let i = counter.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                f(i);
-            });
+    run_job(workers, &|_w| loop {
+        let i = counter.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
         }
+        f(i);
     });
 }
 
-/// Parallel map producing a Vec in input order.
+/// Parallel map producing a Vec in input order (each slot written by
+/// exactly one thread — bitwise deterministic at every execution width).
 pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send + Default + Clone,
@@ -94,7 +381,7 @@ where
         par_chunks(n, |start, end| {
             for i in start..end {
                 // SAFETY: chunks are disjoint, so each slot is written by
-                // exactly one thread; the Vec outlives the scope.
+                // exactly one thread; the Vec outlives the dispatch.
                 unsafe { *slots.get().add(i) = f(i) };
             }
         });
@@ -102,9 +389,47 @@ where
     out
 }
 
-/// Pointer wrapper that lets disjoint-index writes cross the scope boundary.
-/// Shared by every blocked kernel in `linalg` (matmul, gram, Cholesky) —
-/// each user is responsible for keeping its writes disjoint per thread.
+thread_local! {
+    /// Per-thread scratch slots, one per type (see [`with_scratch`]).
+    static SCRATCH: RefCell<HashMap<TypeId, Box<dyn Any>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Borrow this thread's persistent scratch slot of type `T`, creating it
+/// with `Default` on first use. On a pool worker the slot survives across
+/// dispatches — the native backend stores its `Tape` here so steady-state
+/// evaluations rebuild nothing.
+///
+/// Contract: the value never leaves its thread (`T: Send` only marks that
+/// constructing it on a pool thread is sound); the slot is taken out of
+/// the registry while `f` runs, so re-entrant use of the same `T` on the
+/// same thread sees a fresh default and the outer value wins afterwards.
+/// Treat the slot strictly as a rebuildable cache.
+pub fn with_scratch<T, R>(f: impl FnOnce(&mut T) -> R) -> R
+where
+    T: Default + Send + 'static,
+{
+    SCRATCH.with(|cell| {
+        let mut slot: Box<T> = {
+            let mut map = cell.borrow_mut();
+            // TypeId keying makes the downcast infallible; a fresh default
+            // is the safe fallback either way. The borrow ends with this
+            // block, so `f` may itself call with_scratch.
+            match map.remove(&TypeId::of::<T>()).map(|b| b.downcast::<T>()) {
+                Some(Ok(b)) => b,
+                _ => Box::<T>::default(),
+            }
+        };
+        let out = f(&mut slot);
+        cell.borrow_mut().insert(TypeId::of::<T>(), slot);
+        out
+    })
+}
+
+/// Pointer wrapper that lets disjoint-index writes cross the dispatch
+/// boundary. Shared by every blocked kernel in `linalg` (matmul, gram,
+/// Cholesky) — each user is responsible for keeping its writes disjoint
+/// per slot.
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Sync for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
@@ -156,5 +481,56 @@ mod tests {
         par_chunks(0, |s, e| assert_eq!(s, e, "n=0 must yield an empty range"));
         let v = par_map(1, |i| i + 1);
         assert_eq!(v, vec![1]);
+    }
+
+    #[test]
+    fn nested_parallel_calls_fall_back_serially() {
+        // A parallel call from inside a pool job must not deadlock and must
+        // still cover every index exactly once.
+        let hits: Vec<AtomicU64> = (0..300).map(|_| AtomicU64::new(0)).collect();
+        par_chunks(3, |s, e| {
+            for block in s..e {
+                par_dynamic(100, |i| {
+                    hits[block * 100 + i].fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn scratch_persists_on_the_calling_thread() {
+        #[derive(Default)]
+        struct Counter(u64);
+        let first = with_scratch::<Counter, _>(|c| {
+            c.0 += 1;
+            c.0
+        });
+        let second = with_scratch::<Counter, _>(|c| {
+            c.0 += 1;
+            c.0
+        });
+        assert!(second > first, "scratch slot was not persisted ({first}, {second})");
+    }
+
+    #[test]
+    fn scratch_reentrancy_same_type_is_isolated() {
+        #[derive(Default)]
+        struct Slot(u64);
+        with_scratch::<Slot, _>(|outer| {
+            outer.0 = 7;
+            // Same type re-entered: sees a fresh default, not an alias.
+            with_scratch::<Slot, _>(|inner| assert_eq!(inner.0, 0));
+            assert_eq!(outer.0, 7);
+        });
+        // The outer value is what survives.
+        with_scratch::<Slot, _>(|s| assert_eq!(s.0, 7));
+    }
+
+    #[test]
+    fn with_thread_limit_restores_width() {
+        let before = active_threads();
+        with_thread_limit(1, || assert_eq!(active_threads(), 1));
+        assert_eq!(active_threads(), before);
     }
 }

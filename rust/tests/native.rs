@@ -331,13 +331,18 @@ fn every_optimizer_trains_natively() {
 // Checkpoint save/resume: bit-for-bit trajectory reproduction
 // ---------------------------------------------------------------------------
 
-#[test]
-fn checkpoint_resume_reproduces_loss_trajectory_bitwise() {
+/// Run 7 steps checkpointing at step 4, resume for the last 3, and demand
+/// the resumed losses match the uninterrupted run bit-for-bit. This is the
+/// `Optimizer::state`/`restore_state` contract: whatever auxiliary state
+/// the optimizer carries (SPRING's φ, Adam's (t, m, v), SGD's velocity,
+/// Hessian-free's adapted λ + CG warm start) must round-trip through the
+/// checkpoint exactly.
+fn assert_resume_is_bitwise(tag: &str, tune: impl Fn(&mut RunConfig)) {
     let be = NativeBackend::new();
-    let dir = out_dir("resume");
+    let dir = out_dir(&format!("resume-{tag}"));
     let base = {
         let mut cfg = RunConfig {
-            name: "resume-full".into(),
+            name: format!("resume-{tag}"),
             problem: "poisson1d".into(),
             backend: "native".into(),
             // 7 steps with checkpoint_every = 4: exactly ONE checkpoint is
@@ -349,12 +354,8 @@ fn checkpoint_resume_reproduces_loss_trajectory_bitwise() {
             out_dir: dir.clone(),
             ..RunConfig::default()
         };
-        cfg.optimizer.kind = OptimizerKind::Spring;
         cfg.optimizer.path = ExecPath::Decomposed;
-        cfg.optimizer.damping = 1e-6;
-        cfg.optimizer.momentum = 0.85;
-        cfg.optimizer.line_search = true;
-        cfg.optimizer.ls_grid = 8;
+        tune(&mut cfg);
         cfg
     };
 
@@ -362,27 +363,121 @@ fn checkpoint_resume_reproduces_loss_trajectory_bitwise() {
     let mut full_cfg = base.clone();
     full_cfg.checkpoint_every = 4;
     let full = train(full_cfg, &be, false).unwrap();
-    assert_eq!(full.losses.len(), 7);
+    assert_eq!(full.losses.len(), 7, "{tag}");
 
     // Resume from the step-4 checkpoint and run the remaining 3 steps.
-    let ckpt = std::path::Path::new(&dir).join("resume-full.ckpt");
-    assert!(ckpt.exists(), "checkpoint was not written");
+    let ckpt = std::path::Path::new(&dir).join(format!("resume-{tag}.ckpt"));
+    assert!(ckpt.exists(), "{tag}: checkpoint was not written");
     let mut resumed_cfg = base.clone();
-    resumed_cfg.name = "resume-tail".into();
+    resumed_cfg.name = format!("resume-{tag}-tail");
     resumed_cfg.steps = 3;
     resumed_cfg.resume_from = Some(ckpt.display().to_string());
     let tail = train(resumed_cfg, &be, false).unwrap();
-    assert_eq!(tail.steps_done, 7, "resume must continue at step 5..=7");
-    assert_eq!(tail.losses.len(), 3);
+    assert_eq!(tail.steps_done, 7, "{tag}: resume must continue at step 5..=7");
+    assert_eq!(tail.losses.len(), 3, "{tag}");
 
     for (i, (a, b)) in full.losses[4..].iter().zip(&tail.losses).enumerate() {
         assert_eq!(
             a.to_bits(),
             b.to_bits(),
-            "step {}: uninterrupted loss {a:.17e} != resumed loss {b:.17e}",
+            "{tag} step {}: uninterrupted loss {a:.17e} != resumed loss {b:.17e}",
             i + 5
         );
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_resume_reproduces_loss_trajectory_bitwise() {
+    assert_resume_is_bitwise("spring", |cfg| {
+        cfg.optimizer.kind = OptimizerKind::Spring;
+        cfg.optimizer.damping = 1e-6;
+        cfg.optimizer.momentum = 0.85;
+        cfg.optimizer.line_search = true;
+        cfg.optimizer.ls_grid = 8;
+    });
+}
+
+#[test]
+fn checkpoint_resume_is_bitwise_for_sgd() {
+    assert_resume_is_bitwise("sgd", |cfg| {
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        cfg.optimizer.lr = 1e-3;
+        cfg.optimizer.momentum = 0.9;
+        cfg.optimizer.line_search = false;
+    });
+}
+
+#[test]
+fn checkpoint_resume_is_bitwise_for_adam() {
+    assert_resume_is_bitwise("adam", |cfg| {
+        cfg.optimizer.kind = OptimizerKind::Adam;
+        cfg.optimizer.lr = 1e-2;
+        cfg.optimizer.line_search = false;
+    });
+}
+
+#[test]
+fn checkpoint_resume_is_bitwise_for_hessian_free() {
+    assert_resume_is_bitwise("hf", |cfg| {
+        cfg.optimizer.kind = OptimizerKind::HessianFree;
+        // Adapted damping + the CG warm-start vector both live in the
+        // checkpoint; a lost warm start would shift every later CG solve.
+        cfg.optimizer.damping = 1.0;
+        cfg.optimizer.cg_iters = 15;
+        cfg.optimizer.line_search = false;
+        cfg.optimizer.lr = 0.5;
+    });
+}
+
+#[test]
+fn checkpoint_resume_is_bitwise_for_engd_w() {
+    // Stateless optimizer: resume exactness rests on the step-keyed
+    // batch/RNG streams alone.
+    assert_resume_is_bitwise("engdw", |cfg| {
+        cfg.optimizer.kind = OptimizerKind::EngdW;
+        cfg.optimizer.damping = 1e-6;
+        cfg.optimizer.line_search = true;
+        cfg.optimizer.ls_grid = 8;
+    });
+}
+
+/// Resuming with a different optimizer than the one that wrote the
+/// checkpoint must be refused: the flat state vector's layout is
+/// optimizer-specific (SPRING's φ read as Adam's [t, m, v] would silently
+/// corrupt the run).
+#[test]
+fn checkpoint_resume_rejects_optimizer_mismatch() {
+    let be = NativeBackend::new();
+    let dir = out_dir("resume-mismatch");
+    let mut cfg = RunConfig {
+        name: "mismatch".into(),
+        problem: "poisson1d".into(),
+        backend: "native".into(),
+        steps: 4,
+        seed: 3,
+        eval_every: 10,
+        out_dir: dir.clone(),
+        checkpoint_every: 4,
+        ..RunConfig::default()
+    };
+    cfg.optimizer.kind = OptimizerKind::Spring;
+    cfg.optimizer.path = ExecPath::Decomposed;
+    cfg.optimizer.damping = 1e-6;
+    cfg.optimizer.line_search = false;
+    cfg.optimizer.lr = 1e-3;
+    train(cfg.clone(), &be, false).unwrap();
+
+    let ckpt = std::path::Path::new(&dir).join("mismatch.ckpt");
+    assert!(ckpt.exists());
+    cfg.optimizer.kind = OptimizerKind::Adam;
+    cfg.resume_from = Some(ckpt.display().to_string());
+    cfg.checkpoint_every = 0;
+    let err = engd::coordinator::Trainer::new(cfg, &be)
+        .err()
+        .expect("adam resume from a spring checkpoint must be refused");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("spring") && msg.contains("adam"), "unhelpful error: {msg}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,0 +1,347 @@
+//! Worker-pool behaviour + sharded-evaluator cross-checks.
+//!
+//! Three contracts from the pool refactor are asserted here:
+//!
+//! 1. **Pool reuse** — threads are spawned once (first parallel call) and
+//!    reused forever after; a warmed-up native training step — including
+//!    its line-search loss re-evaluations — spawns zero new threads and
+//!    rebuilds zero `Tape` buffers.
+//! 2. **Determinism** — the per-element kernels (matmul, gram, tr_matvec,
+//!    Cholesky, Jacobian rows, predictions) and the chunk-grid reductions
+//!    (native loss/gradient) are bitwise identical no matter how many
+//!    threads actually execute, because chunk grids depend only on
+//!    `ENGD_THREADS` (CI runs this suite under `ENGD_THREADS=1` and `=4`).
+//! 3. **Sharding transparency** — `ShardedEvaluator` is bitwise identical
+//!    to the unsharded `NativeBackend` for any shard count, on every
+//!    evaluation entry point and over whole training trajectories.
+//!
+//! The tests serialize on one mutex: they read process-global counters
+//! (spawns, tape builds) and flip the global execution-width limit, which
+//! concurrent tests would race on.
+
+use std::sync::Mutex;
+
+use engd::backend::{Evaluator, NativeBackend, ShardedEvaluator};
+use engd::config::run::{ExecPath, OptimizerKind};
+use engd::config::RunConfig;
+use engd::coordinator::{train, Trainer};
+use engd::linalg::{Cholesky, Matrix, Workspace};
+use engd::parallel::{self, num_threads, pool_stats, with_thread_limit};
+use engd::pde::{init_params, Sampler};
+use engd::rng::Rng;
+
+/// Counter- and width-sensitive tests must not interleave.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serialized() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|poison| poison.into_inner())
+}
+
+fn out_dir(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("engd-pool-{}-{tag}", std::process::id()))
+        .display()
+        .to_string()
+}
+
+/// A problem's batch + parameters, deterministically seeded.
+fn problem_inputs(
+    be: &dyn Evaluator,
+    name: &str,
+    seed: u64,
+) -> (engd::pde::ProblemSpec, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let p = be.problem(name).unwrap();
+    let mut rng = Rng::seed_from(seed);
+    let theta = init_params(&p.arch, &mut rng);
+    let mut sampler = Sampler::new(p.dim, seed ^ 0xD15C);
+    let x_int = sampler.interior(p.n_interior);
+    let x_bnd = sampler.boundary(p.n_boundary);
+    let x_eval = sampler.eval_set(64);
+    (p, theta, x_int, x_bnd, x_eval)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Pool reuse
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pool_spawns_once_then_only_reuses() {
+    let _guard = serialized();
+    // Warm the pool.
+    parallel::par_chunks(1024, |_s, _e| {});
+    let spawned = pool_stats().threads_spawned;
+    assert!(
+        spawned <= num_threads().saturating_sub(1),
+        "pool spawned {spawned} threads for {} slots",
+        num_threads()
+    );
+    let before = pool_stats();
+    for i in 0..100 {
+        parallel::par_chunks(512 + i, |_s, _e| {});
+        parallel::par_dynamic(64, |_i| {});
+        let v = parallel::par_map(33, |j| j + i);
+        assert_eq!(v[32], 32 + i);
+    }
+    let after = pool_stats();
+    assert_eq!(
+        after.threads_spawned, before.threads_spawned,
+        "steady-state dispatches spawned threads: {before:?} -> {after:?}"
+    );
+    if num_threads() > 1 {
+        assert!(
+            after.dispatches > before.dispatches,
+            "no dispatch reached the pool ({before:?} -> {after:?})"
+        );
+    }
+}
+
+#[test]
+fn pool_thread_ids_stay_bounded_across_calls() {
+    let _guard = serialized();
+    // Collect every distinct executing thread over many dispatches: a
+    // persistent pool shows at most num_threads() ids (caller + workers);
+    // the old spawn-per-call substrate would show hundreds.
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..50 {
+        let ids = parallel::par_map(num_threads(), |_| {
+            Some(std::thread::current().id())
+        });
+        seen.extend(ids.into_iter().flatten());
+    }
+    assert!(
+        seen.len() <= num_threads(),
+        "{} distinct threads executed pool work (cap {})",
+        seen.len(),
+        num_threads()
+    );
+}
+
+#[test]
+fn warmed_up_training_step_spawns_nothing_and_rebuilds_no_tapes() {
+    let _guard = serialized();
+    let be = NativeBackend::new();
+    let dir = out_dir("steady");
+    let mut cfg = RunConfig {
+        name: "steady".into(),
+        problem: "poisson1d".into(),
+        backend: "native".into(),
+        steps: 1,
+        seed: 5,
+        eval_every: 1,
+        out_dir: dir.clone(),
+        ..RunConfig::default()
+    };
+    cfg.optimizer.kind = OptimizerKind::Spring;
+    cfg.optimizer.path = ExecPath::Decomposed;
+    cfg.optimizer.damping = 1e-6;
+    cfg.optimizer.momentum = 0.8;
+    // Line search on: each step re-evaluates the loss many times — the
+    // exact pattern that used to respawn threads and rebuild tapes.
+    cfg.optimizer.line_search = true;
+    cfg.optimizer.ls_grid = 8;
+
+    // One-step warmup populates every worker's tape slot for this arch.
+    let mut warm = Trainer::new(cfg.clone(), &be).unwrap();
+    warm.run(false).unwrap();
+
+    let spawned = pool_stats().threads_spawned;
+    let tapes = engd::backend::native::tape_builds();
+
+    // Three more full steps (fresh trainer, same problem/arch), each with
+    // line-search probes and an L2 evaluation.
+    cfg.steps = 3;
+    cfg.name = "steady-more".into();
+    let mut more = Trainer::new(cfg, &be).unwrap();
+    let report = more.run(false).unwrap();
+    assert_eq!(report.steps_done, 3);
+
+    assert_eq!(
+        pool_stats().threads_spawned,
+        spawned,
+        "warmed-up training steps spawned new threads"
+    );
+    assert_eq!(
+        engd::backend::native::tape_builds(),
+        tapes,
+        "warmed-up training steps rebuilt tape buffers"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 2. Determinism across execution widths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kernels_and_reductions_are_bitwise_deterministic_across_widths() {
+    let _guard = serialized();
+    let mut rng = Rng::seed_from(77);
+    let mut a = Matrix::zeros(130, 70);
+    rng.fill_normal(a.data_mut());
+    let mut b = Matrix::zeros(70, 40);
+    rng.fill_normal(b.data_mut());
+    let mut v = vec![0.0; 130];
+    rng.fill_normal(&mut v);
+    let mut w = vec![0.0; 70];
+    rng.fill_normal(&mut w);
+    let spd = {
+        let mut g = Matrix::zeros(300, 150);
+        rng.fill_normal(g.data_mut());
+        g.gram().add_diag(300.0)
+    };
+
+    let be = NativeBackend::new();
+    let (p, theta, x_int, x_bnd, x_eval) = problem_inputs(&be, "poisson2d", 9);
+
+    let run_all = || {
+        let mut ws = Workspace::new();
+        let (r, j) = be.residuals_jacobian(&p, &theta, &x_int, &x_bnd, &mut ws).unwrap();
+        (
+            a.matmul(&b),
+            a.gram(),
+            a.gram_t(),
+            a.tr_matvec(&v),
+            a.matvec(&w),
+            Cholesky::factor(&spd).unwrap().into_factor(),
+            be.loss(&p, &theta, &x_int, &x_bnd).unwrap(),
+            be.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap(),
+            be.u_pred(&p, &theta, &x_eval).unwrap(),
+            (r, j),
+        )
+    };
+
+    let serial = with_thread_limit(1, run_all);
+    let parallel_run = run_all();
+
+    let bits = |x: &[f64]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(serial.0.data()), bits(parallel_run.0.data()), "matmul");
+    assert_eq!(bits(serial.1.data()), bits(parallel_run.1.data()), "gram");
+    assert_eq!(bits(serial.2.data()), bits(parallel_run.2.data()), "gram_t");
+    assert_eq!(bits(&serial.3), bits(&parallel_run.3), "tr_matvec");
+    assert_eq!(bits(&serial.4), bits(&parallel_run.4), "matvec");
+    assert_eq!(bits(serial.5.data()), bits(parallel_run.5.data()), "cholesky");
+    assert_eq!(serial.6.to_bits(), parallel_run.6.to_bits(), "native loss");
+    assert_eq!(serial.7 .0.to_bits(), parallel_run.7 .0.to_bits(), "native loss (grad path)");
+    assert_eq!(bits(&serial.7 .1), bits(&parallel_run.7 .1), "native grad");
+    assert_eq!(bits(&serial.8), bits(&parallel_run.8), "u_pred");
+    assert_eq!(bits(&serial.9 .0), bits(&parallel_run.9 .0), "residuals");
+    assert_eq!(
+        bits(serial.9 .1.data()),
+        bits(parallel_run.9 .1.data()),
+        "jacobian"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. Sharding transparency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_evaluator_is_bitwise_identical_to_native() {
+    let _guard = serialized();
+    let native = NativeBackend::new();
+    for problem in ["poisson1d", "poisson2d", "heat2d"] {
+        let (p, theta, x_int, x_bnd, x_eval) = problem_inputs(&native, problem, 31);
+        let mut ws = Workspace::new();
+        let loss_ref = native.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+        let (lg_ref, grad_ref) = native.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap();
+        let (r_ref, j_ref) = native
+            .residuals_jacobian(&p, &theta, &x_int, &x_bnd, &mut ws)
+            .unwrap();
+        let u_ref = native.u_pred(&p, &theta, &x_eval).unwrap();
+
+        for shards in [1usize, 2, 3, 8] {
+            let sharded = ShardedEvaluator::new(shards);
+            let tag = format!("{problem} x{shards}");
+
+            let loss = sharded.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+            assert_eq!(loss.to_bits(), loss_ref.to_bits(), "{tag}: loss");
+
+            let (lg, grad) = sharded.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap();
+            assert_eq!(lg.to_bits(), lg_ref.to_bits(), "{tag}: loss (grad path)");
+            for (i, (g, gr)) in grad.iter().zip(&grad_ref).enumerate() {
+                assert_eq!(g.to_bits(), gr.to_bits(), "{tag}: grad[{i}]");
+            }
+
+            let mut ws_s = Workspace::new();
+            let (r, j) = sharded
+                .residuals_jacobian(&p, &theta, &x_int, &x_bnd, &mut ws_s)
+                .unwrap();
+            for (i, (x, y)) in r.iter().zip(&r_ref).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tag}: r[{i}]");
+            }
+            assert_eq!((j.rows(), j.cols()), (j_ref.rows(), j_ref.cols()), "{tag}");
+            for (i, (x, y)) in j.data().iter().zip(j_ref.data()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tag}: J[{i}]");
+            }
+
+            let u = sharded.u_pred(&p, &theta, &x_eval).unwrap();
+            for (i, (x, y)) in u.iter().zip(&u_ref).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tag}: u[{i}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_training_trajectory_is_bitwise_identical_to_native() {
+    let _guard = serialized();
+    let mk_cfg = |tag: &str, dir: &str| {
+        let mut cfg = RunConfig {
+            name: tag.to_string(),
+            problem: "poisson1d".into(),
+            steps: 4,
+            seed: 17,
+            eval_every: 2,
+            out_dir: dir.to_string(),
+            ..RunConfig::default()
+        };
+        cfg.optimizer.kind = OptimizerKind::Spring;
+        cfg.optimizer.path = ExecPath::Decomposed;
+        cfg.optimizer.damping = 1e-6;
+        cfg.optimizer.momentum = 0.8;
+        cfg.optimizer.line_search = true;
+        cfg.optimizer.ls_grid = 8;
+        cfg
+    };
+
+    let dir = out_dir("traj");
+    let native = NativeBackend::new();
+    let base = train(mk_cfg("traj-native", &dir), &native, false).unwrap();
+
+    for shards in [2usize, 5] {
+        let sharded = ShardedEvaluator::new(shards);
+        let run = train(
+            mk_cfg(&format!("traj-sharded{shards}"), &dir),
+            &sharded,
+            false,
+        )
+        .unwrap();
+        assert_eq!(run.backend, "sharded");
+        assert_eq!(base.losses.len(), run.losses.len());
+        for (k, (a, b)) in base.losses.iter().zip(&run.losses).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{shards} shards, step {}: native loss {a:.17e} != sharded {b:.17e}",
+                k + 1
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn backend_select_understands_sharded() {
+    let _guard = serialized();
+    let be = engd::backend::select("sharded:3", "artifacts").unwrap();
+    assert_eq!(be.backend_name(), "sharded");
+    assert!(be.problem("poisson1d").is_ok());
+
+    let default = engd::backend::select("sharded", "artifacts").unwrap();
+    assert_eq!(default.backend_name(), "sharded");
+
+    assert!(engd::backend::select("sharded:0", "artifacts").is_err());
+    assert!(engd::backend::select("sharded:x", "artifacts").is_err());
+    assert!(engd::backend::select("bogus", "artifacts").is_err());
+}

@@ -315,6 +315,11 @@ fn prop_fused_transpose_products_match_materialized() {
 /// a single fresh buffer. This is the harness-level statement of the
 /// trainer invariant (the trainer holds one `Workspace` for the whole run),
 /// checked here without needing PJRT artifacts.
+///
+/// Since the `thin_qr_into`/`eigh_into` refactor this covers the stable
+/// mode in full: the QR of the test matrix and the eigendecomposition of
+/// BᵀB draw their interiors from the same pool, so `fresh_allocs` freezing
+/// proves no dense temporary on the stable path escapes the accounting.
 #[test]
 fn prop_kernel_solve_reuses_workspace() {
     run_prop("kernel_solve workspace reuse", 8, |g| {
@@ -366,6 +371,41 @@ fn prop_kernel_solve_reuses_workspace() {
             if !x1.iter().all(|v| v.is_finite()) || !x2.iter().all(|v| v.is_finite()) {
                 return Err(format!("{}: non-finite solution", solve.name()));
             }
+        }
+        Ok(())
+    });
+}
+
+/// The stable-Nyström builder itself (not just the solve wrapper) reaches
+/// pool steady state: a rebuild of the same shape — QR, sketch, core
+/// factorization, eigendecomposition and all — allocates nothing fresh.
+#[test]
+fn prop_stable_nystrom_interiors_are_pooled() {
+    run_prop("stable nystrom pooled interiors", 10, |g| {
+        let n = g.usize_in(8, 28);
+        let p = n + g.usize_in(1, 16); // full row rank w.h.p.: no ν retries
+        let sketch = g.usize_in(2, n);
+        let j = random_jacobian(g, n, p);
+        let op = JacobianKernel::new(&j);
+        let mut rng = Rng::seed_from(g.usize_in(0, 1 << 30) as u64);
+        let mut ws = Workspace::new();
+
+        let first = StableNystrom::build(&op, sketch, 1e-2, &mut rng, &mut ws)
+            .map_err(|e| e.to_string())?;
+        first.recycle(&mut ws);
+        let after_first = ws.stats();
+
+        let second = StableNystrom::build(&op, sketch, 1e-2, &mut rng, &mut ws)
+            .map_err(|e| e.to_string())?;
+        second.recycle(&mut ws);
+        let after_second = ws.stats();
+
+        if after_second.fresh_allocs != after_first.fresh_allocs
+            || after_second.grown != after_first.grown
+        {
+            return Err(format!(
+                "stable rebuild allocated (first {after_first:?}, second {after_second:?})"
+            ));
         }
         Ok(())
     });

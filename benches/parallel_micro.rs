@@ -1,7 +1,8 @@
 //! Worker-pool microbenchmarks — the §Perf harness for the execution
 //! substrate itself.
 //!
-//! Two questions the pool refactor must answer with numbers:
+//! Three questions the execution-substrate refactors must answer with
+//! numbers:
 //!
 //! 1. **Dispatch overhead**: what does handing a job to parked workers cost
 //!    versus spawning fresh scoped threads per call (the previous
@@ -9,14 +10,21 @@
 //! 2. **Tape reuse**: what does keeping per-worker `Tape` state alive
 //!    across calls buy on repeated native `loss_and_grad` / line-search
 //!    style `loss` evaluations (cold first call vs steady state)?
+//! 3. **Blocked tape kernels**: what do the coordinate-blocked SIMD
+//!    kernels and the point-batched entry points buy over the scalar
+//!    per-(point, coordinate) loops (`ScalarTape`, the pre-blocking
+//!    implementation kept in-tree as the reference) on the Jacobian
+//!    forward+reverse workload — single thread, single-point and
+//!    point-block entries, Poisson 2d/10d + heat?
 
 use std::hint::black_box;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
+use engd::backend::native::{ScalarTape, Tape};
 use engd::backend::{Evaluator, NativeBackend};
 use engd::metrics::Summary;
-use engd::pde::{init_params, Sampler};
+use engd::pde::{init_params, param_count, DualOrder, PdeOperator, Sampler};
 use engd::rng::Rng;
 
 fn time_reps(reps: usize, mut f: impl FnMut()) -> Summary {
@@ -28,6 +36,136 @@ fn time_reps(reps: usize, mut f: impl FnMut()) -> Summary {
         samples.push(t0.elapsed().as_secs_f64());
     }
     Summary::of(&samples)
+}
+
+/// One blocked-vs-scalar tape case: the Jacobian workload (dual-carrying
+/// forward + row-seeded reverse per point) over `n_pts` points on one
+/// thread, via the scalar reference, the blocked single-point entry, and
+/// the point-block entry. Seeds mirror the interior residual rows:
+/// `γ ≡ −1` on the order-2 coordinates, `β_t = 1` for heat.
+fn bench_tape_case(
+    label: &str,
+    arch: &[usize],
+    n_pts: usize,
+    orders: DualOrder,
+    heat: bool,
+    reps: usize,
+) {
+    let np = param_count(arch);
+    let d = arch[0];
+    let (nc, nc2) = (orders.first, orders.second);
+    let mut rng = Rng::seed_from(0xB10C);
+    let theta = init_params(arch, &mut rng);
+    let mut xs = vec![0.0; n_pts * d];
+    rng.fill_uniform(&mut xs, 0.05, 0.95);
+
+    let alpha = vec![0.0; n_pts];
+    let mut beta = vec![0.0; n_pts * nc];
+    let gamma = vec![-1.0; n_pts * nc2];
+    if heat {
+        for b in 0..n_pts {
+            beta[b * nc + nc - 1] = 1.0;
+        }
+    }
+    // Scalar API carries full second order on all nc coordinates; the
+    // dual-order mask is emulated with zero γ padding.
+    let mut gref = vec![0.0; nc];
+    gref[..nc2].fill(-1.0);
+
+    let mut j = vec![0.0; n_pts * np];
+    let mut scalar = ScalarTape::new(arch);
+    let mut tape = Tape::new(arch);
+
+    // Bitwise cross-check once, outside the timed loops.
+    let mut j_ref = vec![0.0; n_pts * np];
+    for b in 0..n_pts {
+        scalar.forward(&theta, &xs[b * d..(b + 1) * d], nc);
+        scalar.backward(
+            &theta,
+            0.0,
+            &beta[b * nc..(b + 1) * nc],
+            &gref,
+            &mut j_ref[b * np..(b + 1) * np],
+        );
+    }
+    let block = tape.block_points(orders);
+    let mut p = 0;
+    while p < n_pts {
+        let n = block.min(n_pts - p);
+        tape.forward_batch(&theta, &xs[p * d..(p + n) * d], n, orders);
+        tape.backward_batch(
+            &theta,
+            n,
+            &alpha[p..p + n],
+            &beta[p * nc..(p + n) * nc],
+            &gamma[p * nc2..(p + n) * nc2],
+            &mut j[p * np..(p + n) * np],
+        );
+        p += n;
+    }
+    let bitwise = j.iter().zip(&j_ref).all(|(a, b)| a.to_bits() == b.to_bits());
+    let cross_check = if bitwise {
+        "rows bitwise==scalar"
+    } else {
+        "ROWS DIVERGE FROM SCALAR"
+    };
+
+    let scalar_t = time_reps(reps, || {
+        j.fill(0.0);
+        for b in 0..n_pts {
+            scalar.forward(&theta, &xs[b * d..(b + 1) * d], nc);
+            scalar.backward(
+                &theta,
+                0.0,
+                &beta[b * nc..(b + 1) * nc],
+                &gref,
+                &mut j[b * np..(b + 1) * np],
+            );
+        }
+        black_box(j[0]);
+    });
+    let single_t = time_reps(reps, || {
+        j.fill(0.0);
+        for b in 0..n_pts {
+            tape.forward(&theta, &xs[b * d..(b + 1) * d], orders);
+            tape.backward(
+                &theta,
+                0,
+                0.0,
+                &beta[b * nc..(b + 1) * nc],
+                &gamma[b * nc2..(b + 1) * nc2],
+                &mut j[b * np..(b + 1) * np],
+            );
+        }
+        black_box(j[0]);
+    });
+    let batch_t = time_reps(reps, || {
+        j.fill(0.0);
+        let mut p = 0;
+        while p < n_pts {
+            let n = block.min(n_pts - p);
+            tape.forward_batch(&theta, &xs[p * d..(p + n) * d], n, orders);
+            tape.backward_batch(
+                &theta,
+                n,
+                &alpha[p..p + n],
+                &beta[p * nc..(p + n) * nc],
+                &gamma[p * nc2..(p + n) * nc2],
+                &mut j[p * np..(p + n) * np],
+            );
+            p += n;
+        }
+        black_box(j[0]);
+    });
+    println!(
+        "tape {label:<16} scalar {:>8.3}ms  single {:>8.3}ms ({:.2}x)  \
+         block[{block}] {:>8.3}ms ({:.2}x)  {cross_check}",
+        scalar_t.median * 1e3,
+        single_t.median * 1e3,
+        scalar_t.median / single_t.median.max(1e-12),
+        batch_t.median * 1e3,
+        scalar_t.median / batch_t.median.max(1e-12),
+    );
 }
 
 /// The previous substrate, reproduced as a baseline: fresh scoped threads
@@ -120,4 +258,15 @@ fn main() {
             warm_loss.median * 1e3,
         );
     }
+
+    // --- blocked vs scalar tape kernels (single thread) ------------------
+    //
+    // The Jacobian workload per point: dual-carrying forward + row-seeded
+    // reverse. The PR-4 acceptance case is the [2, 64, 64, 1] net at batch
+    // 512 (blocked batch must be ≥ 2× the scalar tape).
+    let arch10d: &[usize] = &[10, 96, 96, 64, 64, 1];
+    let heat_orders = PdeOperator::Heat.dual_orders(3);
+    bench_tape_case("poisson2d-b512", &[2, 64, 64, 1], 512, DualOrder::full(2), false, 20);
+    bench_tape_case("poisson10d-b128", arch10d, 128, DualOrder::full(10), false, 5);
+    bench_tape_case("heat2d-b192", &[3, 48, 48, 1], 192, heat_orders, true, 20);
 }

@@ -1,0 +1,394 @@
+"""Toolchain-free oracle for the blocked Tape kernels.
+
+A line-by-line Python mirror of rust/src/backend/native/tape.rs — same
+panel layouts, loop orders, DualOrder mask handling, and fused zeta/xi
+pass — cross-checked bitwise against a mirror of the scalar reference
+(`ScalarTape`) and against central finite differences. Pure-Python floats
+are IEEE f64 with the same operation order, so bitwise comparison is
+meaningful. Run with `python3 python/tools/tape_oracle.py`; prints
+"ALL OK" when every case agrees. Used when no Rust toolchain is available
+(see .claude/skills/verify/SKILL.md); the in-tree Rust property test
+`prop_blocked_tape_matches_scalar_reference_bitwise` asserts the same
+contract against the real implementation.
+"""
+import math, random, struct
+
+def bits(x): return struct.unpack('<Q', struct.pack('<d', x))[0]
+
+def param_count(arch):
+    return sum(arch[i]*arch[i+1] + arch[i+1] for i in range(len(arch)-1))
+
+def offsets_of(arch):
+    offs, off = [], 0
+    for l in range(len(arch)-1):
+        offs.append(off); off += arch[l]*arch[l+1] + arch[l+1]
+    return offs
+
+# ----- scalar reference (ScalarTape port) ---------------------------------
+class ScalarTape:
+    def __init__(s, arch):
+        s.arch = arch; s.offs = offsets_of(arch)
+        d = arch[0]; nl = len(arch)-1
+        s.h  = [[0.0]*arch[l+1] for l in range(nl)]
+        s.tz = [[0.0]*(d*arch[l+1]) for l in range(nl)]
+        s.sz = [[0.0]*(d*arch[l+1]) for l in range(nl)]
+        s.th = [[0.0]*(d*arch[l+1]) for l in range(nl)]
+        s.sh = [[0.0]*(d*arch[l+1]) for l in range(nl)]
+        s.x_in = [0.0]*d
+
+    def forward(s, theta, x, nc):
+        arch = s.arch; nl = len(arch)-1
+        s.nc = nc; s.x_in = list(x)
+        for l in range(nl):
+            fi, fo = arch[l], arch[l+1]
+            off = s.offs[l]
+            w = theta[off:off+fi*fo]; b = theta[off+fi*fo:off+fi*fo+fo]
+            last = l+1 == nl
+            hp = x if l == 0 else s.h[l-1]
+            for o in range(fo):
+                row = w[o*fi:(o+1)*fi]
+                z = b[o]
+                for k in range(fi): z = z + row[k]*hp[k]
+                for i in range(nc):
+                    if l == 0:
+                        zeta, xi = row[i], 0.0
+                    else:
+                        tp = s.th[l-1][i*fi:(i+1)*fi]; sp = s.sh[l-1][i*fi:(i+1)*fi]
+                        zeta = 0.0; xi = 0.0
+                        for k in range(fi):
+                            zeta = zeta + row[k]*tp[k]; xi = xi + row[k]*sp[k]
+                    s.tz[l][i*fo+o] = zeta; s.sz[l][i*fo+o] = xi
+                if last:
+                    s.h[l][o] = z
+                    for i in range(nc):
+                        s.th[l][i*fo+o] = s.tz[l][i*fo+o]; s.sh[l][i*fo+o] = s.sz[l][i*fo+o]
+                else:
+                    y = math.tanh(z); d1 = 1.0 - y*y; d2 = -2.0*y*d1
+                    s.h[l][o] = y
+                    for i in range(nc):
+                        zeta = s.tz[l][i*fo+o]; xi = s.sz[l][i*fo+o]
+                        s.th[l][i*fo+o] = d1*zeta
+                        s.sh[l][i*fo+o] = d2*zeta*zeta + d1*xi
+
+    def value(s): return s.h[-1][0]
+    def d1(s, i): return s.th[-1][i]
+    def d2(s, i): return s.sh[-1][i]
+
+    def backward(s, theta, alpha, beta, gamma, out):
+        arch = s.arch; nl = len(arch)-1; nc = s.nc
+        widest = max(arch); d = arch[0]
+        zbar = [0.0]*widest; tbar = [0.0]*(d*widest); sbar = [0.0]*(d*widest)
+        zbar[0] = alpha
+        for i in range(nc):
+            tbar[i] = beta[i] if i < len(beta) else 0.0
+            sbar[i] = gamma[i] if i < len(gamma) else 0.0
+        for l in range(nl-1, -1, -1):
+            fi, fo = arch[l], arch[l+1]
+            off = s.offs[l]
+            w = theta[off:off+fi*fo]
+            hp = s.x_in if l == 0 else s.h[l-1]
+            ow, ob = off, off+fi*fo
+            for o in range(fo):
+                zb = zbar[o]
+                if zb != 0.0:
+                    for k in range(fi): out[ow+o*fi+k] = out[ow+o*fi+k] + zb*hp[k]
+                out[ob+o] = out[ob+o] + zb
+                for i in range(nc):
+                    tb = tbar[i*fo+o]; sb = sbar[i*fo+o]
+                    if l == 0:
+                        out[ow+o*fi+i] = out[ow+o*fi+i] + tb
+                    elif tb != 0.0 or sb != 0.0:
+                        tp = s.th[l-1][i*fi:(i+1)*fi]; sp = s.sh[l-1][i*fi:(i+1)*fi]
+                        for k in range(fi):
+                            out[ow+o*fi+k] = out[ow+o*fi+k] + (tb*tp[k] + sb*sp[k])
+            if l == 0: break
+            zbn = [0.0]*fi; tbn = [0.0]*(nc*fi); sbn = [0.0]*(nc*fi)
+            for o in range(fo):
+                row = w[o*fi:(o+1)*fi]
+                zb = zbar[o]
+                if zb != 0.0:
+                    for k in range(fi): zbn[k] = zbn[k] + row[k]*zb
+                for i in range(nc):
+                    tb = tbar[i*fo+o]; sb = sbar[i*fo+o]
+                    if tb != 0.0:
+                        for k in range(fi): tbn[i*fi+k] = tbn[i*fi+k] + row[k]*tb
+                    if sb != 0.0:
+                        for k in range(fi): sbn[i*fi+k] = sbn[i*fi+k] + row[k]*sb
+            hm = s.h[l-1]; tzm = s.tz[l-1]; szm = s.sz[l-1]
+            for o in range(fi):
+                y = hm[o]; d1 = 1.0-y*y; d2 = -2.0*y*d1; d3 = d1*(6.0*y*y-2.0)
+                zb = d1*zbn[o]
+                for i in range(nc):
+                    zeta = tzm[i*fi+o]; xi = szm[i*fi+o]
+                    tb = tbn[i*fi+o]; sb = sbn[i*fi+o]
+                    zb = zb + (d2*zeta*tb + (d3*zeta*zeta + d2*xi)*sb)
+                    tbar[i*fi+o] = d1*tb + 2.0*d2*zeta*sb
+                    sbar[i*fi+o] = d1*sb
+                zbar[o] = zb
+
+# ----- blocked tape (Tape port, same index math as the Rust) ---------------
+MAX_BLOCK_POINTS = 32
+DUAL_LANE_BUDGET = 64
+def block_points_for(nc):
+    if nc == 0: return MAX_BLOCK_POINTS
+    return min(max(DUAL_LANE_BUDGET // nc, 1), MAX_BLOCK_POINTS)
+
+class Tape:
+    def __init__(s, arch):
+        s.arch = arch; s.offs = offsets_of(arch)
+        d = arch[0]; nl = len(arch)-1
+        lane_cap = max(block_points_for(nc)*nc for nc in range(1, d+1)) if d >= 1 else 0
+        s.h  = [[0.0]*(MAX_BLOCK_POINTS*arch[l+1]) for l in range(nl)]
+        s.tz = [[0.0]*(lane_cap*arch[l+1]) for l in range(nl)]
+        s.sz = [[0.0]*(lane_cap*arch[l+1]) for l in range(nl)]
+        s.th = [[0.0]*(lane_cap*arch[l+1]) for l in range(nl)]
+        s.sh = [[0.0]*(lane_cap*arch[l+1]) for l in range(nl)]
+        s.x_in = [0.0]*(MAX_BLOCK_POINTS*d)
+        widest_w = max(arch[l]*arch[l+1] for l in range(nl))
+        s.wt = [0.0]*widest_w
+        widest = max(arch)
+        s.d1v = [0.0]*widest; s.d2v = [0.0]*widest
+        s.widest = widest
+
+    def forward_batch(s, theta, xs, n_pts, nc, nc2):
+        arch = s.arch; d = arch[0]; nl = len(arch)-1
+        assert nc2 <= nc <= d and len(xs) == n_pts*d
+        assert n_pts <= block_points_for(nc)
+        s.n_pts, s.nc, s.nc2 = n_pts, nc, nc2
+        s.x_in[:n_pts*d] = xs
+        for l in range(nl):
+            fi, fo = arch[l], arch[l+1]
+            off = s.offs[l]
+            w = theta[off:off+fi*fo]; bias = theta[off+fi*fo:off+fi*fo+fo]
+            last = l+1 == nl
+            wt = s.wt
+            for k in range(fi):
+                for o in range(fo):
+                    wt[k*fo+o] = w[o*fi+k]
+            for b in range(n_pts):
+                hp = s.x_in[b*d:(b+1)*d] if l == 0 else s.h[l-1][b*fi:(b+1)*fi]
+                # z lanes
+                zc = list(bias)
+                for k in range(fi):
+                    hk = hp[k]
+                    for o in range(fo):
+                        zc[o] = zc[o] + wt[k*fo+o]*hk
+                s.h[l][b*fo:(b+1)*fo] = zc
+                # fused zeta/xi panels
+                for i in range(nc):
+                    tbase = (b*nc+i)*fo
+                    if l == 0:
+                        s.tz[l][tbase:tbase+fo] = wt[i*fo:(i+1)*fo]
+                        if i < nc2:
+                            sbase = (b*nc2+i)*fo
+                            s.sz[l][sbase:sbase+fo] = [0.0]*fo
+                    elif i < nc2:
+                        sbase = (b*nc2+i)*fo
+                        tp0 = (b*nc+i)*fi; sp0 = (b*nc2+i)*fi
+                        tp = s.th[l-1][tp0:tp0+fi]; sp = s.sh[l-1][sp0:sp0+fi]
+                        tdst = [0.0]*fo; sdst = [0.0]*fo
+                        for k in range(fi):
+                            tpk = tp[k]; spk = sp[k]
+                            for o in range(fo):
+                                tdst[o] = tdst[o] + wt[k*fo+o]*tpk
+                                sdst[o] = sdst[o] + wt[k*fo+o]*spk
+                        s.tz[l][tbase:tbase+fo] = tdst
+                        s.sz[l][sbase:sbase+fo] = sdst
+                    else:
+                        tp0 = (b*nc+i)*fi
+                        tp = s.th[l-1][tp0:tp0+fi]
+                        tdst = [0.0]*fo
+                        for k in range(fi):
+                            tpk = tp[k]
+                            for o in range(fo):
+                                tdst[o] = tdst[o] + wt[k*fo+o]*tpk
+                        s.tz[l][tbase:tbase+fo] = tdst
+                if last:
+                    for i in range(nc):
+                        base = (b*nc+i)*fo
+                        s.th[l][base:base+fo] = s.tz[l][base:base+fo]
+                    for i in range(nc2):
+                        base = (b*nc2+i)*fo
+                        s.sh[l][base:base+fo] = s.sz[l][base:base+fo]
+                else:
+                    for o in range(fo):
+                        y = math.tanh(s.h[l][b*fo+o])
+                        dd1 = 1.0 - y*y
+                        s.h[l][b*fo+o] = y
+                        s.d1v[o] = dd1; s.d2v[o] = -2.0*y*dd1
+                    for i in range(nc):
+                        base = (b*nc+i)*fo
+                        for o in range(fo):
+                            s.th[l][base+o] = s.d1v[o]*s.tz[l][base+o]
+                    for i in range(nc2):
+                        sbase = (b*nc2+i)*fo; tbase = (b*nc+i)*fo
+                        for o in range(fo):
+                            zeta = s.tz[l][tbase+o]; xi = s.sz[l][sbase+o]
+                            s.sh[l][sbase+o] = s.d2v[o]*zeta*zeta + s.d1v[o]*xi
+
+    def value(s, b): return s.h[-1][b]
+    def d1(s, b, i): return s.th[-1][b*s.nc+i]
+    def d2(s, b, i): return s.sh[-1][b*s.nc2+i]
+
+    def backward(s, theta, b, alpha, beta, gamma, out):
+        arch = s.arch; d = arch[0]; nl = len(arch)-1
+        nc, nc2 = s.nc, s.nc2
+        widest = s.widest
+        zbar = [0.0]*widest; tbar = [0.0]*(d*widest); sbar = [0.0]*(d*widest)
+        zbar[0] = alpha
+        for i in range(nc): tbar[i] = beta[i] if i < len(beta) else 0.0
+        for i in range(nc2): sbar[i] = gamma[i] if i < len(gamma) else 0.0
+        for l in range(nl-1, -1, -1):
+            fi, fo = arch[l], arch[l+1]
+            off = s.offs[l]
+            w = theta[off:off+fi*fo]
+            hp = s.x_in[b*d:(b+1)*d] if l == 0 else s.h[l-1][b*fi:(b+1)*fi]
+            ow, ob = off, off+fi*fo
+            for o in range(fo):
+                zb = zbar[o]
+                if zb != 0.0:
+                    for k in range(fi): out[ow+o*fi+k] = out[ow+o*fi+k] + zb*hp[k]
+                out[ob+o] = out[ob+o] + zb
+                for i in range(nc):
+                    tb = tbar[i*fo+o]
+                    sb = sbar[i*fo+o] if i < nc2 else 0.0
+                    if l == 0:
+                        out[ow+o*fi+i] = out[ow+o*fi+i] + tb
+                    elif tb != 0.0 or sb != 0.0:
+                        tp0 = (b*nc+i)*fi
+                        tp = s.th[l-1][tp0:tp0+fi]
+                        if i < nc2:
+                            sp0 = (b*nc2+i)*fi
+                            sp = s.sh[l-1][sp0:sp0+fi]
+                            for k in range(fi):
+                                out[ow+o*fi+k] = out[ow+o*fi+k] + (tb*tp[k] + sb*sp[k])
+                        else:
+                            for k in range(fi):
+                                out[ow+o*fi+k] = out[ow+o*fi+k] + tb*tp[k]
+            if l == 0: break
+            zbn = [0.0]*fi; tbn = [0.0]*(nc*fi); sbn = [0.0]*(nc2*fi)
+            for o in range(fo):
+                row = w[o*fi:(o+1)*fi]
+                zb = zbar[o]
+                if zb != 0.0:
+                    for k in range(fi): zbn[k] = zbn[k] + row[k]*zb
+                for i in range(nc):
+                    tb = tbar[i*fo+o]
+                    if tb != 0.0:
+                        for k in range(fi): tbn[i*fi+k] = tbn[i*fi+k] + row[k]*tb
+                for i in range(nc2):
+                    sb = sbar[i*fo+o]
+                    if sb != 0.0:
+                        for k in range(fi): sbn[i*fi+k] = sbn[i*fi+k] + row[k]*sb
+            for o in range(fi):
+                y = s.h[l-1][b*fi+o]
+                dd1 = 1.0-y*y; dd2 = -2.0*y*dd1; dd3 = dd1*(6.0*y*y-2.0)
+                zb = dd1*zbn[o]
+                for i in range(nc2):
+                    zeta = s.tz[l-1][(b*nc+i)*fi+o]; xi = s.sz[l-1][(b*nc2+i)*fi+o]
+                    tb = tbn[i*fi+o]; sb = sbn[i*fi+o]
+                    zb = zb + (dd2*zeta*tb + (dd3*zeta*zeta + dd2*xi)*sb)
+                    tbar[i*fi+o] = dd1*tb + 2.0*dd2*zeta*sb
+                    sbar[i*fi+o] = dd1*sb
+                for i in range(nc2, nc):
+                    zeta = s.tz[l-1][(b*nc+i)*fi+o]
+                    tb = tbn[i*fi+o]
+                    zb = zb + dd2*zeta*tb
+                    tbar[i*fi+o] = dd1*tb
+                zbar[o] = zb
+
+# ----- oracle forward (independent) ---------------------------------------
+def mlp_forward(theta, arch, x):
+    offs = offsets_of(arch)
+    h = list(x)
+    nl = len(arch)-1
+    for l in range(nl):
+        fi, fo = arch[l], arch[l+1]
+        off = offs[l]
+        w = theta[off:off+fi*fo]; b = theta[off+fi*fo:off+fi*fo+fo]
+        nxt = []
+        for o in range(fo):
+            z = b[o]
+            for k in range(fi): z += w[o*fi+k]*h[k]
+            nxt.append(z if l == nl-1 else math.tanh(z))
+        h = nxt
+    return h[0]
+
+# ----- cross-checks --------------------------------------------------------
+random.seed(1234)
+fails = 0
+for case in range(40):
+    d = random.randint(1, 4)
+    arch = [d] + [random.randint(2, 8) for _ in range(random.randint(1, 2))] + [1]
+    nc = random.choice([0, 1, d])
+    nc2 = nc - 1 if (nc > 0 and random.random() < 0.5) else nc
+    np_ = param_count(arch)
+    theta = [random.uniform(-0.7, 0.7) for _ in range(np_)]
+    n_pts = random.randint(1, min(block_points_for(nc), 6))
+    xs = [random.uniform(0.05, 0.95) for _ in range(n_pts*d)]
+    alpha = [random.uniform(0.1, 1.0) for _ in range(n_pts)]
+    beta  = [random.uniform(0.1, 1.0) for _ in range(n_pts*nc)]
+    gamma = [random.uniform(0.1, 1.0) for _ in range(n_pts*nc2)]
+
+    tape = Tape(arch); scalar = ScalarTape(arch)
+    tape.forward_batch(theta, xs, n_pts, nc, nc2)
+    # One zero-initialized Jacobian row per point (the backward_batch shape).
+    rows = [0.0]*(n_pts*np_)
+    for b in range(n_pts):
+        sub = [0.0]*np_
+        tape.backward(theta, b, alpha[b], beta[b*nc:(b+1)*nc], gamma[b*nc2:(b+1)*nc2], sub)
+        rows[b*np_:(b+1)*np_] = sub
+
+    for b in range(n_pts):
+        x = xs[b*d:(b+1)*d]
+        scalar.forward(theta, x, nc)
+        gref = gamma[b*nc2:(b+1)*nc2] + [0.0]*(nc-nc2)
+        ref = [0.0]*np_
+        scalar.backward(theta, alpha[b], beta[b*nc:(b+1)*nc], gref, ref)
+        # value/duals bitwise
+        if bits(tape.value(b)) != bits(scalar.value()):
+            print(f"case {case} pt {b}: value mismatch"); fails += 1
+        for i in range(nc):
+            if bits(tape.d1(b, i)) != bits(scalar.d1(i)):
+                print(f"case {case} pt {b}: d1[{i}] mismatch"); fails += 1
+        for i in range(nc2):
+            if bits(tape.d2(b, i)) != bits(scalar.d2(i)):
+                print(f"case {case} pt {b}: d2[{i}] mismatch"); fails += 1
+        # value vs independent oracle (tolerance)
+        want = mlp_forward(theta, arch, x)
+        if abs(tape.value(b) - want) > 1e-12*(1+abs(want)):
+            print(f"case {case} pt {b}: oracle value off"); fails += 1
+        # rows bitwise
+        for jj in range(np_):
+            if bits(rows[b*np_+jj]) != bits(ref[jj]):
+                print(f"case {case} pt {b}: row[{jj}] {rows[b*np_+jj]!r} vs {ref[jj]!r}")
+                fails += 1
+                break
+
+# FD check of the blocked tape's gradient (alpha/beta/gamma-seeded) on one case
+arch = [3, 6, 5, 1]; d = 3; nc, nc2 = 3, 2
+np_ = param_count(arch)
+random.seed(7)
+theta = [random.uniform(-0.6, 0.6) for _ in range(np_)]
+x = [0.3, 0.7, 0.45]
+tape = Tape(arch)
+tape.forward_batch(theta, x, 1, nc, nc2)
+grad = [0.0]*np_
+beta = [0.2, 0.0, 1.3]; gamma = [-1.1, 0.8]
+tape.backward(theta, 0, 0.7, beta, gamma, grad)
+def func(th):
+    t = Tape(arch); t.forward_batch(th, x, 1, nc, nc2)
+    acc = 0.7*t.value(0)
+    for i in range(nc): acc += beta[i]*t.d1(0, i)
+    for i in range(nc2): acc += gamma[i]*t.d2(0, i)
+    return acc
+eps = 1e-6; bad_fd = 0
+for jj in range(0, np_, 3):
+    tp = list(theta); tm = list(theta)
+    tp[jj] += eps; tm[jj] -= eps
+    fd = (func(tp) - func(tm)) / (2*eps)
+    if abs(grad[jj] - fd) > 1e-5*(1+abs(fd)):
+        print(f"FD mismatch at {jj}: {grad[jj]} vs {fd}"); bad_fd += 1
+
+print(f"bitwise mismatches: {fails}, FD mismatches: {bad_fd}")
+print("ALL OK" if fails == 0 and bad_fd == 0 else "FAILURES PRESENT")

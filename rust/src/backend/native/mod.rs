@@ -3,16 +3,23 @@
 //!
 //! Everything PJRT does for the trainer — `loss`, `(r, J)`, `∇L`,
 //! `u_pred` — is computed here with the hand-rolled AD in [`tape`]:
-//! per-coordinate second-order forward duals give the PDE operator
-//! (Laplacian / heat), and a structured reverse pass gives per-sample
-//! Jacobian rows written straight into `Workspace`-pooled row-major
-//! storage. Work is parallelized over collocation points with
-//! [`crate::parallel`]; each worker thread owns one [`Tape`] *persistently*
-//! — the tape lives in the thread's [`crate::parallel::with_scratch`] slot
-//! and survives across evaluations and training steps, so a warmed-up step
-//! (including every line-search loss probe) rebuilds zero tape buffers and
-//! spawns zero threads. Threads share nothing but the read-only inputs and
-//! their disjoint output rows.
+//! per-coordinate forward duals (to the order each coordinate actually
+//! needs — the operator's [`crate::pde::DualOrder`] mask) give the PDE
+//! operator (Laplacian / heat), and a structured reverse pass gives
+//! per-sample Jacobian rows written straight into `Workspace`-pooled
+//! row-major storage. Points run through the tape in **blocks**
+//! ([`Tape::forward_batch`] / [`Tape::backward_batch`]): each worker's
+//! chunk is split at the interior/boundary frontier and fed to the
+//! coordinate-blocked SIMD kernels a point-block at a time, which
+//! amortizes the per-layer weight-panel setup across points instead of
+//! re-walking θ per point. Work is parallelized over collocation points
+//! with [`crate::parallel`]; each worker thread owns one [`Tape`]
+//! *persistently* — the tape lives in the thread's
+//! [`crate::parallel::with_scratch`] slot and survives across evaluations
+//! and training steps, so a warmed-up step (including every line-search
+//! loss probe) rebuilds zero tape buffers and spawns zero threads.
+//! Threads share nothing but the read-only inputs and their disjoint
+//! output rows.
 //!
 //! Determinism: the loss / gradient reductions are laid out on a *chunk
 //! grid* that depends only on `ENGD_THREADS` and the batch size (see
@@ -20,7 +27,10 @@
 //! what [`super::sharded::ShardedEvaluator`] partitions across inner
 //! evaluators, which is why sharded results are bitwise-identical to this
 //! backend for any shard count. The `shard_*` methods below are that
-//! protocol.
+//! protocol. Point-blocking changes none of it: every tape lane computes
+//! the scalar per-point operation sequence, blocks never straddle a
+//! reduction boundary, and per-point accumulations run in ascending row
+//! order, so blocked results are bitwise those of per-point processing.
 //!
 //! Residual convention (paper §3, mirrored from `python/compile/model.py`):
 //!
@@ -42,10 +52,10 @@ use super::Evaluator;
 use crate::linalg::{Matrix, Workspace};
 use crate::parallel::{self, SendPtr};
 use crate::pde::{
-    builtin_problem_map, exact_solution, ExactSolution, PdeOperator, ProblemSpec,
+    builtin_problem_map, exact_solution, DualOrder, ExactSolution, PdeOperator, ProblemSpec,
 };
 
-pub use tape::{tape_builds, Tape};
+pub use tape::{tape_builds, ScalarTape, Tape};
 
 /// Pure-Rust implementation of [`Evaluator`]. Stateless apart from its
 /// problem catalogue (built-ins by default; custom specs for tests).
@@ -159,12 +169,7 @@ impl NativeBackend {
         ensure!(row0 <= row1 && row1 <= n, "row range [{row0}, {row1}) of {n}");
         ensure!(r_out.len() == row1 - row0, "residual slice length mismatch");
         ensure!(j_out.len() == (row1 - row0) * np, "Jacobian slice length mismatch");
-        with_worker(&ctx, |worker| {
-            for (k, idx) in (row0..row1).enumerate() {
-                let row = &mut j_out[k * np..(k + 1) * np];
-                r_out[k] = worker.residual(&ctx, theta, x_int, x_bnd, idx, Some((row, Seed::Row)));
-            }
-        });
+        rows_into(&ctx, theta, x_int, x_bnd, row0, row1, r_out, j_out);
         Ok(())
     }
 
@@ -191,12 +196,7 @@ impl NativeBackend {
             "evaluation range [{i0}, {i1}) outside the point set"
         );
         ensure!(out.len() == i1 - i0, "prediction slice length mismatch");
-        with_worker(&ctx, |worker| {
-            for (k, i) in (i0..i1).enumerate() {
-                worker.tape.forward(theta, &x_eval[i * ctx.dim..(i + 1) * ctx.dim], 0);
-                out[k] = worker.tape.value();
-            }
-        });
+        u_pred_into(&ctx, theta, x_eval, i0, i1, out);
         Ok(())
     }
 }
@@ -206,6 +206,9 @@ struct Ctx {
     arch: Vec<usize>,
     dim: usize,
     operator: PdeOperator,
+    /// Interior-pass dual mask: which coordinates carry which dual orders
+    /// (`orders.second` doubles as the Laplacian's coordinate count).
+    orders: DualOrder,
     exact: ExactSolution,
     /// √(ω_Ω/N_Ω), √(ω_∂Ω/N_∂Ω).
     scale_int: f64,
@@ -239,6 +242,7 @@ impl Ctx {
             arch: p.arch.clone(),
             dim: p.dim,
             operator: p.operator,
+            orders: p.operator.dual_orders(p.dim),
             exact: exact_solution(&p.pde)?,
             scale_int: (p.interior_weight / p.n_interior as f64).sqrt(),
             scale_bnd: (p.boundary_weight / p.n_boundary as f64).sqrt(),
@@ -273,118 +277,179 @@ impl Ctx {
     }
 }
 
-/// What the reverse pass should accumulate for a residual `r`.
-#[derive(Clone, Copy, PartialEq)]
-enum Seed {
-    /// `out += ∇_θ r` — one Jacobian row.
-    Row,
-    /// `out += r·∇_θ r` — this point's contribution to `∇L = Jᵀr`.
-    Loss,
-}
-
-/// One worker thread's state: the AD tape plus reusable seed buffers.
+/// One worker thread's state: the AD tape plus per-block seed buffers for
+/// the batched reverse passes (α per point; β/γ per point × coordinate,
+/// sized for the problem's dual mask at the tape's block width).
 struct Worker {
     tape: Tape,
-    gamma: Vec<f64>,
+    alpha: Vec<f64>,
     beta: Vec<f64>,
+    gamma: Vec<f64>,
 }
 
 impl Worker {
     fn new(ctx: &Ctx) -> Worker {
+        let tape = Tape::new(&ctx.arch);
+        let interior_block = tape.block_points(ctx.orders);
+        let value_block = tape.block_points(DualOrder::NONE);
         Worker {
-            tape: Tape::new(&ctx.arch),
-            gamma: vec![0.0; ctx.dim],
-            beta: vec![0.0; ctx.dim],
+            alpha: vec![0.0; interior_block.max(value_block)],
+            beta: vec![0.0; interior_block * ctx.orders.first],
+            gamma: vec![0.0; interior_block * ctx.orders.second],
+            tape,
         }
     }
 
-    /// Interior residual at `x`; with `grad = Some((out, seed))` the tape's
-    /// reverse pass also accumulates the seeded θ-gradient (one forward,
-    /// one backward — never two forwards).
-    fn interior(
-        &mut self,
-        ctx: &Ctx,
-        theta: &[f64],
-        x: &[f64],
-        grad: Option<(&mut [f64], Seed)>,
-    ) -> f64 {
-        let d = ctx.dim;
-        self.tape.forward(theta, x, d);
-        let s = ctx.scale_int;
-        let f = ctx.exact.forcing(x);
-        let n_lap = match ctx.operator {
-            PdeOperator::Poisson => d,
-            PdeOperator::Heat => d - 1,
-        };
-        let mut lap = 0.0;
-        for i in 0..n_lap {
-            lap += self.tape.d2(i);
-        }
-        let val = match ctx.operator {
-            PdeOperator::Poisson => s * (-lap - f),
-            PdeOperator::Heat => s * (self.tape.d1(d - 1) - lap - f),
-        };
-        if let Some((out, seed)) = grad {
-            let c = s * match seed {
-                Seed::Row => 1.0,
-                Seed::Loss => val,
-            };
-            for g in self.gamma.iter_mut() {
-                *g = 0.0;
+    /// Residual of block point `b` of the last `forward_batch` (`x` is
+    /// that point's coordinates; `interior` selects the operator residual
+    /// vs the boundary one).
+    fn residual_at(&self, ctx: &Ctx, x: &[f64], b: usize, interior: bool) -> f64 {
+        if interior {
+            let f = ctx.exact.forcing(x);
+            // The Laplacian runs over exactly the order-2 coordinates.
+            let mut lap = 0.0;
+            for i in 0..ctx.orders.second {
+                lap += self.tape.d2(b, i);
             }
-            for b in self.beta.iter_mut() {
-                *b = 0.0;
+            match ctx.operator {
+                PdeOperator::Poisson => ctx.scale_int * (-lap - f),
+                PdeOperator::Heat => ctx.scale_int * (self.tape.d1(b, ctx.dim - 1) - lap - f),
             }
-            for i in 0..n_lap {
-                self.gamma[i] = -c;
-            }
-            if ctx.operator == PdeOperator::Heat {
-                self.beta[d - 1] = c;
-            }
-            self.tape.backward(theta, 0.0, &self.beta, &self.gamma, out);
-        }
-        val
-    }
-
-    /// Boundary residual at `x`; optionally accumulates its seeded θ-grad.
-    fn boundary(
-        &mut self,
-        ctx: &Ctx,
-        theta: &[f64],
-        x: &[f64],
-        grad: Option<(&mut [f64], Seed)>,
-    ) -> f64 {
-        self.tape.forward(theta, x, 0);
-        let val = ctx.scale_bnd * (self.tape.value() - ctx.exact.boundary(x));
-        if let Some((out, seed)) = grad {
-            let alpha = ctx.scale_bnd
-                * match seed {
-                    Seed::Row => 1.0,
-                    Seed::Loss => val,
-                };
-            self.tape.backward(theta, alpha, &[], &[], out);
-        }
-        val
-    }
-
-    /// Residual of batch row `idx` (interior rows first, then boundary).
-    fn residual(
-        &mut self,
-        ctx: &Ctx,
-        theta: &[f64],
-        x_int: &[f64],
-        x_bnd: &[f64],
-        idx: usize,
-        grad: Option<(&mut [f64], Seed)>,
-    ) -> f64 {
-        let d = ctx.dim;
-        if idx < ctx.n_int {
-            self.interior(ctx, theta, &x_int[idx * d..(idx + 1) * d], grad)
         } else {
-            let b = idx - ctx.n_int;
-            self.boundary(ctx, theta, &x_bnd[b * d..(b + 1) * d], grad)
+            ctx.scale_bnd * (self.tape.value(b) - ctx.exact.boundary(x))
         }
     }
+}
+
+/// Coordinates of global batch row `idx` (interior rows first).
+fn point_of<'a>(ctx: &Ctx, x_int: &'a [f64], x_bnd: &'a [f64], idx: usize) -> &'a [f64] {
+    let d = ctx.dim;
+    if idx < ctx.n_int {
+        &x_int[idx * d..(idx + 1) * d]
+    } else {
+        let q = idx - ctx.n_int;
+        &x_bnd[q * d..(q + 1) * d]
+    }
+}
+
+/// Drive the tape over global rows `[start, end)` in point blocks: the
+/// range is split at the interior/boundary frontier, each side is fed to
+/// [`Tape::forward_batch`] a block at a time (interior blocks carry the
+/// operator's dual mask, boundary blocks none), and `f(worker, p0, n,
+/// interior)` consumes each forwarded block of rows `p0..p0+n`. Blocks
+/// and the points inside them run in ascending row order, and every tape
+/// lane computes the scalar per-point operation sequence, so any
+/// row-ordered consumer sees bitwise the results of per-point processing.
+fn run_blocks<F>(
+    worker: &mut Worker,
+    ctx: &Ctx,
+    theta: &[f64],
+    x_int: &[f64],
+    x_bnd: &[f64],
+    start: usize,
+    end: usize,
+    mut f: F,
+) where
+    F: FnMut(&mut Worker, usize, usize, bool),
+{
+    let d = ctx.dim;
+    let int_end = end.min(ctx.n_int);
+    if start < int_end {
+        let block = worker.tape.block_points(ctx.orders);
+        let mut p = start;
+        while p < int_end {
+            let n = block.min(int_end - p);
+            worker.tape.forward_batch(theta, &x_int[p * d..(p + n) * d], n, ctx.orders);
+            f(worker, p, n, true);
+            p += n;
+        }
+    }
+    let bnd_start = start.max(ctx.n_int);
+    if bnd_start < end {
+        let block = worker.tape.block_points(DualOrder::NONE);
+        let mut p = bnd_start;
+        while p < end {
+            let n = block.min(end - p);
+            let lo = (p - ctx.n_int) * d;
+            worker.tape.forward_batch(theta, &x_bnd[lo..lo + n * d], n, DualOrder::NONE);
+            f(worker, p, n, false);
+            p += n;
+        }
+    }
+}
+
+/// Residuals and Jacobian rows of global rows `[row0, row1)`, written into
+/// caller slices (`r_out`: `row1 − row0` residuals; `j_out`: the matching
+/// zero-initialized row-major `(row1 − row0) × n_params` block). Each
+/// block's rows are handed to [`Tape::backward_batch`] as one contiguous
+/// J sub-block with per-point seeds.
+fn rows_into(
+    ctx: &Ctx,
+    theta: &[f64],
+    x_int: &[f64],
+    x_bnd: &[f64],
+    row0: usize,
+    row1: usize,
+    r_out: &mut [f64],
+    j_out: &mut [f64],
+) {
+    let np = ctx.n_params;
+    with_worker(ctx, |worker| {
+        run_blocks(worker, ctx, theta, x_int, x_bnd, row0, row1, |w, p0, n, interior| {
+            for b in 0..n {
+                let idx = p0 + b;
+                let x = point_of(ctx, x_int, x_bnd, idx);
+                r_out[idx - row0] = w.residual_at(ctx, x, b, interior);
+            }
+            let Worker { tape, alpha, beta, gamma } = w;
+            let out = &mut j_out[(p0 - row0) * np..(p0 - row0 + n) * np];
+            if interior {
+                // One Jacobian row per point: γ ≡ −s on the Laplacian
+                // coordinates (+ β_t = s for heat's time derivative).
+                let (nc, nc2) = (ctx.orders.first, ctx.orders.second);
+                let (nb, ng) = (n * nc, n * nc2);
+                let c = ctx.scale_int;
+                for a in alpha[..n].iter_mut() {
+                    *a = 0.0;
+                }
+                for v in beta[..nb].iter_mut() {
+                    *v = 0.0;
+                }
+                for v in gamma[..ng].iter_mut() {
+                    *v = -c;
+                }
+                if ctx.operator == PdeOperator::Heat {
+                    for b in 0..n {
+                        beta[b * nc + nc - 1] = c;
+                    }
+                }
+                tape.backward_batch(theta, n, &alpha[..n], &beta[..nb], &gamma[..ng], out);
+            } else {
+                for a in alpha[..n].iter_mut() {
+                    *a = ctx.scale_bnd;
+                }
+                tape.backward_batch(theta, n, &alpha[..n], &[], &[], out);
+            }
+        });
+    });
+}
+
+/// Predictions `u_θ` for evaluation points `[i0, i1)` of a row-major point
+/// set, written into `out` — value-only forward blocks.
+fn u_pred_into(ctx: &Ctx, theta: &[f64], x_eval: &[f64], i0: usize, i1: usize, out: &mut [f64]) {
+    let d = ctx.dim;
+    with_worker(ctx, |worker| {
+        let block = worker.tape.block_points(DualOrder::NONE);
+        let mut p = i0;
+        while p < i1 {
+            let n = block.min(i1 - p);
+            worker.tape.forward_batch(theta, &x_eval[p * d..(p + n) * d], n, DualOrder::NONE);
+            for b in 0..n {
+                out[p + b - i0] = worker.tape.value(b);
+            }
+            p += n;
+        }
+    });
 }
 
 /// The canonical `(chunks, chunk_len)` reduction grid for an `n`-row batch:
@@ -400,27 +465,32 @@ pub(crate) fn thread_chunks(n: usize) -> (usize, usize) {
 }
 
 /// A thread's persistent worker-state slot: the tape plus seed buffers,
-/// keyed by architecture and rebuilt only when the evaluated arch changes.
+/// keyed by (architecture, dual mask) and rebuilt only when the evaluated
+/// problem shape changes — the mask determines the seed-buffer sizing, so
+/// it is part of the key (constant within any one training run).
 #[derive(Default)]
 struct WorkerSlot {
     arch: Vec<usize>,
+    orders: DualOrder,
     worker: Option<Worker>,
 }
 
 /// Run `f` with this thread's persistent [`Worker`] for `ctx`'s
-/// architecture (building it on first use / arch change).
+/// architecture (building it on first use / shape change).
 fn with_worker<R>(ctx: &Ctx, f: impl FnOnce(&mut Worker) -> R) -> R {
     parallel::with_scratch::<WorkerSlot, R>(|slot| {
-        if slot.worker.is_none() || slot.arch != ctx.arch {
+        if slot.worker.is_none() || slot.arch != ctx.arch || slot.orders != ctx.orders {
             slot.worker = Some(Worker::new(ctx));
             slot.arch = ctx.arch.clone();
+            slot.orders = ctx.orders;
         }
         f(slot.worker.as_mut().expect("worker slot populated above"))
     })
 }
 
 /// `Σ r_i²` over global rows `[start, end)` — one reduction chunk's loss
-/// partial, accumulated in row order.
+/// partial, accumulated in row order (point-blocked forwards, scalar-order
+/// accumulation).
 fn chunk_loss(
     ctx: &Ctx,
     theta: &[f64],
@@ -431,16 +501,22 @@ fn chunk_loss(
 ) -> f64 {
     with_worker(ctx, |worker| {
         let mut acc = 0.0;
-        for idx in start..end {
-            let r = worker.residual(ctx, theta, x_int, x_bnd, idx, None);
-            acc += r * r;
-        }
+        run_blocks(worker, ctx, theta, x_int, x_bnd, start, end, |w, p0, n, interior| {
+            for b in 0..n {
+                let idx = p0 + b;
+                let x = point_of(ctx, x_int, x_bnd, idx);
+                let r = w.residual_at(ctx, x, b, interior);
+                acc += r * r;
+            }
+        });
         acc
     })
 }
 
 /// One reduction chunk's `(Σ r_i², Σ r_i ∇r_i)` partial — the loss and the
-/// chunk's contribution to `∇L = Jᵀr`, with no J materialization.
+/// chunk's contribution to `∇L = Jᵀr`, with no J materialization: each
+/// point's reverse pass is seeded by its own residual value, accumulated
+/// into the shared chunk gradient in ascending row order.
 fn chunk_loss_grad(
     ctx: &Ctx,
     theta: &[f64],
@@ -452,10 +528,32 @@ fn chunk_loss_grad(
     with_worker(ctx, |worker| {
         let mut grad = vec![0.0; ctx.n_params];
         let mut acc = 0.0;
-        for idx in start..end {
-            let r = worker.residual(ctx, theta, x_int, x_bnd, idx, Some((&mut grad, Seed::Loss)));
-            acc += r * r;
-        }
+        run_blocks(worker, ctx, theta, x_int, x_bnd, start, end, |w, p0, n, interior| {
+            for b in 0..n {
+                let idx = p0 + b;
+                let x = point_of(ctx, x_int, x_bnd, idx);
+                let val = w.residual_at(ctx, x, b, interior);
+                acc += val * val;
+                let Worker { tape, beta, gamma, .. } = w;
+                if interior {
+                    let (nc, nc2) = (ctx.orders.first, ctx.orders.second);
+                    let c = ctx.scale_int * val;
+                    for v in beta[..nc].iter_mut() {
+                        *v = 0.0;
+                    }
+                    for v in gamma[..nc2].iter_mut() {
+                        *v = -c;
+                    }
+                    if ctx.operator == PdeOperator::Heat {
+                        beta[nc - 1] = c;
+                    }
+                    tape.backward(theta, b, 0.0, &beta[..nc], &gamma[..nc2], &mut grad);
+                } else {
+                    let a = ctx.scale_bnd * val;
+                    tape.backward(theta, b, a, &[], &[], &mut grad);
+                }
+            }
+        });
         (acc, grad)
     })
 }
@@ -551,25 +649,19 @@ impl Evaluator for NativeBackend {
             let jptr = SendPtr(j.data_mut().as_mut_ptr());
             let rptr = SendPtr(r.as_mut_ptr());
             parallel::par_chunks(n, |start, end| {
-                with_worker(&ctx, |worker| {
-                    for idx in start..end {
-                        // SAFETY: chunks are disjoint, so row `idx` of J and
-                        // entry `idx` of r are each written by exactly one
-                        // thread; both buffers outlive the dispatch.
-                        let row = unsafe {
-                            std::slice::from_raw_parts_mut(jptr.get().add(idx * np), np)
-                        };
-                        let val = worker.residual(
-                            &ctx,
-                            theta,
-                            x_int,
-                            x_bnd,
-                            idx,
-                            Some((row, Seed::Row)),
-                        );
-                        unsafe { *rptr.get().add(idx) = val };
-                    }
-                });
+                // SAFETY: chunks are disjoint, so each chunk's row-block of
+                // J and residual range of r are written by exactly one
+                // thread; both buffers outlive the dispatch.
+                let (r_sub, j_sub) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(rptr.get().add(start), end - start),
+                        std::slice::from_raw_parts_mut(
+                            jptr.get().add(start * np),
+                            (end - start) * np,
+                        ),
+                    )
+                };
+                rows_into(&ctx, theta, x_int, x_bnd, start, end, r_sub, j_sub);
             });
         }
         Ok((r, j))
@@ -594,13 +686,13 @@ impl Evaluator for NativeBackend {
         {
             let optr = SendPtr(out.as_mut_ptr());
             parallel::par_chunks(m, |start, end| {
-                with_worker(&ctx, |worker| {
-                    for i in start..end {
-                        worker.tape.forward(theta, &x_eval[i * ctx.dim..(i + 1) * ctx.dim], 0);
-                        // SAFETY: disjoint chunks — each slot written once.
-                        unsafe { *optr.get().add(i) = worker.tape.value() };
-                    }
-                });
+                // SAFETY: disjoint chunks — each prediction range is
+                // written by exactly one thread; `out` outlives the
+                // dispatch.
+                let sub = unsafe {
+                    std::slice::from_raw_parts_mut(optr.get().add(start), end - start)
+                };
+                u_pred_into(&ctx, theta, x_eval, start, end, sub);
             });
         }
         Ok(out)

@@ -1,18 +1,56 @@
-//! Hand-rolled AD for the tanh-MLP PDE residuals.
+//! Hand-rolled AD for the tanh-MLP PDE residuals — the coordinate-blocked,
+//! point-batched kernel layer of the native backend.
 //!
-//! One [`Tape`] is a per-thread scratch structure that evaluates, at a
-//! single collocation point `x`:
+//! One [`Tape`] is a per-thread scratch structure that evaluates, for a
+//! *block* of up to [`Tape::block_points`] collocation points at once:
 //!
-//! * the forward pass `u_θ(x)` together with **second-order forward duals**
-//!   per coordinate — for each `i < ncoords` it carries `(∂/∂x_i,
-//!   ∂²/∂x_i²)` through every layer, so the Laplacian is
+//! * the forward pass `u_θ(x)` together with **forward duals** per input
+//!   coordinate, to the per-coordinate order requested by a
+//!   [`DualOrder`] mask — for each order-2 coordinate `i` it carries
+//!   `(∂/∂x_i, ∂²/∂x_i²)` through every layer (the Laplacian is
 //!   `Δu = Σ_i d2(i)` at cost O(d) network passes, the Taylor-mode-style
-//!   strategy the paper cites for its JAX implementation;
+//!   strategy the paper cites for its JAX implementation); order-1
+//!   coordinates (the heat operator's time axis) carry only `∂_i`, which
+//!   drops two matrix-panel products per layer;
 //! * the **reverse pass** `∇_θ (α·u + Σ_i β_i·∂_i u + Σ_i γ_i·∂²_i u)`,
 //!   i.e. the exact adjoint of the dual-carrying forward computation,
-//!   accumulated straight into a caller-provided flat-θ buffer. Seeding
-//!   `γ ≡ −s` yields an interior-residual Jacobian row; `α = s` a boundary
-//!   row; scaling the seeds by `r_i` accumulates `∇L = Jᵀr` with no J.
+//!   accumulated straight into caller-provided flat-θ buffers — one row
+//!   per point ([`Tape::backward_batch`]) or a shared gradient
+//!   accumulator seeded per point ([`Tape::backward`]). Seeding `γ ≡ −s`
+//!   yields an interior-residual Jacobian row; `α = s` a boundary row;
+//!   scaling the seeds by `r_i` accumulates `∇L = Jᵀr` with no J.
+//!
+//! ## Blocked layout
+//!
+//! Duals are stored as **contiguous per-coordinate panels**: layer `l`
+//! keeps, for every (point `b`, coordinate `i`) pair, one `fan_out`-long
+//! panel at offset `(b·nc + i)·fan_out`. The forward propagation
+//! (`ζ_i = W·t_prev_i`, `ξ_i = W·s_prev_i`) transposes `W` once per layer
+//! per block and then runs broadcast–accumulate kernels whose inner loops
+//! are stride-1 over the `fan_out` lanes:
+//!
+//! ```text
+//! for k in 0..fan_in:            // sequential — preserves FP sum order
+//!     ζ[o] += Wᵀ[k][o] · t_prev[k]   // o: contiguous lanes, auto-SIMD
+//! ```
+//!
+//! Every lane (one output neuron of one point/coordinate pair) performs
+//! exactly the scalar dot-product sequence `Σ_k w·t` in ascending `k`, so
+//! the blocked kernels are **bitwise identical** to the scalar
+//! per-(point, coordinate) loops they replace — vectorization happens
+//! across independent lanes, never across a floating-point reduction.
+//! [`ScalarTape`] keeps the naive loop nest as an in-tree reference; the
+//! property tests in this module assert bitwise agreement of
+//! `value`/`d1`/`d2`/`backward` across random architectures, dual masks,
+//! and batched-vs-single-point entry points.
+//!
+//! Batching a point block through one call amortizes the `Wᵀ` transpose
+//! and keeps each weight panel hot across `B·(1 + nc)` propagation passes
+//! (ζ and ξ are fused per coordinate, so a panel load feeds both dual
+//! orders) instead of re-walking θ per point; the block size adapts to
+//! the coordinate count ([`Tape::block_points`]) so panel storage stays
+//! bounded (~[`MAX_BLOCK_POINTS`] value lanes / `DUAL_LANE_BUDGET` dual
+//! lanes) from `poisson1d` to `poisson100d`.
 //!
 //! Derivative bookkeeping (per hidden layer, `h = tanh(z)`):
 //!
@@ -25,13 +63,13 @@
 //!
 //! with `σ' = 1−h²`, `σ'' = −2hσ'`, `σ''' = σ'(6h²−2)`.
 //!
-//! Everything is verified against [`crate::pde::mlp_forward`] and against
-//! central finite differences by unit + property tests (this module and
-//! `rust/tests/native.rs`).
+//! Everything is verified against [`crate::pde::mlp_forward`], against
+//! central finite differences, and against [`ScalarTape`] by unit +
+//! property tests (this module and `rust/tests/native.rs`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::pde::param_count;
+use crate::pde::{param_count, DualOrder};
 
 /// Process-wide count of [`Tape`] constructions. The worker-pool contract
 /// says a warmed-up training step rebuilds zero tapes; `rust/tests/pool.rs`
@@ -43,29 +81,62 @@ pub fn tape_builds() -> usize {
     TAPE_BUILDS.load(Ordering::Relaxed)
 }
 
-/// Per-point forward/reverse AD scratch for one architecture. Owned by one
-/// worker thread and reused across points, evaluations, and training steps
+/// Most points one [`Tape::forward_batch`] call carries (the block size for
+/// value-only passes; dual-carrying passes shrink with the coordinate
+/// count — see [`Tape::block_points`]).
+pub const MAX_BLOCK_POINTS: usize = 32;
+
+/// Soft cap on dual lanes (point × coordinate pairs) per block: per-layer
+/// panel storage is ~`max(DUAL_LANE_BUDGET, d)` panels of the layer width,
+/// so high-dimensional problems fall back to small point blocks while
+/// low-dimensional ones batch aggressively.
+const DUAL_LANE_BUDGET: usize = 64;
+
+/// Points per block for a `nc`-coordinate dual pass.
+fn block_points_for(nc: usize) -> usize {
+    if nc == 0 {
+        MAX_BLOCK_POINTS
+    } else {
+        (DUAL_LANE_BUDGET / nc).clamp(1, MAX_BLOCK_POINTS)
+    }
+}
+
+/// Per-block forward/reverse AD scratch for one architecture. Owned by one
+/// worker thread and reused across blocks, evaluations, and training steps
 /// (it lives in the thread's `parallel::with_scratch` slot); all buffers
 /// are allocated once at construction.
 pub struct Tape {
     arch: Vec<usize>,
     /// Flat-θ offset of each layer's weight block (biases follow it).
     offsets: Vec<usize>,
-    /// Per layer: activated outputs h (tanh values; last layer: z itself).
+    /// Per layer: activated outputs h (tanh values; last layer: z itself),
+    /// `b * width + o`.
     h: Vec<Vec<f64>>,
-    /// Per layer: pre-activation first duals ζ_i, flattened `i*width + o`.
+    /// Per layer: pre-activation first duals ζ, per-coordinate panels
+    /// `(b * nc + i) * width + o`.
     tz: Vec<Vec<f64>>,
-    /// Per layer: pre-activation second duals ξ_i.
+    /// Per layer: pre-activation second duals ξ, `(b * nc2 + i) * width + o`.
     sz: Vec<Vec<f64>>,
-    /// Per layer: activated first duals t_i.
+    /// Per layer: activated first duals t (same panel layout as `tz`).
     th: Vec<Vec<f64>>,
-    /// Per layer: activated second duals s_i.
+    /// Per layer: activated second duals s (same panel layout as `sz`).
     sh: Vec<Vec<f64>>,
-    /// Copy of the input point (needed by the reverse pass at layer 0).
+    /// Copy of the input block (needed by the reverse pass at layer 0).
     x_in: Vec<f64>,
-    /// Number of dual coordinates carried by the last `forward`.
-    ncoords: usize,
-    // Reverse-pass scratch, sized to the widest layer.
+    /// Wᵀ of the layer currently propagating (transposed per layer per
+    /// block so forward kernels read contiguous `fan_out`-lanes).
+    wt: Vec<f64>,
+    /// σ'(z) per output neuron of the point being activated.
+    d1v: Vec<f64>,
+    /// σ''(z) per output neuron of the point being activated.
+    d2v: Vec<f64>,
+    /// Points carried by the last `forward_batch`.
+    n_pts: usize,
+    /// Coordinates carrying first-order duals in the last `forward_batch`.
+    nc: usize,
+    /// Coordinates (prefix of `nc`) also carrying second-order duals.
+    nc2: usize,
+    // Reverse-pass scratch, sized to the widest layer (per point).
     zbar: Vec<f64>,
     tbar: Vec<f64>,
     sbar: Vec<f64>,
@@ -77,6 +148,471 @@ pub struct Tape {
 impl Tape {
     pub fn new(arch: &[usize]) -> Self {
         TAPE_BUILDS.fetch_add(1, Ordering::Relaxed);
+        assert!(arch.len() >= 2, "MLP needs at least one layer");
+        assert_eq!(*arch.last().unwrap(), 1, "scalar-output MLP expected");
+        let d = arch[0];
+        let nl = arch.len() - 1;
+        let mut offsets = Vec::with_capacity(nl);
+        let mut off = 0usize;
+        for l in 0..nl {
+            offsets.push(off);
+            off += arch[l] * arch[l + 1] + arch[l + 1];
+        }
+        let widest = *arch.iter().max().unwrap();
+        // Worst-case dual lanes over every mask this input dimension can
+        // request: `block_points_for` shrinks the block as `nc` grows, so
+        // this stays ~max(DUAL_LANE_BUDGET, d) lanes.
+        let lane_cap = (1..=d).map(|nc| block_points_for(nc) * nc).max().unwrap_or(0);
+        let widest_w = (0..nl).map(|l| arch[l] * arch[l + 1]).max().unwrap();
+        let mut h = Vec::with_capacity(nl);
+        let mut tz = Vec::with_capacity(nl);
+        let mut sz = Vec::with_capacity(nl);
+        let mut th = Vec::with_capacity(nl);
+        let mut sh = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let w = arch[l + 1];
+            h.push(vec![0.0; MAX_BLOCK_POINTS * w]);
+            tz.push(vec![0.0; lane_cap * w]);
+            sz.push(vec![0.0; lane_cap * w]);
+            th.push(vec![0.0; lane_cap * w]);
+            sh.push(vec![0.0; lane_cap * w]);
+        }
+        Tape {
+            arch: arch.to_vec(),
+            offsets,
+            h,
+            tz,
+            sz,
+            th,
+            sh,
+            x_in: vec![0.0; MAX_BLOCK_POINTS * d],
+            wt: vec![0.0; widest_w],
+            d1v: vec![0.0; widest],
+            d2v: vec![0.0; widest],
+            n_pts: 0,
+            nc: 0,
+            nc2: 0,
+            zbar: vec![0.0; widest],
+            tbar: vec![0.0; d * widest],
+            sbar: vec![0.0; d * widest],
+            zbar_next: vec![0.0; widest],
+            tbar_next: vec![0.0; d * widest],
+            sbar_next: vec![0.0; d * widest],
+        }
+    }
+
+    /// Largest point block a `forward_batch` with this dual mask may carry:
+    /// [`MAX_BLOCK_POINTS`] for value-only passes, shrinking as the
+    /// coordinate count grows so panel storage stays bounded.
+    pub fn block_points(&self, orders: DualOrder) -> usize {
+        debug_assert!(orders.first <= self.arch[0]);
+        block_points_for(orders.first)
+    }
+
+    /// Forward pass over a block of `n_pts` points (`xs` row-major,
+    /// `n_pts × d`), carrying duals per the `orders` mask: coordinates
+    /// `0..orders.first` get `∂_i`, the prefix `0..orders.second` also
+    /// `∂²_i`. `n_pts` must not exceed [`Tape::block_points`]`(orders)`.
+    pub fn forward_batch(&mut self, theta: &[f64], xs: &[f64], n_pts: usize, orders: DualOrder) {
+        let d = self.arch[0];
+        let nl = self.arch.len() - 1;
+        let (nc, nc2) = (orders.first, orders.second);
+        // Hard asserts: a mask violating the prefix invariant or an
+        // oversized block would index panels the pass never writes
+        // (silently stale lanes), which release builds must refuse too.
+        assert!(nc2 <= nc && nc <= d, "dual-order mask out of range");
+        assert!(n_pts <= self.block_points(orders), "block exceeds capacity");
+        debug_assert_eq!(xs.len(), n_pts * d, "point block shape mismatch");
+        debug_assert_eq!(theta.len(), param_count(&self.arch), "param count mismatch");
+        self.n_pts = n_pts;
+        self.nc = nc;
+        self.nc2 = nc2;
+        self.x_in[..n_pts * d].copy_from_slice(xs);
+        let Tape { arch, offsets, h, tz, sz, th, sh, x_in, wt, d1v, d2v, .. } = self;
+        for l in 0..nl {
+            let (fan_in, fan_out) = (arch[l], arch[l + 1]);
+            let off = offsets[l];
+            let w = &theta[off..off + fan_in * fan_out];
+            let bias = &theta[off + fan_in * fan_out..off + fan_in * fan_out + fan_out];
+            let last = l + 1 == nl;
+            // Wᵀ once per layer per block: every kernel below walks a
+            // contiguous fan_out-panel per previous-layer neuron. The
+            // transpose is O(fan_in·fan_out), amortized over the
+            // n_pts·(1 + nc) propagation passes of the block.
+            let wt = &mut wt[..fan_in * fan_out];
+            for k in 0..fan_in {
+                let dst = &mut wt[k * fan_out..(k + 1) * fan_out];
+                for (o, v) in dst.iter_mut().enumerate() {
+                    *v = w[o * fan_in + k];
+                }
+            }
+            // Split so layer l-1 (read) and layer l (write) coexist.
+            let (h_done, h_rest) = h.split_at_mut(l);
+            let (th_done, th_rest) = th.split_at_mut(l);
+            let (sh_done, sh_rest) = sh.split_at_mut(l);
+            let h_cur = &mut h_rest[0];
+            let th_cur = &mut th_rest[0];
+            let sh_cur = &mut sh_rest[0];
+            let tz_cur = &mut tz[l];
+            let sz_cur = &mut sz[l];
+            for b in 0..n_pts {
+                let h_prev: &[f64] = if l == 0 {
+                    &x_in[b * d..(b + 1) * d]
+                } else {
+                    &h_done[l - 1][b * fan_in..(b + 1) * fan_in]
+                };
+                // z = W h_prev + b: per-lane sums accumulate k ascending
+                // from the bias, exactly the scalar order.
+                let zc = &mut h_cur[b * fan_out..(b + 1) * fan_out];
+                zc.copy_from_slice(bias);
+                for (k, &hk) in h_prev.iter().enumerate() {
+                    let wrow = &wt[k * fan_out..(k + 1) * fan_out];
+                    for (acc, &wv) in zc.iter_mut().zip(wrow) {
+                        *acc += wv * hk;
+                    }
+                }
+                // ζ_i = W t_prev_i and (order-2 lanes) ξ_i = W s_prev_i,
+                // fused per coordinate so each Wᵀ panel is loaded once for
+                // both dual orders. Accumulators are independent per lane
+                // and k ascends, so every lane's FP sum order is the
+                // scalar one.
+                for i in 0..nc {
+                    let tbase = (b * nc + i) * fan_out;
+                    if l == 0 {
+                        // t_prev = e_i: ζ = column i of W = row i of Wᵀ;
+                        // s_prev = 0.
+                        tz_cur[tbase..tbase + fan_out]
+                            .copy_from_slice(&wt[i * fan_out..(i + 1) * fan_out]);
+                        if i < nc2 {
+                            let sbase = (b * nc2 + i) * fan_out;
+                            sz_cur[sbase..sbase + fan_out].fill(0.0);
+                        }
+                    } else if i < nc2 {
+                        let sbase = (b * nc2 + i) * fan_out;
+                        let tp0 = (b * nc + i) * fan_in;
+                        let sp0 = (b * nc2 + i) * fan_in;
+                        let tp = &th_done[l - 1][tp0..tp0 + fan_in];
+                        let sp = &sh_done[l - 1][sp0..sp0 + fan_in];
+                        let tdst = &mut tz_cur[tbase..tbase + fan_out];
+                        let sdst = &mut sz_cur[sbase..sbase + fan_out];
+                        tdst.fill(0.0);
+                        sdst.fill(0.0);
+                        for (k, (&tpk, &spk)) in tp.iter().zip(sp.iter()).enumerate() {
+                            let wrow = &wt[k * fan_out..(k + 1) * fan_out];
+                            for ((tacc, sacc), &wv) in
+                                tdst.iter_mut().zip(sdst.iter_mut()).zip(wrow)
+                            {
+                                *tacc += wv * tpk;
+                                *sacc += wv * spk;
+                            }
+                        }
+                    } else {
+                        // First-order-only lanes (the heat time coordinate).
+                        let tp0 = (b * nc + i) * fan_in;
+                        let tp = &th_done[l - 1][tp0..tp0 + fan_in];
+                        let tdst = &mut tz_cur[tbase..tbase + fan_out];
+                        tdst.fill(0.0);
+                        for (k, &tpk) in tp.iter().enumerate() {
+                            let wrow = &wt[k * fan_out..(k + 1) * fan_out];
+                            for (tacc, &wv) in tdst.iter_mut().zip(wrow) {
+                                *tacc += wv * tpk;
+                            }
+                        }
+                    }
+                }
+                if last {
+                    // Linear head: activated values = pre-activation values
+                    // (h_cur already holds z).
+                    for i in 0..nc {
+                        let base = (b * nc + i) * fan_out;
+                        th_cur[base..base + fan_out].copy_from_slice(&tz_cur[base..base + fan_out]);
+                    }
+                    for i in 0..nc2 {
+                        let base = (b * nc2 + i) * fan_out;
+                        sh_cur[base..base + fan_out].copy_from_slice(&sz_cur[base..base + fan_out]);
+                    }
+                } else {
+                    // tanh + chain rules, lane-wise per point.
+                    let hb = &mut h_cur[b * fan_out..(b + 1) * fan_out];
+                    let d1b = &mut d1v[..fan_out];
+                    let d2b = &mut d2v[..fan_out];
+                    for ((hv, dv1), dv2) in hb.iter_mut().zip(d1b.iter_mut()).zip(d2b.iter_mut()) {
+                        let y = hv.tanh();
+                        let dd1 = 1.0 - y * y;
+                        *hv = y;
+                        *dv1 = dd1;
+                        *dv2 = -2.0 * y * dd1;
+                    }
+                    for i in 0..nc {
+                        let base = (b * nc + i) * fan_out;
+                        let tdst = &mut th_cur[base..base + fan_out];
+                        let zsrc = &tz_cur[base..base + fan_out];
+                        for ((t, &zeta), &dv1) in tdst.iter_mut().zip(zsrc).zip(d1b.iter()) {
+                            *t = dv1 * zeta;
+                        }
+                    }
+                    for i in 0..nc2 {
+                        let sbase = (b * nc2 + i) * fan_out;
+                        let tbase = (b * nc + i) * fan_out;
+                        let sdst = &mut sh_cur[sbase..sbase + fan_out];
+                        let xsrc = &sz_cur[sbase..sbase + fan_out];
+                        let zsrc = &tz_cur[tbase..tbase + fan_out];
+                        for (((s, &xi), &zeta), (&dv1, &dv2)) in
+                            sdst.iter_mut().zip(xsrc).zip(zsrc).zip(d1b.iter().zip(d2b.iter()))
+                        {
+                            *s = dv2 * zeta * zeta + dv1 * xi;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Single-point forward: a one-point block (bitwise identical to the
+    /// same point anywhere inside a larger block).
+    pub fn forward(&mut self, theta: &[f64], x: &[f64], orders: DualOrder) {
+        self.forward_batch(theta, x, 1, orders);
+    }
+
+    /// `u_θ` of block point `b` from the last forward.
+    pub fn value(&self, b: usize) -> f64 {
+        debug_assert!(b < self.n_pts);
+        self.h[self.arch.len() - 2][b]
+    }
+
+    /// `∂u/∂x_i` of block point `b` (requires `i < orders.first`).
+    pub fn d1(&self, b: usize, i: usize) -> f64 {
+        debug_assert!(b < self.n_pts && i < self.nc);
+        self.th[self.arch.len() - 2][b * self.nc + i]
+    }
+
+    /// `∂²u/∂x_i²` of block point `b` (requires `i < orders.second`).
+    pub fn d2(&self, b: usize, i: usize) -> f64 {
+        debug_assert!(b < self.n_pts && i < self.nc2);
+        self.sh[self.arch.len() - 2][b * self.nc2 + i]
+    }
+
+    /// Accumulate `out += ∇_θ (α·u + Σ_i β_i·∂_i u + Σ_i γ_i·∂²_i u)` for
+    /// block point `b`, using the duals stored by the last
+    /// [`Tape::forward_batch`]. `beta` may be shorter than `orders.first`
+    /// and `gamma` shorter than `orders.second` (missing entries are zero)
+    /// but not longer.
+    pub fn backward(
+        &mut self,
+        theta: &[f64],
+        b: usize,
+        alpha: f64,
+        beta: &[f64],
+        gamma: &[f64],
+        out: &mut [f64],
+    ) {
+        let arch = &self.arch;
+        let d = arch[0];
+        let nl = arch.len() - 1;
+        let nc = self.nc;
+        let nc2 = self.nc2;
+        debug_assert!(b < self.n_pts);
+        debug_assert!(beta.len() <= nc && gamma.len() <= nc2);
+        debug_assert_eq!(out.len(), param_count(arch));
+        // Seed at the (width-1, linear) output layer.
+        self.zbar[0] = alpha;
+        for i in 0..nc {
+            self.tbar[i] = beta.get(i).copied().unwrap_or(0.0);
+        }
+        for i in 0..nc2 {
+            self.sbar[i] = gamma.get(i).copied().unwrap_or(0.0);
+        }
+        for l in (0..nl).rev() {
+            let (fan_in, fan_out) = (arch[l], arch[l + 1]);
+            let off = self.offsets[l];
+            let w = &theta[off..off + fan_in * fan_out];
+            let h_prev: &[f64] = if l == 0 {
+                &self.x_in[b * d..(b + 1) * d]
+            } else {
+                &self.h[l - 1][b * fan_in..(b + 1) * fan_in]
+            };
+            // 1. Parameter gradients of this layer (k-contiguous panels).
+            let (out_w, out_rest) = out[off..].split_at_mut(fan_in * fan_out);
+            let out_b = &mut out_rest[..fan_out];
+            for o in 0..fan_out {
+                let zb = self.zbar[o];
+                let wrow = &mut out_w[o * fan_in..(o + 1) * fan_in];
+                if zb != 0.0 {
+                    for (wk, &hk) in wrow.iter_mut().zip(h_prev) {
+                        *wk += zb * hk;
+                    }
+                }
+                out_b[o] += zb;
+                for i in 0..nc {
+                    let tb = self.tbar[i * fan_out + o];
+                    let sb = if i < nc2 {
+                        self.sbar[i * fan_out + o]
+                    } else {
+                        0.0
+                    };
+                    if l == 0 {
+                        // t_prev = e_i (s_prev = 0): only column i gets ∂ζ/∂W.
+                        wrow[i] += tb;
+                    } else if tb != 0.0 || sb != 0.0 {
+                        let tp0 = (b * nc + i) * fan_in;
+                        let tp = &self.th[l - 1][tp0..tp0 + fan_in];
+                        if i < nc2 {
+                            let sp0 = (b * nc2 + i) * fan_in;
+                            let sp = &self.sh[l - 1][sp0..sp0 + fan_in];
+                            for ((wk, &tpk), &spk) in wrow.iter_mut().zip(tp).zip(sp) {
+                                *wk += tb * tpk + sb * spk;
+                            }
+                        } else {
+                            for (wk, &tpk) in wrow.iter_mut().zip(tp) {
+                                *wk += tb * tpk;
+                            }
+                        }
+                    }
+                }
+            }
+            if l == 0 {
+                break;
+            }
+            // 2. Propagate through Wᵀ to the previous layer's activated
+            //    outputs (h̄, t̄, s̄), into the *_next scratch. Accumulation
+            //    order over o is ascending per destination element, and
+            //    t̄/s̄ live in disjoint buffers, so splitting the t and s
+            //    loops leaves every per-element FP sum order unchanged.
+            for v in self.zbar_next[..fan_in].iter_mut() {
+                *v = 0.0;
+            }
+            for v in self.tbar_next[..nc * fan_in].iter_mut() {
+                *v = 0.0;
+            }
+            for v in self.sbar_next[..nc2 * fan_in].iter_mut() {
+                *v = 0.0;
+            }
+            for o in 0..fan_out {
+                let row = &w[o * fan_in..(o + 1) * fan_in];
+                let zb = self.zbar[o];
+                if zb != 0.0 {
+                    for (dv, &wv) in self.zbar_next[..fan_in].iter_mut().zip(row) {
+                        *dv += wv * zb;
+                    }
+                }
+                for i in 0..nc {
+                    let tb = self.tbar[i * fan_out + o];
+                    if tb != 0.0 {
+                        let dst = &mut self.tbar_next[i * fan_in..(i + 1) * fan_in];
+                        for (dv, &wv) in dst.iter_mut().zip(row) {
+                            *dv += wv * tb;
+                        }
+                    }
+                }
+                for i in 0..nc2 {
+                    let sb = self.sbar[i * fan_out + o];
+                    if sb != 0.0 {
+                        let dst = &mut self.sbar_next[i * fan_in..(i + 1) * fan_in];
+                        for (dv, &wv) in dst.iter_mut().zip(row) {
+                            *dv += wv * sb;
+                        }
+                    }
+                }
+            }
+            // 3. Convert activation-level adjoints of layer l-1 to
+            //    pre-activation adjoints (the tanh chain rules above).
+            let hm = &self.h[l - 1][b * fan_in..(b + 1) * fan_in];
+            let tz_prev = &self.tz[l - 1];
+            let sz_prev = &self.sz[l - 1];
+            for o in 0..fan_in {
+                let y = hm[o];
+                let dd1 = 1.0 - y * y;
+                let dd2 = -2.0 * y * dd1;
+                let dd3 = dd1 * (6.0 * y * y - 2.0);
+                let mut zb = dd1 * self.zbar_next[o];
+                for i in 0..nc2 {
+                    let zeta = tz_prev[(b * nc + i) * fan_in + o];
+                    let xi = sz_prev[(b * nc2 + i) * fan_in + o];
+                    let tb = self.tbar_next[i * fan_in + o];
+                    let sb = self.sbar_next[i * fan_in + o];
+                    zb += dd2 * zeta * tb + (dd3 * zeta * zeta + dd2 * xi) * sb;
+                    self.tbar[i * fan_in + o] = dd1 * tb + 2.0 * dd2 * zeta * sb;
+                    self.sbar[i * fan_in + o] = dd1 * sb;
+                }
+                for i in nc2..nc {
+                    // First-order-only lanes (the heat time coordinate).
+                    let zeta = tz_prev[(b * nc + i) * fan_in + o];
+                    let tb = self.tbar_next[i * fan_in + o];
+                    zb += dd2 * zeta * tb;
+                    self.tbar[i * fan_in + o] = dd1 * tb;
+                }
+                self.zbar[o] = zb;
+            }
+        }
+    }
+
+    /// Reverse passes for block points `0..n_pts` of the last
+    /// [`Tape::forward_batch`], each writing its seeded θ-gradient into its
+    /// own row of `out` (row-major `n_pts × n_params` — e.g. a contiguous
+    /// Jacobian row-block). Per-point seeds: `alpha[b]`,
+    /// `beta[b·nc..(b+1)·nc]`, `gamma[b·nc2..(b+1)·nc2]`. Points run in
+    /// ascending order, so every row is bitwise what a standalone
+    /// [`Tape::backward`] call would produce.
+    pub fn backward_batch(
+        &mut self,
+        theta: &[f64],
+        n_pts: usize,
+        alpha: &[f64],
+        beta: &[f64],
+        gamma: &[f64],
+        out: &mut [f64],
+    ) {
+        let np = param_count(&self.arch);
+        let (nc, nc2) = (self.nc, self.nc2);
+        debug_assert!(n_pts <= self.n_pts);
+        debug_assert_eq!(alpha.len(), n_pts);
+        debug_assert_eq!(beta.len(), n_pts * nc);
+        debug_assert_eq!(gamma.len(), n_pts * nc2);
+        debug_assert_eq!(out.len(), n_pts * np);
+        for b in 0..n_pts {
+            self.backward(
+                theta,
+                b,
+                alpha[b],
+                &beta[b * nc..(b + 1) * nc],
+                &gamma[b * nc2..(b + 1) * nc2],
+                &mut out[b * np..(b + 1) * np],
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference implementation
+// ---------------------------------------------------------------------------
+
+/// The pre-blocking scalar tape: coordinate-strided buffers and naive
+/// per-(point, coordinate) dot-product loops, kept verbatim as the
+/// independent reference the blocked kernels are property-tested against
+/// (bitwise) and benchmarked against (`benches/parallel_micro.rs`). Not
+/// part of the public API.
+#[doc(hidden)]
+pub struct ScalarTape {
+    arch: Vec<usize>,
+    offsets: Vec<usize>,
+    h: Vec<Vec<f64>>,
+    tz: Vec<Vec<f64>>,
+    sz: Vec<Vec<f64>>,
+    th: Vec<Vec<f64>>,
+    sh: Vec<Vec<f64>>,
+    x_in: Vec<f64>,
+    ncoords: usize,
+    zbar: Vec<f64>,
+    tbar: Vec<f64>,
+    sbar: Vec<f64>,
+    zbar_next: Vec<f64>,
+    tbar_next: Vec<f64>,
+    sbar_next: Vec<f64>,
+}
+
+#[doc(hidden)]
+impl ScalarTape {
+    pub fn new(arch: &[usize]) -> Self {
         assert!(arch.len() >= 2, "MLP needs at least one layer");
         assert_eq!(*arch.last().unwrap(), 1, "scalar-output MLP expected");
         let d = arch[0];
@@ -101,7 +637,7 @@ impl Tape {
             th.push(vec![0.0; d * w]);
             sh.push(vec![0.0; d * w]);
         }
-        Tape {
+        ScalarTape {
             arch: arch.to_vec(),
             offsets,
             h,
@@ -120,8 +656,8 @@ impl Tape {
         }
     }
 
-    /// Forward pass at `x`, carrying `(∂_i, ∂²_i)` duals for the first
-    /// `ncoords` coordinates (0 = plain forward).
+    /// Forward pass at one point `x`, carrying `(∂_i, ∂²_i)` duals for the
+    /// first `ncoords` coordinates (0 = plain forward).
     pub fn forward(&mut self, theta: &[f64], x: &[f64], ncoords: usize) {
         let arch = &self.arch;
         let d = arch[0];
@@ -137,7 +673,6 @@ impl Tape {
             let w = &theta[off..off + fan_in * fan_out];
             let b = &theta[off + fan_in * fan_out..off + fan_in * fan_out + fan_out];
             let last = l + 1 == nl;
-            // Split so layer l-1 (read) and layer l (write) coexist.
             let (h_done, h_rest) = self.h.split_at_mut(l);
             let (th_done, th_rest) = self.th.split_at_mut(l);
             let (sh_done, sh_rest) = self.sh.split_at_mut(l);
@@ -155,7 +690,6 @@ impl Tape {
                 }
                 for i in 0..ncoords {
                     let (zeta, xi) = if l == 0 {
-                        // t_prev = e_i, s_prev = 0.
                         (row[i], 0.0)
                     } else {
                         let tp = &th_done[l - 1][i * fan_in..(i + 1) * fan_in];
@@ -172,7 +706,6 @@ impl Tape {
                     sz_cur[i * fan_out + o] = xi;
                 }
                 if last {
-                    // Linear head: activated values = pre-activation values.
                     h_cur[o] = z;
                     for i in 0..ncoords {
                         th_cur[i * fan_out + o] = tz_cur[i * fan_out + o];
@@ -194,26 +727,22 @@ impl Tape {
         }
     }
 
-    /// `u_θ(x)` from the last forward.
     pub fn value(&self) -> f64 {
         self.h[self.arch.len() - 2][0]
     }
 
-    /// `∂u/∂x_i` from the last forward (requires `i < ncoords`).
     pub fn d1(&self, i: usize) -> f64 {
         debug_assert!(i < self.ncoords);
         self.th[self.arch.len() - 2][i]
     }
 
-    /// `∂²u/∂x_i²` from the last forward (requires `i < ncoords`).
     pub fn d2(&self, i: usize) -> f64 {
         debug_assert!(i < self.ncoords);
         self.sh[self.arch.len() - 2][i]
     }
 
     /// Accumulate `out += ∇_θ (α·u + Σ_i β_i·∂_i u + Σ_i γ_i·∂²_i u)` using
-    /// the duals stored by the last [`Tape::forward`]. `beta`/`gamma` may be
-    /// shorter than `ncoords` (missing entries are zero) but not longer.
+    /// the duals stored by the last [`ScalarTape::forward`].
     pub fn backward(
         &mut self,
         theta: &[f64],
@@ -227,7 +756,6 @@ impl Tape {
         let nc = self.ncoords;
         debug_assert!(beta.len() <= nc && gamma.len() <= nc);
         debug_assert_eq!(out.len(), param_count(arch));
-        // Seed at the (width-1, linear) output layer.
         self.zbar[0] = alpha;
         for i in 0..nc {
             self.tbar[i] = beta.get(i).copied().unwrap_or(0.0);
@@ -238,7 +766,6 @@ impl Tape {
             let off = self.offsets[l];
             let w = &theta[off..off + fan_in * fan_out];
             let h_prev: &[f64] = if l == 0 { &self.x_in } else { &self.h[l - 1] };
-            // 1. Parameter gradients of this layer.
             let (out_w, out_rest) = out[off..].split_at_mut(fan_in * fan_out);
             let out_b = &mut out_rest[..fan_out];
             for o in 0..fan_out {
@@ -254,7 +781,6 @@ impl Tape {
                     let tb = self.tbar[i * fan_out + o];
                     let sb = self.sbar[i * fan_out + o];
                     if l == 0 {
-                        // t_prev = e_i (s_prev = 0): only column i gets ∂ζ/∂W.
                         wrow[i] += tb;
                     } else if tb != 0.0 || sb != 0.0 {
                         let tp = &self.th[l - 1][i * fan_in..(i + 1) * fan_in];
@@ -268,8 +794,6 @@ impl Tape {
             if l == 0 {
                 break;
             }
-            // 2. Propagate through Wᵀ to the previous layer's activated
-            //    outputs (h̄, t̄, s̄), into the *_next scratch.
             for k in 0..fan_in {
                 self.zbar_next[k] = 0.0;
             }
@@ -302,8 +826,6 @@ impl Tape {
                     }
                 }
             }
-            // 3. Convert activation-level adjoints of layer l-1 to
-            //    pre-activation adjoints (the tanh chain rules above).
             let hm = &self.h[l - 1];
             let tzm = &self.tz[l - 1];
             let szm = &self.sz[l - 1];
@@ -332,6 +854,7 @@ impl Tape {
 mod tests {
     use super::*;
     use crate::pde::{init_params, mlp_forward};
+    use crate::proptest::run_prop;
     use crate::rng::Rng;
 
     fn fd_value(theta: &[f64], arch: &[usize], x: &[f64], i: usize, h: f64) -> (f64, f64) {
@@ -355,12 +878,17 @@ mod tests {
         for case in 0..20 {
             let mut x = [0.0; 3];
             rng.fill_uniform(&mut x, 0.0, 1.0);
-            tape.forward(&theta, &x, if case % 2 == 0 { 3 } else { 0 });
+            let orders = if case % 2 == 0 {
+                DualOrder::full(3)
+            } else {
+                DualOrder::NONE
+            };
+            tape.forward(&theta, &x, orders);
             let want = mlp_forward(&theta, &arch, &x);
             assert!(
-                (tape.value() - want).abs() < 1e-13,
+                (tape.value(0) - want).abs() < 1e-13,
                 "case {case}: {} vs {}",
-                tape.value(),
+                tape.value(0),
                 want
             );
         }
@@ -375,18 +903,18 @@ mod tests {
         for _ in 0..10 {
             let mut x = [0.0; 2];
             rng.fill_uniform(&mut x, 0.1, 0.9);
-            tape.forward(&theta, &x, 2);
+            tape.forward(&theta, &x, DualOrder::full(2));
             for i in 0..2 {
                 let (fd1, fd2) = fd_value(&theta, &arch, &x, i, 1e-5);
                 assert!(
-                    (tape.d1(i) - fd1).abs() < 1e-8 * (1.0 + fd1.abs()),
+                    (tape.d1(0, i) - fd1).abs() < 1e-8 * (1.0 + fd1.abs()),
                     "d1[{i}]: {} vs fd {fd1}",
-                    tape.d1(i)
+                    tape.d1(0, i)
                 );
                 assert!(
-                    (tape.d2(i) - fd2).abs() < 1e-4 * (1.0 + fd2.abs()),
+                    (tape.d2(0, i) - fd2).abs() < 1e-4 * (1.0 + fd2.abs()),
                     "d2[{i}]: {} vs fd {fd2}",
-                    tape.d2(i)
+                    tape.d2(0, i)
                 );
             }
         }
@@ -400,9 +928,9 @@ mod tests {
         let theta = init_params(&arch, &mut rng);
         let x = [0.4, 0.7];
         let mut tape = Tape::new(&arch);
-        tape.forward(&theta, &x, 0);
+        tape.forward(&theta, &x, DualOrder::NONE);
         let mut grad = vec![0.0; theta.len()];
-        tape.backward(&theta, 1.0, &[], &[], &mut grad);
+        tape.backward(&theta, 0, 1.0, &[], &[], &mut grad);
         let eps = 1e-6;
         for jj in 0..theta.len() {
             let mut tp = theta.clone();
@@ -427,12 +955,12 @@ mod tests {
         let theta = init_params(&arch, &mut rng);
         let x = [0.3, 0.6];
         let mut tape = Tape::new(&arch);
-        tape.forward(&theta, &x, 2);
+        tape.forward(&theta, &x, DualOrder::full(2));
         let mut grad = vec![0.0; theta.len()];
-        tape.backward(&theta, 0.0, &[], &[1.0, 1.0], &mut grad);
+        tape.backward(&theta, 0, 0.0, &[], &[1.0, 1.0], &mut grad);
         let lap_at = |t: &[f64], tape: &mut Tape| {
-            tape.forward(t, &x, 2);
-            tape.d2(0) + tape.d2(1)
+            tape.forward(t, &x, DualOrder::full(2));
+            tape.d2(0, 0) + tape.d2(0, 1)
         };
         let eps = 1e-6;
         for jj in (0..theta.len()).step_by(7) {
@@ -451,18 +979,20 @@ mod tests {
 
     #[test]
     fn backward_time_derivative_grad_matches_fd() {
-        // β-seeded backward = ∇_θ ∂_t u (the heat-operator path).
+        // β-seeded backward = ∇_θ ∂_t u, through the heat operator's
+        // dual-order mask (no second-order duals on the time coordinate).
         let arch = [3usize, 5, 1];
         let mut rng = Rng::seed_from(9);
         let theta = init_params(&arch, &mut rng);
         let x = [0.2, 0.8, 0.5];
+        let heat = DualOrder::new(3, 2);
         let mut tape = Tape::new(&arch);
-        tape.forward(&theta, &x, 3);
+        tape.forward(&theta, &x, heat);
         let mut grad = vec![0.0; theta.len()];
-        tape.backward(&theta, 0.0, &[0.0, 0.0, 1.0], &[], &mut grad);
+        tape.backward(&theta, 0, 0.0, &[0.0, 0.0, 1.0], &[], &mut grad);
         let dt_at = |t: &[f64], tape: &mut Tape| {
-            tape.forward(t, &x, 3);
-            tape.d1(2)
+            tape.forward(t, &x, heat);
+            tape.d1(0, 2)
         };
         let eps = 1e-6;
         for jj in 0..theta.len() {
@@ -477,5 +1007,114 @@ mod tests {
                 grad[jj]
             );
         }
+    }
+
+    /// The blocked kernels against the naive scalar reference: bitwise
+    /// agreement of value/d1/d2 and of seeded reverse passes, across random
+    /// architectures, dual masks (`ncoords ∈ {0, 1, d}`, full and
+    /// heat-style second-order prefixes), and batched-vs-single-point
+    /// entry points.
+    #[test]
+    fn prop_blocked_tape_matches_scalar_reference_bitwise() {
+        run_prop("blocked tape == scalar tape (bitwise)", 24, |g| {
+            let d = g.usize_in(1, 4);
+            let mut arch = vec![d];
+            for _ in 0..g.usize_in(1, 2) {
+                arch.push(g.usize_in(2, 8));
+            }
+            arch.push(1);
+            let nc = *g.rng().choice(&[0usize, 1, d]);
+            let nc2 = if nc > 0 && g.bool() { nc - 1 } else { nc };
+            let orders = DualOrder::new(nc, nc2);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::seed_from(seed);
+            let theta = init_params(&arch, &mut rng);
+            let mut tape = Tape::new(&arch);
+            let mut scalar = ScalarTape::new(&arch);
+            let n_pts = g.usize_in(1, tape.block_points(orders).min(8));
+            let mut xs = vec![0.0; n_pts * d];
+            rng.fill_uniform(&mut xs, 0.05, 0.95);
+            // Random nonzero seeds per point for the reverse passes.
+            let mut alpha = vec![0.0; n_pts];
+            let mut beta = vec![0.0; n_pts * nc];
+            let mut gamma = vec![0.0; n_pts * nc2];
+            rng.fill_uniform(&mut alpha, 0.1, 1.0);
+            rng.fill_uniform(&mut beta, 0.1, 1.0);
+            rng.fill_uniform(&mut gamma, 0.1, 1.0);
+
+            let np = theta.len();
+            tape.forward_batch(&theta, &xs, n_pts, orders);
+            let mut rows = vec![0.0; n_pts * np];
+            tape.backward_batch(&theta, n_pts, &alpha, &beta, &gamma, &mut rows);
+
+            for b in 0..n_pts {
+                let x = &xs[b * d..(b + 1) * d];
+                let bs = &beta[b * nc..(b + 1) * nc];
+                let gs = &gamma[b * nc2..(b + 1) * nc2];
+                let row = &rows[b * np..(b + 1) * np];
+                // Scalar reference carries full second order on all `nc`
+                // coordinates; the mask is emulated by zero γ padding.
+                scalar.forward(&theta, x, nc);
+                let mut gref = vec![0.0; nc];
+                gref[..nc2].copy_from_slice(gs);
+                let mut ref_row = vec![0.0; np];
+                scalar.backward(&theta, alpha[b], bs, &gref, &mut ref_row);
+
+                if tape.value(b).to_bits() != scalar.value().to_bits() {
+                    return Err(format!(
+                        "point {b}: value {} vs scalar {}",
+                        tape.value(b),
+                        scalar.value()
+                    ));
+                }
+                for i in 0..nc {
+                    if tape.d1(b, i).to_bits() != scalar.d1(i).to_bits() {
+                        return Err(format!("point {b}: d1[{i}] mismatch"));
+                    }
+                }
+                for i in 0..nc2 {
+                    if tape.d2(b, i).to_bits() != scalar.d2(i).to_bits() {
+                        return Err(format!("point {b}: d2[{i}] mismatch"));
+                    }
+                }
+                for (jj, (a, r)) in row.iter().zip(&ref_row).enumerate() {
+                    if a.to_bits() != r.to_bits() {
+                        return Err(format!("point {b}: row[{jj}] {a:.17e} vs scalar {r:.17e}"));
+                    }
+                }
+
+                // Single-point blocked entry: bitwise the same lanes again.
+                let mut single = vec![0.0; np];
+                let mut tape1 = Tape::new(&arch);
+                tape1.forward(&theta, x, orders);
+                tape1.backward(&theta, 0, alpha[b], bs, gs, &mut single);
+                if tape1.value(0).to_bits() != tape.value(b).to_bits() {
+                    return Err(format!("point {b}: single-point value mismatch"));
+                }
+                for (jj, (a, s)) in row.iter().zip(&single).enumerate() {
+                    if a.to_bits() != s.to_bits() {
+                        return Err(format!("point {b}: single row[{jj}] mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_points_adapts_to_the_dual_mask() {
+        let tape = Tape::new(&[2, 6, 1]);
+        assert_eq!(tape.block_points(DualOrder::NONE), MAX_BLOCK_POINTS);
+        assert_eq!(tape.block_points(DualOrder::full(2)), MAX_BLOCK_POINTS);
+        let tape = Tape::new(&[100, 4, 1]);
+        // 100 dual coordinates blow the lane budget: one point per block.
+        assert_eq!(tape.block_points(DualOrder::full(100)), 1);
+        assert_eq!(tape.block_points(DualOrder::NONE), MAX_BLOCK_POINTS);
+        // Capacity still covers a full-order pass at d = 100.
+        let mut tape = Tape::new(&[100, 4, 1]);
+        let theta = vec![0.01; param_count(&[100, 4, 1])];
+        let x = vec![0.5; 100];
+        tape.forward(&theta, &x, DualOrder::full(100));
+        assert!(tape.value(0).is_finite());
     }
 }

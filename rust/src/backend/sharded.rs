@@ -17,9 +17,11 @@
 //! depends on the shard layout:
 //!
 //! * residuals, Jacobian rows, and predictions are pointwise — each shard
-//!   computes its rows exactly as the unsharded backend would and writes
-//!   them into disjoint ranges of the shared output (`Workspace`-pooled J,
-//!   the residual vector, the prediction buffer);
+//!   computes its rows exactly as the unsharded backend would (through the
+//!   same point-blocked tape kernels, whose lanes preserve the scalar
+//!   per-point FP sequence) and writes them into disjoint ranges of the
+//!   shared output (`Workspace`-pooled J, the residual vector, the
+//!   prediction buffer);
 //! * the loss / gradient reductions reuse the native backend's global
 //!   chunk grid (`thread_chunks`, a pure function of `ENGD_THREADS` and
 //!   the batch size): shards compute whole chunks' partials and the final

@@ -29,7 +29,8 @@ pub struct Checkpoint {
     pub seed: u64,
     pub theta: Vec<f64>,
     /// Optimizer auxiliary state (SPRING's φ, Adam's [t, m, v], SGD's
-    /// velocity, Hessian-free's [λ, warm start]; empty when stateless).
+    /// velocity, Hessian-free's [λ, warm start], dense ENGD's [P, EMA
+    /// Gramian]; empty when stateless).
     pub phi: Vec<f64>,
 }
 

@@ -24,12 +24,17 @@
 //!   paper-faithful path, and the only one with fused single-artifact
 //!   optimizer steps;
 //! * **native** ([`backend::NativeBackend`]) — pure-Rust evaluation of the
-//!   tanh-MLP and its PDE operators: per-coordinate second-order forward
-//!   duals for the Laplacian, hand-rolled reverse mode for per-sample
-//!   Jacobian rows, parallelized over collocation points. No artifacts, no
-//!   PJRT client — the full ENGD-W/SPRING/Nyström pipeline trains and is
-//!   tested offline (`--backend native`, the default wherever no artifact
-//!   manifest exists).
+//!   tanh-MLP and its PDE operators through coordinate-blocked,
+//!   point-batched SIMD tape kernels: per-coordinate forward duals (to the
+//!   order each coordinate needs — the operator's [`pde::DualOrder`]
+//!   mask) for the Laplacian/heat operators, hand-rolled reverse mode for
+//!   per-sample Jacobian rows, point blocks amortizing the per-layer
+//!   weight-panel setup, parallelized over collocation points. Every SIMD
+//!   lane preserves the scalar per-point FP operation order, so blocking
+//!   changes no trajectory bit. No artifacts, no PJRT client — the full
+//!   ENGD-W/SPRING/Nyström pipeline trains and is tested offline
+//!   (`--backend native`, the default wherever no artifact manifest
+//!   exists).
 //!
 //! On top of the seam sits [`backend::ShardedEvaluator`]
 //! (`--backend sharded:<n>`): the collocation batch split into contiguous

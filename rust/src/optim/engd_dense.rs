@@ -57,12 +57,20 @@ impl Optimizer for EngdDense {
         let ema = self.cfg.ema;
         let gram = match self.gramian.take() {
             None => {
-                if self.cfg.gramian_identity_init && ema > 0.0 {
-                    // G ← ema·I + (1−ema)·G_batch
+                if ema > 0.0 {
+                    // First step of the EMA recursion G_k = ema·G_{k−1} +
+                    // (1−ema)·G_batch from the configured G₀ (Appendix
+                    // A.1's identity-vs-zero distinction): the (1−ema)
+                    // scaling applies either way — skipping it for the
+                    // zero init made G₁ the raw batch Gramian, i.e. the
+                    // two inits were indistinguishable on step 1.
                     let mut g = g_batch;
                     g.scale_in_place(1.0 - ema);
-                    for i in 0..p {
-                        g[(i, i)] += ema;
+                    if self.cfg.gramian_identity_init {
+                        // G₀ = I: ema·I joins the batch term.
+                        for i in 0..p {
+                            g[(i, i)] += ema;
+                        }
                     }
                     g
                 } else {
@@ -108,6 +116,38 @@ impl Optimizer for EngdDense {
             lr_used: eta,
             extra: vec![("grad_norm".into(), crate::linalg::norm2(&grad))],
         })
+    }
+
+    /// Checkpoint layout: `[P, G…]` — the accumulator dimension (doubling
+    /// as the "EMA initialized" flag) followed by the flattened P×P EMA
+    /// Gramian; empty before the first step. Without this state a resumed
+    /// dense-ENGD run would silently restart the EMA recursion from
+    /// scratch instead of replaying the uninterrupted trajectory.
+    fn state(&self) -> Vec<f64> {
+        match &self.gramian {
+            None => Vec::new(),
+            Some(g) => {
+                let mut s = Vec::with_capacity(1 + g.data().len());
+                s.push(g.rows() as f64);
+                s.extend_from_slice(g.data());
+                s
+            }
+        }
+    }
+
+    fn restore_state(&mut self, state: Vec<f64>) {
+        if state.is_empty() {
+            self.gramian = None;
+            return;
+        }
+        let p = state[0] as usize;
+        // A malformed vector (wrong optimizer, truncated or hand-edited
+        // file) is dropped rather than misread; the trainer's kind check
+        // should have caught it already. The MAX_DENSE_PARAMS bound also
+        // keeps p*p from overflowing on a garbage dimension scalar.
+        if p <= MAX_DENSE_PARAMS && state.len() == 1 + p * p {
+            self.gramian = Some(Matrix::from_vec(p, p, state[1..].to_vec()));
+        }
     }
 
     fn describe(&self) -> String {

@@ -92,17 +92,20 @@ pub fn golden_section(
 }
 
 /// Artifact-backed grid line search over `loss(θ − η φ)` (the optimizers'
-/// entry point).
+/// entry point). The θ-sized trial iterate is drawn from the step
+/// workspace — every element is overwritten before each probe — so a
+/// warmed-up line-search step allocates nothing, upholding the
+/// steady-state zero-allocation invariant the workspace tests assert.
 pub fn grid_line_search(
-    env: &StepEnv,
+    env: &mut StepEnv,
     theta: &[f64],
     phi: &[f64],
     base_loss: f64,
     eta_max: f64,
     grid: usize,
 ) -> Result<LineSearchResult> {
-    let mut trial = vec![0.0; theta.len()];
-    grid_search(
+    let mut trial = env.ws.take_scratch(theta.len());
+    let out = grid_search(
         |eta| {
             for (t, (&th, &ph)) in trial.iter_mut().zip(theta.iter().zip(phi)) {
                 *t = th - eta * ph;
@@ -112,7 +115,9 @@ pub fn grid_line_search(
         base_loss,
         eta_max,
         grid,
-    )
+    );
+    env.ws.recycle(trial);
+    out
 }
 
 #[cfg(test)]

@@ -130,7 +130,8 @@ pub trait Optimizer {
 
     /// Flat auxiliary state for checkpointing, sufficient for bit-exact
     /// resume: SPRING's φ, Adam's `[t, m, v]`, SGD's velocity,
-    /// Hessian-free's `[λ, CG warm start]`; empty for stateless optimizers.
+    /// Hessian-free's `[λ, CG warm start]`, dense ENGD's `[P, EMA Gramian]`;
+    /// empty for stateless optimizers.
     fn state(&self) -> Vec<f64> {
         Vec::new()
     }

@@ -52,6 +52,10 @@
 //! [`with_scratch`] gives each worker (and the calling thread) a typed,
 //! thread-local slot that persists across dispatches — this is how the
 //! native backend keeps one `Tape` per worker alive across evaluations.
+//! Slots own their value's full sizing: the blocked tape allocates its
+//! point-block panels (≈ `max(64, d)` dual lanes per layer) once at slot
+//! construction, so steady-state dispatches neither grow nor reallocate
+//! scratch.
 //! Safety contract: the slot is keyed by `TypeId` per thread, so a value
 //! never migrates between threads (hence only `T: Send` is required, not
 //! `Sync`), and re-entrant use of the *same* type on the same thread sees

@@ -26,6 +26,6 @@ mod sampler;
 pub use exact::{exact_solution, l2_relative_error, ExactSolution};
 pub use params::{init_params, mlp_forward, param_count};
 pub use problems::{
-    builtin_problem, builtin_problem_map, builtin_problems, PdeOperator, ProblemSpec,
+    builtin_problem, builtin_problem_map, builtin_problems, DualOrder, PdeOperator, ProblemSpec,
 };
 pub use sampler::Sampler;

@@ -27,6 +27,45 @@ pub enum PdeOperator {
     Heat,
 }
 
+/// Per-coordinate dual-order mask for the forward-mode AD tape: how many
+/// input coordinates carry derivative duals, and to what order.
+///
+/// Coordinates `0..first` carry first-order duals `∂_i u`; of those, the
+/// prefix `0..second` also carries second-order duals `∂²_i u`
+/// (`second ≤ first`). The prefix convention matches the coordinate layout
+/// of every built-in operator: Poisson needs `∂²_i` for all coordinates,
+/// while the heat operator — time as the *last* coordinate — needs
+/// `∂²_i` only for the spatial prefix plus `∂_t` for the trailing time
+/// coordinate. Dropping the unused second-order time dual removes two
+/// matrix-panel products per layer from the heat forward pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DualOrder {
+    /// Coordinates carrying first-order duals (a prefix of the input).
+    pub first: usize,
+    /// Coordinates (a prefix of `first`) also carrying second-order duals.
+    pub second: usize,
+}
+
+impl DualOrder {
+    /// No duals at all: a plain value-only forward pass.
+    pub const NONE: DualOrder = DualOrder {
+        first: 0,
+        second: 0,
+    };
+
+    /// Duals on the first `first` coordinates, second-order on the
+    /// `second`-long prefix of those.
+    pub fn new(first: usize, second: usize) -> DualOrder {
+        assert!(second <= first, "order-2 coordinates must be a prefix");
+        DualOrder { first, second }
+    }
+
+    /// Every one of `dim` coordinates carries both orders (the Laplacian).
+    pub fn full(dim: usize) -> DualOrder {
+        DualOrder::new(dim, dim)
+    }
+}
+
 impl PdeOperator {
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
@@ -50,6 +89,17 @@ impl PdeOperator {
             Self::Heat
         } else {
             Self::Poisson
+        }
+    }
+
+    /// The dual orders this operator's interior residual needs from a
+    /// `dim`-dimensional forward pass (see [`DualOrder`]): Poisson reads
+    /// `∂²_i` everywhere; heat reads `∂²_i` on the spatial prefix and only
+    /// `∂_t` on the trailing time coordinate.
+    pub fn dual_orders(&self, dim: usize) -> DualOrder {
+        match self {
+            Self::Poisson => DualOrder::full(dim),
+            Self::Heat => DualOrder::new(dim, dim.saturating_sub(1)),
         }
     }
 }
@@ -244,5 +294,18 @@ mod tests {
     #[test]
     fn unknown_builtin_is_an_error() {
         assert!(builtin_problem("nope").is_err());
+    }
+
+    #[test]
+    fn dual_order_masks_match_the_operators() {
+        assert_eq!(PdeOperator::Poisson.dual_orders(5), DualOrder::new(5, 5));
+        // Heat: second-order on the spatial prefix, first-order on time.
+        assert_eq!(PdeOperator::Heat.dual_orders(3), DualOrder::new(3, 2));
+        assert_eq!(DualOrder::NONE, DualOrder::new(0, 0));
+        assert_eq!(DualOrder::full(2), DualOrder::new(2, 2));
+        for p in builtin_problems() {
+            let o = p.operator.dual_orders(p.dim);
+            assert!(o.second <= o.first && o.first == p.dim, "{}", p.name);
+        }
     }
 }

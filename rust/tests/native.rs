@@ -442,6 +442,92 @@ fn checkpoint_resume_is_bitwise_for_engd_w() {
     });
 }
 
+#[test]
+fn checkpoint_resume_is_bitwise_for_engd_dense() {
+    // The EMA Gramian accumulator is part of the trajectory: without the
+    // `[P, G]` state vector a resumed dense-ENGD run silently restarts the
+    // EMA recursion from scratch and drifts off the uninterrupted losses.
+    assert_resume_is_bitwise("engd-dense", |cfg| {
+        cfg.optimizer.kind = OptimizerKind::EngdDense;
+        cfg.optimizer.damping = 1e-4;
+        cfg.optimizer.ema = 0.9;
+        cfg.optimizer.gramian_identity_init = true;
+        cfg.optimizer.line_search = false;
+        cfg.optimizer.lr = 0.2;
+    });
+}
+
+/// Appendix A.1 regression: with `ema > 0` and the *zero* Gramian init,
+/// step 1 must use `G₁ = (1−ema)·G_batch` — before the fix it used the raw
+/// batch Gramian, making zero-init indistinguishable from `ema = 0` (and
+/// from nothing) on the first step.
+#[test]
+fn engd_dense_first_step_respects_the_ema_init() {
+    use engd::config::OptimizerConfig;
+    use engd::optim::{EngdDense, Optimizer, StepEnv};
+
+    let p = tiny_problem(2, 4, 6, 3, "sine_product", PdeOperator::Poisson);
+    let be = NativeBackend::with_problems(vec![p.clone()]);
+    let mut rng0 = Rng::seed_from(21);
+    let theta0 = init_params(&p.arch, &mut rng0);
+    let mut sampler = Sampler::new(p.dim, 77);
+    let xi = sampler.interior(p.n_interior);
+    let xb = sampler.boundary(p.n_boundary);
+
+    // Two fixed-lr steps on identical inputs; returns θ after each step.
+    let run_two_steps = |ema: f64, identity: bool| -> (Vec<f64>, Vec<f64>) {
+        let o = OptimizerConfig {
+            kind: OptimizerKind::EngdDense,
+            ema,
+            gramian_identity_init: identity,
+            damping: 1e-3,
+            line_search: false,
+            lr: 0.1,
+            ..OptimizerConfig::default()
+        };
+        let mut opt = EngdDense::new(&o);
+        let mut theta = theta0.clone();
+        let mut after_first = Vec::new();
+        let mut ws = Workspace::new();
+        for k in 1..=2usize {
+            let mut rng = Rng::seed_from(5);
+            let mut env = StepEnv {
+                eval: &be,
+                problem: &p,
+                x_int: &xi,
+                x_bnd: &xb,
+                k,
+                rng: &mut rng,
+                ws: &mut ws,
+                diagnostics: false,
+            };
+            opt.step(&mut theta, &mut env).unwrap();
+            if k == 1 {
+                after_first = theta.clone();
+            }
+        }
+        (after_first, theta)
+    };
+
+    let (zero1, zero2) = run_two_steps(0.5, false);
+    let (id1, id2) = run_two_steps(0.5, true);
+    let (raw1, _) = run_two_steps(0.0, false);
+
+    let differs = |a: &[f64], b: &[f64]| a.iter().zip(b).any(|(x, y)| x != y);
+    assert!(
+        differs(&zero1, &raw1),
+        "zero-init EMA step 1 equals the raw-Gramian (ema = 0) step — the \
+         (1−ema) scaling was skipped"
+    );
+    assert!(
+        differs(&zero1, &id1),
+        "identity and zero Gramian inits agree on step 1 — A.1's choice is a no-op"
+    );
+    assert!(zero2.iter().all(|v| v.is_finite()), "zero-init EMA diverged");
+    assert!(id2.iter().all(|v| v.is_finite()), "identity-init EMA diverged");
+    assert!(differs(&zero2, &id2), "the init choice washed out after one step");
+}
+
 /// Resuming with a different optimizer than the one that wrote the
 /// checkpoint must be refused: the flat state vector's layout is
 /// optimizer-specific (SPRING's φ read as Adam's [t, m, v] would silently
@@ -482,14 +568,21 @@ fn checkpoint_resume_rejects_optimizer_mismatch() {
 }
 
 /// The trainer's step-buffer pool reaches steady state natively too: J,
-/// Gram, and sketch buffers are recycled, so a second step allocates no
-/// fresh pool-tracked buffer.
+/// Gram, sketch — and, with the line search enabled, the per-probe trial
+/// iterate — are recycled, so a second step allocates no fresh
+/// pool-tracked buffer.
 #[test]
 fn native_trainer_reuses_workspace_across_steps() {
     let be = NativeBackend::new();
-    for solve in [SolveMode::Exact, SolveMode::NystromGpu] {
+    for (solve, line_search) in [
+        (SolveMode::Exact, false),
+        (SolveMode::NystromGpu, false),
+        // Line-search probes draw their θ-sized trial vector from the
+        // pool: a warmed-up searching step must allocate nothing either.
+        (SolveMode::Exact, true),
+    ] {
         let mut cfg = RunConfig {
-            name: format!("ws-{}", solve.name()),
+            name: format!("ws-{}-ls{}", solve.name(), line_search as u8),
             problem: "poisson1d".into(),
             backend: "native".into(),
             steps: 1,
@@ -500,7 +593,8 @@ fn native_trainer_reuses_workspace_across_steps() {
         cfg.optimizer.kind = OptimizerKind::EngdW;
         cfg.optimizer.path = ExecPath::Decomposed;
         cfg.optimizer.solve = solve;
-        cfg.optimizer.line_search = false;
+        cfg.optimizer.line_search = line_search;
+        cfg.optimizer.ls_grid = 6;
         cfg.optimizer.lr = 1e-3;
         cfg.optimizer.damping = 1e-6;
 

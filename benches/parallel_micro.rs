@@ -16,6 +16,12 @@
 //!    implementation kept in-tree as the reference) on the Jacobian
 //!    forward+reverse workload — single thread, single-point and
 //!    point-block entries, Poisson 2d/10d + heat?
+//! 4. **Fused backward panels**: with the forward state already in place,
+//!    what does the layer-outer/point-inner fused `backward_batch`
+//!    (adjoint panels; weight rows loaded once per layer per block) buy
+//!    over per-point `backward` calls on the same blocks — reverse pass
+//!    only? The PR-5 acceptance case is the wide poisson2d net at batch
+//!    512 (fused ≥ 1.5× per-point, rows bitwise identical).
 
 use std::hint::black_box;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -168,6 +174,119 @@ fn bench_tape_case(
     );
 }
 
+/// One fused-vs-per-point *backward* case: forward state is prepared once
+/// per block (outside the timed region, one tape per block), then the
+/// timed loops run only the reverse passes — per-point [`Tape::backward`]
+/// calls vs one fused [`Tape::backward_batch`] adjoint-panel sweep per
+/// block, writing the same contiguous J sub-blocks. Seeds mirror the
+/// interior residual rows (`γ ≡ −1`, `β_t = 1` for heat).
+fn bench_backward_case(
+    label: &str,
+    arch: &[usize],
+    n_pts: usize,
+    orders: DualOrder,
+    heat: bool,
+    reps: usize,
+) {
+    let np = param_count(arch);
+    let d = arch[0];
+    let (nc, nc2) = (orders.first, orders.second);
+    let mut rng = Rng::seed_from(0xFACE);
+    let theta = init_params(arch, &mut rng);
+    let mut xs = vec![0.0; n_pts * d];
+    rng.fill_uniform(&mut xs, 0.05, 0.95);
+
+    let alpha = vec![0.0; n_pts];
+    let mut beta = vec![0.0; n_pts * nc];
+    let gamma = vec![-1.0; n_pts * nc2];
+    if heat {
+        for b in 0..n_pts {
+            beta[b * nc + nc - 1] = 1.0;
+        }
+    }
+
+    // One tape per block, forwarded once: the timed region is reverse-only.
+    let block = Tape::new(arch).block_points(orders);
+    let mut blocks: Vec<(usize, usize, Tape)> = Vec::new();
+    let mut p = 0;
+    while p < n_pts {
+        let n = block.min(n_pts - p);
+        let mut tape = Tape::new(arch);
+        tape.forward_batch(&theta, &xs[p * d..(p + n) * d], n, orders);
+        blocks.push((p, n, tape));
+        p += n;
+    }
+
+    // Bitwise cross-check once, outside the timed loops.
+    let mut j = vec![0.0; n_pts * np];
+    let mut j_ref = vec![0.0; n_pts * np];
+    for (p0, n, tape) in blocks.iter_mut() {
+        for b in 0..*n {
+            let r = *p0 + b;
+            tape.backward(
+                &theta,
+                b,
+                alpha[r],
+                &beta[r * nc..(r + 1) * nc],
+                &gamma[r * nc2..(r + 1) * nc2],
+                &mut j_ref[r * np..(r + 1) * np],
+            );
+        }
+        tape.backward_batch(
+            &theta,
+            *n,
+            &alpha[*p0..*p0 + *n],
+            &beta[*p0 * nc..(*p0 + *n) * nc],
+            &gamma[*p0 * nc2..(*p0 + *n) * nc2],
+            &mut j[*p0 * np..(*p0 + *n) * np],
+        );
+    }
+    let bitwise = j.iter().zip(&j_ref).all(|(a, b)| a.to_bits() == b.to_bits());
+    let cross_check = if bitwise {
+        "rows bitwise==per-point"
+    } else {
+        "ROWS DIVERGE FROM PER-POINT"
+    };
+
+    let per_point_t = time_reps(reps, || {
+        j.fill(0.0);
+        for (p0, n, tape) in blocks.iter_mut() {
+            for b in 0..*n {
+                let r = *p0 + b;
+                tape.backward(
+                    &theta,
+                    b,
+                    alpha[r],
+                    &beta[r * nc..(r + 1) * nc],
+                    &gamma[r * nc2..(r + 1) * nc2],
+                    &mut j[r * np..(r + 1) * np],
+                );
+            }
+        }
+        black_box(j[0]);
+    });
+    let fused_t = time_reps(reps, || {
+        j.fill(0.0);
+        for (p0, n, tape) in blocks.iter_mut() {
+            tape.backward_batch(
+                &theta,
+                *n,
+                &alpha[*p0..*p0 + *n],
+                &beta[*p0 * nc..(*p0 + *n) * nc],
+                &gamma[*p0 * nc2..(*p0 + *n) * nc2],
+                &mut j[*p0 * np..(*p0 + *n) * np],
+            );
+        }
+        black_box(j[0]);
+    });
+    println!(
+        "backward {label:<20} per-point {:>8.3}ms  fused[{block}] {:>8.3}ms  ({:.2}x)  {cross_check}",
+        per_point_t.median * 1e3,
+        fused_t.median * 1e3,
+        per_point_t.median / fused_t.median.max(1e-12),
+    );
+}
+
 /// The previous substrate, reproduced as a baseline: fresh scoped threads
 /// per call, same chunk grid as `parallel::par_chunks`.
 fn scoped_spawn_chunks(n: usize, workers: usize, f: impl Fn(usize, usize) + Sync) {
@@ -269,4 +388,21 @@ fn main() {
     bench_tape_case("poisson2d-b512", &[2, 64, 64, 1], 512, DualOrder::full(2), false, 20);
     bench_tape_case("poisson10d-b128", arch10d, 128, DualOrder::full(10), false, 5);
     bench_tape_case("heat2d-b192", &[3, 48, 48, 1], 192, heat_orders, true, 20);
+
+    // --- fused vs per-point backward (reverse pass only) -----------------
+    //
+    // The PR-5 acceptance case is the wide poisson2d net at batch 512:
+    // the fused adjoint-panel backward must be ≥ 1.5× the per-point
+    // blocked backward with bitwise-identical Jacobian rows.
+    bench_backward_case("poisson2d-b512", &[2, 64, 64, 1], 512, DualOrder::full(2), false, 20);
+    bench_backward_case(
+        "poisson2d-b512-wide",
+        &[2, 128, 128, 1],
+        512,
+        DualOrder::full(2),
+        false,
+        10,
+    );
+    bench_backward_case("poisson10d-b128", arch10d, 128, DualOrder::full(10), false, 5);
+    bench_backward_case("heat2d-b192", &[3, 48, 48, 1], 192, heat_orders, true, 20);
 }

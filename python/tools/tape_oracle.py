@@ -1,17 +1,22 @@
 """Toolchain-free oracle for the blocked Tape kernels.
 
 A line-by-line Python mirror of rust/src/backend/native/tape.rs — same
-panel layouts, loop orders, DualOrder mask handling, and fused zeta/xi
-pass — cross-checked bitwise against a mirror of the scalar reference
-(`ScalarTape`) and against central finite differences. Pure-Python floats
-are IEEE f64 with the same operation order, so bitwise comparison is
-meaningful. Run with `python3 python/tools/tape_oracle.py`; prints
-"ALL OK" when every case agrees. Used when no Rust toolchain is available
-(see .claude/skills/verify/SKILL.md); the in-tree Rust property test
-`prop_blocked_tape_matches_scalar_reference_bitwise` asserts the same
-contract against the real implementation.
+panel layouts, loop orders, DualOrder mask handling, fused zeta/xi
+forward pass, and the layer-outer/point-inner fused `backward_batch`
+(adjoint panels, widest-strided; weight row loaded once per layer per
+block) — cross-checked bitwise against the per-point backward, against a
+mirror of the scalar reference (`ScalarTape`), and against central
+finite differences. Pure-Python floats are IEEE f64 with the same
+operation order, so bitwise comparison is meaningful. Run with
+`python3 python/tools/tape_oracle.py`; prints "ALL OK" and exits 0 when
+every case agrees (nonzero exit otherwise — CI runs this). Used when no
+Rust toolchain is available (see .claude/skills/verify/SKILL.md); the
+in-tree Rust property tests
+(`prop_blocked_tape_matches_scalar_reference_bitwise`,
+`fused_backward_panels_match_per_point_entry_bitwise`) assert the same
+contracts against the real implementation.
 """
-import math, random, struct
+import math, random, struct, sys
 
 def bits(x): return struct.unpack('<Q', struct.pack('<d', x))[0]
 
@@ -297,6 +302,114 @@ class Tape:
                     tbar[i*fi+o] = dd1*tb
                 zbar[o] = zb
 
+    def backward_batch(s, theta, n_pts, alpha, beta, gamma, out):
+        # Mirror of the fused layer-outer/point-inner Rust kernel: all
+        # points' adjoint panels (widest-strided) resident per layer; one
+        # W^T sweep per layer with the weight row loaded once per block.
+        arch = s.arch; d = arch[0]; nl = len(arch)-1
+        nc, nc2 = s.nc, s.nc2
+        ww = s.widest
+        np_ = param_count(arch)
+        assert n_pts <= s.n_pts
+        assert len(alpha) == n_pts and len(beta) == n_pts*nc and len(gamma) == n_pts*nc2
+        assert len(out) == n_pts*np_
+        pz = [0.0]*(n_pts*ww)
+        pt = [0.0]*(max(n_pts*nc, 1)*ww); ps = [0.0]*(max(n_pts*nc2, 1)*ww)
+        pzn = [0.0]*(n_pts*ww)
+        ptn = [0.0]*(max(n_pts*nc, 1)*ww); psn = [0.0]*(max(n_pts*nc2, 1)*ww)
+        d1v = [0.0]*ww; d2v = [0.0]*ww; d3v = [0.0]*ww
+        # Seed the width-1 output head.
+        for b in range(n_pts):
+            pz[b*ww] = alpha[b]
+            for i in range(nc):  pt[(b*nc+i)*ww] = beta[b*nc+i]
+            for i in range(nc2): ps[(b*nc2+i)*ww] = gamma[b*nc2+i]
+        for l in range(nl-1, -1, -1):
+            fi, fo = arch[l], arch[l+1]
+            off = s.offs[l]
+            w = theta[off:off+fi*fo]
+            # 1. per-point parameter gradients into each point's out row
+            for b in range(n_pts):
+                hp = s.x_in[b*d:(b+1)*d] if l == 0 else s.h[l-1][b*fi:(b+1)*fi]
+                ow, ob = b*np_+off, b*np_+off+fi*fo
+                for o in range(fo):
+                    zb = pz[b*ww+o]
+                    if zb != 0.0:
+                        for k in range(fi): out[ow+o*fi+k] = out[ow+o*fi+k] + zb*hp[k]
+                    out[ob+o] = out[ob+o] + zb
+                    for i in range(nc):
+                        tb = pt[(b*nc+i)*ww+o]
+                        sb = ps[(b*nc2+i)*ww+o] if i < nc2 else 0.0
+                        if l == 0:
+                            out[ow+o*fi+i] = out[ow+o*fi+i] + tb
+                        elif tb != 0.0 or sb != 0.0:
+                            tp0 = (b*nc+i)*fi
+                            tp = s.th[l-1][tp0:tp0+fi]
+                            if i < nc2:
+                                sp0 = (b*nc2+i)*fi
+                                sp = s.sh[l-1][sp0:sp0+fi]
+                                for k in range(fi):
+                                    out[ow+o*fi+k] = out[ow+o*fi+k] + (tb*tp[k] + sb*sp[k])
+                            else:
+                                for k in range(fi):
+                                    out[ow+o*fi+k] = out[ow+o*fi+k] + tb*tp[k]
+            if l == 0: break
+            # 2. fused W^T sweep (o outer: weight row loaded once per block)
+            for b in range(n_pts):
+                for k in range(fi): pzn[b*ww+k] = 0.0
+            for lane in range(n_pts*nc):
+                for k in range(fi): ptn[lane*ww+k] = 0.0
+            for lane in range(n_pts*nc2):
+                for k in range(fi): psn[lane*ww+k] = 0.0
+            for o in range(fo):
+                row = w[o*fi:(o+1)*fi]
+                for b in range(n_pts):
+                    zb = pz[b*ww+o]
+                    if zb != 0.0:
+                        for k in range(fi): pzn[b*ww+k] = pzn[b*ww+k] + row[k]*zb
+                    # (t,s) pair shares one row pass when both live
+                    # (disjoint dst panels: per-element order unchanged).
+                    for i in range(nc2):
+                        tlane = b*nc+i; slane = b*nc2+i
+                        tb = pt[tlane*ww+o]; sb = ps[slane*ww+o]
+                        if tb != 0.0 and sb != 0.0:
+                            for k in range(fi):
+                                ptn[tlane*ww+k] = ptn[tlane*ww+k] + row[k]*tb
+                                psn[slane*ww+k] = psn[slane*ww+k] + row[k]*sb
+                        else:
+                            if tb != 0.0:
+                                for k in range(fi): ptn[tlane*ww+k] = ptn[tlane*ww+k] + row[k]*tb
+                            if sb != 0.0:
+                                for k in range(fi): psn[slane*ww+k] = psn[slane*ww+k] + row[k]*sb
+                    for i in range(nc2, nc):
+                        lane = b*nc+i
+                        tb = pt[lane*ww+o]
+                        if tb != 0.0:
+                            for k in range(fi): ptn[lane*ww+k] = ptn[lane*ww+k] + row[k]*tb
+            # 3. per-point tanh chain rules (lane sweeps, i ascending per elem)
+            for b in range(n_pts):
+                hm = s.h[l-1][b*fi:(b+1)*fi]
+                for o in range(fi):
+                    y = hm[o]
+                    dd1 = 1.0 - y*y
+                    d1v[o] = dd1; d2v[o] = -2.0*y*dd1; d3v[o] = dd1*(6.0*y*y - 2.0)
+                for o in range(fi):
+                    pz[b*ww+o] = d1v[o]*pzn[b*ww+o]
+                for i in range(nc2):
+                    tlane = b*nc+i; slane = b*nc2+i
+                    for o in range(fi):
+                        zeta = s.tz[l-1][tlane*fi+o]; xi = s.sz[l-1][slane*fi+o]
+                        tb = ptn[tlane*ww+o]; sb = psn[slane*ww+o]
+                        pz[b*ww+o] = pz[b*ww+o] + (d2v[o]*zeta*tb + (d3v[o]*zeta*zeta + d2v[o]*xi)*sb)
+                        pt[tlane*ww+o] = d1v[o]*tb + 2.0*d2v[o]*zeta*sb
+                        ps[slane*ww+o] = d1v[o]*sb
+                for i in range(nc2, nc):
+                    tlane = b*nc+i
+                    for o in range(fi):
+                        zeta = s.tz[l-1][tlane*fi+o]
+                        tb = ptn[tlane*ww+o]
+                        pz[b*ww+o] = pz[b*ww+o] + d2v[o]*zeta*tb
+                        pt[tlane*ww+o] = d1v[o]*tb
+
 # ----- oracle forward (independent) ---------------------------------------
 def mlp_forward(theta, arch, x):
     offs = offsets_of(arch)
@@ -329,15 +442,27 @@ for case in range(40):
     alpha = [random.uniform(0.1, 1.0) for _ in range(n_pts)]
     beta  = [random.uniform(0.1, 1.0) for _ in range(n_pts*nc)]
     gamma = [random.uniform(0.1, 1.0) for _ in range(n_pts*nc2)]
+    # Sparse seeds: the per-point reference skips zero-adjoint lanes, and
+    # the fused sweep's guard fallbacks must skip identically.
+    for idx in range(0, len(beta), 3): beta[idx] = 0.0
+    for idx in range(0, len(gamma), 2): gamma[idx] = 0.0
 
     tape = Tape(arch); scalar = ScalarTape(arch)
     tape.forward_batch(theta, xs, n_pts, nc, nc2)
-    # One zero-initialized Jacobian row per point (the backward_batch shape).
+    # The fused adjoint-panel reverse pass: one contiguous J sub-block.
     rows = [0.0]*(n_pts*np_)
+    tape.backward_batch(theta, n_pts, alpha, beta, gamma, rows)
+    # Per-point entry of the same tape: must agree with the fused panels
+    # bitwise (same FP sequence per destination element).
     for b in range(n_pts):
         sub = [0.0]*np_
         tape.backward(theta, b, alpha[b], beta[b*nc:(b+1)*nc], gamma[b*nc2:(b+1)*nc2], sub)
-        rows[b*np_:(b+1)*np_] = sub
+        for jj in range(np_):
+            if bits(rows[b*np_+jj]) != bits(sub[jj]):
+                print(f"case {case} pt {b}: fused vs per-point row[{jj}] "
+                      f"{rows[b*np_+jj]!r} vs {sub[jj]!r}")
+                fails += 1
+                break
 
     for b in range(n_pts):
         x = xs[b*d:(b+1)*d]
@@ -392,3 +517,4 @@ for jj in range(0, np_, 3):
 
 print(f"bitwise mismatches: {fails}, FD mismatches: {bad_fd}")
 print("ALL OK" if fails == 0 and bad_fd == 0 else "FAILURES PRESENT")
+sys.exit(0 if fails == 0 and bad_fd == 0 else 1)

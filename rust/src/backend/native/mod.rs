@@ -10,9 +10,14 @@
 //! row-major storage. Points run through the tape in **blocks**
 //! ([`Tape::forward_batch`] / [`Tape::backward_batch`]): each worker's
 //! chunk is split at the interior/boundary frontier and fed to the
-//! coordinate-blocked SIMD kernels a point-block at a time, which
-//! amortizes the per-layer weight-panel setup across points instead of
-//! re-walking θ per point. Work is parallelized over collocation points
+//! coordinate-blocked SIMD kernels a point-block at a time. Both
+//! directions are layer-outer/point-inner: the forward pass transposes
+//! `W` once per layer per block, and the fused reverse pass keeps the
+//! whole block's **adjoint panels** resident per layer and pushes them
+//! through each `Wᵀ` in one sweep, so weight rows are loaded once per
+//! layer per block (not once per point) and each block's Jacobian rows
+//! land in one contiguous sub-block of J — the "adjoint panel" of the
+//! block. Work is parallelized over collocation points
 //! with [`crate::parallel`]; each worker thread owns one [`Tape`]
 //! *persistently* — the tape lives in the thread's
 //! [`crate::parallel::with_scratch`] slot and survives across evaluations
@@ -119,8 +124,12 @@ impl NativeBackend {
         Ok(())
     }
 
-    /// Loss+gradient partials of the global reduction chunks `[c0, c1)`:
-    /// `out[k] = (Σ r_i², Σ r_i ∇r_i)` over chunk `c0 + k`.
+    /// Loss+gradient partials of the global reduction chunks `[c0, c1)`,
+    /// written into caller-pooled flat storage: `loss_out[k] = Σ r_i²`
+    /// over chunk `c0 + k` and `grad_out[k·P..(k+1)·P]` its `Σ r_i ∇r_i`
+    /// partial (overwritten, not accumulated). Flat slices keep the
+    /// sharded evaluator's steady state allocation-free — partials land
+    /// in one `chunks × n_params` scratch block from its workspace pool.
     pub(crate) fn shard_loss_grad_partials(
         &self,
         p: &ProblemSpec,
@@ -129,18 +138,29 @@ impl NativeBackend {
         x_bnd: &[f64],
         c0: usize,
         c1: usize,
-        out: &mut [(f64, Vec<f64>)],
+        loss_out: &mut [f64],
+        grad_out: &mut [f64],
     ) -> Result<()> {
         let ctx = Ctx::new(p)?;
         ctx.check_inputs(theta, x_int, x_bnd)?;
         let n = ctx.n_int + ctx.n_bnd;
+        let np = ctx.n_params;
         let (chunks, chunk) = thread_chunks(n);
         ensure!(c0 <= c1 && c1 <= chunks, "chunk range [{c0}, {c1}) of {chunks}");
-        ensure!(out.len() == c1 - c0, "partial buffer length mismatch");
+        ensure!(loss_out.len() == c1 - c0, "loss partial buffer length mismatch");
+        ensure!(grad_out.len() == (c1 - c0) * np, "grad partial buffer length mismatch");
         for (k, c) in (c0..c1).enumerate() {
             let start = c * chunk;
             let end = ((c + 1) * chunk).min(n);
-            out[k] = chunk_loss_grad(&ctx, theta, x_int, x_bnd, start, end);
+            loss_out[k] = chunk_loss_grad_into(
+                &ctx,
+                theta,
+                x_int,
+                x_bnd,
+                start,
+                end,
+                &mut grad_out[k * np..(k + 1) * np],
+            );
         }
         Ok(())
     }
@@ -381,8 +401,13 @@ fn run_blocks<F>(
 /// Residuals and Jacobian rows of global rows `[row0, row1)`, written into
 /// caller slices (`r_out`: `row1 − row0` residuals; `j_out`: the matching
 /// zero-initialized row-major `(row1 − row0) × n_params` block). Each
-/// block's rows are handed to [`Tape::backward_batch`] as one contiguous
-/// J sub-block with per-point seeds.
+/// block's rows are handed to the fused [`Tape::backward_batch`] as one
+/// contiguous J sub-block — the block's adjoint panel — with per-point
+/// seeds, so the layer-outer reverse sweep retires a weight panel once
+/// per block while filling all of the panel's rows. The same layout is
+/// what `shard_rows_into` hands each shard: any contiguous row partition
+/// splits into whole panels plus at most two partial ones, all bitwise
+/// equal to unsharded processing.
 fn rows_into(
     ctx: &Ctx,
     theta: &[f64],
@@ -513,10 +538,8 @@ fn chunk_loss(
     })
 }
 
-/// One reduction chunk's `(Σ r_i², Σ r_i ∇r_i)` partial — the loss and the
-/// chunk's contribution to `∇L = Jᵀr`, with no J materialization: each
-/// point's reverse pass is seeded by its own residual value, accumulated
-/// into the shared chunk gradient in ascending row order.
+/// One reduction chunk's `(Σ r_i², Σ r_i ∇r_i)` partial, allocating the
+/// gradient buffer (the unsharded `loss_and_grad` path).
 fn chunk_loss_grad(
     ctx: &Ctx,
     theta: &[f64],
@@ -525,8 +548,30 @@ fn chunk_loss_grad(
     start: usize,
     end: usize,
 ) -> (f64, Vec<f64>) {
+    let mut grad = vec![0.0; ctx.n_params];
+    let acc = chunk_loss_grad_into(ctx, theta, x_int, x_bnd, start, end, &mut grad);
+    (acc, grad)
+}
+
+/// One reduction chunk's `Σ r_i²`, with the chunk's contribution to
+/// `∇L = Jᵀr` accumulated into caller storage (`grad`, zeroed here) and
+/// no J materialization: each point's reverse pass is seeded by its own
+/// residual value, accumulated into the shared chunk gradient in
+/// ascending row order — bitwise the same partial however the buffer is
+/// provided, which is what keeps the sharded evaluator's pooled-scratch
+/// path identical to the unsharded one.
+fn chunk_loss_grad_into(
+    ctx: &Ctx,
+    theta: &[f64],
+    x_int: &[f64],
+    x_bnd: &[f64],
+    start: usize,
+    end: usize,
+    grad: &mut [f64],
+) -> f64 {
+    debug_assert_eq!(grad.len(), ctx.n_params);
+    grad.fill(0.0);
     with_worker(ctx, |worker| {
-        let mut grad = vec![0.0; ctx.n_params];
         let mut acc = 0.0;
         run_blocks(worker, ctx, theta, x_int, x_bnd, start, end, |w, p0, n, interior| {
             for b in 0..n {
@@ -547,14 +592,14 @@ fn chunk_loss_grad(
                     if ctx.operator == PdeOperator::Heat {
                         beta[nc - 1] = c;
                     }
-                    tape.backward(theta, b, 0.0, &beta[..nc], &gamma[..nc2], &mut grad);
+                    tape.backward(theta, b, 0.0, &beta[..nc], &gamma[..nc2], grad);
                 } else {
                     let a = ctx.scale_bnd * val;
-                    tape.backward(theta, b, a, &[], &[], &mut grad);
+                    tape.backward(theta, b, a, &[], &[], grad);
                 }
             }
         });
-        (acc, grad)
+        acc
     })
 }
 

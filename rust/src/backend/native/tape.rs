@@ -20,6 +20,31 @@
 //!   yields an interior-residual Jacobian row; `α = s` a boundary row;
 //!   scaling the seeds by `r_i` accumulates `∇L = Jᵀr` with no J.
 //!
+//! ## Adjoint panels (the fused batched reverse pass)
+//!
+//! [`Tape::backward_batch`] is a **layer-outer / point-inner** nest: the
+//! whole block's adjoints stay resident as per-(point, coordinate)
+//! **adjoint panels** (`z̄`/`t̄`/`s̄`, one `widest`-strided panel per dual
+//! lane, same panel discipline as the forward duals), and each layer is
+//! retired for *all* points before the sweep descends:
+//!
+//! 1. per-point parameter gradients of the layer, each into its own
+//!    contiguous row of the caller's J sub-block;
+//! 2. one fused `Wᵀ` propagation: weight row `o` is loaded **once per
+//!    layer per block** and pushed through every point's live adjoint
+//!    lanes as stride-1 axpys (`dst[k] += row[k]·λ̄`), instead of the
+//!    per-point nest re-streaming W from L2/L3 for every row of the
+//!    block;
+//! 3. per-point tanh chain rules converting activation-level adjoints to
+//!    pre-activation adjoints, as stride-1 lane sweeps over precomputed
+//!    `σ'/σ''/σ'''` vectors.
+//!
+//! Per destination element the accumulation order over `o` is ascending
+//! and every zero-adjoint skip is taken per lane, exactly as in the
+//! per-point [`Tape::backward`] — so each row of the fused pass is
+//! **bitwise** the standalone per-point reverse pass, which the property
+//! tests assert against both [`Tape::backward`] and [`ScalarTape`].
+//!
 //! ## Blocked layout
 //!
 //! Duals are stored as **contiguous per-coordinate panels**: layer `l`
@@ -136,13 +161,30 @@ pub struct Tape {
     nc: usize,
     /// Coordinates (prefix of `nc`) also carrying second-order duals.
     nc2: usize,
-    // Reverse-pass scratch, sized to the widest layer (per point).
+    /// Widest layer (panel stride of the adjoint panels below).
+    widest: usize,
+    // Single-point reverse-pass scratch ([`Tape::backward`]), sized to the
+    // widest layer.
     zbar: Vec<f64>,
     tbar: Vec<f64>,
     sbar: Vec<f64>,
     zbar_next: Vec<f64>,
     tbar_next: Vec<f64>,
     sbar_next: Vec<f64>,
+    // Fused batched reverse-pass state ([`Tape::backward_batch`]): the
+    // whole block's adjoints, one `widest`-strided panel per live lane —
+    // z̄ per point (`pz`), t̄ per (point, coordinate) (`pt`), s̄ per
+    // (point, order-2 coordinate) (`ps`) — plus the layer-below images
+    // the fused Wᵀ sweep accumulates into (`*_next`).
+    pz: Vec<f64>,
+    pt: Vec<f64>,
+    ps: Vec<f64>,
+    pz_next: Vec<f64>,
+    pt_next: Vec<f64>,
+    ps_next: Vec<f64>,
+    /// σ'''(z) per output neuron of the point being activated (the fused
+    /// reverse chain rule precomputes σ-derivative vectors per point).
+    d3v: Vec<f64>,
 }
 
 impl Tape {
@@ -192,12 +234,20 @@ impl Tape {
             n_pts: 0,
             nc: 0,
             nc2: 0,
+            widest,
             zbar: vec![0.0; widest],
             tbar: vec![0.0; d * widest],
             sbar: vec![0.0; d * widest],
             zbar_next: vec![0.0; widest],
             tbar_next: vec![0.0; d * widest],
             sbar_next: vec![0.0; d * widest],
+            pz: vec![0.0; MAX_BLOCK_POINTS * widest],
+            pt: vec![0.0; lane_cap * widest],
+            ps: vec![0.0; lane_cap * widest],
+            pz_next: vec![0.0; MAX_BLOCK_POINTS * widest],
+            pt_next: vec![0.0; lane_cap * widest],
+            ps_next: vec![0.0; lane_cap * widest],
+            d3v: vec![0.0; widest],
         }
     }
 
@@ -546,13 +596,20 @@ impl Tape {
         }
     }
 
-    /// Reverse passes for block points `0..n_pts` of the last
+    /// Fused reverse passes for block points `0..n_pts` of the last
     /// [`Tape::forward_batch`], each writing its seeded θ-gradient into its
     /// own row of `out` (row-major `n_pts × n_params` — e.g. a contiguous
-    /// Jacobian row-block). Per-point seeds: `alpha[b]`,
-    /// `beta[b·nc..(b+1)·nc]`, `gamma[b·nc2..(b+1)·nc2]`. Points run in
-    /// ascending order, so every row is bitwise what a standalone
-    /// [`Tape::backward`] call would produce.
+    /// Jacobian row-block / adjoint panel of J). Per-point seeds:
+    /// `alpha[b]`, `beta[b·nc..(b+1)·nc]`, `gamma[b·nc2..(b+1)·nc2]`.
+    ///
+    /// The nest is layer-outer / point-inner: all points' adjoint panels
+    /// stay resident per layer and propagate through each `Wᵀ` in one
+    /// sweep, so a weight row is loaded once per layer per block instead
+    /// of once per point. Per destination element the floating-point
+    /// accumulation sequence is exactly the per-point one (o ascending,
+    /// identical zero-skip guards), so every row is **bitwise** what a
+    /// standalone [`Tape::backward`] call would produce — asserted by
+    /// `prop_blocked_tape_matches_scalar_reference_bitwise`.
     pub fn backward_batch(
         &mut self,
         theta: &[f64],
@@ -564,20 +621,236 @@ impl Tape {
     ) {
         let np = param_count(&self.arch);
         let (nc, nc2) = (self.nc, self.nc2);
+        let ww = self.widest;
+        let d = self.arch[0];
+        let nl = self.arch.len() - 1;
         debug_assert!(n_pts <= self.n_pts);
         debug_assert_eq!(alpha.len(), n_pts);
         debug_assert_eq!(beta.len(), n_pts * nc);
         debug_assert_eq!(gamma.len(), n_pts * nc2);
         debug_assert_eq!(out.len(), n_pts * np);
+        let Tape {
+            arch,
+            offsets,
+            h,
+            tz,
+            sz,
+            th,
+            sh,
+            x_in,
+            d1v,
+            d2v,
+            d3v,
+            pz,
+            pt,
+            ps,
+            pz_next,
+            pt_next,
+            ps_next,
+            ..
+        } = self;
+        // Seed the output-layer panels (width-1 linear head): only lane
+        // element 0 of each panel is live at the top layer, exactly the
+        // elements [`Tape::backward`] seeds.
         for b in 0..n_pts {
-            self.backward(
-                theta,
-                b,
-                alpha[b],
-                &beta[b * nc..(b + 1) * nc],
-                &gamma[b * nc2..(b + 1) * nc2],
-                &mut out[b * np..(b + 1) * np],
-            );
+            pz[b * ww] = alpha[b];
+            for i in 0..nc {
+                pt[(b * nc + i) * ww] = beta[b * nc + i];
+            }
+            for i in 0..nc2 {
+                ps[(b * nc2 + i) * ww] = gamma[b * nc2 + i];
+            }
+        }
+        for l in (0..nl).rev() {
+            let (fan_in, fan_out) = (arch[l], arch[l + 1]);
+            let off = offsets[l];
+            let w = &theta[off..off + fan_in * fan_out];
+            // 1. Per-point parameter gradients of this layer, each into
+            //    its own contiguous row of the J sub-block — the same
+            //    loop body as [`Tape::backward`], reading the point's
+            //    resident adjoint panels.
+            for b in 0..n_pts {
+                let h_prev: &[f64] = if l == 0 {
+                    &x_in[b * d..(b + 1) * d]
+                } else {
+                    &h[l - 1][b * fan_in..(b + 1) * fan_in]
+                };
+                let (out_w, out_rest) =
+                    out[b * np + off..].split_at_mut(fan_in * fan_out);
+                let out_b = &mut out_rest[..fan_out];
+                for o in 0..fan_out {
+                    let zb = pz[b * ww + o];
+                    let wrow = &mut out_w[o * fan_in..(o + 1) * fan_in];
+                    if zb != 0.0 {
+                        for (wk, &hk) in wrow.iter_mut().zip(h_prev) {
+                            *wk += zb * hk;
+                        }
+                    }
+                    out_b[o] += zb;
+                    for i in 0..nc {
+                        let tb = pt[(b * nc + i) * ww + o];
+                        let sb = if i < nc2 { ps[(b * nc2 + i) * ww + o] } else { 0.0 };
+                        if l == 0 {
+                            // t_prev = e_i (s_prev = 0): only column i
+                            // gets ∂ζ/∂W.
+                            wrow[i] += tb;
+                        } else if tb != 0.0 || sb != 0.0 {
+                            let tp0 = (b * nc + i) * fan_in;
+                            let tp = &th[l - 1][tp0..tp0 + fan_in];
+                            if i < nc2 {
+                                let sp0 = (b * nc2 + i) * fan_in;
+                                let sp = &sh[l - 1][sp0..sp0 + fan_in];
+                                for ((wk, &tpk), &spk) in wrow.iter_mut().zip(tp).zip(sp) {
+                                    *wk += tb * tpk + sb * spk;
+                                }
+                            } else {
+                                for (wk, &tpk) in wrow.iter_mut().zip(tp) {
+                                    *wk += tb * tpk;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if l == 0 {
+                break;
+            }
+            // 2. The fused Wᵀ sweep: weight row `o` is loaded once per
+            //    layer per block and pushed through every point's live
+            //    adjoint lanes as stride-1 axpys. Per destination element
+            //    the accumulation order over `o` is ascending and the
+            //    zero-skips are per lane — the per-point FP sequence.
+            for b in 0..n_pts {
+                pz_next[b * ww..b * ww + fan_in].fill(0.0);
+            }
+            for lane in 0..n_pts * nc {
+                pt_next[lane * ww..lane * ww + fan_in].fill(0.0);
+            }
+            for lane in 0..n_pts * nc2 {
+                ps_next[lane * ww..lane * ww + fan_in].fill(0.0);
+            }
+            for o in 0..fan_out {
+                let row = &w[o * fan_in..(o + 1) * fan_in];
+                for b in 0..n_pts {
+                    let zb = pz[b * ww + o];
+                    if zb != 0.0 {
+                        let dst = &mut pz_next[b * ww..b * ww + fan_in];
+                        for (dv, &wv) in dst.iter_mut().zip(row) {
+                            *dv += wv * zb;
+                        }
+                    }
+                    // Order-2 coordinates: the (t̄, s̄) pair shares one row
+                    // pass when both lanes are live (disjoint destination
+                    // panels — each element still receives exactly its
+                    // per-point o-ascending add), with the per-lane guards
+                    // of the per-point kernel otherwise.
+                    for i in 0..nc2 {
+                        let tlane = b * nc + i;
+                        let slane = b * nc2 + i;
+                        let tb = pt[tlane * ww + o];
+                        let sb = ps[slane * ww + o];
+                        if tb != 0.0 && sb != 0.0 {
+                            let tdst = &mut pt_next[tlane * ww..tlane * ww + fan_in];
+                            let sdst = &mut ps_next[slane * ww..slane * ww + fan_in];
+                            for ((td, sd), &wv) in
+                                tdst.iter_mut().zip(sdst.iter_mut()).zip(row)
+                            {
+                                *td += wv * tb;
+                                *sd += wv * sb;
+                            }
+                        } else {
+                            if tb != 0.0 {
+                                let tdst = &mut pt_next[tlane * ww..tlane * ww + fan_in];
+                                for (td, &wv) in tdst.iter_mut().zip(row) {
+                                    *td += wv * tb;
+                                }
+                            }
+                            if sb != 0.0 {
+                                let sdst = &mut ps_next[slane * ww..slane * ww + fan_in];
+                                for (sd, &wv) in sdst.iter_mut().zip(row) {
+                                    *sd += wv * sb;
+                                }
+                            }
+                        }
+                    }
+                    // First-order-only lanes (the heat time coordinate).
+                    for i in nc2..nc {
+                        let lane = b * nc + i;
+                        let tb = pt[lane * ww + o];
+                        if tb != 0.0 {
+                            let dst = &mut pt_next[lane * ww..lane * ww + fan_in];
+                            for (dv, &wv) in dst.iter_mut().zip(row) {
+                                *dv += wv * tb;
+                            }
+                        }
+                    }
+                }
+            }
+            // 3. Per-point tanh chain rules: activation-level adjoints of
+            //    layer l-1 become pre-activation adjoints, as stride-1
+            //    lane sweeps over precomputed σ'/σ''/σ''' vectors. Per
+            //    lane element the term sequence (z̄ init, then i
+            //    ascending) is exactly the per-point one.
+            for b in 0..n_pts {
+                let hm = &h[l - 1][b * fan_in..(b + 1) * fan_in];
+                let d1b = &mut d1v[..fan_in];
+                let d2b = &mut d2v[..fan_in];
+                let d3b = &mut d3v[..fan_in];
+                for (((&y, dv1), dv2), dv3) in hm
+                    .iter()
+                    .zip(d1b.iter_mut())
+                    .zip(d2b.iter_mut())
+                    .zip(d3b.iter_mut())
+                {
+                    let dd1 = 1.0 - y * y;
+                    *dv1 = dd1;
+                    *dv2 = -2.0 * y * dd1;
+                    *dv3 = dd1 * (6.0 * y * y - 2.0);
+                }
+                {
+                    let src = &pz_next[b * ww..b * ww + fan_in];
+                    let dst = &mut pz[b * ww..b * ww + fan_in];
+                    for ((zv, &zn), &dv1) in dst.iter_mut().zip(src).zip(d1b.iter()) {
+                        *zv = dv1 * zn;
+                    }
+                }
+                let tz_prev = &tz[l - 1];
+                let sz_prev = &sz[l - 1];
+                for i in 0..nc2 {
+                    let tlane = b * nc + i;
+                    let slane = b * nc2 + i;
+                    let zsrc = &tz_prev[tlane * fan_in..(tlane + 1) * fan_in];
+                    let xsrc = &sz_prev[slane * fan_in..(slane + 1) * fan_in];
+                    let tnx = &pt_next[tlane * ww..tlane * ww + fan_in];
+                    let snx = &ps_next[slane * ww..slane * ww + fan_in];
+                    let zdst = &mut pz[b * ww..b * ww + fan_in];
+                    let tdst = &mut pt[tlane * ww..tlane * ww + fan_in];
+                    let sdst = &mut ps[slane * ww..slane * ww + fan_in];
+                    for o in 0..fan_in {
+                        let zeta = zsrc[o];
+                        let xi = xsrc[o];
+                        let tb = tnx[o];
+                        let sb = snx[o];
+                        zdst[o] += d2b[o] * zeta * tb + (d3b[o] * zeta * zeta + d2b[o] * xi) * sb;
+                        tdst[o] = d1b[o] * tb + 2.0 * d2b[o] * zeta * sb;
+                        sdst[o] = d1b[o] * sb;
+                    }
+                }
+                for i in nc2..nc {
+                    let tlane = b * nc + i;
+                    let zsrc = &tz_prev[tlane * fan_in..(tlane + 1) * fan_in];
+                    let tnx = &pt_next[tlane * ww..tlane * ww + fan_in];
+                    let zdst = &mut pz[b * ww..b * ww + fan_in];
+                    let tdst = &mut pt[tlane * ww..tlane * ww + fan_in];
+                    // First-order-only lanes (the heat time coordinate).
+                    for o in 0..fan_in {
+                        let zeta = zsrc[o];
+                        let tb = tnx[o];
+                        zdst[o] += d2b[o] * zeta * tb;
+                        tdst[o] = d1b[o] * tb;
+                    }
+                }
+            }
         }
     }
 }
@@ -1010,10 +1283,11 @@ mod tests {
     }
 
     /// The blocked kernels against the naive scalar reference: bitwise
-    /// agreement of value/d1/d2 and of seeded reverse passes, across random
-    /// architectures, dual masks (`ncoords ∈ {0, 1, d}`, full and
-    /// heat-style second-order prefixes), and batched-vs-single-point
-    /// entry points.
+    /// agreement of value/d1/d2 and of fused [`Tape::backward_batch`]
+    /// adjoint-panel reverse passes, across random architectures, dual
+    /// masks (`ncoords ∈ {0, 1, d}`, full and heat-style second-order
+    /// prefixes), boundary-style value-only blocks, single-point panels,
+    /// full blocks, and batched-vs-single-point entry points.
     #[test]
     fn prop_blocked_tape_matches_scalar_reference_bitwise() {
         run_prop("blocked tape == scalar tape (bitwise)", 24, |g| {
@@ -1031,7 +1305,14 @@ mod tests {
             let theta = init_params(&arch, &mut rng);
             let mut tape = Tape::new(&arch);
             let mut scalar = ScalarTape::new(&arch);
-            let n_pts = g.usize_in(1, tape.block_points(orders).min(8));
+            // Cover the panel extremes explicitly: single-point panels and
+            // whole blocks (32 points for boundary-style ncoords = 0),
+            // plus random interior sizes.
+            let n_pts = match g.usize_in(0, 3) {
+                0 => 1,
+                1 => tape.block_points(orders),
+                _ => g.usize_in(1, tape.block_points(orders).min(8)),
+            };
             let mut xs = vec![0.0; n_pts * d];
             rng.fill_uniform(&mut xs, 0.05, 0.95);
             // Random nonzero seeds per point for the reverse passes.
@@ -1041,6 +1322,15 @@ mod tests {
             rng.fill_uniform(&mut alpha, 0.1, 1.0);
             rng.fill_uniform(&mut beta, 0.1, 1.0);
             rng.fill_uniform(&mut gamma, 0.1, 1.0);
+            // Sparse seeds: the reference skips zero-adjoint lanes, and
+            // the fused sweep's per-lane guard fallbacks (t̄-only /
+            // s̄-only / dead lanes) must skip identically.
+            for v in beta.iter_mut().step_by(3) {
+                *v = 0.0;
+            }
+            for v in gamma.iter_mut().step_by(2) {
+                *v = 0.0;
+            }
 
             let np = theta.len();
             tape.forward_batch(&theta, &xs, n_pts, orders);
@@ -1099,6 +1389,78 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The fused adjoint-panel backward against per-point [`Tape::backward`]
+    /// on deterministic edge blocks: boundary-only (`ncoords = 0`) value
+    /// blocks (single-point and full 32-point panels), full-order and
+    /// heat-masked interior blocks, and a dual block *followed by* a
+    /// value-only block on the same tape (stale-lane hazard: the second
+    /// backward must not read the first block's dual panels).
+    #[test]
+    fn fused_backward_panels_match_per_point_entry_bitwise() {
+        let arch = [3usize, 7, 5, 1];
+        let d = arch[0];
+        let np = param_count(&arch);
+        let mut rng = Rng::seed_from(0xFADE);
+        let theta = init_params(&arch, &mut rng);
+        let mut tape = Tape::new(&arch);
+        let mut per_point = Tape::new(&arch);
+
+        let full = DualOrder::full(d);
+        let heat = DualOrder::new(d, d - 1);
+        let none = DualOrder::NONE;
+        let cases: Vec<(DualOrder, usize)> = vec![
+            (none, 1),
+            (none, tape.block_points(none)),
+            (full, 1),
+            (full, tape.block_points(full)),
+            (heat, tape.block_points(heat)),
+            // Stale-lane hazard: this value-only block runs on panels the
+            // full-order blocks above just populated.
+            (none, 5),
+        ];
+        for (case, &(orders, n_pts)) in cases.iter().enumerate() {
+            let (nc, nc2) = (orders.first, orders.second);
+            let mut xs = vec![0.0; n_pts * d];
+            rng.fill_uniform(&mut xs, 0.05, 0.95);
+            let mut alpha = vec![0.0; n_pts];
+            let mut beta = vec![0.0; n_pts * nc];
+            let mut gamma = vec![0.0; n_pts * nc2];
+            rng.fill_uniform(&mut alpha, -1.0, 1.0);
+            rng.fill_uniform(&mut beta, -1.0, 1.0);
+            rng.fill_uniform(&mut gamma, -1.0, 1.0);
+            for v in beta.iter_mut().step_by(3) {
+                *v = 0.0;
+            }
+            for v in gamma.iter_mut().step_by(2) {
+                *v = 0.0;
+            }
+
+            tape.forward_batch(&theta, &xs, n_pts, orders);
+            let mut rows = vec![0.0; n_pts * np];
+            tape.backward_batch(&theta, n_pts, &alpha, &beta, &gamma, &mut rows);
+
+            per_point.forward_batch(&theta, &xs, n_pts, orders);
+            let mut want = vec![0.0; n_pts * np];
+            for b in 0..n_pts {
+                per_point.backward(
+                    &theta,
+                    b,
+                    alpha[b],
+                    &beta[b * nc..(b + 1) * nc],
+                    &gamma[b * nc2..(b + 1) * nc2],
+                    &mut want[b * np..(b + 1) * np],
+                );
+            }
+            for (jj, (a, w)) in rows.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    w.to_bits(),
+                    "case {case} ({n_pts} pts, nc={nc}/{nc2}): fused row elem {jj}: {a:.17e} vs {w:.17e}"
+                );
+            }
+        }
     }
 
     #[test]

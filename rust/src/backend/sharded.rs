@@ -31,11 +31,13 @@
 //! `rust/tests/pool.rs` cross-checks all four evaluation entry points (and
 //! a whole training trajectory) against the unsharded backend bitwise.
 
+use std::sync::{Mutex, MutexGuard};
+
 use anyhow::{bail, Result};
 
 use super::native::{thread_chunks, NativeBackend};
 use super::Evaluator;
-use crate::linalg::{Matrix, Workspace};
+use crate::linalg::{Matrix, Workspace, WorkspaceStats};
 use crate::parallel::{self, SendPtr};
 use crate::pde::ProblemSpec;
 
@@ -43,6 +45,14 @@ use crate::pde::ProblemSpec;
 /// contiguous slice of every batch.
 pub struct ShardedEvaluator {
     inner: Vec<NativeBackend>,
+    /// Pooled storage for the reduction partials (per-chunk losses and the
+    /// flat `chunks × n_params` gradient block): `Evaluator` methods take
+    /// `&self`, so the pool sits behind a mutex. Steady-state loss/grad
+    /// steps draw every partial buffer from here — the same
+    /// zero-allocation contract the `Workspace` tests assert on the step
+    /// pool (see `sharded_loss_grad_partials_are_pooled` in
+    /// `rust/tests/pool.rs`).
+    scratch: Mutex<Workspace>,
 }
 
 impl ShardedEvaluator {
@@ -61,12 +71,23 @@ impl ShardedEvaluator {
     fn build(shards: usize, mk: impl Fn() -> NativeBackend) -> Self {
         ShardedEvaluator {
             inner: (0..shards.max(1)).map(|_| mk()).collect(),
+            scratch: Mutex::new(Workspace::new()),
         }
     }
 
     /// Number of shards the batch is split into.
     pub fn shards(&self) -> usize {
         self.inner.len()
+    }
+
+    /// Allocation counters of the partial-buffer pool (tests assert
+    /// `fresh_allocs` freezes after the first loss/grad evaluation).
+    pub fn scratch_stats(&self) -> WorkspaceStats {
+        self.lock_scratch().stats()
+    }
+
+    fn lock_scratch(&self) -> MutexGuard<'_, Workspace> {
+        self.scratch.lock().unwrap_or_else(|poison| poison.into_inner())
     }
 
     /// Contiguous, balanced range of work units owned by shard `s`.
@@ -115,8 +136,13 @@ impl Evaluator for ShardedEvaluator {
     ) -> Result<f64> {
         let n = p.n_total();
         let (chunks, _) = thread_chunks(n);
-        let mut partials = vec![0.0; chunks];
-        {
+        // Scratch is fine uninitialized: the shard ranges tile `0..chunks`,
+        // so every entry is overwritten before the reduction reads it. The
+        // pool lock covers only the checkout/check-in bookkeeping — the
+        // buffer is owned across the dispatch, so concurrent evaluations
+        // don't serialize on the mutex.
+        let mut partials = self.lock_scratch().take_scratch(chunks);
+        let dispatched = {
             let pptr = SendPtr(partials.as_mut_ptr());
             self.for_shards(chunks, |s, c0, c1| {
                 // SAFETY: shards own disjoint chunk ranges of `partials`,
@@ -125,10 +151,19 @@ impl Evaluator for ShardedEvaluator {
                     std::slice::from_raw_parts_mut(pptr.get().add(c0), c1 - c0)
                 };
                 self.inner[s].shard_loss_partials(p, theta, x_int, x_bnd, c0, c1, out)
-            })?;
-        }
-        // Fixed chunk order — the unsharded backend's exact reduction.
-        Ok(0.5 * partials.iter().sum::<f64>())
+            })
+        };
+        // Fixed chunk order — the unsharded backend's exact reduction
+        // (skipped on dispatch failure: the buffer may hold stale pool
+        // contents where the failed shard never wrote).
+        let loss = if dispatched.is_ok() {
+            0.5 * partials.iter().sum::<f64>()
+        } else {
+            f64::NAN
+        };
+        self.lock_scratch().recycle(partials);
+        dispatched?;
+        Ok(loss)
     }
 
     fn loss_and_grad(
@@ -141,26 +176,54 @@ impl Evaluator for ShardedEvaluator {
         let n = p.n_total();
         let np = p.n_params;
         let (chunks, _) = thread_chunks(n);
-        let mut partials: Vec<(f64, Vec<f64>)> =
-            (0..chunks).map(|_| (0.0, Vec::new())).collect();
-        {
-            let pptr = SendPtr(partials.as_mut_ptr());
+        // Pooled flat partials: one loss entry and one contiguous P-long
+        // gradient block per reduction chunk, drawn from the scratch pool
+        // instead of `chunks` fresh `Vec`s per call. The inner shard calls
+        // overwrite every entry (gradient blocks are zeroed by
+        // `chunk_loss_grad_into`), so scratch is fine uninitialized; the
+        // pool lock is held only for checkout/check-in, not the dispatch.
+        let (mut loss_parts, mut grad_parts) = {
+            let mut ws = self.lock_scratch();
+            (ws.take_scratch(chunks), ws.take_scratch(chunks * np))
+        };
+        let dispatched = {
+            let lptr = SendPtr(loss_parts.as_mut_ptr());
+            let gptr = SendPtr(grad_parts.as_mut_ptr());
             self.for_shards(chunks, |s, c0, c1| {
-                // SAFETY: disjoint chunk ranges per shard (see `loss`).
-                let out = unsafe {
-                    std::slice::from_raw_parts_mut(pptr.get().add(c0), c1 - c0)
+                // SAFETY: disjoint chunk ranges per shard (see `loss`) of
+                // both flat buffers; both outlive the dispatch.
+                let (loss_out, grad_out) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(lptr.get().add(c0), c1 - c0),
+                        std::slice::from_raw_parts_mut(
+                            gptr.get().add(c0 * np),
+                            (c1 - c0) * np,
+                        ),
+                    )
                 };
-                self.inner[s].shard_loss_grad_partials(p, theta, x_int, x_bnd, c0, c1, out)
-            })?;
-        }
+                self.inner[s].shard_loss_grad_partials(
+                    p, theta, x_int, x_bnd, c0, c1, loss_out, grad_out,
+                )
+            })
+        };
+        // Fixed chunk order over the flat blocks — byte-for-byte the
+        // unsharded backend's reduction sequence.
         let mut grad = vec![0.0; np];
         let mut loss = 0.0;
-        for (acc, g) in &partials {
-            loss += acc;
-            for (total, gi) in grad.iter_mut().zip(g) {
-                *total += gi;
+        if dispatched.is_ok() {
+            for k in 0..chunks {
+                loss += loss_parts[k];
+                for (total, gi) in grad.iter_mut().zip(&grad_parts[k * np..(k + 1) * np]) {
+                    *total += gi;
+                }
             }
         }
+        {
+            let mut ws = self.lock_scratch();
+            ws.recycle(loss_parts);
+            ws.recycle(grad_parts);
+        }
+        dispatched?;
         Ok((0.5 * loss, grad))
     }
 

@@ -27,6 +27,12 @@ pub struct Checkpoint {
     /// 1-based index of the last completed step.
     pub step: usize,
     pub seed: u64,
+    /// Cumulative wall-clock seconds spent training when the checkpoint
+    /// was written. A resumed run pre-loads its logger clock with this,
+    /// so `wall_s` / `time_to_l2` columns continue monotonically and
+    /// `time_budget_s` counts time across the resume boundary. 0.0 in
+    /// pre-PR-5 checkpoints (accepted: the clock restarts, as before).
+    pub wall_s: f64,
     pub theta: Vec<f64>,
     /// Optimizer auxiliary state (SPRING's φ, Adam's [t, m, v], SGD's
     /// velocity, Hessian-free's [λ, warm start], dense ENGD's [P, EMA
@@ -41,6 +47,7 @@ impl Checkpoint {
             ("optimizer".into(), JsonValue::String(self.optimizer.clone())),
             ("step".into(), JsonValue::Number(self.step as f64)),
             ("seed".into(), JsonValue::Number(self.seed as f64)),
+            ("wall_s".into(), JsonValue::Number(self.wall_s)),
             ("theta_len".into(), JsonValue::Number(self.theta.len() as f64)),
             ("phi_len".into(), JsonValue::Number(self.phi.len() as f64)),
         ]);
@@ -105,6 +112,11 @@ impl Checkpoint {
                 .to_string(),
             step: get("step")? as usize,
             seed: get("seed")? as u64,
+            // Absent in pre-PR-5 checkpoints: the resumed clock restarts.
+            wall_s: header
+                .get("wall_s")
+                .and_then(JsonValue::as_f64)
+                .unwrap_or(0.0),
             theta,
             phi,
         })
@@ -122,6 +134,7 @@ mod tests {
             optimizer: "spring".into(),
             step: 123,
             seed: 42,
+            wall_s: 321.75,
             theta: (0..257).map(|i| (i as f64).sin() * 1e-3).collect(),
             phi: (0..257).map(|i| (i as f64).cos()).collect(),
         };
@@ -139,12 +152,32 @@ mod tests {
             optimizer: String::new(),
             step: 1,
             seed: 7,
+            wall_s: 0.0,
             theta: vec![1.0, 2.0],
             phi: vec![],
         };
         let path = std::env::temp_dir().join(format!("engd-ckp2-{}.bin", std::process::id()));
         ck.save(&path).unwrap();
         assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_header_without_wall_s_defaults_to_zero() {
+        // Pre-PR-5 checkpoints carry no wall_s: they must load with a
+        // restarted clock, not fail.
+        let path = std::env::temp_dir().join(format!("engd-ckp4-{}.bin", std::process::id()));
+        let header = r#"{"problem":"p","step":2,"seed":3,"theta_len":1,"phi_len":0}"#;
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(header.len() as u64).to_le_bytes()).unwrap();
+        f.write_all(header.as_bytes()).unwrap();
+        f.write_all(&1.5f64.to_le_bytes()).unwrap();
+        drop(f);
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.wall_s, 0.0);
+        assert_eq!(ck.step, 2);
+        assert_eq!(ck.theta, vec![1.5]);
         std::fs::remove_file(&path).ok();
     }
 

@@ -63,6 +63,10 @@ const SALT_OPT_RNG: u64 = 0x534B_4348; // "SKCH"
 pub struct Trainer<'a> {
     /// First step index to run (resumes advance this past 1).
     start_step: usize,
+    /// Wall-clock seconds already spent before the resumed checkpoint
+    /// (0.0 for fresh runs): pre-loaded into the run logger so `wall_s`
+    /// continues monotonically and `time_budget_s` spans the whole run.
+    resume_wall_s: f64,
     pub cfg: RunConfig,
     pub eval: &'a dyn Evaluator,
     problem: ProblemSpec,
@@ -99,6 +103,7 @@ impl<'a> Trainer<'a> {
         );
         let mut optimizer = optimizer;
         let mut start_step = 1usize;
+        let mut resume_wall_s = 0.0;
         if let Some(path) = &cfg.resume_from {
             let ck = Checkpoint::load(path)
                 .with_context(|| format!("resuming from {path}"))?;
@@ -128,9 +133,11 @@ impl<'a> Trainer<'a> {
                 optimizer.restore_state(ck.phi);
             }
             start_step = ck.step + 1;
+            resume_wall_s = ck.wall_s;
         }
         Ok(Trainer {
             start_step,
+            resume_wall_s,
             cfg,
             eval,
             problem,
@@ -151,13 +158,16 @@ impl<'a> Trainer<'a> {
     }
 
     /// Save a checkpoint of the current state to
-    /// `<out_dir>/<name>.ckpt`.
-    pub fn save_checkpoint(&self, step: usize) -> Result<()> {
+    /// `<out_dir>/<name>.ckpt`. `wall_s` is the cumulative training
+    /// wall-clock at `step` (the run logger's `elapsed()`, which already
+    /// includes any pre-resume time).
+    pub fn save_checkpoint(&self, step: usize, wall_s: f64) -> Result<()> {
         let ck = Checkpoint {
             problem: self.cfg.problem.clone(),
             optimizer: self.cfg.optimizer.kind.name().to_string(),
             step,
             seed: self.cfg.seed,
+            wall_s,
             theta: self.theta.clone(),
             phi: self.optimizer.state(),
         };
@@ -183,6 +193,9 @@ impl<'a> Trainer<'a> {
     pub fn run(&mut self, echo: bool) -> Result<TrainReport> {
         let mut logger = RunLogger::create(&self.cfg.out_dir, &self.cfg.name, echo)
             .context("creating run logger")?;
+        // A resumed run continues the checkpoint's clock: wall_s columns
+        // stay monotone and time_budget_s covers pre-resume time too.
+        logger.advance_clock(self.resume_wall_s);
 
         // Warm the backend before the clock matters: PJRT compile time is a
         // startup cost, not a per-step cost (DESIGN.md §Perf); the native
@@ -240,7 +253,7 @@ impl<'a> Trainer<'a> {
                 extra: info.extra,
             })?;
             if self.cfg.checkpoint_every > 0 && k % self.cfg.checkpoint_every == 0 {
-                self.save_checkpoint(k)?;
+                self.save_checkpoint(k, logger.elapsed())?;
             }
         }
         logger.flush()?;

@@ -28,11 +28,30 @@ pub struct StepRecord {
 }
 
 /// Writes per-step records to `<dir>/<name>.jsonl` + `.csv` as they arrive.
+///
+/// ## CSV schema stability
+///
+/// Extras vary per step (`d_eff`, `ls_evals`, sketch stats appear only on
+/// diagnostic/eval steps), so the column set cannot be frozen from the
+/// first record. The logger keeps the **union** of extra keys seen so far
+/// (first-seen order): every row carries one cell per known extra column
+/// (blank when the step didn't report that key), and a record that
+/// introduces a *new* key triggers a rewrite of the whole CSV from the
+/// in-memory records under the widened header. New keys appear at most a
+/// handful of times per run (the first diagnostic step), so appends stay
+/// the steady-state path and live `tail -f` keeps working.
 pub struct RunLogger {
     jsonl: BufWriter<File>,
     csv: BufWriter<File>,
+    csv_path: PathBuf,
+    /// Union of extra keys seen so far, in first-seen order — the extra
+    /// columns of the CSV header.
+    extra_cols: Vec<String>,
     csv_header_written: bool,
     start: Instant,
+    /// Wall-clock seconds accumulated before this logger existed (a
+    /// resumed run's pre-checkpoint time; see [`RunLogger::advance_clock`]).
+    clock_offset: f64,
     pub dir: PathBuf,
     pub name: String,
     records: Vec<StepRecord>,
@@ -45,12 +64,16 @@ impl RunLogger {
         fs::create_dir_all(&dir)
             .with_context(|| format!("creating {}", dir.display()))?;
         let jsonl = BufWriter::new(File::create(dir.join(format!("{name}.jsonl")))?);
-        let csv = BufWriter::new(File::create(dir.join(format!("{name}.csv")))?);
+        let csv_path = dir.join(format!("{name}.csv"));
+        let csv = BufWriter::new(File::create(&csv_path)?);
         Ok(RunLogger {
             jsonl,
             csv,
+            csv_path,
+            extra_cols: Vec::new(),
             csv_header_written: false,
             start: Instant::now(),
+            clock_offset: 0.0,
             dir,
             name: name.to_string(),
             records: Vec::new(),
@@ -58,9 +81,44 @@ impl RunLogger {
         })
     }
 
-    /// Seconds since logger creation.
+    /// Seconds since logger creation, plus any offset carried over from
+    /// before a checkpoint resume.
     pub fn elapsed(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
+        self.clock_offset + self.start.elapsed().as_secs_f64()
+    }
+
+    /// Pre-load the wall clock with `seconds` already spent (a resumed
+    /// run's pre-checkpoint time), so `wall_s`, `time_to_l2`, and any
+    /// elapsed-based budget continue monotonically across the resume
+    /// boundary instead of restarting at zero.
+    pub fn advance_clock(&mut self, seconds: f64) {
+        self.clock_offset += seconds.max(0.0);
+    }
+
+    /// One CSV data row under the current `extra_cols` schema: fixed
+    /// columns, then one cell per known extra key (blank when missing).
+    fn csv_row(rec: &StepRecord, extra_cols: &[String]) -> String {
+        use std::fmt::Write as _;
+        let mut row = format!(
+            "{},{:.4},{:.6e},{:.6e},{:.3e}",
+            rec.step, rec.wall_s, rec.loss, rec.l2_error, rec.lr,
+        );
+        for col in extra_cols {
+            row.push(',');
+            if let Some((_, v)) = rec.extra.iter().find(|(k, _)| k == col) {
+                let _ = write!(row, "{v:.6e}");
+            }
+        }
+        row
+    }
+
+    fn csv_header(extra_cols: &[String]) -> String {
+        let mut header = "step,wall_s,loss,l2_error,lr".to_string();
+        for col in extra_cols {
+            header.push(',');
+            header.push_str(col);
+        }
+        header
     }
 
     pub fn log(&mut self, rec: StepRecord) -> Result<()> {
@@ -81,29 +139,42 @@ impl RunLogger {
             crate::config::json::to_string(&JsonValue::Object(obj))
         )?;
 
-        // CSV (header from the first record's extras)
+        // CSV: grow the schema by any unseen extra keys; a widened header
+        // means every earlier row is short, so rewrite the file from the
+        // in-memory records (rare — steady-state records append).
+        let mut widened = false;
+        for (k, _) in &rec.extra {
+            if !self.extra_cols.iter().any(|c| c == k) {
+                self.extra_cols.push(k.clone());
+                widened = true;
+            }
+        }
+        if widened && self.csv_header_written {
+            // The old writer's buffer is empty (every log flushes), but
+            // flush defensively: a buffered tail draining into the
+            // replaced file through the stale handle would corrupt it.
+            self.csv.flush()?;
+            // Rewrite via temp-file + rename so a crash mid-rewrite can
+            // never lose the history already on disk.
+            let tmp = self.csv_path.with_extension("csv.tmp");
+            let mut csv = BufWriter::new(
+                File::create(&tmp)
+                    .with_context(|| format!("rewriting {}", self.csv_path.display()))?,
+            );
+            writeln!(csv, "{}", Self::csv_header(&self.extra_cols))?;
+            for old in &self.records {
+                writeln!(csv, "{}", Self::csv_row(old, &self.extra_cols))?;
+            }
+            csv.flush()?;
+            fs::rename(&tmp, &self.csv_path)
+                .with_context(|| format!("replacing {}", self.csv_path.display()))?;
+            self.csv = csv;
+        }
         if !self.csv_header_written {
-            let extras: Vec<&str> = rec.extra.iter().map(|(k, _)| k.as_str()).collect();
-            writeln!(
-                self.csv,
-                "step,wall_s,loss,l2_error,lr{}{}",
-                if extras.is_empty() { "" } else { "," },
-                extras.join(",")
-            )?;
+            writeln!(self.csv, "{}", Self::csv_header(&self.extra_cols))?;
             self.csv_header_written = true;
         }
-        let extras: Vec<String> = rec.extra.iter().map(|(_, v)| format!("{v:.6e}")).collect();
-        writeln!(
-            self.csv,
-            "{},{:.4},{:.6e},{:.6e},{:.3e}{}{}",
-            rec.step,
-            rec.wall_s,
-            rec.loss,
-            rec.l2_error,
-            rec.lr,
-            if extras.is_empty() { "" } else { "," },
-            extras.join(",")
-        )?;
+        writeln!(self.csv, "{}", Self::csv_row(&rec, &self.extra_cols))?;
         if self.echo {
             let l2 = if rec.l2_error.is_nan() {
                 "      -  ".to_string()
@@ -238,6 +309,79 @@ mod tests {
         assert_eq!(lg.best_l2(), 0.01);
         assert!(lg.time_to_l2(0.05).is_some());
         assert!(lg.time_to_l2(0.001).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_schema_is_stable_under_heterogeneous_extras() {
+        // Extras vary per step (diagnostics appear late, sketch stats only
+        // on eval steps): the CSV must converge on one header covering the
+        // union of keys, with every row aligned to it.
+        let dir = std::env::temp_dir().join(format!("engd-csv-{}", std::process::id()));
+        let mut lg = RunLogger::create(&dir, "het", false).unwrap();
+        let mk = |step: usize, extra: Vec<(String, f64)>| StepRecord {
+            step,
+            wall_s: step as f64,
+            loss: 1.0,
+            l2_error: f64::NAN,
+            lr: 0.1,
+            extra,
+        };
+        lg.log(mk(0, vec![])).unwrap();
+        lg.log(mk(1, vec![("d_eff".into(), 42.0)])).unwrap();
+        lg.log(mk(2, vec![("ls_evals".into(), 8.0)])).unwrap();
+        lg.log(mk(3, vec![("ls_evals".into(), 6.0), ("d_eff".into(), 40.0)]))
+            .unwrap();
+        lg.flush().unwrap();
+
+        let csv = std::fs::read_to_string(dir.join("het.csv")).unwrap();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 5, "header + 4 rows: {csv}");
+        assert_eq!(lines[0], "step,wall_s,loss,l2_error,lr,d_eff,ls_evals");
+        let ncols = lines[0].split(',').count();
+        for (i, line) in lines.iter().enumerate() {
+            assert_eq!(
+                line.split(',').count(),
+                ncols,
+                "row {i} misaligned with header: {line}"
+            );
+        }
+        fn cell<'a>(lines: &[&'a str], row: usize, col: &str) -> &'a str {
+            let idx = lines[0].split(',').position(|c| c == col).unwrap();
+            lines[row].split(',').nth(idx).unwrap()
+        }
+        // Missing extras are blank cells; present ones align to their key.
+        assert_eq!(cell(&lines, 1, "d_eff"), "");
+        assert_eq!(cell(&lines, 1, "ls_evals"), "");
+        assert_eq!(cell(&lines, 2, "d_eff"), "4.200000e1");
+        assert_eq!(cell(&lines, 3, "d_eff"), "");
+        assert_eq!(cell(&lines, 3, "ls_evals"), "8.000000e0");
+        assert_eq!(cell(&lines, 4, "d_eff"), "4.000000e1");
+        assert_eq!(cell(&lines, 4, "ls_evals"), "6.000000e0");
+        // The report parser must digest the heterogeneous file.
+        let summary = super::report::parse_run_csv(dir.join("het.csv")).unwrap();
+        assert_eq!(summary.steps, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resumed_clock_offsets_elapsed_and_time_to() {
+        let dir = std::env::temp_dir().join(format!("engd-clk-{}", std::process::id()));
+        let mut lg = RunLogger::create(&dir, "clk", false).unwrap();
+        lg.advance_clock(100.0);
+        assert!(lg.elapsed() >= 100.0, "offset ignored: {}", lg.elapsed());
+        let wall = lg.elapsed();
+        lg.log(StepRecord {
+            step: 1,
+            wall_s: wall,
+            loss: 1.0,
+            l2_error: 0.01,
+            lr: 0.1,
+            extra: vec![],
+        })
+        .unwrap();
+        // time_to_l2 reports the offset clock, not time-since-create.
+        assert!(lg.time_to_l2(0.05).unwrap() >= 100.0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -11,9 +11,11 @@
 //! Fig. 6); double ℓ and retry, up to `max_ratio·N`.
 //!
 //! The retained-eigenvalue probe is free on the GPU-efficient factorization:
-//! λ̂ bounds follow from the Cholesky pivots of `R = BᵀB + λI`, whose
-//! smallest squared pivot tracks the smallest eigenvalue of `BᵀB` within a
-//! factor of the (well-conditioned, Gaussian-sketch) basis.
+//! λ̂ bounds follow from the Cholesky pivots of `R = BᵀB + λI` — pivots
+//! satisfy `λ_min(R) ≤ min_i L_ii²`, so `min-pivot² − λ` is a monotone
+//! upper bound on the smallest retained eigenvalue `λ_min(BᵀB)`, and it
+//! reaching the damping floor certifies the captured spectrum has decayed
+//! into the regularizer (no extra matvecs, no extra storage).
 //!
 //! Like every Nyström builder, the adaptive scheme consumes a [`KernelOp`]
 //! plus a [`Workspace`]: rejected sketches recycle their factors before the
@@ -34,28 +36,14 @@ pub struct AdaptiveNystrom {
     pub schedule: Vec<usize>,
 }
 
-/// Smallest eigenvalue estimate of `BᵀB` from the factorization.
-fn min_captured_eigenvalue(nys: &GpuNystrom, lambda: f64, ws: &mut Workspace) -> f64 {
-    // R = BᵀB + λI; eigenvalues of BᵀB ≥ min-pivot² of chol(R) − λ (loose but
-    // monotone; we only need an order-of-magnitude trigger).
-    let b = nys.factor();
-    // Rayleigh probe with the last column of B (cheap, deterministic):
-    // one strided gather into pooled scratch, then contiguous math.
-    let ell = b.cols();
-    let mut col = ws.take_scratch(b.rows());
-    b.copy_col_into(ell - 1, &mut col);
-    let denom = crate::linalg::dot(&col, &col);
-    if denom == 0.0 {
-        ws.recycle(col);
-        return 0.0;
-    }
-    // ‖B(Bᵀc)‖/‖c‖ underestimates λ_max but for the *trailing* basis vector
-    // tracks the tail magnitude; combine with the exact trace/ℓ average.
-    let bt_c = b.tr_matvec(&col);
-    ws.recycle(col);
-    let quad = crate::linalg::dot(&bt_c, &bt_c) / denom;
-    let _ = lambda;
-    quad.min(denom / ell as f64)
+/// Upper bound on the smallest retained Nyström eigenvalue `λ_min(BᵀB)`,
+/// from the Cholesky pivots of `R = BᵀB + λI` the factorization already
+/// holds: `λ_min(BᵀB) = λ_min(R) − λ ≤ min-pivot² − λ` (clamped at 0 —
+/// rank-deficient sketches drive the pivot to the √λ floor). Loose but
+/// monotone, which is all the order-of-magnitude growth trigger needs.
+fn min_captured_eigenvalue(nys: &GpuNystrom, lambda: f64) -> f64 {
+    let pivot = nys.min_r_pivot();
+    (pivot * pivot - lambda).max(0.0)
 }
 
 /// Build a GPU-efficient Nyström approximation of the operator's kernel
@@ -80,7 +68,7 @@ pub fn adaptive_nystrom(
         rng.fill_normal(omega.data_mut());
         let y = op.sketch_y(&omega, ws);
         let approx = GpuNystrom::from_sketch(omega, y, lambda, ws)?;
-        let tail = min_captured_eigenvalue(&approx, lambda, ws);
+        let tail = min_captured_eigenvalue(&approx, lambda);
         if tail <= tail_factor * lambda || ell >= max_ell {
             return Ok(AdaptiveNystrom { approx, schedule });
         }
@@ -144,6 +132,102 @@ mod tests {
         let last = *out.schedule.last().unwrap();
         assert!(last > out.schedule[0]);
         assert_eq!(out.approx.sketch_size(), last);
+    }
+
+    /// PSD kernel with a spectral cliff: `head` eigenvalues at `head_val`,
+    /// the rest at `tail_val` (K = Q diag(w) Qᵀ).
+    fn cliff_psd(rng: &mut Rng, n: usize, head: usize, head_val: f64, tail_val: f64) -> Matrix {
+        let mut g = Matrix::zeros(n, n);
+        rng.fill_normal(g.data_mut());
+        let q = crate::linalg::thin_qr(&g);
+        let mut k = Matrix::zeros(n, n);
+        for j in 0..n {
+            let w = if j < head { head_val } else { tail_val };
+            for i in 0..n {
+                k[(i, j)] = q[(i, j)] * w;
+            }
+        }
+        k.matmul_nt(&q)
+    }
+
+    /// The pivot probe is the documented bound: an *upper* bound on the
+    /// smallest retained eigenvalue λ_min(BᵀB) (pivots satisfy
+    /// λ_min(R) ≤ min L_ii², R = BᵀB + λI), and it must actually consume
+    /// λ — the pre-fix probe ignored its `lambda` argument entirely.
+    #[test]
+    fn pivot_probe_upper_bounds_smallest_retained_eigenvalue() {
+        let mut rng = Rng::seed_from(11);
+        let a = cliff_psd(&mut rng, 24, 6, 1.0, 1e-7);
+        let lam = 1e-5;
+        let mut ws = Workspace::new();
+        let nys =
+            GpuNystrom::build(&crate::optim::kernel::DenseKernel::new(&a), 12, lam, &mut rng, &mut ws)
+                .unwrap();
+        let tail = min_captured_eigenvalue(&nys, lam);
+        let gram = nys.factor().gram();
+        let min_eig = crate::linalg::eigh(&gram)
+            .eigenvalues
+            .iter()
+            .fold(f64::INFINITY, |m, &w| m.min(w));
+        assert!(
+            tail >= min_eig - 1e-9 * (1.0 + min_eig.abs()),
+            "pivot bound {tail:.3e} below λ_min(BᵀB) {min_eig:.3e}"
+        );
+        // λ is subtracted: at huge damping the bound collapses to the
+        // clamp floor instead of reporting the raw pivot.
+        let big = nys.min_r_pivot().powi(2) * 2.0;
+        assert_eq!(min_captured_eigenvalue(&nys, big), 0.0);
+    }
+
+    /// Stopping pins to the damping floor: with λ above the kernel's tail
+    /// the first (head-covering) sketch suffices; with λ far below the
+    /// tail the same kernel must grow the sketch to the cap.
+    #[test]
+    fn stopping_pins_to_the_damping_floor() {
+        let n = 32;
+        let head = 6;
+        let tail_val = 1e-9;
+
+        // λ well above the tail: captured spectrum has decayed into the
+        // regularizer at the first ℓ = 16 ≥ head sketch — no growth.
+        let mut rng = Rng::seed_from(21);
+        let a = cliff_psd(&mut rng, n, head, 1.0, tail_val);
+        let mut ws = Workspace::new();
+        let stopped = adaptive_nystrom(
+            &crate::optim::kernel::DenseKernel::new(&a),
+            1e-6,
+            0.5,
+            1.0,
+            10.0,
+            &mut rng,
+            &mut ws,
+        )
+        .unwrap();
+        assert_eq!(
+            stopped.schedule,
+            vec![16],
+            "λ=1e-6 > tail {tail_val:.0e}: must stop at the first sketch"
+        );
+
+        // Same kernel, λ far below the tail: every retained direction is
+        // still live, so the schedule must double to the cap.
+        let mut rng = Rng::seed_from(21);
+        let a = cliff_psd(&mut rng, n, head, 1.0, tail_val);
+        let grown = adaptive_nystrom(
+            &crate::optim::kernel::DenseKernel::new(&a),
+            1e-12,
+            0.5,
+            1.0,
+            10.0,
+            &mut rng,
+            &mut ws,
+        )
+        .unwrap();
+        assert_eq!(
+            grown.schedule,
+            vec![16, 32],
+            "λ=1e-12 ≪ tail {tail_val:.0e}: must grow to the cap"
+        );
     }
 
     /// The returned approximation must still be a valid solver.

@@ -114,6 +114,16 @@ impl GpuNystrom {
         &self.b
     }
 
+    /// Smallest Cholesky pivot of `R = BᵀB + λI` (the diagonal of L).
+    /// Pivots satisfy `λ_min(R) ≤ min_i L_ii²`, so `min-pivot² − λ` is a
+    /// monotone upper bound on the smallest retained Nyström eigenvalue
+    /// `λ_min(BᵀB)` — free from the factorization, no extra passes. The
+    /// adaptive rank schedule ([`super::adaptive`]) triggers on it.
+    pub fn min_r_pivot(&self) -> f64 {
+        let l = self.l.factor_matrix();
+        (0..l.rows()).map(|i| l[(i, i)]).fold(f64::INFINITY, f64::min)
+    }
+
     /// Return the factor storage to the workspace pool (call when the step
     /// is done with the approximation).
     pub fn recycle(self, ws: &mut Workspace) {

@@ -528,6 +528,83 @@ fn engd_dense_first_step_respects_the_ema_init() {
     assert!(differs(&zero2, &id2), "the init choice washed out after one step");
 }
 
+/// A resumed run continues the checkpoint's wall clock: the checkpoint
+/// records cumulative seconds, the resumed run's `wall_s` column starts
+/// at/above them (monotone continuation, not a restart at zero), and
+/// `time_budget_s` counts pre-resume time — a budget below the seconds
+/// already spent runs zero further steps.
+#[test]
+fn resumed_run_continues_wall_clock_and_honors_time_budget() {
+    let be = NativeBackend::new();
+    let dir = out_dir("resume-clock");
+    let mut cfg = RunConfig {
+        name: "clock".into(),
+        problem: "poisson1d".into(),
+        backend: "native".into(),
+        steps: 2,
+        seed: 7,
+        eval_every: 1,
+        out_dir: dir.clone(),
+        checkpoint_every: 2,
+        ..RunConfig::default()
+    };
+    cfg.optimizer.kind = OptimizerKind::Sgd;
+    cfg.optimizer.path = ExecPath::Decomposed;
+    cfg.optimizer.lr = 1e-3;
+    cfg.optimizer.line_search = false;
+    train(cfg.clone(), &be, false).unwrap();
+
+    let ckpt_path = std::path::Path::new(&dir).join("clock.ckpt");
+    let mut ck = engd::coordinator::Checkpoint::load(&ckpt_path).unwrap();
+    assert!(
+        ck.wall_s > 0.0,
+        "checkpoint must record cumulative wall seconds, got {}",
+        ck.wall_s
+    );
+    // Pin the pre-resume time to a large, unambiguous value.
+    ck.wall_s = 1000.0;
+    ck.save(&ckpt_path).unwrap();
+
+    // Budget below the seconds already spent: zero further steps.
+    let mut spent = cfg.clone();
+    spent.name = "clock-spent".into();
+    spent.steps = 3;
+    spent.checkpoint_every = 0;
+    spent.resume_from = Some(ckpt_path.display().to_string());
+    spent.time_budget_s = 500.0;
+    let r = train(spent, &be, false).unwrap();
+    assert_eq!(
+        r.steps_done, 0,
+        "time budget ignored the checkpoint's {}s of pre-resume time",
+        1000
+    );
+
+    // Unlimited budget: wall_s continues monotonically from 1000s.
+    let mut cont = cfg.clone();
+    cont.name = "clock-cont".into();
+    cont.steps = 2;
+    cont.checkpoint_every = 0;
+    cont.resume_from = Some(ckpt_path.display().to_string());
+    let r = train(cont, &be, false).unwrap();
+    assert_eq!(r.steps_done, 4, "resume must run steps 3..=4");
+    assert!(r.wall_s >= 1000.0, "report clock restarted at {}", r.wall_s);
+    let csv =
+        std::fs::read_to_string(std::path::Path::new(&dir).join("clock-cont.csv")).unwrap();
+    let mut prev = 1000.0;
+    let mut rows = 0;
+    for line in csv.lines().skip(1) {
+        let wall: f64 = line.split(',').nth(1).unwrap().parse().unwrap();
+        assert!(
+            wall >= prev,
+            "wall_s column not monotone across the resume boundary:\n{csv}"
+        );
+        prev = wall;
+        rows += 1;
+    }
+    assert_eq!(rows, 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Resuming with a different optimizer than the one that wrote the
 /// checkpoint must be refused: the flat state vector's layout is
 /// optimizer-specific (SPRING's φ read as Adam's [t, m, v] would silently

@@ -283,6 +283,36 @@ fn sharded_evaluator_is_bitwise_identical_to_native() {
     }
 }
 
+/// The sharded evaluator's reduction partials come from its scratch pool:
+/// after the first loss / loss-and-grad evaluation the pool is warm and
+/// further steps (same problem, and line-search-style repeated losses)
+/// allocate no fresh partial buffers — the same steady-state
+/// zero-allocation contract the `Workspace` tests assert everywhere else.
+#[test]
+fn sharded_loss_grad_partials_are_pooled() {
+    let _guard = serialized();
+    let sharded = ShardedEvaluator::new(3);
+    let (p, theta, x_int, x_bnd, _) = problem_inputs(&sharded, "poisson2d", 23);
+
+    // Warm-up: first calls may draw fresh pool buffers.
+    sharded.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap();
+    sharded.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+    let fresh = sharded.scratch_stats().fresh_allocs;
+    assert!(fresh > 0, "partials never touched the scratch pool");
+
+    // Steady state: repeated loss/grad steps must only reuse.
+    for _ in 0..5 {
+        sharded.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap();
+        sharded.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+    }
+    let stats = sharded.scratch_stats();
+    assert_eq!(
+        stats.fresh_allocs, fresh,
+        "steady-state sharded loss/grad drew fresh partial buffers: {stats:?}"
+    );
+    assert!(stats.reuses > 0, "pool never reused: {stats:?}");
+}
+
 #[test]
 fn sharded_training_trajectory_is_bitwise_identical_to_native() {
     let _guard = serialized();

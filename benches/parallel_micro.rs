@@ -22,13 +22,24 @@
 //!    over per-point `backward` calls on the same blocks — reverse pass
 //!    only? The PR-5 acceptance case is the wide poisson2d net at batch
 //!    512 (fused ≥ 1.5× per-point, rows bitwise identical).
+//! 5. **Fast numerics tier**: what do the relaxed-numerics SIMD kernels
+//!    (FMA, reassociated panel reductions, wider blocks) buy over the
+//!    bitwise blocked kernels on the same workloads? The PR-6 acceptance
+//!    case is poisson2d at batch 512, forward+reverse: fast ≥ 1.3× the
+//!    bitwise blocked arm, rows within 1e-9 relative of the scalar
+//!    reference.
+//!
+//! Besides the stdout table, every tape/backward arm is appended to
+//! `BENCH_parallel_micro.json` (case, arm, ns/iter, speedup vs the
+//! bitwise blocked arm of the same case) for machine consumption.
 
 use std::hint::black_box;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 use engd::backend::native::{ScalarTape, Tape};
-use engd::backend::{Evaluator, NativeBackend};
+use engd::backend::{Evaluator, NativeBackend, NumericsMode, SimdTier};
+use engd::config::json::{self, JsonValue};
 use engd::metrics::Summary;
 use engd::pde::{init_params, param_count, DualOrder, PdeOperator, Sampler};
 use engd::rng::Rng;
@@ -44,6 +55,33 @@ fn time_reps(reps: usize, mut f: impl FnMut()) -> Summary {
     Summary::of(&samples)
 }
 
+/// One machine-readable bench record: `speedup_vs_bitwise` is the bitwise
+/// blocked arm's median over this arm's (so the bitwise arm itself reads
+/// 1.0 and faster arms read > 1.0).
+fn record(case: &str, arm: &str, t: &Summary, bitwise: &Summary) -> JsonValue {
+    JsonValue::Object(vec![
+        ("case".into(), JsonValue::String(case.into())),
+        ("arm".into(), JsonValue::String(arm.into())),
+        ("ns_per_iter".into(), JsonValue::Number(t.median * 1e9)),
+        ("speedup_vs_bitwise".into(), JsonValue::Number(bitwise.median / t.median.max(1e-12))),
+    ])
+}
+
+/// Largest relative elementwise deviation of `got` from `want`
+/// (denominator floored at 1 so near-zero entries compare absolutely).
+fn max_rel_err(got: &[f64], want: &[f64]) -> f64 {
+    got.iter()
+        .zip(want)
+        .map(|(a, b)| (a - b).abs() / b.abs().max(1.0))
+        .fold(0.0, f64::max)
+}
+
+/// The fast tier trades bitwise reproducibility for speed, not accuracy:
+/// per-lane contractions stay in ascending index order, so deviation from
+/// the scalar reference is rounding-level. The bench refuses to report a
+/// speedup for rows that drift beyond this.
+const FAST_REL_TOL: f64 = 1e-9;
+
 /// One blocked-vs-scalar tape case: the Jacobian workload (dual-carrying
 /// forward + row-seeded reverse per point) over `n_pts` points on one
 /// thread, via the scalar reference, the blocked single-point entry, and
@@ -56,6 +94,7 @@ fn bench_tape_case(
     orders: DualOrder,
     heat: bool,
     reps: usize,
+    records: &mut Vec<JsonValue>,
 ) {
     let np = param_count(arch);
     let d = arch[0];
@@ -163,15 +202,62 @@ fn bench_tape_case(
         }
         black_box(j[0]);
     });
+
+    // Fast-tier arm: same workload through the relaxed-numerics kernels
+    // (FMA + reassociated panel reductions, wider point-blocks), checked
+    // against the scalar reference within tolerance rather than bitwise.
+    let mut fast = Tape::with_numerics(arch, NumericsMode::Fast);
+    let fast_block = fast.block_points(orders);
+    let run_fast = |fast: &mut Tape, jf: &mut [f64]| {
+        let mut p = 0;
+        while p < n_pts {
+            let n = fast_block.min(n_pts - p);
+            fast.forward_batch(&theta, &xs[p * d..(p + n) * d], n, orders);
+            fast.backward_batch(
+                &theta,
+                n,
+                &alpha[p..p + n],
+                &beta[p * nc..(p + n) * nc],
+                &gamma[p * nc2..(p + n) * nc2],
+                &mut jf[p * np..(p + n) * np],
+            );
+            p += n;
+        }
+    };
+    let mut jf = vec![0.0; n_pts * np];
+    run_fast(&mut fast, &mut jf);
+    let fast_err = max_rel_err(&jf, &j_ref);
+    let fast_check = if fast_err <= FAST_REL_TOL {
+        format!("fast rel err {fast_err:.1e}")
+    } else {
+        format!("FAST ROWS DRIFT ({fast_err:.1e} > {FAST_REL_TOL:.0e})")
+    };
+    let fast_t = time_reps(reps, || {
+        jf.fill(0.0);
+        run_fast(&mut fast, &mut jf);
+        black_box(jf[0]);
+    });
+
     println!(
         "tape {label:<16} scalar {:>8.3}ms  single {:>8.3}ms ({:.2}x)  \
-         block[{block}] {:>8.3}ms ({:.2}x)  {cross_check}",
+         block[{block}] {:>8.3}ms ({:.2}x)  fast[{fast_block}/{}] {:>8.3}ms \
+         ({:.2}x vs block)  {cross_check}, {fast_check}",
         scalar_t.median * 1e3,
         single_t.median * 1e3,
         scalar_t.median / single_t.median.max(1e-12),
         batch_t.median * 1e3,
         scalar_t.median / batch_t.median.max(1e-12),
+        fast.tier().name(),
+        fast_t.median * 1e3,
+        batch_t.median / fast_t.median.max(1e-12),
     );
+    let case = format!("tape/{label}");
+    records.push(record(&case, "scalar", &scalar_t, &batch_t));
+    records.push(record(&case, "single", &single_t, &batch_t));
+    records.push(record(&case, "block", &batch_t, &batch_t));
+    if fast_err <= FAST_REL_TOL {
+        records.push(record(&case, "fast", &fast_t, &batch_t));
+    }
 }
 
 /// One fused-vs-per-point *backward* case: forward state is prepared once
@@ -187,6 +273,7 @@ fn bench_backward_case(
     orders: DualOrder,
     heat: bool,
     reps: usize,
+    records: &mut Vec<JsonValue>,
 ) {
     let np = param_count(arch);
     let d = arch[0];
@@ -279,12 +366,61 @@ fn bench_backward_case(
         }
         black_box(j[0]);
     });
+
+    // Fast-tier fused arm: forwarded once through the fast kernels (its
+    // wider blocks re-partition the batch), timed reverse-only like the
+    // bitwise arms, checked against the per-point rows within tolerance.
+    let mut fast_blocks: Vec<(usize, usize, Tape)> = Vec::new();
+    let fast_block = Tape::with_numerics(arch, NumericsMode::Fast).block_points(orders);
+    let mut p = 0;
+    while p < n_pts {
+        let n = fast_block.min(n_pts - p);
+        let mut tape = Tape::with_numerics(arch, NumericsMode::Fast);
+        tape.forward_batch(&theta, &xs[p * d..(p + n) * d], n, orders);
+        fast_blocks.push((p, n, tape));
+        p += n;
+    }
+    let mut jf = vec![0.0; n_pts * np];
+    let mut run_fast = |jf: &mut [f64]| {
+        for (p0, n, tape) in fast_blocks.iter_mut() {
+            tape.backward_batch(
+                &theta,
+                *n,
+                &alpha[*p0..*p0 + *n],
+                &beta[*p0 * nc..(*p0 + *n) * nc],
+                &gamma[*p0 * nc2..(*p0 + *n) * nc2],
+                &mut jf[*p0 * np..(*p0 + *n) * np],
+            );
+        }
+    };
+    run_fast(&mut jf);
+    let fast_err = max_rel_err(&jf, &j_ref);
+    let fast_check = if fast_err <= FAST_REL_TOL {
+        format!("fast rel err {fast_err:.1e}")
+    } else {
+        format!("FAST ROWS DRIFT ({fast_err:.1e} > {FAST_REL_TOL:.0e})")
+    };
+    let fast_t = time_reps(reps, || {
+        jf.fill(0.0);
+        run_fast(&mut jf);
+        black_box(jf[0]);
+    });
+
     println!(
-        "backward {label:<20} per-point {:>8.3}ms  fused[{block}] {:>8.3}ms  ({:.2}x)  {cross_check}",
+        "backward {label:<20} per-point {:>8.3}ms  fused[{block}] {:>8.3}ms  ({:.2}x)  \
+         fast[{fast_block}] {:>8.3}ms ({:.2}x vs fused)  {cross_check}, {fast_check}",
         per_point_t.median * 1e3,
         fused_t.median * 1e3,
         per_point_t.median / fused_t.median.max(1e-12),
+        fast_t.median * 1e3,
+        fused_t.median / fast_t.median.max(1e-12),
     );
+    let case = format!("backward/{label}");
+    records.push(record(&case, "per-point", &per_point_t, &fused_t));
+    records.push(record(&case, "fused", &fused_t, &fused_t));
+    if fast_err <= FAST_REL_TOL {
+        records.push(record(&case, "fused-fast", &fast_t, &fused_t));
+    }
 }
 
 /// The previous substrate, reproduced as a baseline: fresh scoped threads
@@ -310,7 +446,8 @@ fn scoped_spawn_chunks(n: usize, workers: usize, f: impl Fn(usize, usize) + Sync
 
 fn main() {
     let threads = engd::parallel::num_threads();
-    println!("threads: {threads}");
+    println!("threads: {threads}  (fast tier dispatches {})", SimdTier::detect().name());
+    let mut records: Vec<JsonValue> = Vec::new();
 
     // --- dispatch overhead: pool vs scoped spawn -------------------------
     //
@@ -385,16 +522,17 @@ fn main() {
     // 512 (blocked batch must be ≥ 2× the scalar tape).
     let arch10d: &[usize] = &[10, 96, 96, 64, 64, 1];
     let heat_orders = PdeOperator::Heat.dual_orders(3);
-    bench_tape_case("poisson2d-b512", &[2, 64, 64, 1], 512, DualOrder::full(2), false, 20);
-    bench_tape_case("poisson10d-b128", arch10d, 128, DualOrder::full(10), false, 5);
-    bench_tape_case("heat2d-b192", &[3, 48, 48, 1], 192, heat_orders, true, 20);
+    let r = &mut records;
+    bench_tape_case("poisson2d-b512", &[2, 64, 64, 1], 512, DualOrder::full(2), false, 20, r);
+    bench_tape_case("poisson10d-b128", arch10d, 128, DualOrder::full(10), false, 5, r);
+    bench_tape_case("heat2d-b192", &[3, 48, 48, 1], 192, heat_orders, true, 20, r);
 
     // --- fused vs per-point backward (reverse pass only) -----------------
     //
     // The PR-5 acceptance case is the wide poisson2d net at batch 512:
     // the fused adjoint-panel backward must be ≥ 1.5× the per-point
     // blocked backward with bitwise-identical Jacobian rows.
-    bench_backward_case("poisson2d-b512", &[2, 64, 64, 1], 512, DualOrder::full(2), false, 20);
+    bench_backward_case("poisson2d-b512", &[2, 64, 64, 1], 512, DualOrder::full(2), false, 20, r);
     bench_backward_case(
         "poisson2d-b512-wide",
         &[2, 128, 128, 1],
@@ -402,7 +540,21 @@ fn main() {
         DualOrder::full(2),
         false,
         10,
+        r,
     );
-    bench_backward_case("poisson10d-b128", arch10d, 128, DualOrder::full(10), false, 5);
-    bench_backward_case("heat2d-b192", &[3, 48, 48, 1], 192, heat_orders, true, 20);
+    bench_backward_case("poisson10d-b128", arch10d, 128, DualOrder::full(10), false, 5, r);
+    bench_backward_case("heat2d-b192", &[3, 48, 48, 1], 192, heat_orders, true, 20, r);
+
+    // --- machine-readable dump -------------------------------------------
+    let out = JsonValue::Object(vec![
+        ("bench".into(), JsonValue::String("parallel_micro".into())),
+        ("threads".into(), JsonValue::Number(threads as f64)),
+        ("simd_tier".into(), JsonValue::String(SimdTier::detect().name().into())),
+        ("records".into(), JsonValue::Array(records)),
+    ]);
+    let path = "BENCH_parallel_micro.json";
+    match std::fs::write(path, json::to_string(&out) + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -15,6 +15,14 @@ in-tree Rust property tests
 (`prop_blocked_tape_matches_scalar_reference_bitwise`,
 `fused_backward_panels_match_per_point_entry_bitwise`) assert the same
 contracts against the real implementation.
+
+This oracle mirrors the *bitwise* numerics tier only. The opt-in fast
+tier (`--numerics fast`) intentionally has no Python mirror: its kernels
+use FMA and reassociated multi-accumulator reductions whose exact FP
+sequence is an implementation detail per SIMD tier, so its contract is
+tolerance against `ScalarTape` (see
+`prop_fast_tape_matches_scalar_reference_within_tolerance` in tape.rs),
+not bitwise equality with anything.
 """
 import math, random, struct, sys
 

@@ -36,7 +36,7 @@ use crate::linalg::{Matrix, Workspace};
 use crate::pde::ProblemSpec;
 use crate::runtime::Runtime;
 
-pub use native::NativeBackend;
+pub use native::{NativeBackend, NumericsMode, SimdTier};
 pub use sharded::ShardedEvaluator;
 
 /// A backend able to evaluate the PINN model and its PDE residuals.
@@ -103,12 +103,37 @@ pub trait Evaluator {
 ///   bitwise-identical to `"native"`;
 /// * `"auto"`    — PJRT when `artifacts_dir/manifest.json` exists *and* a
 ///   PJRT client can be created, otherwise native. The default everywhere.
+///
+/// Defaults the numerics mode from `ENGD_NUMERICS`; the config/CLI path
+/// passes an explicit mode through [`select_with_numerics`].
 pub fn select(kind: &str, artifacts_dir: &str) -> Result<Box<dyn Evaluator>> {
+    select_with_numerics(kind, artifacts_dir, NumericsMode::from_env())
+}
+
+/// [`select`] with an explicit numerics mode for the native kernel tiers
+/// (`--numerics bitwise|fast`). PJRT executes fixed XLA artifacts, so
+/// requesting `fast` with `--backend pjrt` is refused rather than silently
+/// ignored; `auto` + `fast` selects the native backend directly.
+pub fn select_with_numerics(
+    kind: &str,
+    artifacts_dir: &str,
+    numerics: NumericsMode,
+) -> Result<Box<dyn Evaluator>> {
     match kind {
-        "pjrt" => Ok(Box::new(Runtime::new(artifacts_dir)?)),
-        "native" => Ok(Box::new(NativeBackend::new())),
-        "sharded" => Ok(Box::new(ShardedEvaluator::new(
+        "pjrt" => {
+            if numerics != NumericsMode::Bitwise {
+                bail!(
+                    "--numerics {} applies to the native kernel tiers; the pjrt backend \
+                     executes fixed XLA artifacts (use --backend native or sharded)",
+                    numerics.name()
+                );
+            }
+            Ok(Box::new(Runtime::new(artifacts_dir)?))
+        }
+        "native" => Ok(Box::new(NativeBackend::with_numerics(numerics))),
+        "sharded" => Ok(Box::new(ShardedEvaluator::with_numerics(
             crate::parallel::num_threads(),
+            numerics,
         ))),
         k if k.starts_with("sharded:") => {
             let n: usize = k["sharded:".len()..].parse().map_err(|_| {
@@ -117,20 +142,24 @@ pub fn select(kind: &str, artifacts_dir: &str) -> Result<Box<dyn Evaluator>> {
             if n == 0 {
                 bail!("shard count must be at least 1 (got '{k}')");
             }
-            Ok(Box::new(ShardedEvaluator::new(n)))
+            Ok(Box::new(ShardedEvaluator::with_numerics(n, numerics)))
         }
         "auto" | "" => {
-            let manifest = std::path::Path::new(artifacts_dir).join("manifest.json");
-            if manifest.exists() {
-                match Runtime::new(artifacts_dir) {
-                    Ok(rt) => return Ok(Box::new(rt)),
-                    Err(e) => eprintln!(
-                        "note: PJRT runtime unavailable ({e:#}); falling back to the \
-                         native backend"
-                    ),
+            // Fast mode is a native-tier request: skip the PJRT probe
+            // rather than select a backend that cannot honor it.
+            if numerics == NumericsMode::Bitwise {
+                let manifest = std::path::Path::new(artifacts_dir).join("manifest.json");
+                if manifest.exists() {
+                    match Runtime::new(artifacts_dir) {
+                        Ok(rt) => return Ok(Box::new(rt)),
+                        Err(e) => eprintln!(
+                            "note: PJRT runtime unavailable ({e:#}); falling back to the \
+                             native backend"
+                        ),
+                    }
                 }
             }
-            Ok(Box::new(NativeBackend::new()))
+            Ok(Box::new(NativeBackend::with_numerics(numerics)))
         }
         other => bail!("unknown backend '{other}' (expected pjrt|native|sharded[:n]|auto)"),
     }

@@ -37,6 +37,23 @@
 //! reduction boundary, and per-point accumulations run in ascending row
 //! order, so blocked results are bitwise those of per-point processing.
 //!
+//! ## Numerics tiers
+//!
+//! The backend carries a [`NumericsMode`] (`--numerics bitwise|fast`,
+//! `ENGD_NUMERICS`, the `numerics` TOML key; [`NativeBackend::new`]
+//! defaults from the environment) and threads it into every worker tape:
+//!
+//! * **`bitwise`** (default) — everything above holds bit-for-bit; the
+//!   kernels never contract or reassociate a floating-point sequence.
+//! * **`fast`** — worker tapes run the [`simd`] kernel tier (runtime
+//!   CPU-dispatched FMA panel kernels, wider blocks). Per-point results
+//!   change only at rounding level, and they stay *per-point
+//!   deterministic* — independent of block, chunk, shard, and thread
+//!   shape — so everything structural above (the chunk grid, shard ==
+//!   unsharded, blocked == per-point) still holds exactly *within* fast
+//!   mode; only comparisons across the two modes become approximate.
+//!   Checkpoints record the mode, and resume refuses a silent switch.
+//!
 //! Residual convention (paper §3, mirrored from `python/compile/model.py`):
 //!
 //! ```text
@@ -47,25 +64,38 @@
 //!
 //! with `L = −Δ` (Poisson) or `∂_t − Δ_x` (heat, time = last coordinate).
 
+mod simd;
 mod tape;
 
 use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{anyhow, ensure, Result};
 
 use super::Evaluator;
-use crate::linalg::{Matrix, Workspace};
+use crate::linalg::{Matrix, Workspace, WorkspaceStats};
 use crate::parallel::{self, SendPtr};
 use crate::pde::{
     builtin_problem_map, exact_solution, DualOrder, ExactSolution, PdeOperator, ProblemSpec,
 };
 
+pub use simd::{NumericsMode, SimdTier};
 pub use tape::{tape_builds, ScalarTape, Tape};
 
 /// Pure-Rust implementation of [`Evaluator`]. Stateless apart from its
-/// problem catalogue (built-ins by default; custom specs for tests).
+/// problem catalogue (built-ins by default; custom specs for tests), its
+/// numerics mode, and a pooled scratch workspace for reduction partials.
 pub struct NativeBackend {
     problems: BTreeMap<String, ProblemSpec>,
+    /// Kernel tier every worker tape runs in (see the module docs).
+    numerics: NumericsMode,
+    /// Pooled storage for the `loss_and_grad` reduction partials (per-chunk
+    /// losses and the flat `chunks × n_params` gradient block): `Evaluator`
+    /// methods take `&self`, so the pool sits behind a mutex — the same
+    /// zero-steady-state-allocation contract as the sharded evaluator's
+    /// pool (`native_loss_grad_partials_are_pooled` in
+    /// `rust/tests/pool.rs`).
+    scratch: Mutex<Workspace>,
 }
 
 impl Default for NativeBackend {
@@ -76,18 +106,51 @@ impl Default for NativeBackend {
 
 impl NativeBackend {
     /// Backend over the built-in problem catalogue
-    /// ([`crate::pde::builtin_problems`]).
+    /// ([`crate::pde::builtin_problems`]), in the numerics mode requested
+    /// by `ENGD_NUMERICS` (default bitwise) — so the env knob reaches
+    /// every construction site, including the CI fast-tier jobs.
     pub fn new() -> Self {
+        Self::with_numerics(NumericsMode::from_env())
+    }
+
+    /// Backend over the built-in catalogue in an explicit numerics mode
+    /// (the config/CLI path).
+    pub fn with_numerics(numerics: NumericsMode) -> Self {
         NativeBackend {
             problems: builtin_problem_map(),
+            numerics,
+            scratch: Mutex::new(Workspace::new()),
         }
     }
 
-    /// Backend over a custom problem set (property tests use tiny nets).
+    /// Backend over a custom problem set (property tests use tiny nets),
+    /// in the `ENGD_NUMERICS`-requested mode.
     pub fn with_problems(problems: Vec<ProblemSpec>) -> Self {
+        Self::with_problems_numerics(problems, NumericsMode::from_env())
+    }
+
+    /// Custom problem set in an explicit numerics mode.
+    pub fn with_problems_numerics(problems: Vec<ProblemSpec>, numerics: NumericsMode) -> Self {
         NativeBackend {
             problems: problems.into_iter().map(|p| (p.name.clone(), p)).collect(),
+            numerics,
+            scratch: Mutex::new(Workspace::new()),
         }
+    }
+
+    /// The numerics mode this backend's kernels run in.
+    pub fn numerics(&self) -> NumericsMode {
+        self.numerics
+    }
+
+    /// Allocation counters of the partial-buffer pool (tests assert
+    /// `fresh_allocs` freezes after the first `loss_and_grad`).
+    pub fn scratch_stats(&self) -> WorkspaceStats {
+        self.lock_scratch().stats()
+    }
+
+    fn lock_scratch(&self) -> MutexGuard<'_, Workspace> {
+        self.scratch.lock().unwrap_or_else(|poison| poison.into_inner())
     }
 
     // --- sharded-evaluator protocol ------------------------------------
@@ -110,7 +173,7 @@ impl NativeBackend {
         c1: usize,
         out: &mut [f64],
     ) -> Result<()> {
-        let ctx = Ctx::new(p)?;
+        let ctx = Ctx::new(p, self.numerics)?;
         ctx.check_inputs(theta, x_int, x_bnd)?;
         let n = ctx.n_int + ctx.n_bnd;
         let (chunks, chunk) = thread_chunks(n);
@@ -141,7 +204,7 @@ impl NativeBackend {
         loss_out: &mut [f64],
         grad_out: &mut [f64],
     ) -> Result<()> {
-        let ctx = Ctx::new(p)?;
+        let ctx = Ctx::new(p, self.numerics)?;
         ctx.check_inputs(theta, x_int, x_bnd)?;
         let n = ctx.n_int + ctx.n_bnd;
         let np = ctx.n_params;
@@ -182,7 +245,7 @@ impl NativeBackend {
         r_out: &mut [f64],
         j_out: &mut [f64],
     ) -> Result<()> {
-        let ctx = Ctx::new(p)?;
+        let ctx = Ctx::new(p, self.numerics)?;
         ctx.check_inputs(theta, x_int, x_bnd)?;
         let n = ctx.n_int + ctx.n_bnd;
         let np = ctx.n_params;
@@ -204,7 +267,7 @@ impl NativeBackend {
         i1: usize,
         out: &mut [f64],
     ) -> Result<()> {
-        let ctx = Ctx::new(p)?;
+        let ctx = Ctx::new(p, self.numerics)?;
         ensure!(
             theta.len() == ctx.n_params,
             "θ has {} params, problem wants {}",
@@ -229,6 +292,8 @@ struct Ctx {
     /// Interior-pass dual mask: which coordinates carry which dual orders
     /// (`orders.second` doubles as the Laplacian's coordinate count).
     orders: DualOrder,
+    /// Kernel tier worker tapes for this evaluation run in.
+    numerics: NumericsMode,
     exact: ExactSolution,
     /// √(ω_Ω/N_Ω), √(ω_∂Ω/N_∂Ω).
     scale_int: f64,
@@ -239,7 +304,7 @@ struct Ctx {
 }
 
 impl Ctx {
-    fn new(p: &ProblemSpec) -> Result<Ctx> {
+    fn new(p: &ProblemSpec, numerics: NumericsMode) -> Result<Ctx> {
         ensure!(p.n_interior > 0 && p.n_boundary > 0, "empty batch in '{}'", p.name);
         ensure!(
             p.arch.first() == Some(&p.dim) && p.arch.last() == Some(&1),
@@ -263,6 +328,7 @@ impl Ctx {
             dim: p.dim,
             operator: p.operator,
             orders: p.operator.dual_orders(p.dim),
+            numerics,
             exact: exact_solution(&p.pde)?,
             scale_int: (p.interior_weight / p.n_interior as f64).sqrt(),
             scale_bnd: (p.boundary_weight / p.n_boundary as f64).sqrt(),
@@ -309,7 +375,7 @@ struct Worker {
 
 impl Worker {
     fn new(ctx: &Ctx) -> Worker {
-        let tape = Tape::new(&ctx.arch);
+        let tape = Tape::with_numerics(&ctx.arch, ctx.numerics);
         let interior_block = tape.block_points(ctx.orders);
         let value_block = tape.block_points(DualOrder::NONE);
         Worker {
@@ -490,24 +556,31 @@ pub(crate) fn thread_chunks(n: usize) -> (usize, usize) {
 }
 
 /// A thread's persistent worker-state slot: the tape plus seed buffers,
-/// keyed by (architecture, dual mask) and rebuilt only when the evaluated
-/// problem shape changes — the mask determines the seed-buffer sizing, so
-/// it is part of the key (constant within any one training run).
+/// keyed by (architecture, dual mask, numerics mode) and rebuilt only when
+/// one of those changes — the mask determines the seed-buffer sizing and
+/// the mode determines the tape's kernel tier and block caps, so both are
+/// part of the key (constant within any one training run).
 #[derive(Default)]
 struct WorkerSlot {
     arch: Vec<usize>,
     orders: DualOrder,
+    mode: NumericsMode,
     worker: Option<Worker>,
 }
 
 /// Run `f` with this thread's persistent [`Worker`] for `ctx`'s
-/// architecture (building it on first use / shape change).
+/// architecture and numerics mode (building it on first use / key change).
 fn with_worker<R>(ctx: &Ctx, f: impl FnOnce(&mut Worker) -> R) -> R {
     parallel::with_scratch::<WorkerSlot, R>(|slot| {
-        if slot.worker.is_none() || slot.arch != ctx.arch || slot.orders != ctx.orders {
+        if slot.worker.is_none()
+            || slot.arch != ctx.arch
+            || slot.orders != ctx.orders
+            || slot.mode != ctx.numerics
+        {
             slot.worker = Some(Worker::new(ctx));
             slot.arch = ctx.arch.clone();
             slot.orders = ctx.orders;
+            slot.mode = ctx.numerics;
         }
         f(slot.worker.as_mut().expect("worker slot populated above"))
     })
@@ -536,21 +609,6 @@ fn chunk_loss(
         });
         acc
     })
-}
-
-/// One reduction chunk's `(Σ r_i², Σ r_i ∇r_i)` partial, allocating the
-/// gradient buffer (the unsharded `loss_and_grad` path).
-fn chunk_loss_grad(
-    ctx: &Ctx,
-    theta: &[f64],
-    x_int: &[f64],
-    x_bnd: &[f64],
-    start: usize,
-    end: usize,
-) -> (f64, Vec<f64>) {
-    let mut grad = vec![0.0; ctx.n_params];
-    let acc = chunk_loss_grad_into(ctx, theta, x_int, x_bnd, start, end, &mut grad);
-    (acc, grad)
 }
 
 /// One reduction chunk's `Σ r_i²`, with the chunk's contribution to
@@ -629,7 +687,7 @@ impl Evaluator for NativeBackend {
         x_int: &[f64],
         x_bnd: &[f64],
     ) -> Result<f64> {
-        let ctx = Ctx::new(p)?;
+        let ctx = Ctx::new(p, self.numerics)?;
         ctx.check_inputs(theta, x_int, x_bnd)?;
         let n = ctx.n_int + ctx.n_bnd;
         let (workers, chunk) = thread_chunks(n);
@@ -650,26 +708,53 @@ impl Evaluator for NativeBackend {
         x_int: &[f64],
         x_bnd: &[f64],
     ) -> Result<(f64, Vec<f64>)> {
-        let ctx = Ctx::new(p)?;
+        let ctx = Ctx::new(p, self.numerics)?;
         ctx.check_inputs(theta, x_int, x_bnd)?;
         let n = ctx.n_int + ctx.n_bnd;
         let np = ctx.n_params;
         let (workers, chunk) = thread_chunks(n);
         // ∇L = Jᵀ r accumulated per reduction chunk with no J
         // materialization: each point's reverse pass is seeded by its own
-        // residual value.
-        let partials: Vec<(f64, Vec<f64>)> = parallel::par_map(workers, |w| {
-            let start = w * chunk;
-            let end = ((w + 1) * chunk).min(n);
-            chunk_loss_grad(&ctx, theta, x_int, x_bnd, start, end)
-        });
+        // residual value. Partials live in pooled flat scratch — one loss
+        // entry and one contiguous P-long gradient block per chunk — so a
+        // warmed-up step (including every line-search probe) allocates
+        // nothing here. Scratch is fine uninitialized: every chunk's
+        // entries are overwritten (`chunk_loss_grad_into` zeroes its
+        // block), and the pool lock covers only checkout/check-in.
+        let (mut loss_parts, mut grad_parts) = {
+            let mut ws = self.lock_scratch();
+            (ws.take_scratch(workers), ws.take_scratch(workers * np))
+        };
+        {
+            let lptr = SendPtr(loss_parts.as_mut_ptr());
+            let gptr = SendPtr(grad_parts.as_mut_ptr());
+            parallel::par_map(workers, |w| {
+                let start = w * chunk;
+                let end = ((w + 1) * chunk).min(n);
+                // SAFETY: worker index `w` owns loss entry `w` and gradient
+                // block `w` exclusively; both flat buffers outlive the
+                // dispatch.
+                let grad_out = unsafe {
+                    std::slice::from_raw_parts_mut(gptr.get().add(w * np), np)
+                };
+                let l = chunk_loss_grad_into(&ctx, theta, x_int, x_bnd, start, end, grad_out);
+                unsafe { *lptr.get().add(w) = l };
+            });
+        }
+        // Fixed chunk-order reduction — the exact f64 sequence of the
+        // previous per-chunk-Vec implementation.
         let mut grad = vec![0.0; np];
         let mut loss = 0.0;
-        for (acc, g) in &partials {
-            loss += acc;
-            for (total, gi) in grad.iter_mut().zip(g) {
+        for k in 0..workers {
+            loss += loss_parts[k];
+            for (total, gi) in grad.iter_mut().zip(&grad_parts[k * np..(k + 1) * np]) {
                 *total += gi;
             }
+        }
+        {
+            let mut ws = self.lock_scratch();
+            ws.recycle(loss_parts);
+            ws.recycle(grad_parts);
         }
         Ok((0.5 * loss, grad))
     }
@@ -682,7 +767,7 @@ impl Evaluator for NativeBackend {
         x_bnd: &[f64],
         ws: &mut Workspace,
     ) -> Result<(Vec<f64>, Matrix)> {
-        let ctx = Ctx::new(p)?;
+        let ctx = Ctx::new(p, self.numerics)?;
         ctx.check_inputs(theta, x_int, x_bnd)?;
         let n = ctx.n_int + ctx.n_bnd;
         let np = ctx.n_params;
@@ -713,7 +798,7 @@ impl Evaluator for NativeBackend {
     }
 
     fn u_pred(&self, p: &ProblemSpec, theta: &[f64], x_eval: &[f64]) -> Result<Vec<f64>> {
-        let ctx = Ctx::new(p)?;
+        let ctx = Ctx::new(p, self.numerics)?;
         ensure!(
             theta.len() == ctx.n_params,
             "θ has {} params, problem wants {}",
@@ -846,5 +931,73 @@ mod tests {
         let (_r, j) = be.residuals_jacobian(&p, &theta, &xi, &xb, &mut ws).unwrap();
         ws.recycle_matrix(j);
         assert_eq!(ws.stats().fresh_allocs, fresh, "second J must reuse the pool");
+    }
+
+    #[test]
+    fn fast_mode_matches_bitwise_within_tolerance() {
+        // End-to-end cross-tier check on a real problem: loss, gradient,
+        // residuals, and Jacobian agree to rounding-level tolerance
+        // (explicit modes on both sides so the test is meaningful under
+        // the CI `ENGD_NUMERICS=fast` jobs too).
+        let bit = NativeBackend::with_numerics(NumericsMode::Bitwise);
+        let fast = NativeBackend::with_numerics(NumericsMode::Fast);
+        let p = bit.problem("poisson2d").unwrap();
+        let mut rng = Rng::seed_from(23);
+        let theta = init_params(&p.arch, &mut rng);
+        let mut xi = vec![0.0; p.n_interior * p.dim];
+        let mut xb = vec![0.0; p.n_boundary * p.dim];
+        rng.fill_uniform(&mut xi, 0.0, 1.0);
+        rng.fill_uniform(&mut xb, 0.0, 1.0);
+        for row in xb.chunks_exact_mut(p.dim) {
+            row[0] = 0.0;
+        }
+        let close = |a: f64, b: f64, scale: f64| (a - b).abs() <= 1e-9 * scale.max(1e-12);
+        let la = bit.loss(&p, &theta, &xi, &xb).unwrap();
+        let lb = fast.loss(&p, &theta, &xi, &xb).unwrap();
+        assert!(close(la, lb, la.abs()), "loss {la} (bitwise) vs {lb} (fast)");
+        let (_, ga) = bit.loss_and_grad(&p, &theta, &xi, &xb).unwrap();
+        let (_, gb) = fast.loss_and_grad(&p, &theta, &xi, &xb).unwrap();
+        let gscale = ga.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        for (k, (a, b)) in ga.iter().zip(&gb).enumerate() {
+            assert!(close(*a, *b, gscale), "grad[{k}]: {a} vs {b}");
+        }
+        let mut ws = Workspace::new();
+        let (ra, ja) = bit.residuals_jacobian(&p, &theta, &xi, &xb, &mut ws).unwrap();
+        let (rb, jb) = fast.residuals_jacobian(&p, &theta, &xi, &xb, &mut ws).unwrap();
+        let rscale = ra.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        for (k, (a, b)) in ra.iter().zip(&rb).enumerate() {
+            assert!(close(*a, *b, rscale), "r[{k}]: {a} vs {b}");
+        }
+        let jscale = ja.data().iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        for (k, (a, b)) in ja.data().iter().zip(jb.data()).enumerate() {
+            assert!(close(*a, *b, jscale), "J elem {k}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn interleaving_modes_rekeys_worker_tapes() {
+        // Worker scratch slots are keyed by (arch, mask, mode): alternating
+        // backends of different modes on the same thread pool must rebuild
+        // tapes rather than silently reusing the other tier's — checked by
+        // bitwise-mode results staying bitwise-stable across the
+        // interleaving.
+        let bit = NativeBackend::with_numerics(NumericsMode::Bitwise);
+        let fast = NativeBackend::with_numerics(NumericsMode::Fast);
+        let p = bit.problem("poisson1d").unwrap();
+        let mut rng = Rng::seed_from(31);
+        let theta = init_params(&p.arch, &mut rng);
+        let mut xi = vec![0.0; p.n_interior * p.dim];
+        let mut xb = vec![0.0; p.n_boundary * p.dim];
+        rng.fill_uniform(&mut xi, 0.0, 1.0);
+        for (k, v) in xb.iter_mut().enumerate() {
+            *v = (k % 2) as f64;
+        }
+        let l1 = bit.loss(&p, &theta, &xi, &xb).unwrap();
+        let lf1 = fast.loss(&p, &theta, &xi, &xb).unwrap();
+        let l2 = bit.loss(&p, &theta, &xi, &xb).unwrap();
+        let lf2 = fast.loss(&p, &theta, &xi, &xb).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits(), "bitwise loss drifted across interleaving");
+        assert_eq!(lf1.to_bits(), lf2.to_bits(), "fast loss is deterministic per tier");
+        assert!((l1 - lf1).abs() <= 1e-9 * l1.abs().max(1.0));
     }
 }

@@ -1,0 +1,549 @@
+//! The relaxed-numerics (`fast`) SIMD kernel tier: accuracy mode, runtime
+//! CPU-feature dispatch, and the FMA panel kernels behind
+//! `Tape::forward_batch` / `Tape::backward_batch` in fast mode.
+//!
+//! ## The two-tier numerics contract
+//!
+//! The native backend ships two kernel tiers selected by [`NumericsMode`]
+//! (`--numerics bitwise|fast`, `ENGD_NUMERICS`, or the `numerics` TOML
+//! key):
+//!
+//! * **`bitwise`** (default) — the PR-4/5 blocked kernels in `tape.rs`:
+//!   every lane preserves the scalar per-point FP operation sequence (no
+//!   FMA contraction, no reassociation, ascending-`k`/`o` accumulation,
+//!   per-lane zero-skip guards). Trajectories are bit-for-bit reproducible
+//!   across block sizes, shard counts, and thread counts, and are mirrored
+//!   exactly by `python/tools/tape_oracle.py`.
+//! * **`fast`** — the kernels in this module: explicit FMA contraction
+//!   (`f64::mul_add` compiled under per-tier `#[target_feature]`
+//!   multiversioning), four-row blocked panel passes that keep each
+//!   accumulator element register-resident across four consecutive
+//!   reduction terms, coarser zero-skip guards, and wider point blocks.
+//!   Per-element accumulation still walks the reduction index in ascending
+//!   order, but each `a*b+c` may round once instead of twice and the
+//!   reverse sweep groups weight rows four at a time — so results agree
+//!   with the bitwise tier only to rounding-level tolerance (the property
+//!   suite in `tape.rs` bounds the relative error at 1e-10 against
+//!   [`super::tape::ScalarTape`], with observed errors orders of magnitude
+//!   below that). `fast` trajectories are deterministic for a fixed
+//!   binary, CPU tier, and thread count, but are **not** comparable
+//!   bit-for-bit against `bitwise` runs — checkpoints record the mode and
+//!   resume refuses a silent switch.
+//!
+//! ## Tier dispatch
+//!
+//! [`SimdTier::detect`] picks the widest instruction set the CPU supports
+//! once per process (`ENGD_SIMD=scalar|avx2|avx512|neon` overrides it for
+//! testing, clamped to what the CPU can actually run):
+//!
+//! * x86_64 — `avx2` requires AVX2+FMA; `avx512` additionally requires
+//!   AVX-512F and currently lowers to the AVX2+FMA kernel instantiation
+//!   (the MSRV predates stable `avx512f` target-feature codegen), so
+//!   `detect` never selects it on its own;
+//! * aarch64 — `neon` (baseline; scalar `fmadd` is native there);
+//! * anything else — `scalar`, a fast-but-portable instantiation that
+//!   keeps the blocked passes but uses plain `a*b + c` (on targets
+//!   without hardware FMA, `f64::mul_add` would lower to a slow libm
+//!   call).
+//!
+//! Each kernel has one generic `#[inline(always)]` body parameterized by
+//! `const FMA: bool`, instantiated under per-tier
+//! `#[target_feature]`-annotated wrappers; dispatch is a predictable
+//! per-call branch on the tape's cached tier.
+
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+/// Accuracy mode of the native kernels (`--numerics bitwise|fast`). See
+/// the module docs for the contract each tier provides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum NumericsMode {
+    /// Scalar-identical FP sequences; bit-for-bit reproducible (default).
+    #[default]
+    Bitwise,
+    /// FMA + blocked-pass kernels; rounding-level differences allowed.
+    Fast,
+}
+
+impl NumericsMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "bitwise" => Ok(NumericsMode::Bitwise),
+            "fast" => Ok(NumericsMode::Fast),
+            _ => bail!("unknown numerics mode '{s}' (expected 'bitwise' or 'fast')"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NumericsMode::Bitwise => "bitwise",
+            NumericsMode::Fast => "fast",
+        }
+    }
+
+    /// Numeric encoding for the metrics CSV extras (string-free schema).
+    pub fn code(self) -> f64 {
+        match self {
+            NumericsMode::Bitwise => 0.0,
+            NumericsMode::Fast => 1.0,
+        }
+    }
+
+    /// Mode requested by `ENGD_NUMERICS` (default `bitwise`; an invalid
+    /// value warns and falls back rather than aborting a run).
+    pub fn from_env() -> Self {
+        match std::env::var("ENGD_NUMERICS") {
+            Ok(s) => match Self::parse(&s) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("[engd] {e}; ignoring ENGD_NUMERICS");
+                    NumericsMode::Bitwise
+                }
+            },
+            Err(_) => NumericsMode::Bitwise,
+        }
+    }
+}
+
+/// Instruction-set tier the fast kernels dispatch to at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// Portable fallback: blocked passes, plain `a*b + c`.
+    Scalar,
+    /// x86_64 AVX2 + FMA.
+    Avx2,
+    /// x86_64 AVX-512F (+AVX2/FMA); kernels currently alias the AVX2+FMA
+    /// instantiation — see the module docs.
+    Avx512,
+    /// aarch64 NEON (FMA is baseline there).
+    Neon,
+}
+
+impl SimdTier {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "scalar" => Ok(SimdTier::Scalar),
+            "avx2" => Ok(SimdTier::Avx2),
+            "avx512" => Ok(SimdTier::Avx512),
+            "neon" => Ok(SimdTier::Neon),
+            _ => bail!("unknown SIMD tier '{s}' (expected scalar|avx2|avx512|neon)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Avx512 => "avx512",
+            SimdTier::Neon => "neon",
+        }
+    }
+
+    /// Numeric encoding for the metrics CSV extras.
+    pub fn code(self) -> f64 {
+        match self {
+            SimdTier::Scalar => 0.0,
+            SimdTier::Avx2 => 1.0,
+            SimdTier::Avx512 => 2.0,
+            SimdTier::Neon => 3.0,
+        }
+    }
+
+    /// Whether this CPU can execute the tier's kernels (feature-detected
+    /// at runtime; `Scalar` always can).
+    pub fn supported(self) -> bool {
+        match self {
+            SimdTier::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdTier::Avx2 => {
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+            }
+            #[cfg(target_arch = "x86_64")]
+            SimdTier::Avx512 => {
+                is_x86_feature_detected!("avx512f")
+                    && is_x86_feature_detected!("avx2")
+                    && is_x86_feature_detected!("fma")
+            }
+            #[cfg(target_arch = "aarch64")]
+            SimdTier::Neon => true,
+            _ => false,
+        }
+    }
+
+    /// Widest tier `detect` auto-selects on this CPU.
+    fn best_supported() -> SimdTier {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if SimdTier::Avx2.supported() {
+                return SimdTier::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if SimdTier::Neon.supported() {
+                return SimdTier::Neon;
+            }
+        }
+        SimdTier::Scalar
+    }
+
+    /// The tier fast-mode tapes dispatch to, decided once per process:
+    /// the `ENGD_SIMD` override if set and runnable on this CPU (else a
+    /// warning + fallback), otherwise the widest supported tier.
+    pub fn detect() -> SimdTier {
+        static TIER: OnceLock<SimdTier> = OnceLock::new();
+        *TIER.get_or_init(|| {
+            if let Ok(s) = std::env::var("ENGD_SIMD") {
+                match SimdTier::parse(&s) {
+                    Ok(t) if t.supported() => return t,
+                    Ok(t) => eprintln!(
+                        "[engd] ENGD_SIMD={} is not runnable on this CPU; using {}",
+                        t.name(),
+                        SimdTier::best_supported().name()
+                    ),
+                    Err(e) => eprintln!("[engd] {e}; ignoring ENGD_SIMD"),
+                }
+            }
+            SimdTier::best_supported()
+        })
+    }
+}
+
+/// Most points a fast-mode `forward_batch` carries for value-only passes
+/// (double the bitwise cap: wider blocks amortize the per-layer `Wᵀ`
+/// transpose and block-dispatch overhead further).
+pub(crate) const FAST_MAX_BLOCK_POINTS: usize = 64;
+
+/// Fast-mode dual-lane budget (double the bitwise cap; panel storage per
+/// layer grows accordingly but stays L2-scale for the paper's widths).
+pub(crate) const FAST_DUAL_LANE_BUDGET: usize = 128;
+
+/// One fused multiply-add term: contracted when the tier guarantees
+/// hardware FMA, plain `a*b + c` otherwise (`f64::mul_add` without the
+/// guarantee lowers to a libm call far slower than two rounded ops).
+#[inline(always)]
+fn fmadd<const FMA: bool>(a: f64, b: f64, c: f64) -> f64 {
+    if FMA {
+        a.mul_add(b, c)
+    } else {
+        a * b + c
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generic kernel bodies (one per kernel, `const FMA: bool`), instantiated
+// under per-tier `#[target_feature]` wrappers by `define_kernel!` below.
+// ---------------------------------------------------------------------------
+
+/// `dst[o] += Σ_k wt[k·fan_out + o] · coefs[k]` with `fan_out = dst.len()`,
+/// walking `k` ascending but streaming four `Wᵀ` rows per pass so each
+/// accumulator element is loaded and stored once per four terms.
+#[inline(always)]
+fn panel_axpy_impl<const FMA: bool>(wt: &[f64], coefs: &[f64], dst: &mut [f64]) {
+    let fan_out = dst.len();
+    debug_assert_eq!(wt.len(), coefs.len() * fan_out);
+    let mut quads = coefs.chunks_exact(4);
+    let mut rows = wt.chunks_exact(4 * fan_out);
+    for (cq, rq) in quads.by_ref().zip(rows.by_ref()) {
+        let (r0, rest) = rq.split_at(fan_out);
+        let (r1, rest) = rest.split_at(fan_out);
+        let (r2, r3) = rest.split_at(fan_out);
+        for o in 0..fan_out {
+            let mut acc = dst[o];
+            acc = fmadd::<FMA>(r0[o], cq[0], acc);
+            acc = fmadd::<FMA>(r1[o], cq[1], acc);
+            acc = fmadd::<FMA>(r2[o], cq[2], acc);
+            acc = fmadd::<FMA>(r3[o], cq[3], acc);
+            dst[o] = acc;
+        }
+    }
+    for (&c, row) in quads
+        .remainder()
+        .iter()
+        .zip(rows.remainder().chunks_exact(fan_out))
+    {
+        for (dv, &wv) in dst.iter_mut().zip(row) {
+            *dv = fmadd::<FMA>(wv, c, *dv);
+        }
+    }
+}
+
+/// The order-2 pair kernel: `tdst += Wᵀ·tc` and `sdst += Wᵀ·sc` fused so
+/// each `Wᵀ` row quad is loaded once for both dual orders.
+#[inline(always)]
+fn panel_axpy2_impl<const FMA: bool>(
+    wt: &[f64],
+    tc: &[f64],
+    sc: &[f64],
+    tdst: &mut [f64],
+    sdst: &mut [f64],
+) {
+    let fan_out = tdst.len();
+    debug_assert_eq!(sdst.len(), fan_out);
+    debug_assert_eq!(tc.len(), sc.len());
+    debug_assert_eq!(wt.len(), tc.len() * fan_out);
+    let mut tquads = tc.chunks_exact(4);
+    let mut squads = sc.chunks_exact(4);
+    let mut rows = wt.chunks_exact(4 * fan_out);
+    for ((tq, sq), rq) in tquads.by_ref().zip(squads.by_ref()).zip(rows.by_ref()) {
+        let (r0, rest) = rq.split_at(fan_out);
+        let (r1, rest) = rest.split_at(fan_out);
+        let (r2, r3) = rest.split_at(fan_out);
+        for o in 0..fan_out {
+            let mut tacc = tdst[o];
+            let mut sacc = sdst[o];
+            tacc = fmadd::<FMA>(r0[o], tq[0], tacc);
+            sacc = fmadd::<FMA>(r0[o], sq[0], sacc);
+            tacc = fmadd::<FMA>(r1[o], tq[1], tacc);
+            sacc = fmadd::<FMA>(r1[o], sq[1], sacc);
+            tacc = fmadd::<FMA>(r2[o], tq[2], tacc);
+            sacc = fmadd::<FMA>(r2[o], sq[2], sacc);
+            tacc = fmadd::<FMA>(r3[o], tq[3], tacc);
+            sacc = fmadd::<FMA>(r3[o], sq[3], sacc);
+            tdst[o] = tacc;
+            sdst[o] = sacc;
+        }
+    }
+    for ((&tck, &sck), row) in tquads
+        .remainder()
+        .iter()
+        .zip(squads.remainder())
+        .zip(rows.remainder().chunks_exact(fan_out))
+    {
+        for ((tv, sv), &wv) in tdst.iter_mut().zip(sdst.iter_mut()).zip(row) {
+            *tv = fmadd::<FMA>(wv, tck, *tv);
+            *sv = fmadd::<FMA>(wv, sck, *sv);
+        }
+    }
+}
+
+/// `dst[k] += c · src[k]`.
+#[inline(always)]
+fn axpy_impl<const FMA: bool>(dst: &mut [f64], src: &[f64], c: f64) {
+    for (dv, &sv) in dst.iter_mut().zip(src) {
+        *dv = fmadd::<FMA>(c, sv, *dv);
+    }
+}
+
+/// `dst[k] += ca · a[k] + cb · b[k]` in one pass over `dst`.
+#[inline(always)]
+fn axpy2_impl<const FMA: bool>(dst: &mut [f64], a: &[f64], ca: f64, b: &[f64], cb: f64) {
+    for ((dv, &av), &bv) in dst.iter_mut().zip(a).zip(b) {
+        let mut acc = *dv;
+        acc = fmadd::<FMA>(ca, av, acc);
+        acc = fmadd::<FMA>(cb, bv, acc);
+        *dv = acc;
+    }
+}
+
+/// Four-row reverse sweep: `dst[k] += Σ_j c[j] · rows[j·n + k]` for four
+/// consecutive weight rows (`rows.len() == 4·dst.len()`), keeping each
+/// destination element register-resident across the quad.
+#[inline(always)]
+fn sweep4_impl<const FMA: bool>(dst: &mut [f64], rows: &[f64], c: [f64; 4]) {
+    let n = dst.len();
+    debug_assert_eq!(rows.len(), 4 * n);
+    let (r0, rest) = rows.split_at(n);
+    let (r1, rest) = rest.split_at(n);
+    let (r2, r3) = rest.split_at(n);
+    for k in 0..n {
+        let mut acc = dst[k];
+        acc = fmadd::<FMA>(r0[k], c[0], acc);
+        acc = fmadd::<FMA>(r1[k], c[1], acc);
+        acc = fmadd::<FMA>(r2[k], c[2], acc);
+        acc = fmadd::<FMA>(r3[k], c[3], acc);
+        dst[k] = acc;
+    }
+}
+
+/// Four-row sweep for a live (t̄, s̄) lane pair: the row quad is loaded
+/// once and pushed into both destination panels.
+#[inline(always)]
+fn sweep4_pair_impl<const FMA: bool>(
+    tdst: &mut [f64],
+    sdst: &mut [f64],
+    rows: &[f64],
+    tc: [f64; 4],
+    sc: [f64; 4],
+) {
+    let n = tdst.len();
+    debug_assert_eq!(sdst.len(), n);
+    debug_assert_eq!(rows.len(), 4 * n);
+    let (r0, rest) = rows.split_at(n);
+    let (r1, rest) = rest.split_at(n);
+    let (r2, r3) = rest.split_at(n);
+    for k in 0..n {
+        let mut tacc = tdst[k];
+        let mut sacc = sdst[k];
+        tacc = fmadd::<FMA>(r0[k], tc[0], tacc);
+        sacc = fmadd::<FMA>(r0[k], sc[0], sacc);
+        tacc = fmadd::<FMA>(r1[k], tc[1], tacc);
+        sacc = fmadd::<FMA>(r1[k], sc[1], sacc);
+        tacc = fmadd::<FMA>(r2[k], tc[2], tacc);
+        sacc = fmadd::<FMA>(r2[k], sc[2], sacc);
+        tacc = fmadd::<FMA>(r3[k], tc[3], tacc);
+        sacc = fmadd::<FMA>(r3[k], sc[3], sacc);
+        tdst[k] = tacc;
+        sdst[k] = sacc;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-tier instantiation + dispatch
+// ---------------------------------------------------------------------------
+
+/// Instantiates one generic kernel body under per-tier `#[target_feature]`
+/// wrappers and emits the runtime-dispatch entry point. The AVX-512 tier
+/// aliases the AVX2+FMA instantiation (see the module docs); NEON uses the
+/// FMA body (baseline on aarch64); every other tier takes the portable
+/// non-FMA body.
+macro_rules! define_kernel {
+    ($body:ident, $avx2:ident, $neon:ident, $scalar:ident, $disp:ident,
+     ( $( $arg:ident : $ty:ty ),* $(,)? )) => {
+        #[cfg(target_arch = "x86_64")]
+        #[target_feature(enable = "avx2,fma")]
+        unsafe fn $avx2( $( $arg : $ty ),* ) {
+            $body::<true>( $( $arg ),* )
+        }
+
+        #[cfg(target_arch = "aarch64")]
+        #[target_feature(enable = "neon")]
+        unsafe fn $neon( $( $arg : $ty ),* ) {
+            $body::<true>( $( $arg ),* )
+        }
+
+        fn $scalar( $( $arg : $ty ),* ) {
+            $body::<false>( $( $arg ),* )
+        }
+
+        #[inline]
+        pub(super) fn $disp(tier: SimdTier, $( $arg : $ty ),* ) {
+            match tier {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: fast-mode tapes only carry tiers that passed
+                // `SimdTier::supported` on this CPU (`detect` / the
+                // clamped `Tape::with_tier`).
+                SimdTier::Avx2 | SimdTier::Avx512 => unsafe { $avx2( $( $arg ),* ) },
+                #[cfg(target_arch = "aarch64")]
+                // SAFETY: as above; NEON is baseline on aarch64.
+                SimdTier::Neon => unsafe { $neon( $( $arg ),* ) },
+                _ => $scalar( $( $arg ),* ),
+            }
+        }
+    };
+}
+
+define_kernel!(panel_axpy_impl, panel_axpy_avx2, panel_axpy_neon, panel_axpy_scalar, panel_axpy,
+    (wt: &[f64], coefs: &[f64], dst: &mut [f64]));
+define_kernel!(panel_axpy2_impl, panel_axpy2_avx2, panel_axpy2_neon, panel_axpy2_scalar, panel_axpy2,
+    (wt: &[f64], tc: &[f64], sc: &[f64], tdst: &mut [f64], sdst: &mut [f64]));
+define_kernel!(axpy_impl, axpy_avx2, axpy_neon, axpy_scalar, axpy,
+    (dst: &mut [f64], src: &[f64], c: f64));
+define_kernel!(axpy2_impl, axpy2_avx2, axpy2_neon, axpy2_scalar, axpy2,
+    (dst: &mut [f64], a: &[f64], ca: f64, b: &[f64], cb: f64));
+define_kernel!(sweep4_impl, sweep4_avx2, sweep4_neon, sweep4_scalar, sweep4,
+    (dst: &mut [f64], rows: &[f64], c: [f64; 4]));
+define_kernel!(sweep4_pair_impl, sweep4_pair_avx2, sweep4_pair_neon, sweep4_pair_scalar, sweep4_pair,
+    (tdst: &mut [f64], sdst: &mut [f64], rows: &[f64], tc: [f64; 4], sc: [f64; 4]));
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_and_tier_parse_roundtrip() {
+        for m in [NumericsMode::Bitwise, NumericsMode::Fast] {
+            assert_eq!(NumericsMode::parse(m.name()).unwrap(), m);
+        }
+        for t in [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Avx512, SimdTier::Neon] {
+            assert_eq!(SimdTier::parse(t.name()).unwrap(), t);
+        }
+        assert!(NumericsMode::parse("fused").is_err());
+        assert!(SimdTier::parse("sse2").is_err());
+        assert_eq!(NumericsMode::default(), NumericsMode::Bitwise);
+    }
+
+    #[test]
+    fn detected_tier_is_supported_and_scalar_always_is() {
+        assert!(SimdTier::Scalar.supported());
+        assert!(SimdTier::detect().supported());
+    }
+
+    #[test]
+    fn kernels_match_naive_loops_on_every_dispatchable_tier() {
+        // The dispatch seam itself: every tier reachable on this CPU must
+        // compute the same quantities as naive double-rounded loops, to
+        // rounding-level tolerance (FMA tiers contract each a*b+c).
+        let fan_in = 7; // exercises the 4-quad path plus a 3-row remainder
+        let fan_out = 5;
+        let wt: Vec<f64> = (0..fan_in * fan_out)
+            .map(|i| ((i * 37 % 23) as f64 - 11.0) * 0.13)
+            .collect();
+        let coefs: Vec<f64> = (0..fan_in).map(|i| (i as f64 - 2.5) * 0.71).collect();
+        let coefs2: Vec<f64> = (0..fan_in).map(|i| (i as f64).cos()).collect();
+        let tol = 1e-14;
+        let tiers: Vec<SimdTier> =
+            [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Avx512, SimdTier::Neon]
+                .into_iter()
+                .filter(|t| t.supported())
+                .collect();
+        for &tier in &tiers {
+            // panel_axpy
+            let mut dst = vec![0.25; fan_out];
+            panel_axpy(tier, &wt, &coefs, &mut dst);
+            for o in 0..fan_out {
+                let mut want = 0.25;
+                for k in 0..fan_in {
+                    want += wt[k * fan_out + o] * coefs[k];
+                }
+                assert!((dst[o] - want).abs() <= tol * want.abs().max(1.0));
+            }
+            // panel_axpy2
+            let (mut td, mut sd) = (vec![0.0; fan_out], vec![0.0; fan_out]);
+            panel_axpy2(tier, &wt, &coefs, &coefs2, &mut td, &mut sd);
+            for o in 0..fan_out {
+                let (mut wt_sum, mut ws_sum) = (0.0, 0.0);
+                for k in 0..fan_in {
+                    wt_sum += wt[k * fan_out + o] * coefs[k];
+                    ws_sum += wt[k * fan_out + o] * coefs2[k];
+                }
+                assert!((td[o] - wt_sum).abs() <= tol * wt_sum.abs().max(1.0));
+                assert!((sd[o] - ws_sum).abs() <= tol * ws_sum.abs().max(1.0));
+            }
+            // axpy / axpy2
+            let mut dst = coefs.clone();
+            axpy(tier, &mut dst, &coefs2, 1.5);
+            for k in 0..fan_in {
+                let want = coefs[k] + 1.5 * coefs2[k];
+                assert!((dst[k] - want).abs() <= tol * want.abs().max(1.0));
+            }
+            let mut dst = vec![0.5; fan_in];
+            axpy2(tier, &mut dst, &coefs, -0.3, &coefs2, 2.0);
+            for k in 0..fan_in {
+                let want = 0.5 - 0.3 * coefs[k] + 2.0 * coefs2[k];
+                assert!((dst[k] - want).abs() <= tol * want.abs().max(1.0));
+            }
+            // sweep4 / sweep4_pair over four consecutive rows
+            let n = 6;
+            let rows: Vec<f64> = (0..4 * n).map(|i| ((i % 11) as f64 - 5.0) * 0.4).collect();
+            let c = [0.7, -1.1, 0.0, 2.3];
+            let s = [1.3, 0.2, -0.8, 0.0];
+            let mut dst = vec![1.0; n];
+            sweep4(tier, &mut dst, &rows, c);
+            let (mut td, mut sd) = (vec![1.0; n], vec![-1.0; n]);
+            sweep4_pair(tier, &mut td, &mut sd, &rows, c, s);
+            for k in 0..n {
+                let mut want = 1.0;
+                let mut wants = -1.0;
+                for j in 0..4 {
+                    want += rows[j * n + k] * c[j];
+                    wants += rows[j * n + k] * s[j];
+                }
+                assert!((dst[k] - want).abs() <= tol * want.abs().max(1.0));
+                assert!((td[k] - (want)).abs() <= tol * want.abs().max(1.0));
+                assert!((sd[k] - wants).abs() <= tol * wants.abs().max(1.0));
+            }
+        }
+    }
+}

@@ -35,7 +35,7 @@ use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{bail, Result};
 
-use super::native::{thread_chunks, NativeBackend};
+use super::native::{thread_chunks, NativeBackend, NumericsMode};
 use super::Evaluator;
 use crate::linalg::{Matrix, Workspace, WorkspaceStats};
 use crate::parallel::{self, SendPtr};
@@ -57,15 +57,36 @@ pub struct ShardedEvaluator {
 
 impl ShardedEvaluator {
     /// `shards` inner evaluators over the built-in problem catalogue
-    /// (clamped to ≥ 1). `parallel::num_threads()` shards saturate the
-    /// worker pool; more simply makes shards finer.
+    /// (clamped to ≥ 1), in the `ENGD_NUMERICS`-requested numerics mode.
+    /// `parallel::num_threads()` shards saturate the worker pool; more
+    /// simply makes shards finer.
     pub fn new(shards: usize) -> Self {
         Self::build(shards, NativeBackend::new)
+    }
+
+    /// Built-in catalogue in an explicit numerics mode, threaded into
+    /// every inner evaluator (the config/CLI path). Fast-mode shards stay
+    /// bitwise-identical to the fast-mode unsharded backend — the fast
+    /// kernels are per-point deterministic, so the shard protocol's
+    /// chunk-grid argument is mode-independent.
+    pub fn with_numerics(shards: usize, numerics: NumericsMode) -> Self {
+        Self::build(shards, || NativeBackend::with_numerics(numerics))
     }
 
     /// Sharded evaluator over a custom problem set (tests).
     pub fn with_problems(problems: Vec<ProblemSpec>, shards: usize) -> Self {
         Self::build(shards, || NativeBackend::with_problems(problems.clone()))
+    }
+
+    /// Custom problem set in an explicit numerics mode (tests).
+    pub fn with_problems_numerics(
+        problems: Vec<ProblemSpec>,
+        shards: usize,
+        numerics: NumericsMode,
+    ) -> Self {
+        Self::build(shards, || {
+            NativeBackend::with_problems_numerics(problems.clone(), numerics)
+        })
     }
 
     fn build(shards: usize, mk: impl Fn() -> NativeBackend) -> Self {
@@ -320,5 +341,32 @@ mod tests {
         let a = native.loss(&p, &theta, &xi, &xb).unwrap();
         let b = sharded.loss(&p, &theta, &xi, &xb).unwrap();
         assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+    }
+
+    #[test]
+    fn fast_mode_sharded_matches_fast_native_bitwise() {
+        // The shard == unsharded identity is mode-independent: fast
+        // kernels are per-point deterministic and the reduction reuses the
+        // same chunk grid, so fast-sharded equals fast-native bit-for-bit.
+        let native = NativeBackend::with_numerics(NumericsMode::Fast);
+        let sharded = ShardedEvaluator::with_numerics(3, NumericsMode::Fast);
+        let p = native.problem("poisson1d").unwrap();
+        let mut rng = Rng::seed_from(13);
+        let theta = init_params(&p.arch, &mut rng);
+        let mut xi = vec![0.0; p.n_interior * p.dim];
+        let mut xb = vec![0.0; p.n_boundary * p.dim];
+        rng.fill_uniform(&mut xi, 0.0, 1.0);
+        for (k, v) in xb.iter_mut().enumerate() {
+            *v = (k % 2) as f64;
+        }
+        let a = native.loss(&p, &theta, &xi, &xb).unwrap();
+        let b = sharded.loss(&p, &theta, &xi, &xb).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        let (la, ga) = native.loss_and_grad(&p, &theta, &xi, &xb).unwrap();
+        let (lb, gb) = sharded.loss_and_grad(&p, &theta, &xi, &xb).unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits());
+        for (x, y) in ga.iter().zip(&gb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 }

@@ -3,6 +3,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::json::JsonValue;
+use crate::backend::NumericsMode;
 
 /// Which optimizer drives the run (paper §4 evaluates all of these).
 #[derive(Debug, Clone, PartialEq)]
@@ -290,6 +291,12 @@ pub struct RunConfig {
     pub checkpoint_every: usize,
     /// Resume θ/φ/step from this checkpoint file.
     pub resume_from: Option<String>,
+    /// Native-kernel numerics tier: `bitwise` (default, bit-reproducible)
+    /// or `fast` (runtime-dispatched SIMD/FMA kernels, rounding-level
+    /// drift). Defaults from `ENGD_NUMERICS`; `--numerics` / the
+    /// `numerics` TOML key override it. Recorded in checkpoints — resume
+    /// refuses a mismatch.
+    pub numerics: NumericsMode,
     pub optimizer: OptimizerConfig,
 }
 
@@ -307,6 +314,7 @@ impl Default for RunConfig {
             out_dir: "results".into(),
             checkpoint_every: 0,
             resume_from: None,
+            numerics: NumericsMode::from_env(),
             optimizer: OptimizerConfig::default(),
         }
     }
@@ -337,6 +345,7 @@ impl RunConfig {
                 "out_dir" => c.out_dir = req_str(val, k)?,
                 "checkpoint_every" => c.checkpoint_every = num(val, k)? as usize,
                 "resume_from" => c.resume_from = Some(req_str(val, k)?),
+                "numerics" => c.numerics = NumericsMode::parse(&req_str(val, k)?)?,
                 "optimizer" => c.optimizer = OptimizerConfig::from_value(val)?,
                 _ => bail!("unknown config key '{k}'"),
             }
@@ -403,6 +412,17 @@ path = "fused"
     #[test]
     fn unknown_key_is_an_error() {
         let v = crate::config::toml::parse("bogus = 1").unwrap();
+        assert!(RunConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn parses_numerics_key() {
+        let v = crate::config::toml::parse(r#"numerics = "fast""#).unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.numerics, NumericsMode::Fast);
+        let v = crate::config::toml::parse(r#"numerics = "bitwise""#).unwrap();
+        assert_eq!(RunConfig::from_value(&v).unwrap().numerics, NumericsMode::Bitwise);
+        let v = crate::config::toml::parse(r#"numerics = "sloppy""#).unwrap();
         assert!(RunConfig::from_value(&v).is_err());
     }
 }

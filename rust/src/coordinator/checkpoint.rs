@@ -33,6 +33,16 @@ pub struct Checkpoint {
     /// `time_budget_s` counts time across the resume boundary. 0.0 in
     /// pre-PR-5 checkpoints (accepted: the clock restarts, as before).
     pub wall_s: f64,
+    /// Numerics mode (`NumericsMode::name`) the run was training under.
+    /// A `fast`-tier trajectory is not bitwise-continuable under `bitwise`
+    /// (and vice versa), so resume refuses a silent switch. Empty in
+    /// pre-PR-6 checkpoints (accepted, unvalidated).
+    pub numerics: String,
+    /// SIMD kernel tier (`SimdTier::name`) that was dispatched when the
+    /// checkpoint was written — provenance only, never validated (fast-tier
+    /// results are reproducible across tiers only up to rounding). Empty
+    /// under bitwise mode and in pre-PR-6 checkpoints.
+    pub simd_tier: String,
     pub theta: Vec<f64>,
     /// Optimizer auxiliary state (SPRING's φ, Adam's [t, m, v], SGD's
     /// velocity, Hessian-free's [λ, warm start], dense ENGD's [P, EMA
@@ -48,6 +58,8 @@ impl Checkpoint {
             ("step".into(), JsonValue::Number(self.step as f64)),
             ("seed".into(), JsonValue::Number(self.seed as f64)),
             ("wall_s".into(), JsonValue::Number(self.wall_s)),
+            ("numerics".into(), JsonValue::String(self.numerics.clone())),
+            ("simd_tier".into(), JsonValue::String(self.simd_tier.clone())),
             ("theta_len".into(), JsonValue::Number(self.theta.len() as f64)),
             ("phi_len".into(), JsonValue::Number(self.phi.len() as f64)),
         ]);
@@ -117,6 +129,17 @@ impl Checkpoint {
                 .get("wall_s")
                 .and_then(JsonValue::as_f64)
                 .unwrap_or(0.0),
+            // Absent in pre-PR-6 checkpoints: loads as "" (unvalidated).
+            numerics: header
+                .get("numerics")
+                .and_then(JsonValue::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            simd_tier: header
+                .get("simd_tier")
+                .and_then(JsonValue::as_str)
+                .unwrap_or_default()
+                .to_string(),
             theta,
             phi,
         })
@@ -135,6 +158,8 @@ mod tests {
             step: 123,
             seed: 42,
             wall_s: 321.75,
+            numerics: "fast".into(),
+            simd_tier: "avx2".into(),
             theta: (0..257).map(|i| (i as f64).sin() * 1e-3).collect(),
             phi: (0..257).map(|i| (i as f64).cos()).collect(),
         };
@@ -153,6 +178,8 @@ mod tests {
             step: 1,
             seed: 7,
             wall_s: 0.0,
+            numerics: "bitwise".into(),
+            simd_tier: String::new(),
             theta: vec![1.0, 2.0],
             phi: vec![],
         };
@@ -176,6 +203,8 @@ mod tests {
         drop(f);
         let ck = Checkpoint::load(&path).unwrap();
         assert_eq!(ck.wall_s, 0.0);
+        assert_eq!(ck.numerics, "");
+        assert_eq!(ck.simd_tier, "");
         assert_eq!(ck.step, 2);
         assert_eq!(ck.theta, vec![1.5]);
         std::fs::remove_file(&path).ok();

@@ -17,7 +17,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::checkpoint::Checkpoint;
-use crate::backend::Evaluator;
+use crate::backend::{Evaluator, NumericsMode, SimdTier};
 use crate::config::RunConfig;
 use crate::linalg::{Workspace, WorkspaceStats};
 use crate::metrics::{RunLogger, StepRecord};
@@ -122,6 +122,17 @@ impl<'a> Trainer<'a> {
                 ck.optimizer,
                 cfg.optimizer.kind.name()
             );
+            // A fast-tier trajectory is not bitwise-continuable under
+            // bitwise numerics (and vice versa): refuse a silent switch.
+            // Legacy checkpoints record no mode and load unvalidated.
+            anyhow::ensure!(
+                ck.numerics.is_empty() || ck.numerics == cfg.numerics.name(),
+                "checkpoint was written under --numerics {}, run uses {} \
+                 (pass --numerics {} to continue this trajectory)",
+                ck.numerics,
+                cfg.numerics.name(),
+                ck.numerics
+            );
             anyhow::ensure!(
                 ck.theta.len() == problem.n_params,
                 "checkpoint θ has {} params, problem spec says {}",
@@ -168,6 +179,13 @@ impl<'a> Trainer<'a> {
             step,
             seed: self.cfg.seed,
             wall_s,
+            numerics: self.cfg.numerics.name().to_string(),
+            // The dispatched tier is provenance, not a contract: only the
+            // fast tier's results depend on it (up to rounding).
+            simd_tier: match self.cfg.numerics {
+                NumericsMode::Bitwise => String::new(),
+                NumericsMode::Fast => SimdTier::detect().name().to_string(),
+            },
             theta: self.theta.clone(),
             phi: self.optimizer.state(),
         };
@@ -244,13 +262,21 @@ impl<'a> Trainer<'a> {
             } else {
                 f64::NAN
             };
+            // Numerics provenance rides along in the extras schema: the
+            // mode always (0 = bitwise, 1 = fast), the dispatched kernel
+            // tier only when it can affect results (fast mode).
+            let mut extra = info.extra;
+            extra.push(("numerics".into(), self.cfg.numerics.code()));
+            if self.cfg.numerics == NumericsMode::Fast {
+                extra.push(("simd_tier".into(), SimdTier::detect().code()));
+            }
             logger.log(StepRecord {
                 step: k,
                 wall_s: logger.elapsed(),
                 loss: info.loss,
                 l2_error: l2,
                 lr: info.lr_used,
-                extra: info.extra,
+                extra,
             })?;
             if self.cfg.checkpoint_every > 0 && k % self.cfg.checkpoint_every == 0 {
                 self.save_checkpoint(k, logger.elapsed())?;

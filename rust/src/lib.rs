@@ -29,10 +29,17 @@
 //!   order each coordinate needs — the operator's [`pde::DualOrder`]
 //!   mask) for the Laplacian/heat operators, hand-rolled reverse mode for
 //!   per-sample Jacobian rows, point blocks amortizing the per-layer
-//!   weight-panel setup, parallelized over collocation points. Every SIMD
-//!   lane preserves the scalar per-point FP operation order, so blocking
-//!   changes no trajectory bit. No artifacts, no PJRT client — the full
-//!   ENGD-W/SPRING/Nyström pipeline trains and is tested offline
+//!   weight-panel setup, parallelized over collocation points. The kernels
+//!   come in two numerics tiers (`--numerics bitwise|fast`, or
+//!   `ENGD_NUMERICS`): the default **bitwise** tier preserves the scalar
+//!   per-point FP operation order in every lane, so blocking changes no
+//!   trajectory bit; the opt-in **fast** tier trades that contract for
+//!   speed — explicit FMA, multi-accumulator reassociated lane reductions,
+//!   wider point blocks — dispatched at runtime to the best supported
+//!   instruction set (AVX2+FMA / NEON / scalar-fast, `ENGD_SIMD`
+//!   overridable), still per-point deterministic and within rounding-level
+//!   tolerance of the scalar reference. No artifacts, no PJRT client — the
+//!   full ENGD-W/SPRING/Nyström pipeline trains and is tested offline
 //!   (`--backend native`, the default wherever no artifact manifest
 //!   exists).
 //!

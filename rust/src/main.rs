@@ -13,6 +13,15 @@
 //! artifacts at all; `sharded:N` splits every collocation batch across N
 //! inner native evaluators (bitwise-identical results).
 //!
+//! The native kernel tiers take `--numerics {bitwise,fast}` (default:
+//! the `ENGD_NUMERICS` environment variable, else bitwise; the flag
+//! overrides the `numerics` TOML key): `bitwise` preserves the scalar per-point FP
+//! operation order exactly; `fast` enables the relaxed-numerics SIMD tier
+//! (FMA + reassociated reductions, runtime-dispatched per CPU, `ENGD_SIMD`
+//! overridable) — faster, per-point deterministic, tolerance-checked
+//! rather than bitwise. Checkpoints record the mode; resume refuses a
+//! silent switch.
+//!
 //! Examples:
 //!   engd train --problem poisson5d --opt spring --steps 300 --echo
 //!   engd train --problem poisson2d --backend native --opt engd_w --steps 200
@@ -22,7 +31,7 @@
 
 use anyhow::{bail, Result};
 
-use engd::backend::Evaluator;
+use engd::backend::{Evaluator, NumericsMode};
 use engd::cli::Args;
 use engd::config::run::{BiasMode, ExecPath, OptimizerKind, SolveMode};
 use engd::config::RunConfig;
@@ -85,6 +94,9 @@ fn print_help() {
          \x20                   native AD; sharded:N splits each batch\n\
          \x20                   across N inner evaluators, bitwise-identical\n\
          \x20                   to native)\n\
+         \x20 --numerics MODE   bitwise|fast (default bitwise, or ENGD_NUMERICS;\n\
+         \x20                   fast enables the relaxed-numerics SIMD kernel\n\
+         \x20                   tier on the native/sharded backends)\n\
          \x20 --artifacts DIR   artifact directory for PJRT (default: artifacts)\n\
          \x20 --config FILE     TOML run config (train)\n\
          \x20 --problem NAME    problem name (manifest or built-in catalogue)\n\
@@ -116,6 +128,9 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     }
     if let Some(a) = args.get("artifacts") {
         cfg.artifacts_dir = a.to_string();
+    }
+    if let Some(m) = args.get("numerics") {
+        cfg.numerics = NumericsMode::parse(m)?;
     }
     if let Some(n) = args.get("name") {
         cfg.name = n.to_string();
@@ -186,7 +201,7 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
 
 /// The backend named by the config (pjrt | native | auto).
 fn backend_for(cfg: &RunConfig) -> Result<Box<dyn Evaluator>> {
-    engd::backend::select(&cfg.backend, &cfg.artifacts_dir)
+    engd::backend::select_with_numerics(&cfg.backend, &cfg.artifacts_dir, cfg.numerics)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {

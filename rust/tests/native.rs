@@ -7,7 +7,7 @@
 //! cross-checked against the independent `mlp_forward` oracle and central
 //! finite differences on random tiny networks.
 
-use engd::backend::{Evaluator, NativeBackend};
+use engd::backend::{Evaluator, NativeBackend, NumericsMode};
 use engd::config::run::{ExecPath, OptimizerKind, SolveMode};
 use engd::config::RunConfig;
 use engd::coordinator::train;
@@ -455,6 +455,58 @@ fn checkpoint_resume_is_bitwise_for_engd_dense() {
         cfg.optimizer.line_search = false;
         cfg.optimizer.lr = 0.2;
     });
+}
+
+/// A checkpoint records its numerics mode, and resume refuses a silent
+/// bitwise↔fast switch: a fast-tier trajectory is not bitwise-continuable
+/// under bitwise kernels (and vice versa). Both sides pin the mode
+/// explicitly so the test means the same thing under `ENGD_NUMERICS=fast`
+/// CI jobs.
+#[test]
+fn resume_refuses_numerics_mode_switch() {
+    let dir = out_dir("resume-numerics");
+    let make_cfg = |numerics: NumericsMode, steps: usize| {
+        let mut cfg = RunConfig {
+            name: "resume-numerics".into(),
+            problem: "poisson1d".into(),
+            backend: "native".into(),
+            steps,
+            seed: 17,
+            eval_every: 1,
+            out_dir: dir.clone(),
+            numerics,
+            ..RunConfig::default()
+        };
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        cfg.optimizer.lr = 1e-3;
+        cfg.optimizer.line_search = false;
+        cfg
+    };
+
+    let be = NativeBackend::with_numerics(NumericsMode::Fast);
+    let mut head = make_cfg(NumericsMode::Fast, 2);
+    head.checkpoint_every = 2;
+    train(head, &be, false).unwrap();
+    let ckpt = std::path::Path::new(&dir).join("resume-numerics.ckpt");
+    assert!(ckpt.exists(), "checkpoint was not written");
+
+    // Same mode: resumes fine.
+    let be_bitwise = NativeBackend::with_numerics(NumericsMode::Bitwise);
+    let mut ok = make_cfg(NumericsMode::Fast, 1);
+    ok.name = "resume-numerics-tail".into();
+    ok.resume_from = Some(ckpt.display().to_string());
+    train(ok.clone(), &be, false).unwrap();
+
+    // Mode switch: refused with an actionable message.
+    let mut bad = ok;
+    bad.numerics = NumericsMode::Bitwise;
+    let err = train(bad, &be_bitwise, false).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("--numerics"),
+        "expected a numerics-mismatch error, got: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Appendix A.1 regression: with `ema > 0` and the *zero* Gramian init,

@@ -313,6 +313,33 @@ fn sharded_loss_grad_partials_are_pooled() {
     assert!(stats.reuses > 0, "pool never reused: {stats:?}");
 }
 
+/// The unsharded native `loss_and_grad` draws its per-chunk gradient
+/// partials from the backend's scratch pool too (same contract as the
+/// sharded reduction partials): warm once, then steady-state steps must
+/// only reuse — `scratch_stats().fresh_allocs` frozen.
+#[test]
+fn native_loss_grad_partials_are_pooled() {
+    let _guard = serialized();
+    let be = NativeBackend::new();
+    let (p, theta, x_int, x_bnd, _) = problem_inputs(&be, "poisson2d", 29);
+
+    // Warm-up: the first call may draw fresh pool buffers.
+    be.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap();
+    let fresh = be.scratch_stats().fresh_allocs;
+    assert!(fresh > 0, "partials never touched the scratch pool");
+
+    // Steady state: repeated grad steps must only reuse.
+    for _ in 0..5 {
+        be.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap();
+    }
+    let stats = be.scratch_stats();
+    assert_eq!(
+        stats.fresh_allocs, fresh,
+        "steady-state native loss_and_grad drew fresh partial buffers: {stats:?}"
+    );
+    assert!(stats.reuses > 0, "pool never reused: {stats:?}");
+}
+
 #[test]
 fn sharded_training_trajectory_is_bitwise_identical_to_native() {
     let _guard = serialized();

@@ -1,0 +1,136 @@
+//! Large-batch dual-space solve scaling: poisson2d at batch sizes up to
+//! 40960 — 10× the previous `gpu_efficient` ceiling (4096).
+//!
+//! The paper's Woodbury move (eq. 5) puts the solve in sample space, so the
+//! batch size N is the axis that stresses it. This bench trains the scaled
+//! `poisson2d_n{N}` ladder through the pooled matrix-free tier — Nyström
+//! sketches `Y = J(JᵀΩ)` and PCG matvecs `J(Jᵀv)` never form the N×N
+//! kernel, and every loop buffer is drawn from the step workspace — and
+//! reports wall-clock scaling (seconds/step vs N) for
+//!
+//! * ENGD-W + GPU-efficient Nyström (sketch-and-solve, Alg. 2), and
+//! * SPRING + Nyström-PCG (sketch-and-precondition, §3.3),
+//!
+//! writing the machine-readable summary to `BENCH_large_batch.json`.
+//! The sketch size is capped at 512 columns so the tall factors stay
+//! O(N·ℓ) as N grows; per-arm budgets scale via `ENGD_BENCH_BUDGET`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{budget_seconds, print_table, run_arms, Arm};
+use engd::config::json::{self, JsonValue};
+use engd::config::run::{ExecPath, OptimizerKind, SolveMode};
+use engd::config::OptimizerConfig;
+
+/// Sketch ℓ ≈ min(10% of N, 512) expressed as the ratio the config wants.
+fn capped_sketch_ratio(n: usize) -> f64 {
+    let ell = (n / 10).clamp(64, 512);
+    ell as f64 / n as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let backend = common::backend()?;
+    let budget = budget_seconds(15.0);
+    let ladder = [4096usize, 8192, 16384, 40960];
+
+    let mut records: Vec<JsonValue> = Vec::new();
+    for &n in &ladder {
+        let problem = format!("poisson2d_n{n}");
+        let ratio = capped_sketch_ratio(n);
+        let arms = vec![
+            Arm::new(
+                "engd_w-nystrom_gpu",
+                &problem,
+                OptimizerConfig {
+                    kind: OptimizerKind::EngdW,
+                    damping: 1e-6,
+                    line_search: true,
+                    solve: SolveMode::NystromGpu,
+                    sketch_ratio: ratio,
+                    path: ExecPath::Decomposed,
+                    ..OptimizerConfig::default()
+                },
+            ),
+            Arm::new(
+                "spring-nystrom_pcg",
+                &problem,
+                OptimizerConfig {
+                    kind: OptimizerKind::Spring,
+                    damping: 1e-6,
+                    momentum: 0.9,
+                    line_search: true,
+                    solve: SolveMode::NystromPcg,
+                    sketch_ratio: ratio,
+                    cg_iters: 20,
+                    cg_tol: 1e-8,
+                    path: ExecPath::Decomposed,
+                    ..OptimizerConfig::default()
+                },
+            ),
+        ];
+        let tag = format!("large-batch-{problem}");
+        let reports = run_arms(&tag, backend.as_ref(), &arms, budget, 100_000);
+        print_table(
+            &format!(
+                "Large batch — {problem} (N = {n}, sketch ℓ ≈ {:.0}): pooled \
+                 dual-space solves, wall-clock scaling",
+                ratio * n as f64
+            ),
+            &arms,
+            &reports,
+        );
+        for (arm, rep) in arms.iter().zip(&reports) {
+            let mut rec = vec![
+                ("problem".into(), JsonValue::String(problem.clone())),
+                ("batch".into(), JsonValue::Number(n as f64)),
+                ("arm".into(), JsonValue::String(arm.tag.clone())),
+                ("sketch_ratio".into(), JsonValue::Number(ratio)),
+            ];
+            match rep {
+                Some(r) => {
+                    let s_per_step = if r.steps_done > 0 {
+                        r.wall_s / r.steps_done as f64
+                    } else {
+                        f64::NAN
+                    };
+                    rec.push(("steps".into(), JsonValue::Number(r.steps_done as f64)));
+                    rec.push(("wall_s".into(), JsonValue::Number(r.wall_s)));
+                    rec.push(("s_per_step".into(), JsonValue::Number(s_per_step)));
+                    rec.push(("best_l2".into(), JsonValue::Number(r.best_l2)));
+                    rec.push(("final_loss".into(), JsonValue::Number(r.final_loss)));
+                }
+                None => rec.push(("failed".into(), JsonValue::Bool(true))),
+            }
+            records.push(JsonValue::Object(rec));
+        }
+    }
+
+    // Wall-clock scaling summary: seconds/step vs batch, per arm.
+    println!("\n=== wall-clock scaling (s/step vs N) ===");
+    for rec in &records {
+        let num = |k: &str| rec.get(k).and_then(JsonValue::as_f64);
+        if let (Some(arm), Some(n), Some(sps)) = (
+            rec.get("arm").and_then(JsonValue::as_str),
+            num("batch"),
+            num("s_per_step"),
+        ) {
+            println!("{arm:<22} N={n:>6.0}  {sps:>9.4} s/step");
+        }
+    }
+
+    let out = JsonValue::Object(vec![
+        ("bench".into(), JsonValue::String("large_batch".into())),
+        (
+            "ladder".into(),
+            JsonValue::Array(ladder.iter().map(|&n| JsonValue::Number(n as f64)).collect()),
+        ),
+        ("records".into(), JsonValue::Array(records)),
+    ]);
+    let path = "BENCH_large_batch.json";
+    match std::fs::write(path, json::to_string(&out) + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    Ok(())
+}

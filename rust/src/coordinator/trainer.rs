@@ -248,6 +248,7 @@ impl<'a> Trainer<'a> {
                 rng: &mut step_rng,
                 ws: &mut self.workspace,
                 diagnostics: evaluate,
+                numerics: self.cfg.numerics,
             };
             let info = self
                 .optimizer

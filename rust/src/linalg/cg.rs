@@ -98,10 +98,93 @@ pub fn cg_solve_warm(
     }
 }
 
+/// Pooled warm-started CG: `apply` writes `A v` into a caller-provided
+/// buffer (so the operator side can also run allocation-free) and every
+/// loop vector (x, r, p, Ap) is drawn from `ws` — steady-state iterations
+/// never touch the allocator. Given the same operator values the iterates
+/// match [`cg_solve_warm`] bitwise. The returned `x` lives in pooled
+/// storage; recycle it into `ws` when done.
+pub fn cg_solve_warm_pooled(
+    mut apply: impl FnMut(&[f64], &mut [f64]),
+    b: &[f64],
+    x0: Option<&[f64]>,
+    max_iters: usize,
+    tol: f64,
+    ws: &mut super::workspace::Workspace,
+) -> CgOutcome {
+    let n = b.len();
+    let bnorm = super::vec_ops::norm2(b);
+    if bnorm == 0.0 {
+        return CgOutcome {
+            x: ws.take(n),
+            iterations: 0,
+            rel_residual: 0.0,
+            converged: true,
+        };
+    }
+    if let Some(x0) = x0 {
+        assert_eq!(x0.len(), n, "cg warm-start length mismatch");
+    }
+    let mut x = ws.take_scratch(n);
+    let mut r = ws.take_scratch(n);
+    let mut ap = ws.take_scratch(n);
+    match x0 {
+        Some(x0) if x0.iter().any(|&v| v != 0.0) => {
+            apply(x0, &mut ap);
+            for ((ri, bi), ai) in r.iter_mut().zip(b).zip(&ap) {
+                *ri = *bi - *ai;
+            }
+            x.copy_from_slice(x0);
+        }
+        _ => {
+            x.fill(0.0);
+            r.copy_from_slice(b);
+        }
+    }
+    let mut p = ws.take_scratch(n);
+    p.copy_from_slice(&r);
+    let mut rs = super::vec_ops::dot(&r, &r);
+
+    let mut iterations = 0;
+    for _ in 0..max_iters {
+        apply(&p, &mut ap);
+        let pap = super::vec_ops::dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            // Operator is not PD at this damping (or numerics broke down):
+            // return the best iterate so far, flagged unconverged.
+            break;
+        }
+        let alpha = rs / pap;
+        super::vec_ops::axpy(alpha, &p, &mut x);
+        super::vec_ops::axpy(-alpha, &ap, &mut r);
+        iterations += 1;
+        let rs_new = super::vec_ops::dot(&r, &r);
+        if rs_new.sqrt() <= tol * bnorm {
+            rs = rs_new;
+            break;
+        }
+        let beta = rs_new / rs;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+    }
+    ws.recycle(p);
+    ws.recycle(ap);
+    ws.recycle(r);
+    let rel = rs.sqrt() / bnorm;
+    CgOutcome {
+        x,
+        iterations,
+        rel_residual: rel,
+        converged: rel <= tol,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::Matrix;
+    use crate::linalg::{Matrix, Workspace};
     use crate::rng::Rng;
 
     #[test]
@@ -166,5 +249,48 @@ mod tests {
         let out = cg_solve(|v| v.to_vec(), &[0.0; 4], 10, 1e-10);
         assert!(out.converged);
         assert_eq!(out.x, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn pooled_variant_matches_allocating_bitwise_and_freezes_the_pool() {
+        let mut rng = Rng::seed_from(4);
+        let n = 35;
+        let mut g = Matrix::zeros(n, n);
+        rng.fill_normal(g.data_mut());
+        let a = g.gram().add_diag(1.0);
+        let mut b = vec![0.0; n];
+        rng.fill_normal(&mut b);
+        let mut x0 = vec![0.0; n];
+        rng.fill_normal(&mut x0);
+
+        for warm in [None, Some(x0.as_slice())] {
+            let reference = cg_solve_warm(|v| a.matvec(v), &b, warm, 2 * n, 1e-10);
+            let mut ws = Workspace::new();
+            let pooled = cg_solve_warm_pooled(
+                |v, out| a.matvec_into(v, out),
+                &b,
+                warm,
+                2 * n,
+                1e-10,
+                &mut ws,
+            );
+            assert_eq!(reference.iterations, pooled.iterations);
+            for (x, y) in reference.x.iter().zip(&pooled.x) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            ws.recycle(pooled.x);
+            // Steady state: a rerun draws everything from the pool.
+            let frozen = (ws.stats().fresh_allocs, ws.stats().grown);
+            let again = cg_solve_warm_pooled(
+                |v, out| a.matvec_into(v, out),
+                &b,
+                warm,
+                2 * n,
+                1e-10,
+                &mut ws,
+            );
+            ws.recycle(again.x);
+            assert_eq!((ws.stats().fresh_allocs, ws.stats().grown), frozen);
+        }
     }
 }

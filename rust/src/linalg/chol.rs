@@ -35,8 +35,13 @@ impl Cholesky {
     /// loops can recycle the buffer into their [`super::Workspace`] instead
     /// of leaking it out of the pool.
     ///
-    /// Right-looking column algorithm with the trailing update parallelized
-    /// over rows. Fails (rather than producing NaNs) if a pivot is not
+    /// Blocked right-looking panel algorithm: an `NB`-column diagonal panel
+    /// is factored serially, then every trailing row sweeps across the whole
+    /// panel in a single worker-pool dispatch (one dispatch per panel instead
+    /// of one per column). Each element keeps the exact per-element formulas
+    /// of the unblocked column algorithm — the pivot's sequential Σx² and the
+    /// `vec_ops::dot` prefix dot — so the factor is bitwise-identical at
+    /// every pool width. Fails (rather than producing NaNs) if a pivot is not
     /// strictly positive — the caller decides how to re-damp.
     pub fn factor_from_recoverable(a: Matrix) -> Result<Self, (Matrix, anyhow::Error)> {
         if a.rows() != a.cols() {
@@ -49,50 +54,69 @@ impl Cholesky {
         }
         let n = a.rows();
         let mut l = a;
-        for j in 0..n {
-            // Pivot: d = sqrt(A[j,j] - L[j,:j]·L[j,:j])
-            let ljj = {
-                let row_j = l.row(j);
-                let s: f64 = row_j[..j].iter().map(|x| x * x).sum();
-                row_j[j] - s
-            };
-            if ljj <= 0.0 || !ljj.is_finite() {
-                let e = anyhow::anyhow!(
-                    "cholesky: non-positive pivot {ljj:.3e} at column {j} \
-                     (matrix is not PD at this damping)"
-                );
-                return Err((l, e));
-            }
-            let d = ljj.sqrt();
-            l[(j, j)] = d;
-            // Column scale + it is cheaper to fold the trailing update into
-            // each row's dot against row j (left-looking within the row):
-            //   L[i,j] = (A[i,j] - L[i,:j]·L[j,:j]) / d
-            let cols = n;
-            if n - j - 1 > 256 {
-                let lp = SendPtr(l.data_mut().as_mut_ptr());
-                par_chunks(n - j - 1, |s, e| {
-                    for off in s..e {
-                        let i = j + 1 + off;
-                        // SAFETY: row j (read-only here) and the written slot
-                        // (i, j) live in disjoint rows per thread; all reads
-                        // below column j are never written in this sweep.
-                        unsafe {
-                            let row_i =
-                                std::slice::from_raw_parts(lp.get().add(i * cols), j + 1);
-                            let row_j =
-                                std::slice::from_raw_parts(lp.get().add(j * cols), j);
-                            let s = super::vec_ops::dot(&row_i[..j], row_j);
-                            *lp.get().add(i * cols + j) = (row_i[j] - s) / d;
-                        }
-                    }
-                });
-            } else {
-                for i in j + 1..n {
+        /// Panel width of the blocked factorization (columns per dispatch).
+        const NB: usize = 64;
+        let cols = n;
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + NB).min(n);
+            // (1) Diagonal panel: factor columns j0..j1 restricted to rows
+            // j0..j1 (serial — the panel carries the sequential dependency).
+            for j in j0..j1 {
+                // Pivot: d = sqrt(A[j,j] - L[j,:j]·L[j,:j])
+                let ljj = {
+                    let row_j = l.row(j);
+                    let s: f64 = row_j[..j].iter().map(|x| x * x).sum();
+                    row_j[j] - s
+                };
+                if ljj <= 0.0 || !ljj.is_finite() {
+                    let e = anyhow::anyhow!(
+                        "cholesky: non-positive pivot {ljj:.3e} at column {j} \
+                         (matrix is not PD at this damping)"
+                    );
+                    return Err((l, e));
+                }
+                let d = ljj.sqrt();
+                l[(j, j)] = d;
+                for i in j + 1..j1 {
                     let s = super::vec_ops::dot(&l.row(i)[..j], &l.row(j)[..j]);
                     l[(i, j)] = (l[(i, j)] - s) / d;
                 }
             }
+            // (2) Trailing-row panel sweep: rows j1..n fill columns j0..j1.
+            // Each row is owned by one worker slot and walks the panel left
+            // to right, so every prefix L[i,:j] it reads is already final:
+            //   L[i,j] = (A[i,j] - L[i,:j]·L[j,:j]) / L[j,j]
+            if n - j1 > 64 {
+                let lp = SendPtr(l.data_mut().as_mut_ptr());
+                par_chunks(n - j1, |s, e| {
+                    for off in s..e {
+                        let i = j1 + off;
+                        // SAFETY: panel rows j0..j1 are read-only here; each
+                        // trailing row i is written only by its own slot, and
+                        // reads of row i stay left of the column it writes.
+                        unsafe {
+                            for j in j0..j1 {
+                                let row_i =
+                                    std::slice::from_raw_parts(lp.get().add(i * cols), j + 1);
+                                let row_j =
+                                    std::slice::from_raw_parts(lp.get().add(j * cols), j + 1);
+                                let s = super::vec_ops::dot(&row_i[..j], &row_j[..j]);
+                                *lp.get().add(i * cols + j) = (row_i[j] - s) / row_j[j];
+                            }
+                        }
+                    }
+                });
+            } else {
+                for i in j1..n {
+                    for j in j0..j1 {
+                        let s = super::vec_ops::dot(&l.row(i)[..j], &l.row(j)[..j]);
+                        let d = l[(j, j)];
+                        l[(i, j)] = (l[(i, j)] - s) / d;
+                    }
+                }
+            }
+            j0 = j1;
         }
         // Zero the strict upper triangle so `l` is a clean factor.
         for i in 0..n {
@@ -114,8 +138,36 @@ impl Cholesky {
 
     /// Solve `A x = b` (forward + back substitution).
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        let y = self.solve_lower(b);
-        self.solve_upper(&y)
+        let mut x = vec![0.0; self.l.rows()];
+        self.solve_into(b, &mut x);
+        x
+    }
+
+    /// Pooled solve `A x = b` into a caller-provided (workspace) buffer.
+    ///
+    /// The forward substitution writes `y` into `x` and the back
+    /// substitution then runs in place, replaying the exact arithmetic of
+    /// [`Cholesky::solve_lower`] + [`Cholesky::solve_upper`] — bitwise equal
+    /// to the allocating [`Cholesky::solve`] with zero allocations.
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64]) {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        assert_eq!(x.len(), n);
+        // Forward: L y = b (y lives in x).
+        for i in 0..n {
+            let s = super::vec_ops::dot(&self.l.row(i)[..i], &x[..i]);
+            x[i] = (b[i] - s) / self.l[(i, i)];
+        }
+        // Backward: Lᵀ x = y, in place.
+        for i in (0..n).rev() {
+            x[i] /= self.l[(i, i)];
+            let xi = x[i];
+            // Eliminate column i from the remaining rows: x[:i] -= L[i,:i]·xi
+            let row_i = self.l.row(i);
+            for k in 0..i {
+                x[k] -= row_i[k] * xi;
+            }
+        }
     }
 
     /// Solve `L y = b`.

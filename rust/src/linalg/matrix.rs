@@ -207,15 +207,45 @@ impl Matrix {
 
     /// `y = A @ x` (thread-parallel over rows).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Pooled `y = A @ x` writing into a caller-provided (workspace) buffer.
+    ///
+    /// Each output element is a single fixed-order row dot, so this matches
+    /// [`Matrix::matvec`] bitwise at every pool width.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(self.cols, x.len(), "matvec shape mismatch");
-        crate::parallel::par_map(self.rows, |i| super::vec_ops::dot(self.row(i), x))
+        assert_eq!(self.rows, y.len(), "matvec output length mismatch");
+        let y_ptr = crate::parallel::SendPtr(y.as_mut_ptr());
+        par_chunks(self.rows, |start, end| {
+            // SAFETY: disjoint row ranges per thread.
+            let y_chunk: &mut [f64] =
+                unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(start), end - start) };
+            for (yi, i) in y_chunk.iter_mut().zip(start..end) {
+                *yi = super::vec_ops::dot(self.row(i), x);
+            }
+        });
     }
 
     /// `y = Aᵀ @ x` without forming the transpose (accumulates rows).
     pub fn tr_matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(self.rows, x.len(), "tr_matvec shape mismatch");
-        // Parallel over column chunks to keep writes disjoint.
         let mut y = vec![0.0; self.cols];
+        self.tr_matvec_into(x, &mut y);
+        y
+    }
+
+    /// Pooled `y = Aᵀ @ x` writing into a caller-provided (workspace) buffer.
+    ///
+    /// Accumulates rows in ascending `i` within disjoint 512-column chunks —
+    /// the same per-element order as the allocating variant at any width.
+    pub fn tr_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(self.rows, x.len(), "tr_matvec shape mismatch");
+        assert_eq!(self.cols, y.len(), "tr_matvec output length mismatch");
+        // Parallel over column chunks to keep writes disjoint.
+        y.fill(0.0);
         let y_ptr = crate::parallel::SendPtr(y.as_mut_ptr());
         let cols = self.cols;
         par_chunks(self.cols.div_ceil(512), |cstart, cend| {
@@ -238,7 +268,6 @@ impl Matrix {
                 }
             }
         });
-        y
     }
 
     /// Effective FLOP count of `matmul` with `other` (perf reporting).

@@ -5,22 +5,31 @@
 //!
 //! Contents:
 //! * [`Matrix`] — row-major dense matrix with blocked, multi-threaded
-//!   products (`matmul`, `gram`, `matvec`, ...).
+//!   products (`matmul`, `gram`, `matvec`, ...), each with a pooled
+//!   `*_into` twin (`matvec_into`, `tr_matvec_into`) that writes into
+//!   caller-provided buffers with bitwise-identical arithmetic.
 //! * [`ops`] — fused BLAS-style transpose products (`matmul_tn` = AᵀB,
 //!   `matmul_nt` = ABᵀ, `gram_t` = AᵀA) plus `*_into` variants writing to
-//!   caller-provided buffers; no transpose is ever materialized.
+//!   caller-provided buffers; no transpose is ever materialized. The
+//!   `*_fast` variants are the opt-in f32-compute/f64-accumulate tier of
+//!   `--numerics fast`.
 //! * [`Workspace`] — the step-buffer pool the trainer threads through
-//!   `StepEnv` so per-step Gram/sketch/factor allocations are recycled.
-//! * [`chol`] — Cholesky factorization + triangular/multi-RHS solves (the
-//!   exact kernel solve of ENGD-W, paper eq. 5), with in-place `factor_from`
-//!   over pooled buffers.
+//!   `StepEnv` so per-step Gram/sketch/factor allocations are recycled
+//!   (f64 and, for the fast tier's packed operands, f32 buffers).
+//! * [`chol`] — blocked panel Cholesky factorization + triangular/multi-RHS
+//!   solves (the exact kernel solve of ENGD-W, paper eq. 5): diagonal
+//!   panels factor serially, trailing rows sweep whole panels per pool
+//!   dispatch, and the result is bitwise-identical at every thread width.
+//!   `solve_into` is the pooled solve of the hot paths.
 //! * [`eigh`] — cyclic Jacobi symmetric eigendecomposition (the SVD-class
 //!   factorization used by the *standard stable* Nyström baseline and the
 //!   spectral diagnostics).
 //! * [`qr`] — Householder QR (test-matrix orthonormalization in the stable
-//!   Nyström baseline).
+//!   Nyström baseline); reflector applications fan out per column over the
+//!   worker pool with per-column arithmetic unchanged.
 //! * [`cg`] — preconditioned conjugate gradients on a matrix-free operator
-//!   (the Hessian-free baseline, Martens 2010).
+//!   (the Hessian-free baseline, Martens 2010); `cg_solve_warm_pooled` is
+//!   the zero-allocation loop the optimizers run.
 
 mod cg;
 mod chol;
@@ -31,7 +40,7 @@ mod qr;
 mod vec_ops;
 mod workspace;
 
-pub use cg::{cg_solve, cg_solve_warm, CgOutcome};
+pub use cg::{cg_solve, cg_solve_warm, cg_solve_warm_pooled, CgOutcome};
 pub use chol::Cholesky;
 pub use eigh::{eigh, eigh_into, Eigh};
 pub use matrix::Matrix;

@@ -18,7 +18,15 @@
 //! accumulation order per output element matches the j-innermost axpy
 //! schedule, so fused and materialized paths agree to rounding.
 
+//!
+//! The `*_fast` variants are the relaxed-numerics tier (`--numerics fast`):
+//! operands are packed once into workspace-pooled f32 buffers and products
+//! are formed in f32 but accumulated in f64, halving operand bandwidth on
+//! the Gram/sketch hot spots. They are tolerance-verified against the f64
+//! kernels and never run in the default bitwise mode.
+
 use super::matrix::{Matrix, KC, MC};
+use super::workspace::Workspace;
 use crate::parallel::{par_chunks, par_dynamic, SendPtr};
 
 impl Matrix {
@@ -269,6 +277,203 @@ impl Matrix {
             }
         }
     }
+
+    // ----- relaxed-numerics (f32-compute / f64-accumulate) tier ----------
+
+    /// Pack the row-major buffer into a pooled f32 copy (fast tier only).
+    fn pack_f32(&self, ws: &mut Workspace) -> Vec<f32> {
+        let mut buf = ws.take_scratch_f32(self.rows() * self.cols());
+        for (dst, &src) in buf.iter_mut().zip(self.data()) {
+            *dst = src as f32;
+        }
+        buf
+    }
+
+    /// Fast-tier `C = A @ B`: f32 operand panels, f64 accumulators.
+    pub fn matmul_into_fast(&self, b: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        let (m, k_dim) = (self.rows(), self.cols());
+        let n = b.cols();
+        assert_eq!(k_dim, b.rows(), "matmul shape mismatch: {m}x{k_dim} @ {}x{n}", b.rows());
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (m, n),
+            "matmul_into_fast output must be {m}x{n}"
+        );
+        let a32 = self.pack_f32(ws);
+        let b32 = b.pack_f32(ws);
+        out.data_mut().fill(0.0);
+        let c_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        par_chunks(m.div_ceil(MC), |pstart, pend| {
+            for panel in pstart..pend {
+                let i0 = panel * MC;
+                let i1 = (i0 + MC).min(m);
+                for k0 in (0..k_dim).step_by(KC) {
+                    let k1 = (k0 + KC).min(k_dim);
+                    for i in i0..i1 {
+                        // SAFETY: each thread owns disjoint row panels of C.
+                        let c_row: &mut [f64] = unsafe {
+                            std::slice::from_raw_parts_mut(c_ptr.get().add(i * n), n)
+                        };
+                        let a_row = &a32[i * k_dim..(i + 1) * k_dim];
+                        for k in k0..k1 {
+                            let aik = a_row[k];
+                            if aik == 0.0 {
+                                continue;
+                            }
+                            let b_row = &b32[k * n..(k + 1) * n];
+                            for (c, &bv) in c_row.iter_mut().zip(b_row) {
+                                *c += (aik * bv) as f64;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        ws.recycle_f32(b32);
+        ws.recycle_f32(a32);
+    }
+
+    /// Fast-tier `C = Aᵀ @ B` (the sketch map `JᵀΩ` under `--numerics fast`).
+    pub fn matmul_tn_into_fast(&self, b: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        let (k_dim, m) = (self.rows(), self.cols());
+        let n = b.cols();
+        assert_eq!(
+            k_dim,
+            b.rows(),
+            "matmul_tn shape mismatch: ({k_dim}x{m})ᵀ @ {}x{n}",
+            b.rows()
+        );
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (m, n),
+            "matmul_tn_into_fast output must be {m}x{n}"
+        );
+        let a32 = self.pack_f32(ws);
+        let b32 = b.pack_f32(ws);
+        out.data_mut().fill(0.0);
+        let c_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        par_chunks(m.div_ceil(MC), |pstart, pend| {
+            for panel in pstart..pend {
+                let i0 = panel * MC;
+                let i1 = (i0 + MC).min(m);
+                for k0 in (0..k_dim).step_by(KC) {
+                    let k1 = (k0 + KC).min(k_dim);
+                    for k in k0..k1 {
+                        let a_row = &a32[k * m..(k + 1) * m];
+                        let b_row = &b32[k * n..(k + 1) * n];
+                        for i in i0..i1 {
+                            let aki = a_row[i];
+                            if aki == 0.0 {
+                                continue;
+                            }
+                            // SAFETY: disjoint C row panels per thread.
+                            let c_row: &mut [f64] = unsafe {
+                                std::slice::from_raw_parts_mut(c_ptr.get().add(i * n), n)
+                            };
+                            for (c, &bv) in c_row.iter_mut().zip(b_row) {
+                                *c += (aki * bv) as f64;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        ws.recycle_f32(b32);
+        ws.recycle_f32(a32);
+    }
+
+    /// Fast-tier Gram product `K = A @ Aᵀ` (eq. 5's kernel build).
+    pub fn gram_into_fast(&self, out: &mut Matrix, ws: &mut Workspace) {
+        let n = self.rows();
+        let p = self.cols();
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (n, n),
+            "gram_into_fast output must be {n}x{n}"
+        );
+        let a32 = self.pack_f32(ws);
+        let k_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        par_chunks(n, |istart, iend| {
+            for i in istart..iend {
+                let ai = &a32[i * p..(i + 1) * p];
+                // SAFETY: thread writes only rows in [istart, iend).
+                let k_row: &mut [f64] =
+                    unsafe { std::slice::from_raw_parts_mut(k_ptr.get().add(i * n), n) };
+                for j in 0..=i {
+                    k_row[j] = dot_f32(ai, &a32[j * p..(j + 1) * p]);
+                }
+            }
+        });
+        ws.recycle_f32(a32);
+        // Mirror the strict lower triangle.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                out[(i, j)] = out[(j, i)];
+            }
+        }
+    }
+
+    /// Fast-tier column Gramian `G = Aᵀ @ A` (dense ENGD's P×P matrix).
+    pub fn gram_t_into_fast(&self, out: &mut Matrix, ws: &mut Workspace) {
+        let p = self.cols();
+        let n_rows = self.rows();
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (p, p),
+            "gram_t_into_fast output must be {p}x{p}"
+        );
+        let a32 = self.pack_f32(ws);
+        out.data_mut().fill(0.0);
+        let g_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        par_dynamic(p.div_ceil(MC), |panel| {
+            let i0 = panel * MC;
+            let i1 = (i0 + MC).min(p);
+            for k in 0..n_rows {
+                let a_row = &a32[k * p..(k + 1) * p];
+                for i in i0..i1 {
+                    let aki = a_row[i];
+                    if aki == 0.0 {
+                        continue;
+                    }
+                    // SAFETY: disjoint G row panels per work item; only the
+                    // suffix [i, p) of row i (the upper triangle) is written.
+                    let g_row: &mut [f64] = unsafe {
+                        std::slice::from_raw_parts_mut(g_ptr.get().add(i * p + i), p - i)
+                    };
+                    for (g, &av) in g_row.iter_mut().zip(&a_row[i..]) {
+                        *g += (aki * av) as f64;
+                    }
+                }
+            }
+        });
+        ws.recycle_f32(a32);
+        // Mirror the strict upper triangle down.
+        for i in 0..p {
+            for j in (i + 1)..p {
+                out[(j, i)] = out[(i, j)];
+            }
+        }
+    }
+}
+
+/// 4-way unrolled dot with f32 products and f64 partial sums (fast tier).
+#[inline]
+fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += (a[i] * b[i]) as f64;
+        s1 += (a[i + 1] * b[i + 1]) as f64;
+        s2 += (a[i + 2] * b[i + 2]) as f64;
+        s3 += (a[i + 3] * b[i + 3]) as f64;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += (a[i] * b[i]) as f64;
+    }
+    s
 }
 
 #[cfg(test)]
@@ -351,6 +556,38 @@ mod tests {
         let mut k = Matrix::from_fn(20, 20, |_, _| f64::NAN);
         a.gram_into(&mut k);
         assert!(k.max_abs_diff(&a.matmul(&a.transpose())) < 1e-10);
+    }
+
+    #[test]
+    fn fast_tier_matches_f64_within_tolerance() {
+        let mut rng = Rng::seed_from(9);
+        let mut ws = Workspace::new();
+        let a = random_matrix(&mut rng, 48, 24);
+        let b = random_matrix(&mut rng, 48, 7);
+        let tol = 1e-3;
+
+        let mut tn = Matrix::zeros(24, 7);
+        a.matmul_tn_into_fast(&b, &mut tn, &mut ws);
+        assert!(tn.max_abs_diff(&a.matmul_tn(&b)) < tol);
+
+        let c = random_matrix(&mut rng, 24, 9);
+        let mut mm = Matrix::zeros(48, 9);
+        a.matmul_into_fast(&c, &mut mm, &mut ws);
+        assert!(mm.max_abs_diff(&a.matmul(&c)) < tol);
+
+        let mut k = Matrix::zeros(48, 48);
+        a.gram_into_fast(&mut k, &mut ws);
+        assert!(k.max_abs_diff(&a.gram()) < tol);
+
+        let mut g = Matrix::zeros(24, 24);
+        a.gram_t_into_fast(&mut g, &mut ws);
+        assert!(g.max_abs_diff(&a.gram_t()) < tol);
+
+        // Steady state: a second pass re-packs into the pooled f32 buffers.
+        let fresh = ws.stats().fresh_allocs;
+        a.gram_into_fast(&mut k, &mut ws);
+        a.matmul_tn_into_fast(&b, &mut tn, &mut ws);
+        assert_eq!(ws.stats().fresh_allocs, fresh, "fast tier allocated at steady state");
     }
 
     #[test]

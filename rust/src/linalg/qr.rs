@@ -43,30 +43,31 @@ pub fn thin_qr_into(a: &Matrix, q: &mut Matrix, ws: &mut Workspace) {
     let mut vs = ws.take_scratch(n * m);
     for k in 0..n {
         // Build the reflector for column k below the diagonal.
-        let v = &mut vs[k * m..k * m + (m - k)];
-        for i in k..m {
-            v[i - k] = r[(i, k)];
-        }
-        let alpha = -v[0].signum() * super::vec_ops::norm2(v);
-        if alpha == 0.0 {
-            // Degenerate (zero) column: identity reflector.
-            betas[k] = 0.0;
-            continue;
-        }
-        v[0] -= alpha;
-        let vnorm2 = super::vec_ops::dot(v, v);
-        let beta = if vnorm2 > 0.0 { 2.0 / vnorm2 } else { 0.0 };
-        // Apply to the trailing columns of R.
-        for j in k..n {
-            let mut s = 0.0;
+        let beta = {
+            let v = &mut vs[k * m..k * m + (m - k)];
             for i in k..m {
-                s += v[i - k] * r[(i, j)];
+                v[i - k] = r[(i, k)];
             }
-            s *= beta;
-            for i in k..m {
-                r[(i, j)] -= s * v[i - k];
+            let alpha = -v[0].signum() * super::vec_ops::norm2(v);
+            if alpha == 0.0 {
+                // Degenerate (zero) column: identity reflector.
+                betas[k] = 0.0;
+                continue;
             }
-        }
+            v[0] -= alpha;
+            let vnorm2 = super::vec_ops::dot(v, v);
+            if vnorm2 > 0.0 {
+                2.0 / vnorm2
+            } else {
+                0.0
+            }
+        };
+        // Apply to the trailing columns of R. Columns are independent and
+        // each is updated with the same ascending-`i` arithmetic whether the
+        // sweep runs serial or panel-parallel, so the factorization stays
+        // bitwise-identical at every pool width.
+        let v = &vs[k * m..k * m + (m - k)];
+        apply_reflector(v, beta, k, k, r.data_mut(), m, n);
         betas[k] = beta;
     }
 
@@ -81,20 +82,51 @@ pub fn thin_qr_into(a: &Matrix, q: &mut Matrix, ws: &mut Workspace) {
         if beta == 0.0 {
             continue;
         }
-        for j in 0..n {
-            let mut s = 0.0;
-            for i in k..m {
-                s += v[i - k] * q[(i, j)];
-            }
-            s *= beta;
-            for i in k..m {
-                q[(i, j)] -= s * v[i - k];
-            }
-        }
+        apply_reflector(v, beta, k, 0, q.data_mut(), m, n);
     }
     ws.recycle(vs);
     ws.recycle(betas);
     ws.recycle_matrix(r);
+}
+
+/// Apply the Householder update `X[:, j0..n] -= β v (vᵀ X[:, j0..n])` to the
+/// rows `k..m` of a row-major `m × n` buffer.
+///
+/// Each column `j` is owned by exactly one worker slot and is reduced in
+/// ascending `i`, so the panel-parallel dispatch is bitwise-identical to the
+/// serial sweep. Small trailing blocks stay serial to skip dispatch overhead.
+fn apply_reflector(v: &[f64], beta: f64, k: usize, j0: usize, x: &mut [f64], m: usize, n: usize) {
+    let ncols = n - j0;
+    if ncols * (m - k) > 16_384 {
+        let xp = crate::parallel::SendPtr(x.as_mut_ptr());
+        crate::parallel::par_chunks(ncols, |cs, ce| {
+            for off in cs..ce {
+                let j = j0 + off;
+                // SAFETY: each slot reads and writes only its own columns.
+                unsafe {
+                    let mut s = 0.0;
+                    for i in k..m {
+                        s += v[i - k] * *xp.get().add(i * n + j);
+                    }
+                    s *= beta;
+                    for i in k..m {
+                        *xp.get().add(i * n + j) -= s * v[i - k];
+                    }
+                }
+            }
+        });
+    } else {
+        for j in j0..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i - k] * x[i * n + j];
+            }
+            s *= beta;
+            for i in k..m {
+                x[i * n + j] -= s * v[i - k];
+            }
+        }
+    }
 }
 
 #[cfg(test)]

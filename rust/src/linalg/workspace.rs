@@ -40,11 +40,14 @@ impl WorkspaceStats {
     }
 }
 
-/// A checkout/check-in pool of `Vec<f64>` buffers (and `Matrix` wrappers).
+/// A checkout/check-in pool of `Vec<f64>` buffers (and `Matrix` wrappers),
+/// plus a sibling `Vec<f32>` pool for the relaxed-numerics sketch tier.
 #[derive(Debug, Default)]
 pub struct Workspace {
     /// Returned buffers, unordered; `take` picks the best (tightest) fit.
     free: Vec<Vec<f64>>,
+    /// Returned f32 buffers (the `--numerics fast` Gram/sketch pack tier).
+    free32: Vec<Vec<f32>>,
     stats: WorkspaceStats,
 }
 
@@ -67,37 +70,7 @@ impl Workspace {
     /// largest free buffer is grown (counted in [`WorkspaceStats::grown`]);
     /// only an empty pool allocates from scratch.
     fn checkout(&mut self, len: usize) -> Vec<f64> {
-        let best = self
-            .free
-            .iter()
-            .enumerate()
-            .filter(|(_, b)| b.capacity() >= len)
-            .min_by_key(|(_, b)| b.capacity())
-            .map(|(i, _)| i);
-        match best {
-            Some(i) => {
-                self.stats.reuses += 1;
-                self.free.swap_remove(i)
-            }
-            None => {
-                let largest = self
-                    .free
-                    .iter()
-                    .enumerate()
-                    .max_by_key(|(_, b)| b.capacity())
-                    .map(|(i, _)| i);
-                match largest {
-                    Some(i) => {
-                        self.stats.grown += 1;
-                        self.free.swap_remove(i)
-                    }
-                    None => {
-                        self.stats.fresh_allocs += 1;
-                        Vec::new()
-                    }
-                }
-            }
-        }
+        checkout_from(&mut self.free, &mut self.stats, len)
     }
 
     /// Check out a zero-filled buffer of exactly `len` elements.
@@ -163,6 +136,42 @@ impl Workspace {
         self.recycle(m.into_vec());
     }
 
+    /// Check out an f32 buffer of exactly `len` elements without zeroing —
+    /// the pack buffers of the `--numerics fast` Gram/sketch tier overwrite
+    /// every element. Tracked by the same [`WorkspaceStats`] counters as the
+    /// f64 pool, so the steady-state freeze assertions cover this tier too.
+    pub fn take_scratch_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = checkout_from(&mut self.free32, &mut self.stats, len);
+        if buf.len() > len {
+            buf.truncate(len);
+        } else {
+            buf.resize(len, 0.0);
+        }
+        buf
+    }
+
+    /// Return an f32 buffer to the pool for reuse.
+    pub fn recycle_f32(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        if self.free32.len() < MAX_POOLED_BUFFERS {
+            self.free32.push(buf);
+            return;
+        }
+        let smallest = self
+            .free32
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        if let Some(i) = smallest {
+            if self.free32[i].capacity() < buf.capacity() {
+                self.free32[i] = buf;
+            }
+        }
+    }
+
     /// Allocation counters since creation.
     pub fn stats(&self) -> WorkspaceStats {
         self.stats
@@ -176,6 +185,41 @@ impl Workspace {
     /// Total pooled capacity in elements (f64s).
     pub fn pooled_capacity(&self) -> usize {
         self.free.iter().map(|b| b.capacity()).sum()
+    }
+}
+
+/// Best-fit checkout shared by the f64 and f32 pools: tightest sufficient
+/// capacity wins; an undersized non-empty pool grows its largest buffer; an
+/// empty pool allocates fresh.
+fn checkout_from<T>(free: &mut Vec<Vec<T>>, stats: &mut WorkspaceStats, len: usize) -> Vec<T> {
+    let best = free
+        .iter()
+        .enumerate()
+        .filter(|(_, b)| b.capacity() >= len)
+        .min_by_key(|(_, b)| b.capacity())
+        .map(|(i, _)| i);
+    match best {
+        Some(i) => {
+            stats.reuses += 1;
+            free.swap_remove(i)
+        }
+        None => {
+            let largest = free
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, b)| b.capacity())
+                .map(|(i, _)| i);
+            match largest {
+                Some(i) => {
+                    stats.grown += 1;
+                    free.swap_remove(i)
+                }
+                None => {
+                    stats.fresh_allocs += 1;
+                    Vec::new()
+                }
+            }
+        }
     }
 }
 

@@ -135,13 +135,28 @@ impl GpuNystrom {
 impl NystromApprox for GpuNystrom {
     /// `(BBᵀ + λI)⁻¹ v = v/λ − B ((BᵀB + λI)⁻¹ Bᵀ v)/λ` (Woodbury again).
     fn inv_apply(&self, v: &[f64]) -> Vec<f64> {
-        let btv = self.b.tr_matvec(v);
-        let z = self.l.solve(&btv);
-        let bz = self.b.matvec(&z);
-        v.iter()
-            .zip(&bz)
-            .map(|(vi, bzi)| (vi - bzi) / self.lambda)
-            .collect()
+        let mut out = vec![0.0; v.len()];
+        let mut ws = Workspace::new();
+        self.inv_apply_into(v, &mut out, &mut ws);
+        out
+    }
+
+    /// Pooled Woodbury application: `Bᵀv`, the ℓ×ℓ solve, and `Bz` all live
+    /// in workspace scratch; the final combine runs in place on `out`. Same
+    /// per-element arithmetic as the allocating path, so the PCG hot loop
+    /// gets the identical preconditioner bitwise with zero allocations.
+    fn inv_apply_into(&self, v: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let ell = self.b.cols();
+        let mut btv = ws.take_scratch(ell);
+        self.b.tr_matvec_into(v, &mut btv);
+        let mut z = ws.take_scratch(ell);
+        self.l.solve_into(&btv, &mut z);
+        self.b.matvec_into(&z, out);
+        for (o, vi) in out.iter_mut().zip(v) {
+            *o = (vi - *o) / self.lambda;
+        }
+        ws.recycle(z);
+        ws.recycle(btv);
     }
 
     fn sketch_size(&self) -> usize {

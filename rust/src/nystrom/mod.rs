@@ -13,6 +13,12 @@
 //! is sketched through the operator, never formed) plus a
 //! [`crate::linalg::Workspace`] whose buffers it checks out and — via each
 //! type's `recycle` — returns for reuse on the next training step.
+//!
+//! Application is pooled too: [`NystromApprox::inv_apply_into`] writes the
+//! damped inverse into a caller buffer with interior scratch drawn from the
+//! workspace, so the PCG hot loop ([`nystrom_pcg`]) and `kernel_solve`'s
+//! sketch-and-solve branches run allocation-free at steady state. The
+//! allocating [`NystromApprox::inv_apply`] remains for tests/benches.
 
 mod adaptive;
 mod effective_dim;
@@ -144,6 +150,15 @@ mod tests {
 pub trait NystromApprox {
     /// Apply `(Â + λI)⁻¹ v`.
     fn inv_apply(&self, v: &[f64]) -> Vec<f64>;
+
+    /// Pooled `(Â + λI)⁻¹ v` into `out`, interior scratch drawn from `ws` —
+    /// the preconditioner application of the PCG hot loop. The default
+    /// falls back to the allocating form; the shipped factorizations
+    /// override it with allocation-free paths that match bitwise.
+    fn inv_apply_into(&self, v: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let _ = ws;
+        out.copy_from_slice(&self.inv_apply(v));
+    }
 
     /// The sketch size actually used.
     fn sketch_size(&self) -> usize;

@@ -15,11 +15,14 @@
 use anyhow::Result;
 
 use super::NystromApprox;
+use crate::linalg::Workspace;
 use crate::optim::kernel::KernelOp;
 
 /// Outcome of a preconditioned CG solve.
 #[derive(Debug, Clone)]
 pub struct PcgOutcome {
+    /// The solution; its storage is drawn from the caller's [`Workspace`],
+    /// so recycle it when done.
     pub x: Vec<f64>,
     pub iterations: usize,
     pub rel_residual: f64,
@@ -27,9 +30,13 @@ pub struct PcgOutcome {
 }
 
 /// Solve `(K + λI) x = b` with CG preconditioned by `(Â_nys + λI)⁻¹`,
-/// where `K` is applied through the operator (`op.apply(v) = J(Jᵀv)` on the
-/// training path — the kernel is never formed) and `precond` is any
+/// where `K` is applied through the operator (`op.apply_into(v) = J(Jᵀv)`
+/// on the training path — the kernel is never formed) and `precond` is any
 /// [`NystromApprox`].
+///
+/// Every loop buffer (x, r, z, p, Kp) and all operator/preconditioner
+/// scratch come from `ws`, so steady-state iterations allocate nothing; the
+/// iterates are bitwise-identical to the historical allocating loop.
 pub fn nystrom_pcg(
     op: &dyn KernelOp,
     lambda: f64,
@@ -37,34 +44,36 @@ pub fn nystrom_pcg(
     b: &[f64],
     max_iters: usize,
     tol: f64,
+    ws: &mut Workspace,
 ) -> Result<PcgOutcome> {
     let n = b.len();
-    let apply = |v: &[f64]| -> Vec<f64> {
-        let mut kv = op.apply(v);
-        for (kvi, vi) in kv.iter_mut().zip(v) {
-            *kvi += lambda * vi;
-        }
-        kv
-    };
     let bnorm = crate::linalg::norm2(b);
     if bnorm == 0.0 {
         return Ok(PcgOutcome {
-            x: vec![0.0; n],
+            x: ws.take(n),
             iterations: 0,
             rel_residual: 0.0,
             converged: true,
         });
     }
-    let mut x = vec![0.0; n];
-    let mut r = b.to_vec();
-    let mut z = precond.inv_apply(&r);
-    let mut p = z.clone();
+    let mut x = ws.take(n);
+    let mut r = ws.take_scratch(n);
+    r.copy_from_slice(b);
+    let mut z = ws.take_scratch(n);
+    precond.inv_apply_into(&r, &mut z, ws);
+    let mut p = ws.take_scratch(n);
+    p.copy_from_slice(&z);
+    let mut ap = ws.take_scratch(n);
     let mut rz = crate::linalg::dot(&r, &z);
 
     let mut iterations = 0;
     let mut rnorm = bnorm;
     for _ in 0..max_iters {
-        let ap = apply(&p);
+        // ap = (K + λI) p, pooled.
+        op.apply_into(&p, &mut ap, ws);
+        for (kvi, vi) in ap.iter_mut().zip(&p) {
+            *kvi += lambda * vi;
+        }
         let pap = crate::linalg::dot(&p, &ap);
         if pap <= 0.0 || !pap.is_finite() {
             break;
@@ -77,7 +86,7 @@ pub fn nystrom_pcg(
         if rnorm <= tol * bnorm {
             break;
         }
-        z = precond.inv_apply(&r);
+        precond.inv_apply_into(&r, &mut z, ws);
         let rz_new = crate::linalg::dot(&r, &z);
         let beta = rz_new / rz;
         for i in 0..n {
@@ -85,6 +94,10 @@ pub fn nystrom_pcg(
         }
         rz = rz_new;
     }
+    ws.recycle(ap);
+    ws.recycle(p);
+    ws.recycle(z);
+    ws.recycle(r);
     let rel = rnorm / bnorm;
     Ok(PcgOutcome {
         x,
@@ -127,7 +140,7 @@ mod tests {
         let op = DenseKernel::new(&a);
         let mut ws = Workspace::new();
         let pre = GpuNystrom::build(&op, 25, lam, &mut rng, &mut ws).unwrap();
-        let out = nystrom_pcg(&op, lam, &pre, &b, 200, 1e-10).unwrap();
+        let out = nystrom_pcg(&op, lam, &pre, &b, 200, 1e-10, &mut ws).unwrap();
         assert!(out.converged, "rel = {}", out.rel_residual);
         let direct = Cholesky::factor(&damped).unwrap().solve(&b);
         for (x, d) in out.x.iter().zip(&direct) {
@@ -151,7 +164,7 @@ mod tests {
         let op = DenseKernel::new(&a);
         let mut ws = Workspace::new();
         let pre = GpuNystrom::build(&op, 40, lam, &mut rng, &mut ws).unwrap();
-        let pcg = nystrom_pcg(&op, lam, &pre, &b, 500, 1e-8).unwrap();
+        let pcg = nystrom_pcg(&op, lam, &pre, &b, 500, 1e-8, &mut ws).unwrap();
         assert!(pcg.converged);
         assert!(
             pcg.iterations * 2 < plain.iterations.max(2),
@@ -168,8 +181,33 @@ mod tests {
         let op = DenseKernel::new(&a);
         let mut ws = Workspace::new();
         let pre = GpuNystrom::build(&op, 5, 1e-4, &mut rng, &mut ws).unwrap();
-        let out = nystrom_pcg(&op, 1e-4, &pre, &[0.0; 10], 10, 1e-10).unwrap();
+        let out = nystrom_pcg(&op, 1e-4, &pre, &[0.0; 10], 10, 1e-10, &mut ws).unwrap();
         assert!(out.converged);
         assert_eq!(out.iterations, 0);
+    }
+
+    #[test]
+    fn repeated_solves_allocate_nothing_at_steady_state() {
+        let mut rng = Rng::seed_from(4);
+        let a = decaying_psd(&mut rng, 40, 0.2);
+        let lam = 1e-6;
+        let mut b = vec![0.0; 40];
+        rng.fill_normal(&mut b);
+        let op = DenseKernel::new(&a);
+        let mut ws = Workspace::new();
+        let pre = GpuNystrom::build(&op, 20, lam, &mut rng, &mut ws).unwrap();
+
+        let out = nystrom_pcg(&op, lam, &pre, &b, 100, 1e-10, &mut ws).unwrap();
+        ws.recycle(out.x);
+        let frozen = (ws.stats().fresh_allocs, ws.stats().grown);
+
+        let out2 = nystrom_pcg(&op, lam, &pre, &b, 100, 1e-10, &mut ws).unwrap();
+        ws.recycle(out2.x);
+        assert_eq!(
+            (ws.stats().fresh_allocs, ws.stats().grown),
+            frozen,
+            "second PCG solve touched the allocator"
+        );
+        assert!(out2.iterations > 0);
     }
 }

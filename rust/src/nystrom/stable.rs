@@ -137,17 +137,28 @@ impl StableNystrom {
 impl NystromApprox for StableNystrom {
     /// `(UΛUᵀ + λI)⁻¹ v = U ((Λ+λ)⁻¹ − λ⁻¹) Uᵀ v + v / λ`.
     fn inv_apply(&self, v: &[f64]) -> Vec<f64> {
-        let utv = self.u.tr_matvec(v);
-        let scaled: Vec<f64> = utv
-            .iter()
-            .zip(&self.lam_diag)
-            .map(|(x, &w)| x * (1.0 / (w + self.lambda) - 1.0 / self.lambda))
-            .collect();
-        let u_scaled = self.u.matvec(&scaled);
-        v.iter()
-            .zip(&u_scaled)
-            .map(|(vi, ui)| vi / self.lambda + ui)
-            .collect()
+        let mut out = vec![0.0; v.len()];
+        let mut ws = Workspace::new();
+        self.inv_apply_into(v, &mut out, &mut ws);
+        out
+    }
+
+    /// Pooled application: `Uᵀv` is rescaled in place in its scratch buffer
+    /// and `U (…)` lands directly in `out`, which the final combine then
+    /// rewrites — the same per-element arithmetic as the allocating path
+    /// with zero allocations at steady state.
+    fn inv_apply_into(&self, v: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let ell = self.lam_diag.len();
+        let mut utv = ws.take_scratch(ell);
+        self.u.tr_matvec_into(v, &mut utv);
+        for (x, &w) in utv.iter_mut().zip(&self.lam_diag) {
+            *x *= 1.0 / (w + self.lambda) - 1.0 / self.lambda;
+        }
+        self.u.matvec_into(&utv, out);
+        for (o, vi) in out.iter_mut().zip(v) {
+            *o = vi / self.lambda + *o;
+        }
+        ws.recycle(utv);
     }
 
     fn sketch_size(&self) -> usize {

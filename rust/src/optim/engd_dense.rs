@@ -47,8 +47,9 @@ impl Optimizer for EngdDense {
         }
         let (r, j) = env.residuals_jacobian(theta)?;
         let loss = 0.5 * crate::linalg::dot(&r, &r);
-        let op = JacobianKernel::new(&j);
-        let grad = op.apply_t(&r);
+        let op = JacobianKernel::with_numerics(&j, env.numerics);
+        let mut grad = env.ws.take_scratch(p);
+        op.apply_t_into(&r, &mut grad);
 
         // G_batch = Jᵀ J through the operator (fused — Jᵀ is never
         // materialized), drawn from the step workspace, then EMA'd into the
@@ -96,7 +97,8 @@ impl Optimizer for EngdDense {
         damped.data_mut().copy_from_slice(gram.data());
         damped.add_diag_in_place(self.cfg.damping);
         let ch = Cholesky::factor_from(damped)?;
-        let phi = ch.solve(&grad);
+        let mut phi = env.ws.take_scratch(p);
+        ch.solve_into(&grad, &mut phi);
         env.ws.recycle_matrix(ch.into_factor());
         self.gramian = Some(gram);
         drop(op);
@@ -111,10 +113,13 @@ impl Optimizer for EngdDense {
         for (t, d) in theta.iter_mut().zip(&phi) {
             *t -= eta * d;
         }
+        let grad_norm = crate::linalg::norm2(&grad);
+        env.ws.recycle(phi);
+        env.ws.recycle(grad);
         Ok(StepInfo {
             loss,
             lr_used: eta,
-            extra: vec![("grad_norm".into(), crate::linalg::norm2(&grad))],
+            extra: vec![("grad_norm".into(), grad_norm)],
         })
     }
 

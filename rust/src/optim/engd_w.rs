@@ -71,10 +71,12 @@ impl EngdW {
     fn decomposed_step(&self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         let (r, j) = env.residuals_jacobian(theta)?;
         let loss = 0.5 * crate::linalg::dot(&r, &r);
-        let op = JacobianKernel::new(&j);
+        let op = JacobianKernel::with_numerics(&j, env.numerics);
         let (a, mut extra) =
             kernel_solve(&op, &r, &self.cfg, env.rng, env.ws, env.diagnostics)?;
-        let phi = op.apply_t(&a);
+        let mut phi = env.ws.take_scratch(theta.len());
+        op.apply_t_into(&a, &mut phi);
+        env.ws.recycle(a);
         drop(op);
         env.ws.recycle_matrix(j);
         let eta = if self.cfg.line_search {
@@ -88,6 +90,7 @@ impl EngdW {
             *t -= eta * p;
         }
         extra.push(("phi_norm".into(), crate::linalg::norm2(&phi)));
+        env.ws.recycle(phi);
         Ok(StepInfo {
             loss,
             lr_used: eta,

@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use super::{grid_line_search, JacobianKernel, KernelOp, Optimizer, StepEnv, StepInfo};
 use crate::config::OptimizerConfig;
-use crate::linalg::cg_solve_warm;
+use crate::linalg::cg_solve_warm_pooled;
 
 pub struct HessianFree {
     cfg: OptimizerConfig,
@@ -52,26 +52,33 @@ impl Optimizer for HessianFree {
     fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         let (r, j) = env.residuals_jacobian(theta)?;
         let loss = 0.5 * crate::linalg::dot(&r, &r);
+        let n = theta.len();
         let op = JacobianKernel::new(&j);
-        let grad = op.apply_t(&r);
+        let mut grad = env.ws.take_scratch(n);
+        op.apply_t_into(&r, &mut grad);
         let lambda = self.lambda;
 
+        // One pooled batch-space buffer serves every Gauss–Newton matvec in
+        // the CG loop (and the LM model's Jφ below); checked out up front so
+        // the closure owns it and `env.ws` stays free for the CG vectors.
+        let mut jv = env.ws.take_scratch(r.len());
         let warm = (!self.phi_prev.is_empty()).then_some(self.phi_prev.as_slice());
-        let out = cg_solve_warm(
-            |v| {
+        let out = cg_solve_warm_pooled(
+            |v, jtjv| {
                 // Gauss–Newton product (JᵀJ + λI)v through the operator.
-                let jv = op.apply_j(v);
-                let mut jtjv = op.apply_t(&jv);
+                op.apply_j_into(v, &mut jv);
+                op.apply_t_into(&jv, jtjv);
                 for (x, vi) in jtjv.iter_mut().zip(v) {
                     *x += lambda * vi;
                 }
-                jtjv
             },
             &grad,
             warm,
             self.cfg.cg_iters,
             self.cfg.cg_tol,
+            env.ws,
         );
+        let (cg_iters, cg_rel_res) = (out.iterations, out.rel_residual);
         let phi = out.x;
 
         let eta = if self.cfg.line_search {
@@ -79,7 +86,8 @@ impl Optimizer for HessianFree {
         } else {
             self.cfg.lr
         };
-        let mut trial: Vec<f64> = theta.to_vec();
+        let mut trial = env.ws.take_scratch(n);
+        trial.copy_from_slice(theta);
         for (t, d) in trial.iter_mut().zip(&phi) {
             *t -= eta * d;
         }
@@ -89,9 +97,8 @@ impl Optimizer for HessianFree {
             // quadratic model m(φ) = L − η gᵀφ + ½η² φᵀ(G+λI)φ.
             let new_loss = env.eval_loss(&trial)?;
             let g_phi = crate::linalg::dot(&grad, &phi);
-            let jphi = op.apply_j(&phi);
-            let quad = crate::linalg::dot(&jphi, &jphi)
-                + lambda * crate::linalg::dot(&phi, &phi);
+            op.apply_j_into(&phi, &mut jv);
+            let quad = crate::linalg::dot(&jv, &jv) + lambda * crate::linalg::dot(&phi, &phi);
             let predicted = eta * g_phi - 0.5 * eta * eta * quad;
             if predicted > 0.0 {
                 let rho = (loss - new_loss) / predicted;
@@ -109,13 +116,20 @@ impl Optimizer for HessianFree {
         env.ws.recycle_matrix(j);
 
         theta.copy_from_slice(&trial);
-        self.phi_prev = phi;
+        // φ_prev is persistent checkpoint state, so keep it owned: copy the
+        // pooled solution in and return the scratch to the pool.
+        self.phi_prev.clear();
+        self.phi_prev.extend_from_slice(&phi);
+        env.ws.recycle(phi);
+        env.ws.recycle(trial);
+        env.ws.recycle(jv);
+        env.ws.recycle(grad);
         Ok(StepInfo {
             loss,
             lr_used: eta,
             extra: vec![
-                ("cg_iters".into(), out.iterations as f64),
-                ("cg_rel_res".into(), out.rel_residual),
+                ("cg_iters".into(), cg_iters as f64),
+                ("cg_rel_res".into(), cg_rel_res),
                 ("damping".into(), lambda),
             ],
         })

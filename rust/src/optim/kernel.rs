@@ -18,11 +18,20 @@
 //! the decomposed training path) and [`DenseKernel`] (an explicit PSD
 //! matrix — tests, Appendix-B micro-benchmarks).
 
+use crate::backend::NumericsMode;
 use crate::linalg::{Matrix, Workspace};
 
 /// A symmetric PSD kernel operator `K ∈ R^{N×N}` of Gram form `K = J Jᵀ`
 /// with `J ∈ R^{N×P}`, exposed through the primitives the optimizer suite
 /// needs. All dense outputs are drawn from the caller's [`Workspace`].
+///
+/// Every allocating primitive has a pooled `*_into` twin that writes into a
+/// caller-provided buffer; the iterative solvers (`nystrom_pcg`, CG,
+/// Hessian-free) run their matvec loops exclusively on the pooled forms so
+/// that steady-state iterations allocate nothing. The defaults fall back to
+/// the allocating methods, so external implementations keep working; the
+/// shipped kernels override them with genuinely allocation-free paths that
+/// match the allocating methods bitwise.
 pub trait KernelOp {
     /// Kernel dimension N (number of residuals / collocation points).
     fn size(&self) -> usize;
@@ -42,6 +51,25 @@ pub trait KernelOp {
     /// Hessian-free's Gauss–Newton products).
     fn apply_j(&self, w: &[f64]) -> Vec<f64>;
 
+    /// Pooled `K v` into `out` (length N); interior scratch comes from
+    /// `ws`. Bitwise-equal to [`KernelOp::apply`].
+    fn apply_into(&self, v: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let _ = ws;
+        out.copy_from_slice(&self.apply(v));
+    }
+
+    /// Pooled `Jᵀ a` into `out` (length P). Bitwise-equal to
+    /// [`KernelOp::apply_t`].
+    fn apply_t_into(&self, a: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(&self.apply_t(a));
+    }
+
+    /// Pooled `J w` into `out` (length N). Bitwise-equal to
+    /// [`KernelOp::apply_j`].
+    fn apply_j_into(&self, w: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(&self.apply_j(w));
+    }
+
     /// Densify `K = J Jᵀ` into a workspace buffer (the exact path of
     /// eq. 5). Recycle the returned matrix when done.
     fn gram(&self, ws: &mut Workspace) -> Matrix;
@@ -57,13 +85,25 @@ pub trait KernelOp {
 
 /// The dense-Jacobian kernel operator: `K = J Jᵀ` for a row-major
 /// N×P Jacobian produced by the `residuals_jacobian` artifact.
+///
+/// Under [`NumericsMode::Fast`] the dense Gram/sketch products run on the
+/// f32-compute/f64-accumulate tier ([`Matrix::gram_into_fast`] and
+/// friends); [`NumericsMode::Bitwise`] (the default) keeps every product on
+/// the deterministic f64 kernels.
 pub struct JacobianKernel<'a> {
     j: &'a Matrix,
+    numerics: NumericsMode,
 }
 
 impl<'a> JacobianKernel<'a> {
     pub fn new(j: &'a Matrix) -> Self {
-        JacobianKernel { j }
+        Self::with_numerics(j, NumericsMode::Bitwise)
+    }
+
+    /// Wrap a Jacobian with an explicit numerics tier (the trainer threads
+    /// the run's `--numerics` mode through [`crate::optim::StepEnv`]).
+    pub fn with_numerics(j: &'a Matrix, numerics: NumericsMode) -> Self {
+        JacobianKernel { j, numerics }
     }
 
     /// The underlying Jacobian.
@@ -94,26 +134,55 @@ impl KernelOp for JacobianKernel<'_> {
         self.j.matvec(w)
     }
 
+    fn apply_into(&self, v: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let mut jtv = ws.take_scratch(self.j.cols());
+        self.j.tr_matvec_into(v, &mut jtv);
+        self.j.matvec_into(&jtv, out);
+        ws.recycle(jtv);
+    }
+
+    fn apply_t_into(&self, a: &[f64], out: &mut [f64]) {
+        self.j.tr_matvec_into(a, out);
+    }
+
+    fn apply_j_into(&self, w: &[f64], out: &mut [f64]) {
+        self.j.matvec_into(w, out);
+    }
+
     fn gram(&self, ws: &mut Workspace) -> Matrix {
         let n = self.j.rows();
         let mut k = ws.take_matrix_scratch(n, n);
-        self.j.gram_into(&mut k);
+        match self.numerics {
+            NumericsMode::Fast => self.j.gram_into_fast(&mut k, ws),
+            NumericsMode::Bitwise => self.j.gram_into(&mut k),
+        }
         k
     }
 
     fn gram_t(&self, ws: &mut Workspace) -> Matrix {
         let p = self.j.cols();
         let mut g = ws.take_matrix_scratch(p, p);
-        self.j.gram_t_into(&mut g);
+        match self.numerics {
+            NumericsMode::Fast => self.j.gram_t_into_fast(&mut g, ws),
+            NumericsMode::Bitwise => self.j.gram_t_into(&mut g),
+        }
         g
     }
 
     fn sketch_y(&self, omega: &Matrix, ws: &mut Workspace) -> Matrix {
         let ell = omega.cols();
         let mut jt_omega = ws.take_matrix_scratch(self.j.cols(), ell);
-        self.j.matmul_tn_into(omega, &mut jt_omega);
         let mut y = ws.take_matrix_scratch(self.j.rows(), ell);
-        self.j.matmul_into(&jt_omega, &mut y);
+        match self.numerics {
+            NumericsMode::Fast => {
+                self.j.matmul_tn_into_fast(omega, &mut jt_omega, ws);
+                self.j.matmul_into_fast(&jt_omega, &mut y, ws);
+            }
+            NumericsMode::Bitwise => {
+                self.j.matmul_tn_into(omega, &mut jt_omega);
+                self.j.matmul_into(&jt_omega, &mut y);
+            }
+        }
         ws.recycle_matrix(jt_omega);
         y
     }
@@ -161,6 +230,19 @@ impl KernelOp for DenseKernel<'_> {
 
     fn apply_j(&self, w: &[f64]) -> Vec<f64> {
         self.a.matvec(w)
+    }
+
+    fn apply_into(&self, v: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let _ = ws;
+        self.a.matvec_into(v, out);
+    }
+
+    fn apply_t_into(&self, a: &[f64], out: &mut [f64]) {
+        self.a.matvec_into(a, out);
+    }
+
+    fn apply_j_into(&self, w: &[f64], out: &mut [f64]) {
+        self.a.matvec_into(w, out);
     }
 
     fn gram(&self, ws: &mut Workspace) -> Matrix {
@@ -247,6 +329,72 @@ mod tests {
         assert!(y.max_abs_diff(&a.matmul(&omega)) < 1e-10);
         let k = op.gram(&mut ws);
         assert_eq!(k.max_abs_diff(&a), 0.0);
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn pooled_applies_match_allocating_bitwise() {
+        let mut rng = Rng::seed_from(4);
+        let j = random_matrix(&mut rng, 14, 22);
+        let op = JacobianKernel::new(&j);
+        let mut ws = Workspace::new();
+        let mut v = vec![0.0; 14];
+        rng.fill_normal(&mut v);
+        let mut w = vec![0.0; 22];
+        rng.fill_normal(&mut w);
+
+        let mut kv = vec![0.0; 14];
+        op.apply_into(&v, &mut kv, &mut ws);
+        assert_eq!(bits(&kv), bits(&op.apply(&v)));
+
+        let mut jta = vec![0.0; 22];
+        op.apply_t_into(&v, &mut jta);
+        assert_eq!(bits(&jta), bits(&op.apply_t(&v)));
+
+        let mut jw = vec![0.0; 14];
+        op.apply_j_into(&w, &mut jw);
+        assert_eq!(bits(&jw), bits(&op.apply_j(&w)));
+
+        // Steady state: a second pooled apply draws all scratch from the pool.
+        let fresh = ws.stats().fresh_allocs;
+        op.apply_into(&v, &mut kv, &mut ws);
+        assert_eq!(ws.stats().fresh_allocs, fresh, "apply_into allocated");
+
+        // The dense kernel's pooled forms agree bitwise too.
+        let base = random_matrix(&mut rng, 10, 10);
+        let a = base.gram();
+        let dop = DenseKernel::new(&a);
+        let mut dv = vec![0.0; 10];
+        rng.fill_normal(&mut dv);
+        let mut av = vec![0.0; 10];
+        dop.apply_into(&dv, &mut av, &mut ws);
+        assert_eq!(bits(&av), bits(&dop.apply(&dv)));
+    }
+
+    #[test]
+    fn fast_numerics_gram_and_sketch_stay_within_tolerance() {
+        use crate::backend::NumericsMode;
+        let mut rng = Rng::seed_from(5);
+        let j = random_matrix(&mut rng, 24, 18);
+        let exact = JacobianKernel::new(&j);
+        let fast = JacobianKernel::with_numerics(&j, NumericsMode::Fast);
+        let mut ws = Workspace::new();
+
+        let k = exact.gram(&mut ws);
+        let kf = fast.gram(&mut ws);
+        assert!(kf.max_abs_diff(&k) < 1e-3, "fast gram drifted");
+        ws.recycle_matrix(k);
+        ws.recycle_matrix(kf);
+
+        let omega = random_matrix(&mut rng, 24, 5);
+        let y = exact.sketch_y(&omega, &mut ws);
+        let yf = fast.sketch_y(&omega, &mut ws);
+        assert!(yf.max_abs_diff(&y) < 1e-3, "fast sketch drifted");
+        ws.recycle_matrix(y);
+        ws.recycle_matrix(yf);
     }
 
     #[test]

@@ -58,6 +58,12 @@ pub fn grid_search(
 /// assumes unimodality locally (valid near a Gauss–Newton direction) and
 /// narrows to `tol`-relative width. Used by `refine = true` callers to
 /// squeeze the last factor after the grid bracket.
+///
+/// Non-finite probe losses (a diverged trial iterate returning NaN/∞) are
+/// treated as +∞ so the interval contracts away from the blow-up instead of
+/// the NaN poisoning the `f1 <= f2` comparisons — a NaN compares false
+/// against everything, which used to steer the bracket *toward* the
+/// divergence and could return a NaN "minimum".
 pub fn golden_section(
     mut loss_at: impl FnMut(f64) -> Result<f64>,
     mut lo: f64,
@@ -65,11 +71,12 @@ pub fn golden_section(
     iters: usize,
 ) -> Result<LineSearchResult> {
     const INV_PHI: f64 = 0.618_033_988_749_894_9;
+    let finite_or_inf = |f: f64| if f.is_finite() { f } else { f64::INFINITY };
     let mut evals = 0;
     let mut x1 = hi - (hi - lo) * INV_PHI;
     let mut x2 = lo + (hi - lo) * INV_PHI;
-    let mut f1 = loss_at(x1)?;
-    let mut f2 = loss_at(x2)?;
+    let mut f1 = finite_or_inf(loss_at(x1)?);
+    let mut f2 = finite_or_inf(loss_at(x2)?);
     evals += 2;
     for _ in 0..iters {
         if f1 <= f2 {
@@ -77,13 +84,13 @@ pub fn golden_section(
             x2 = x1;
             f2 = f1;
             x1 = hi - (hi - lo) * INV_PHI;
-            f1 = loss_at(x1)?;
+            f1 = finite_or_inf(loss_at(x1)?);
         } else {
             lo = x1;
             x1 = x2;
             f1 = f2;
             x2 = lo + (hi - lo) * INV_PHI;
-            f2 = loss_at(x2)?;
+            f2 = finite_or_inf(loss_at(x2)?);
         }
         evals += 1;
     }
@@ -168,5 +175,21 @@ mod tests {
         let f = |eta: f64| Ok(eta); // minimum at the lo edge
         let out = golden_section(f, 0.0, 1.0, 25).unwrap();
         assert!(out.eta < 1e-4);
+    }
+
+    #[test]
+    fn golden_section_contracts_away_from_nan_probes() {
+        // Divergence past η = 0.5 yields NaN losses; the bracket must
+        // retreat toward the finite valley at 0.3 and never return NaN.
+        let f = |eta: f64| {
+            Ok(if eta > 0.5 {
+                f64::NAN
+            } else {
+                (eta - 0.3).powi(2)
+            })
+        };
+        let out = golden_section(f, 0.0, 1.0, 40).unwrap();
+        assert!(out.loss.is_finite(), "loss = {}", out.loss);
+        assert!((out.eta - 0.3).abs() < 1e-4, "eta = {}", out.eta);
     }
 }

@@ -17,6 +17,13 @@
 //! abstraction (see [`kernel`]) and draw their dense temporaries from the
 //! trainer-owned [`Workspace`] threaded through [`StepEnv`], so the hot
 //! loop never materializes a transpose and reuses its buffers every step.
+//! The operator exposes pooled matvec twins (`apply_into` / `apply_t_into`
+//! / `apply_j_into`) alongside the allocating forms; [`kernel_solve`] and
+//! every optimizer's inner loop (SPRING's ζ/φ pipeline, Hessian-free CG,
+//! the PCG matvec loop) run exclusively on the pooled variants, so after
+//! one warm-up step the matvec loops allocate nothing — `scratch_stats()`
+//! stays frozen. Solution vectors returned by [`kernel_solve`] live in
+//! pooled storage and are recycled by their consumers.
 //!
 //! Model evaluation goes through the [`crate::backend::Evaluator`] seam:
 //! optimizers see only `loss` / `(r, J)` / `∇L`, so the same suite runs on
@@ -44,7 +51,7 @@ pub use spring::Spring;
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::Evaluator;
+use crate::backend::{Evaluator, NumericsMode};
 use crate::config::{OptimizerConfig, RunConfig};
 use crate::linalg::{Matrix, Workspace};
 use crate::pde::ProblemSpec;
@@ -70,6 +77,10 @@ pub struct StepEnv<'a> {
     pub ws: &'a mut Workspace,
     /// If true, this step should also compute diagnostics (d_eff).
     pub diagnostics: bool,
+    /// Numerics tier for dense kernel stages (`--numerics`): `Bitwise`
+    /// keeps every product in fixed-order f64; `Fast` lets Gram/sketch
+    /// panels run f32-compute/f64-accumulate through the operator layer.
+    pub numerics: NumericsMode,
 }
 
 impl StepEnv<'_> {
@@ -165,7 +176,9 @@ pub fn build_from_opt(o: &OptimizerConfig) -> Result<Box<dyn Optimizer>> {
 /// Jacobian path today and a sharded/PJRT-backed operator later. Dense
 /// temporaries (Gram, sketches, Nyström factors) come from — and return to —
 /// the caller's [`Workspace`], so repeated calls with fixed shapes allocate
-/// only on the first. Returns the solution plus reporting tags.
+/// only on the first. The returned solution vector also lives in pooled
+/// storage: recycle it (`ws.recycle(a)`) once it has been consumed, or the
+/// steady-state freeze breaks. Returns the solution plus reporting tags.
 pub fn kernel_solve(
     op: &dyn KernelOp,
     rhs: &[f64],
@@ -187,13 +200,15 @@ pub fn kernel_solve(
             }
             k.add_diag_in_place(o.damping);
             let ch = crate::linalg::Cholesky::factor_from(k)?;
-            let x = ch.solve(rhs);
+            let mut x = ws.take_scratch(n);
+            ch.solve_into(rhs, &mut x);
             ws.recycle_matrix(ch.into_factor());
             x
         }
         SolveMode::NystromGpu => {
             let nys = build_gpu_nystrom(op, o, rng, ws, &mut extra)?;
-            let x = crate::nystrom::NystromApprox::inv_apply(&nys, rhs);
+            let mut x = ws.take_scratch(n);
+            crate::nystrom::NystromApprox::inv_apply_into(&nys, rhs, &mut x, ws);
             nys.recycle(ws);
             x
         }
@@ -207,7 +222,8 @@ pub fn kernel_solve(
             let y = op.sketch_y(&omega, ws);
             let nys = crate::nystrom::StableNystrom::from_sketch(omega, y, o.damping, ws)?;
             extra.push(("sketch".to_string(), sketch as f64));
-            let x = crate::nystrom::NystromApprox::inv_apply(&nys, rhs);
+            let mut x = ws.take_scratch(n);
+            crate::nystrom::NystromApprox::inv_apply_into(&nys, rhs, &mut x, ws);
             nys.recycle(ws);
             x
         }
@@ -223,6 +239,7 @@ pub fn kernel_solve(
                 rhs,
                 o.cg_iters,
                 o.cg_tol.max(1e-12),
+                ws,
             )?;
             extra.push(("pcg_iters".to_string(), out.iterations as f64));
             extra.push(("pcg_rel_res".to_string(), out.rel_residual));

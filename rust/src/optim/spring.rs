@@ -47,7 +47,10 @@ impl Spring {
     }
 
     /// Finish a step given the raw direction: apply bias, line search or
-    /// fixed lr, update θ, store the configured φ state.
+    /// fixed lr, update θ, store the configured φ state. `phi_raw` may live
+    /// in pooled storage — it is recycled into `env.ws` here, and the φ
+    /// momentum state stays an owned, persistent vector (never a pool
+    /// buffer), so checkpointing and the pool's steady state both hold.
     fn apply(
         &mut self,
         theta: &mut [f64],
@@ -57,7 +60,10 @@ impl Spring {
         mut extra: Vec<(String, f64)>,
     ) -> Result<StepInfo> {
         let bias = self.bias_factor(env.k);
-        let step_dir: Vec<f64> = phi_raw.iter().map(|p| p * bias).collect();
+        let mut step_dir = env.ws.take_scratch(phi_raw.len());
+        for (s, p) in step_dir.iter_mut().zip(&phi_raw) {
+            *s = p * bias;
+        }
         let eta = if self.cfg.line_search {
             let ls = grid_line_search(env, theta, &step_dir, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)?;
             extra.push(("ls_evals".into(), ls.evals as f64));
@@ -68,10 +74,13 @@ impl Spring {
         for (t, p) in theta.iter_mut().zip(&step_dir) {
             *t -= eta * p;
         }
-        self.phi = match self.cfg.bias {
-            BiasMode::Overwrite => step_dir,
-            _ => phi_raw,
-        };
+        self.phi.clear();
+        match self.cfg.bias {
+            BiasMode::Overwrite => self.phi.extend_from_slice(&step_dir),
+            _ => self.phi.extend_from_slice(&phi_raw),
+        }
+        env.ws.recycle(step_dir);
+        env.ws.recycle(phi_raw);
         extra.push(("bias".into(), bias));
         extra.push(("phi_norm".into(), crate::linalg::norm2(&self.phi)));
         Ok(StepInfo {
@@ -133,23 +142,27 @@ impl Spring {
             self.phi = vec![0.0; j.cols()];
         }
         let loss = 0.5 * crate::linalg::dot(&r, &r);
-        let op = JacobianKernel::new(&j);
-        // ζ = r − μ J φ_{k−1}  (Algorithm 1 line 6)
-        let j_phi = op.apply_j(&self.phi);
+        let op = JacobianKernel::with_numerics(&j, env.numerics);
+        // ζ = r − μ J φ_{k−1}  (Algorithm 1 line 6); the J φ buffer is
+        // rewritten into ζ in place, same per-element expression.
+        let mut zeta = env.ws.take_scratch(r.len());
+        op.apply_j_into(&self.phi, &mut zeta);
         let mu = self.cfg.momentum;
-        let zeta: Vec<f64> = r.iter().zip(&j_phi).map(|(ri, ji)| ri - mu * ji).collect();
+        for (z, ri) in zeta.iter_mut().zip(&r) {
+            *z = ri - mu * *z;
+        }
         // a = (K̂+λI)⁻¹ ζ  (line 7, Woodbury form; K̂ exact or Nyström)
         let (a, extra) = kernel_solve(&op, &zeta, &self.cfg, env.rng, env.ws, env.diagnostics)?;
-        // φ_raw = μ φ_{k−1} + Jᵀ a
-        let jta = op.apply_t(&a);
+        env.ws.recycle(zeta);
+        // φ_raw = μ φ_{k−1} + Jᵀ a, accumulated over the Jᵀa buffer.
+        let mut phi_raw = env.ws.take_scratch(self.phi.len());
+        op.apply_t_into(&a, &mut phi_raw);
+        env.ws.recycle(a);
         drop(op);
         env.ws.recycle_matrix(j);
-        let phi_raw: Vec<f64> = self
-            .phi
-            .iter()
-            .zip(&jta)
-            .map(|(p, q)| mu * p + q)
-            .collect();
+        for (q, p) in phi_raw.iter_mut().zip(&self.phi) {
+            *q = mu * p + *q;
+        }
         self.apply(theta, env, phi_raw, loss, extra)
     }
 }

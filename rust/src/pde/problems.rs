@@ -224,7 +224,11 @@ pub fn builtin_problems() -> Vec<ProblemSpec> {
             Poisson,
         ));
     }
-    for n in [1024usize, 4096] {
+    // The 8192..40960 rungs are the large-batch dual-space ladder
+    // (`benches/large_batch`): 40960 is 10× the previous 4096 ceiling and
+    // is only tractable through the pooled matrix-free solve tier — the
+    // N×N kernel is never formed and the sketches stay O(N·ℓ).
+    for n in [1024usize, 4096, 8192, 16384, 40960] {
         let ni = n * 8 / 10;
         out.push(spec(
             &format!("poisson2d_n{n}"),

@@ -126,13 +126,24 @@ pub fn run_sweep(
             }
         }
     }
+    rank_trials(&mut results);
+    Ok(results)
+}
+
+/// Rank trials by `best_l2` ascending with NaN last: a diverged trial
+/// reports `best_l2 = NaN`, and the previous
+/// `partial_cmp(..).unwrap_or(Equal)` comparator left it wherever the
+/// unstable sort happened to place it — including rank 1, where downstream
+/// "best config" selection would pick a diverged run. Keying on
+/// `(is_nan, value)` gives a total order that always sinks diverged trials
+/// to the bottom.
+fn rank_trials(results: &mut [Trial]) {
     results.sort_by(|a, b| {
-        a.report
-            .best_l2
-            .partial_cmp(&b.report.best_l2)
+        let key = |t: &Trial| (t.report.best_l2.is_nan(), t.report.best_l2);
+        key(a)
+            .partial_cmp(&key(b))
             .unwrap_or(std::cmp::Ordering::Equal)
     });
-    Ok(results)
 }
 
 #[cfg(test)]
@@ -155,6 +166,45 @@ mod tests {
             let o = sample_config(&OptimizerKind::HessianFree, &base, &mut rng);
             assert!(o.cg_iters >= 100 && o.cg_iters <= 350);
         }
+    }
+
+    fn trial_with_l2(index: usize, best_l2: f64) -> Trial {
+        Trial {
+            index,
+            optimizer: OptimizerConfig::default(),
+            report: crate::coordinator::TrainReport {
+                name: format!("trial{index}"),
+                backend: "native".into(),
+                steps_done: 1,
+                wall_s: 0.0,
+                final_loss: best_l2,
+                losses: vec![best_l2],
+                best_l2,
+                time_to: Vec::new(),
+                compile_s: 0.0,
+                eval_s: 0.0,
+            },
+        }
+    }
+
+    #[test]
+    fn diverged_nan_trials_rank_last() {
+        // Regression: a diverged trial's NaN best_l2 used to be able to
+        // rank first because partial_cmp's Equal fallback let the unstable
+        // sort place it anywhere.
+        let mut trials = vec![
+            trial_with_l2(0, f64::NAN),
+            trial_with_l2(1, 3e-2),
+            trial_with_l2(2, f64::NAN),
+            trial_with_l2(3, 1e-4),
+            trial_with_l2(4, f64::INFINITY),
+        ];
+        rank_trials(&mut trials);
+        assert_eq!(trials[0].index, 3);
+        assert_eq!(trials[1].index, 1);
+        assert_eq!(trials[2].index, 4); // ∞ beats NaN: it still orders
+        assert!(trials[3].report.best_l2.is_nan());
+        assert!(trials[4].report.best_l2.is_nan());
     }
 
     #[test]

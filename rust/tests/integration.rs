@@ -5,6 +5,7 @@
 //! a loud message) when the artifact directory is missing so `cargo test`
 //! works in a fresh checkout.
 
+use engd::backend::NumericsMode;
 use engd::config::run::{ExecPath, OptimizerKind, SolveMode};
 use engd::config::RunConfig;
 use engd::linalg::{Cholesky, Matrix, Workspace};
@@ -221,6 +222,7 @@ fn spring_fused_and_decomposed_paths_agree() {
             rng: &mut rng_f,
             ws: &mut ws_f,
             diagnostics: false,
+            numerics: NumericsMode::Bitwise,
         };
         let inf = fused.step(&mut theta_f, &mut env).unwrap();
         let mut rng_d = Rng::seed_from(1000 + k as u64);
@@ -233,6 +235,7 @@ fn spring_fused_and_decomposed_paths_agree() {
             rng: &mut rng_d,
             ws: &mut ws_d,
             diagnostics: false,
+            numerics: NumericsMode::Bitwise,
         };
         let ind = dec.step(&mut theta_d, &mut env).unwrap();
         assert!(
@@ -337,6 +340,7 @@ fn randomized_solves_track_exact_at_large_sketch() {
             rng: &mut rng_s,
             ws: &mut ws,
             diagnostics: false,
+            numerics: NumericsMode::Bitwise,
         };
         let info = opt.step(&mut theta_copy, &mut env).unwrap();
         assert!(info.loss.is_finite());
@@ -375,6 +379,7 @@ fn randomized_solves_track_exact_at_large_sketch() {
             rng: &mut rng_s,
             ws: &mut ws,
             diagnostics: false,
+            numerics: NumericsMode::Bitwise,
         };
         opt.step(&mut theta_copy, &mut env).unwrap();
         let env = StepEnv {
@@ -386,6 +391,7 @@ fn randomized_solves_track_exact_at_large_sketch() {
             rng: &mut rng_s,
             ws: &mut ws,
             diagnostics: false,
+            numerics: NumericsMode::Bitwise,
         };
         losses.push(env.eval_loss(&theta_copy).unwrap());
     }

@@ -509,6 +509,62 @@ fn resume_refuses_numerics_mode_switch() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// End-to-end `--numerics fast`: an ENGD-W run whose Gram/sketch panels
+/// take the f32-compute/f64-accumulate tier (through the kernel operator's
+/// numerics mode) must track the bitwise trajectory within tolerance over a
+/// few fixed-lr steps — the fast tier trades bits, not correctness.
+#[test]
+fn fast_sketch_tier_tracks_bitwise_training_within_tolerance() {
+    let dir = out_dir("fastnum");
+    let mk = |numerics: NumericsMode, name: &str, solve: SolveMode| {
+        let mut cfg = RunConfig {
+            name: name.into(),
+            problem: "poisson1d".into(),
+            backend: "native".into(),
+            steps: 3,
+            seed: 11,
+            eval_every: 10,
+            out_dir: dir.clone(),
+            numerics,
+            ..RunConfig::default()
+        };
+        cfg.optimizer.kind = OptimizerKind::EngdW;
+        cfg.optimizer.path = ExecPath::Decomposed;
+        cfg.optimizer.solve = solve;
+        cfg.optimizer.damping = 1e-3;
+        cfg.optimizer.line_search = false;
+        cfg.optimizer.lr = 1e-3;
+        cfg
+    };
+    let be_bit = NativeBackend::with_numerics(NumericsMode::Bitwise);
+    let be_fast = NativeBackend::with_numerics(NumericsMode::Fast);
+    // Exact exercises the fast Gram panel; NystromGpu the fast sketch.
+    for solve in [SolveMode::Exact, SolveMode::NystromGpu] {
+        let bit = train(
+            mk(NumericsMode::Bitwise, &format!("fn-bit-{}", solve.name()), solve),
+            &be_bit,
+            false,
+        )
+        .unwrap();
+        let fast = train(
+            mk(NumericsMode::Fast, &format!("fn-fast-{}", solve.name()), solve),
+            &be_fast,
+            false,
+        )
+        .unwrap();
+        assert_eq!(bit.losses.len(), fast.losses.len());
+        for (k, (a, b)) in bit.losses.iter().zip(&fast.losses).enumerate() {
+            assert!(
+                a.is_finite() && b.is_finite() && (a - b).abs() <= 5e-2 * (1.0 + a.abs()),
+                "{} step {}: bitwise loss {a:.6e} vs fast {b:.6e}",
+                solve.name(),
+                k + 1
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Appendix A.1 regression: with `ema > 0` and the *zero* Gramian init,
 /// step 1 must use `G₁ = (1−ema)·G_batch` — before the fix it used the raw
 /// batch Gramian, making zero-init indistinguishable from `ema = 0` (and
@@ -552,6 +608,7 @@ fn engd_dense_first_step_respects_the_ema_init() {
                 rng: &mut rng,
                 ws: &mut ws,
                 diagnostics: false,
+                numerics: NumericsMode::Bitwise,
             };
             opt.step(&mut theta, &mut env).unwrap();
             if k == 1 {
@@ -699,19 +756,25 @@ fn checkpoint_resume_rejects_optimizer_mismatch() {
 /// The trainer's step-buffer pool reaches steady state natively too: J,
 /// Gram, sketch — and, with the line search enabled, the per-probe trial
 /// iterate — are recycled, so a second step allocates no fresh
-/// pool-tracked buffer.
+/// pool-tracked buffer. Covers ENGD-W, SPRING (whose ζ/Jᵀa/step-direction
+/// pipeline draws from the pool while the φ momentum state stays owned),
+/// and Hessian-free (pooled CG loop vectors + the Gauss–Newton matvec
+/// scratch).
 #[test]
 fn native_trainer_reuses_workspace_across_steps() {
     let be = NativeBackend::new();
-    for (solve, line_search) in [
-        (SolveMode::Exact, false),
-        (SolveMode::NystromGpu, false),
+    for (kind, solve, line_search) in [
+        (OptimizerKind::EngdW, SolveMode::Exact, false),
+        (OptimizerKind::EngdW, SolveMode::NystromGpu, false),
         // Line-search probes draw their θ-sized trial vector from the
         // pool: a warmed-up searching step must allocate nothing either.
-        (SolveMode::Exact, true),
+        (OptimizerKind::EngdW, SolveMode::Exact, true),
+        (OptimizerKind::Spring, SolveMode::Exact, false),
+        (OptimizerKind::Spring, SolveMode::NystromGpu, true),
+        (OptimizerKind::HessianFree, SolveMode::Exact, false),
     ] {
         let mut cfg = RunConfig {
-            name: format!("ws-{}-ls{}", solve.name(), line_search as u8),
+            name: format!("ws-{:?}-{}-ls{}", kind, solve.name(), line_search as u8),
             problem: "poisson1d".into(),
             backend: "native".into(),
             steps: 1,
@@ -719,7 +782,7 @@ fn native_trainer_reuses_workspace_across_steps() {
             out_dir: out_dir("ws"),
             ..RunConfig::default()
         };
-        cfg.optimizer.kind = OptimizerKind::EngdW;
+        cfg.optimizer.kind = kind;
         cfg.optimizer.path = ExecPath::Decomposed;
         cfg.optimizer.solve = solve;
         cfg.optimizer.line_search = line_search;

@@ -207,6 +207,7 @@ fn kernels_and_reductions_are_bitwise_deterministic_across_widths() {
             be.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap(),
             be.u_pred(&p, &theta, &x_eval).unwrap(),
             (r, j),
+            engd::linalg::thin_qr(&a),
         )
     };
 
@@ -230,6 +231,63 @@ fn kernels_and_reductions_are_bitwise_deterministic_across_widths() {
         bits(parallel_run.9 .1.data()),
         "jacobian"
     );
+    assert_eq!(bits(serial.10.data()), bits(parallel_run.10.data()), "thin_qr");
+}
+
+/// The blocked panel kernels behind the large-batch solve path — panel
+/// Cholesky (serial diagonal panel + pool-dispatched trailing-row sweep),
+/// the per-column Householder fan-out in thin QR, and the pooled matvec
+/// twins — are bitwise identical at every intermediate execution width,
+/// not just serial vs full (chunk grids depend only on `ENGD_THREADS`).
+#[test]
+fn panel_factorizations_are_bitwise_identical_at_every_width() {
+    let _guard = serialized();
+    let mut rng = Rng::seed_from(41);
+    // Big enough that the Cholesky trailing sweep (> 64 rows below a panel)
+    // and the QR reflector fan-out (> 16k elements) take their parallel
+    // branches at full width.
+    let spd = {
+        let mut g = Matrix::zeros(260, 200);
+        rng.fill_normal(g.data_mut());
+        g.gram().add_diag(260.0)
+    };
+    let mut tall = Matrix::zeros(240, 90);
+    rng.fill_normal(tall.data_mut());
+    let mut v = vec![0.0; 240];
+    rng.fill_normal(&mut v);
+    let mut w = vec![0.0; 90];
+    rng.fill_normal(&mut w);
+
+    let run_all = || {
+        let mut y = vec![0.0; 240];
+        tall.matvec_into(&w, &mut y);
+        let mut yt = vec![0.0; 90];
+        tall.tr_matvec_into(&v, &mut yt);
+        (
+            Cholesky::factor(&spd).unwrap().into_factor(),
+            engd::linalg::thin_qr(&tall),
+            y,
+            yt,
+        )
+    };
+
+    let reference = with_thread_limit(1, run_all);
+    let bits = |x: &[f64]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    for width in [2usize, 3, num_threads().max(1)] {
+        let got = with_thread_limit(width, run_all);
+        assert_eq!(
+            bits(reference.0.data()),
+            bits(got.0.data()),
+            "cholesky @ width {width}"
+        );
+        assert_eq!(
+            bits(reference.1.data()),
+            bits(got.1.data()),
+            "thin_qr @ width {width}"
+        );
+        assert_eq!(bits(&reference.2), bits(&got.2), "matvec_into @ width {width}");
+        assert_eq!(bits(&reference.3), bits(&got.3), "tr_matvec_into @ width {width}");
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -345,9 +345,19 @@ fn prop_kernel_solve_reuses_workspace() {
             let mut ws = Workspace::new();
             let (x1, _) = kernel_solve(&op, &rhs, &o, &mut rng, &mut ws, false)
                 .map_err(|e| e.to_string())?;
+            if !x1.iter().all(|v| v.is_finite()) {
+                return Err(format!("{}: non-finite solution", solve.name()));
+            }
+            // The solution lives in pooled storage — recycling it is part
+            // of the caller contract the optimizers follow.
+            ws.recycle(x1);
             let after_first = ws.stats();
             let (x2, _) = kernel_solve(&op, &rhs, &o, &mut rng, &mut ws, false)
                 .map_err(|e| e.to_string())?;
+            if !x2.iter().all(|v| v.is_finite()) {
+                return Err(format!("{}: non-finite solution", solve.name()));
+            }
+            ws.recycle(x2);
             let after_second = ws.stats();
 
             // `grown` must freeze too: a pool that keeps reallocating an
@@ -367,9 +377,6 @@ fn prop_kernel_solve_reuses_workspace() {
                     "{}: second solve did not draw from the pool ({after_second:?})",
                     solve.name()
                 ));
-            }
-            if !x1.iter().all(|v| v.is_finite()) || !x2.iter().all(|v| v.is_finite()) {
-                return Err(format!("{}: non-finite solution", solve.name()));
             }
         }
         Ok(())

@@ -1,0 +1,212 @@
+//! Shard-executor scaling: work stealing vs static range splits, threads
+//! vs worker processes, on uniform and boundary-heavy collocation batches.
+//!
+//! The batch layout is interior-rows-then-boundary-rows, and interior rows
+//! (second-order duals for the Laplacian) cost an order of magnitude more
+//! than boundary rows (a plain forward pass). A *static* contiguous split
+//! therefore piles all the expensive rows onto the first shard(s) of a
+//! boundary-heavy batch and stalls on that straggler, while the
+//! work-stealing scheduler lets drained shards pull the straggler's
+//! sub-ranges. This bench times `residuals_jacobian` (the N×P row sweep
+//! that dominates ENGD-W/SPRING steps) across
+//!
+//! * batch shapes: uniform (all interior) vs boundary-heavy (1/8 interior),
+//! * executor tiers: in-process threads vs out-of-process workers,
+//! * schedules: static vs work stealing,
+//!
+//! at 8 shards, cross-checks every arm bitwise against the unsharded
+//! native backend, prints the steal-vs-static speedups, and writes the
+//! machine-readable summary to `BENCH_shard_scale.json`.
+//!
+//! Like the test suite, this binary doubles as its own shard worker: the
+//! process tier respawns it with `--shard-worker`, which `main` answers
+//! before any benchmarking output can touch stdout.
+
+use std::time::Instant;
+
+use engd::backend::{
+    Evaluator, NativeBackend, ProcessEvaluator, ProcessOptions, Schedule, ShardedEvaluator,
+};
+use engd::config::json::{self, JsonValue};
+use engd::linalg::Workspace;
+use engd::pde::{init_params, param_count, PdeOperator, ProblemSpec, Sampler};
+use engd::rng::Rng;
+
+const SHARDS: usize = 8;
+const TOTAL_ROWS: usize = 4096;
+const REPS: usize = 3;
+
+/// A poisson2d-family spec with an explicit interior/boundary split (the
+/// spec travels with every evaluation call — and, for the process tier,
+/// inside every `Eval` frame — so no backend catalogue entry is needed).
+fn batch_spec(name: &str, n_interior: usize) -> ProblemSpec {
+    let arch = vec![2usize, 32, 32, 1];
+    ProblemSpec {
+        name: name.to_string(),
+        dim: 2,
+        n_params: param_count(&arch),
+        arch,
+        n_interior,
+        n_boundary: TOTAL_ROWS - n_interior,
+        n_eval: 512,
+        interior_weight: 1.0,
+        boundary_weight: 1.0,
+        pde: "sine_product".to_string(),
+        operator: PdeOperator::Poisson,
+    }
+}
+
+struct BatchCase {
+    spec: ProblemSpec,
+    theta: Vec<f64>,
+    x_int: Vec<f64>,
+    x_bnd: Vec<f64>,
+}
+
+fn batch_case(name: &str, n_interior: usize, seed: u64) -> BatchCase {
+    let spec = batch_spec(name, n_interior);
+    let mut rng = Rng::seed_from(seed);
+    let theta = init_params(&spec.arch, &mut rng);
+    let mut sampler = Sampler::new(spec.dim, seed ^ 0xBE7C);
+    let x_int = sampler.interior(spec.n_interior);
+    let x_bnd = sampler.boundary(spec.n_boundary);
+    BatchCase { spec, theta, x_int, x_bnd }
+}
+
+/// One warm-up + bitwise cross-check evaluation, then `REPS` timed ones;
+/// returns the best (minimum) seconds per evaluation.
+fn time_arm(ev: &dyn Evaluator, case: &BatchCase, r_ref: &[f64], j_ref: &[f64]) -> f64 {
+    let mut ws = Workspace::new();
+    let (r, j) = ev
+        .residuals_jacobian(&case.spec, &case.theta, &case.x_int, &case.x_bnd, &mut ws)
+        .expect("warm-up evaluation");
+    assert_eq!(r.len(), r_ref.len());
+    for (i, (a, b)) in r.iter().zip(r_ref).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "r[{i}] diverges from native");
+    }
+    for (i, (a, b)) in j.data().iter().zip(j_ref).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "J[{i}] diverges from native");
+    }
+    ws.recycle_matrix(j);
+
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        let (_, j) = ev
+            .residuals_jacobian(&case.spec, &case.theta, &case.x_int, &case.x_bnd, &mut ws)
+            .expect("timed evaluation");
+        best = best.min(t0.elapsed().as_secs_f64());
+        ws.recycle_matrix(j);
+    }
+    best
+}
+
+fn main() {
+    // Worker mode first: the process tier spawns this binary for its shard
+    // workers, and nothing may touch stdout before the frame protocol.
+    if std::env::args().any(|a| a == "--shard-worker") {
+        std::process::exit(match engd::backend::process::worker_main() {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("shard worker error: {e:#}");
+                1
+            }
+        });
+    }
+
+    // Uniform: essentially every row is an interior row, so static slices
+    // are cost-balanced. Boundary-heavy: the interior rows all land in the
+    // first static slice (TOTAL_ROWS/SHARDS rows) — the straggler shape.
+    let cases = [
+        ("uniform", batch_case("shard_scale_uniform", TOTAL_ROWS - 32, 71)),
+        ("boundary_heavy", batch_case("shard_scale_bheavy", TOTAL_ROWS / SHARDS, 72)),
+    ];
+
+    let native = NativeBackend::new();
+    let mut records: Vec<JsonValue> = Vec::new();
+    let mut speedups: Vec<JsonValue> = Vec::new();
+    println!("shard_scale: {SHARDS} shards, {TOTAL_ROWS} rows, best of {REPS}\n");
+    println!(
+        "{:<16} {:<9} {:<8} {:>12} {:>10}",
+        "batch", "tier", "schedule", "s/eval", "vs static"
+    );
+
+    for (batch, case) in &cases {
+        let mut ws = Workspace::new();
+        let (r_ref, j_ref) = native
+            .residuals_jacobian(&case.spec, &case.theta, &case.x_int, &case.x_bnd, &mut ws)
+            .expect("native reference");
+
+        for tier in ["threads", "process"] {
+            let mut static_s = f64::NAN;
+            for schedule in [Schedule::Static, Schedule::WorkSteal] {
+                let secs = match tier {
+                    "threads" => {
+                        let ev = ShardedEvaluator::new(SHARDS).with_schedule(schedule);
+                        time_arm(&ev, case, &r_ref, j_ref.data())
+                    }
+                    _ => {
+                        let ev = ProcessEvaluator::with_options(ProcessOptions {
+                            workers: SHARDS,
+                            schedule,
+                            ..ProcessOptions::default()
+                        });
+                        time_arm(&ev, case, &r_ref, j_ref.data())
+                    }
+                };
+                let speedup = match schedule {
+                    Schedule::Static => {
+                        static_s = secs;
+                        f64::NAN
+                    }
+                    Schedule::WorkSteal => static_s / secs,
+                };
+                let vs = if speedup.is_nan() {
+                    "-".to_string()
+                } else {
+                    format!("{speedup:.2}x")
+                };
+                println!(
+                    "{batch:<16} {tier:<9} {:<8} {secs:>12.4} {vs:>10}",
+                    schedule.name()
+                );
+                records.push(JsonValue::Object(vec![
+                    ("batch".into(), JsonValue::String(batch.to_string())),
+                    ("tier".into(), JsonValue::String(tier.to_string())),
+                    ("schedule".into(), JsonValue::String(schedule.name().to_string())),
+                    ("secs_per_eval".into(), JsonValue::Number(secs)),
+                    ("reps".into(), JsonValue::Number(REPS as f64)),
+                ]));
+                if schedule == Schedule::WorkSteal {
+                    speedups.push(JsonValue::Object(vec![
+                        ("batch".into(), JsonValue::String(batch.to_string())),
+                        ("tier".into(), JsonValue::String(tier.to_string())),
+                        ("steal_vs_static".into(), JsonValue::Number(speedup)),
+                    ]));
+                }
+            }
+        }
+        ws.recycle_matrix(j_ref);
+    }
+
+    println!("\n=== steal vs static ===");
+    for s in &speedups {
+        let get = |k: &str| s.get(k).and_then(JsonValue::as_str).unwrap_or("?");
+        let x = s.get("steal_vs_static").and_then(JsonValue::as_f64).unwrap_or(f64::NAN);
+        println!("{:<16} {:<9} {x:.2}x", get("batch"), get("tier"));
+    }
+    println!("(target: >= 1.3x on the boundary-heavy batch at {SHARDS} shards)");
+
+    let out = JsonValue::Object(vec![
+        ("bench".into(), JsonValue::String("shard_scale".into())),
+        ("shards".into(), JsonValue::Number(SHARDS as f64)),
+        ("rows".into(), JsonValue::Number(TOTAL_ROWS as f64)),
+        ("records".into(), JsonValue::Array(records)),
+        ("speedups".into(), JsonValue::Array(speedups)),
+    ]);
+    let path = "BENCH_shard_scale.json";
+    match std::fs::write(path, json::to_string(&out) + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -13,14 +13,24 @@
 //!   Laplacian, hand-rolled reverse mode for the per-sample Jacobian rows.
 //!   No artifacts, no PJRT client, runs anywhere `cargo test` does.
 //!
-//! plus one composite:
+//! plus the sharded execution tiers, both built on the native backend's
+//! range-granular `shard_*` protocol and the work-stealing range scheduler
+//! in [`sharded`]:
 //!
-//! * **sharded** ([`ShardedEvaluator`]) — the collocation batch split into
-//!   contiguous shards across inner native evaluators, each writing its
-//!   Jacobian row-block / residual range straight into the shared
-//!   workspace output; reductions follow a fixed shard order so results
-//!   are bitwise-identical to the unsharded native backend for any shard
-//!   count (`--backend sharded:<n>`).
+//! * **sharded threads** ([`ShardedEvaluator`], `--backend sharded:<n>`) —
+//!   the collocation batch served as sub-ranges by inner native evaluators
+//!   on the persistent in-process worker pool;
+//! * **sharded processes** ([`process::ProcessEvaluator`],
+//!   `--backend process:<n>`) — the same dispatch shipped to `n` worker
+//!   *processes* (spawned from this binary via the hidden `--shard-worker`
+//!   entry point) over a length-prefixed frame protocol on stdio pipes; a
+//!   crashed or hung worker is respawned and its in-flight ranges
+//!   requeued.
+//!
+//! Every tier writes each range's results into the same deterministic
+//! output slot and reduces in the unsharded backend's fixed chunk order,
+//! so **all three are bitwise identical** for any worker count, schedule,
+//! and completion order (`rust/tests/pool.rs`, `rust/tests/process.rs`).
 //!
 //! The optimizers' *fused* execution path is artifact-specific by nature;
 //! on a backend with no PJRT runtime they transparently fall back to the
@@ -28,16 +38,18 @@
 
 pub mod native;
 mod pjrt;
+pub mod process;
 pub mod sharded;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::linalg::{Matrix, Workspace};
 use crate::pde::ProblemSpec;
 use crate::runtime::Runtime;
 
 pub use native::{NativeBackend, NumericsMode, SimdTier};
-pub use sharded::ShardedEvaluator;
+pub use process::{ProcessEvaluator, ProcessOptions};
+pub use sharded::{SchedSnapshot, Schedule, ShardedEvaluator};
 
 /// A backend able to evaluate the PINN model and its PDE residuals.
 ///
@@ -53,6 +65,13 @@ pub trait Evaluator {
 
     /// Names of every problem this backend can serve.
     fn problem_names(&self) -> Vec<String>;
+
+    /// Cumulative range-scheduler counters, when this backend dispatches
+    /// work through one (the sharded thread/process tiers). The trainer
+    /// logs per-step deltas to the metrics CSV.
+    fn sched_stats(&self) -> Option<SchedSnapshot> {
+        None
+    }
 
     /// `L(θ) = ½‖r(θ)‖²` on the given batch (line-search probes).
     fn loss(&self, p: &ProblemSpec, theta: &[f64], x_int: &[f64], x_bnd: &[f64])
@@ -94,6 +113,63 @@ pub trait Evaluator {
     }
 }
 
+/// Parsed backend selector — the `--backend` / TOML `backend` grammar.
+///
+/// Parsing is shared by [`select_with_numerics`] and the config layer
+/// ([`validate_backend`]), so malformed selectors and zero shard counts
+/// (`sharded:0`, `process:0`) are rejected at config-parse time with a
+/// clear error instead of deep inside evaluator construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Auto,
+    Pjrt,
+    Native,
+    /// In-process sharded tier with an explicit shard count (≥ 1).
+    Sharded(usize),
+    /// Out-of-process sharded tier with an explicit worker count (≥ 1).
+    Process(usize),
+}
+
+impl BackendKind {
+    /// Parse `pjrt | native | sharded[:n] | process[:n] | auto` (an empty
+    /// string reads as `auto`). Bare `sharded`/`process` default to one
+    /// shard per worker thread.
+    pub fn parse(kind: &str) -> Result<Self> {
+        fn count(k: &str, tier: &str, digits: &str) -> Result<usize> {
+            let n: usize = digits
+                .parse()
+                .map_err(|_| anyhow!("bad shard count in '{k}' (expected {tier}:<n>)"))?;
+            ensure!(
+                n > 0,
+                "shard count must be at least 1 (got '{k}'; {tier}:0 would run nothing)"
+            );
+            Ok(n)
+        }
+        Ok(match kind {
+            "auto" | "" => Self::Auto,
+            "pjrt" => Self::Pjrt,
+            "native" => Self::Native,
+            "sharded" => Self::Sharded(crate::parallel::num_threads()),
+            "process" => Self::Process(crate::parallel::num_threads()),
+            k if k.starts_with("sharded:") => {
+                Self::Sharded(count(k, "sharded", &k["sharded:".len()..])?)
+            }
+            k if k.starts_with("process:") => {
+                Self::Process(count(k, "process", &k["process:".len()..])?)
+            }
+            other => {
+                bail!("unknown backend '{other}' (expected pjrt|native|sharded[:n]|process[:n]|auto)")
+            }
+        })
+    }
+}
+
+/// Config-parse-time validation of a backend selector string: errors
+/// exactly when [`select`] would refuse it, without building anything.
+pub fn validate_backend(kind: &str) -> Result<()> {
+    BackendKind::parse(kind).map(|_| ())
+}
+
 /// Build the backend named by `kind`:
 ///
 /// * `"pjrt"`    — PJRT runtime over `artifacts_dir` (errors when missing);
@@ -101,6 +177,10 @@ pub trait Evaluator {
 /// * `"sharded"` / `"sharded:<n>"` — the batch-sharded composite over `n`
 ///   inner native evaluators (default: one per worker thread); results are
 ///   bitwise-identical to `"native"`;
+/// * `"process"` / `"process:<n>"` — the same sharded dispatch over `n`
+///   worker *processes* respawned from this binary (`--shard-worker`);
+///   also bitwise-identical to `"native"`, and fault-tolerant: a killed
+///   worker is respawned and its ranges requeued;
 /// * `"auto"`    — PJRT when `artifacts_dir/manifest.json` exists *and* a
 ///   PJRT client can be created, otherwise native. The default everywhere.
 ///
@@ -119,8 +199,8 @@ pub fn select_with_numerics(
     artifacts_dir: &str,
     numerics: NumericsMode,
 ) -> Result<Box<dyn Evaluator>> {
-    match kind {
-        "pjrt" => {
+    match BackendKind::parse(kind)? {
+        BackendKind::Pjrt => {
             if numerics != NumericsMode::Bitwise {
                 bail!(
                     "--numerics {} applies to the native kernel tiers; the pjrt backend \
@@ -130,21 +210,12 @@ pub fn select_with_numerics(
             }
             Ok(Box::new(Runtime::new(artifacts_dir)?))
         }
-        "native" => Ok(Box::new(NativeBackend::with_numerics(numerics))),
-        "sharded" => Ok(Box::new(ShardedEvaluator::with_numerics(
-            crate::parallel::num_threads(),
-            numerics,
-        ))),
-        k if k.starts_with("sharded:") => {
-            let n: usize = k["sharded:".len()..].parse().map_err(|_| {
-                anyhow::anyhow!("bad shard count in '{k}' (expected sharded:<n>)")
-            })?;
-            if n == 0 {
-                bail!("shard count must be at least 1 (got '{k}')");
-            }
-            Ok(Box::new(ShardedEvaluator::with_numerics(n, numerics)))
+        BackendKind::Native => Ok(Box::new(NativeBackend::with_numerics(numerics))),
+        BackendKind::Sharded(n) => Ok(Box::new(ShardedEvaluator::with_numerics(n, numerics))),
+        BackendKind::Process(n) => {
+            Ok(Box::new(ProcessEvaluator::with_numerics(n, numerics)))
         }
-        "auto" | "" => {
+        BackendKind::Auto => {
             // Fast mode is a native-tier request: skip the PJRT probe
             // rather than select a backend that cannot honor it.
             if numerics == NumericsMode::Bitwise {
@@ -161,7 +232,6 @@ pub fn select_with_numerics(
             }
             Ok(Box::new(NativeBackend::with_numerics(numerics)))
         }
-        other => bail!("unknown backend '{other}' (expected pjrt|native|sharded[:n]|auto)"),
     }
 }
 

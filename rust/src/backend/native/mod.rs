@@ -29,10 +29,13 @@
 //! Determinism: the loss / gradient reductions are laid out on a *chunk
 //! grid* that depends only on `ENGD_THREADS` and the batch size (see
 //! [`thread_chunks`]), never on runtime scheduling — and the same grid is
-//! what [`super::sharded::ShardedEvaluator`] partitions across inner
-//! evaluators, which is why sharded results are bitwise-identical to this
-//! backend for any shard count. The `shard_*` methods below are that
-//! protocol. Point-blocking changes none of it: every tape lane computes
+//! what [`super::sharded::ShardedEvaluator`] and the process tier
+//! ([`super::process::ProcessEvaluator`]) partition across their
+//! executors, which is why sharded results are bitwise-identical to this
+//! backend for any shard count, schedule, and executor kind. The
+//! `shard_*` methods below are that protocol — range-granular, so the
+//! work-stealing scheduler can hand any sub-range to any executor.
+//! Point-blocking changes none of it: every tape lane computes
 //! the scalar per-point operation sequence, blocks never straddle a
 //! reduction boundary, and per-point accumulations run in ascending row
 //! order, so blocked results are bitwise those of per-point processing.
@@ -153,12 +156,18 @@ impl NativeBackend {
         self.scratch.lock().unwrap_or_else(|poison| poison.into_inner())
     }
 
-    // --- sharded-evaluator protocol ------------------------------------
+    // --- shard protocol -------------------------------------------------
     //
-    // These evaluate a *slice* of the global batch while keeping every
-    // global quantity (residual scaling √(ω/N), the reduction chunk grid)
-    // exactly as the unsharded backend computes it, so a ShardedEvaluator
-    // composed of these calls is bitwise-identical to one NativeBackend.
+    // These evaluate an arbitrary *range* of the global batch while
+    // keeping every global quantity (residual scaling √(ω/N), the
+    // reduction chunk grid) exactly as the unsharded backend computes it,
+    // so any composition of these calls that tiles the batch — whichever
+    // executor serves which range, in whatever order — is
+    // bitwise-identical to one NativeBackend. Both sharded execution
+    // tiers are built on them: the in-process `ShardedEvaluator` calls
+    // them from pool threads, and the out-of-process tier's workers
+    // (`crate::backend::process`) serve them over the frame protocol, one
+    // call per `Range` request.
 
     /// Loss partials of the global reduction chunks `[c0, c1)` (see
     /// [`thread_chunks`]): `out[k] = Σ r_i²` over chunk `c0 + k`, rows in

@@ -1,0 +1,467 @@
+//! Wire format of the process tier: length-prefixed frames on stdio pipes.
+//!
+//! Every frame is `u32 tag | u64 payload_len | payload`, all little-endian
+//! (the supervisor and worker are always the same binary on the same
+//! machine, so no cross-endian concern — the explicit layout is for
+//! debuggability and a future socket transport). Payload scalars are
+//! `u64`/`f64` little-endian; strings and vectors are length-prefixed with
+//! a `u64` count. `f64` values travel as raw IEEE-754 bits, so θ, batches,
+//! and results survive the round trip bit-for-bit — the process tier's
+//! bitwise contract starts here.
+//!
+//! The conversation is strictly request/reply after a one-shot handshake:
+//!
+//! ```text
+//! worker → supervisor   MAGIC (8 raw bytes, no frame header)
+//! supervisor → worker   Hello { protocol }
+//! worker → supervisor   HelloAck { pid }
+//! supervisor → worker   Eval { kind, spec, θ, x_a, x_b }     (per batch)
+//! supervisor → worker   Range { lo, hi }                     (per range)
+//! worker → supervisor   Data { values } | Error { message }
+//! supervisor → worker   Exit                                 (shutdown)
+//! ```
+//!
+//! `MAGIC` lets the supervisor skip any noise an embedding binary prints
+//! before entering worker mode, and confirms it spawned something that
+//! actually speaks this protocol.
+
+use std::io::{self, Read, Write};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::pde::{PdeOperator, ProblemSpec};
+
+/// Raw 8-byte stream prologue written by the worker before its first frame.
+pub(crate) const MAGIC: [u8; 8] = *b"ENGDSHW1";
+
+/// Protocol revision carried in `Hello`; bumped on any wire change.
+pub(crate) const PROTOCOL: u64 = 1;
+
+/// Sanity cap on a payload length (a desynced stream otherwise reads a
+/// garbage length and tries to allocate it).
+const MAX_PAYLOAD: u64 = 1 << 33;
+
+/// Which `shard_*` entry point an `Eval` context drives, and therefore
+/// what a work unit and a reply element mean.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum EvalKind {
+    /// Units are reduction chunks; reply is `hi−lo` loss partials.
+    Loss,
+    /// Units are reduction chunks; reply is `hi−lo` loss partials followed
+    /// by `(hi−lo)·n_params` flat gradient partials.
+    LossGrad,
+    /// Units are batch rows; reply is `hi−lo` residuals followed by the
+    /// `(hi−lo)·n_params` Jacobian row-block.
+    Rows,
+    /// Units are evaluation points; reply is `hi−lo` predictions.
+    UPred,
+}
+
+impl EvalKind {
+    fn code(self) -> u64 {
+        match self {
+            EvalKind::Loss => 0,
+            EvalKind::LossGrad => 1,
+            EvalKind::Rows => 2,
+            EvalKind::UPred => 3,
+        }
+    }
+
+    fn from_code(c: u64) -> Result<Self> {
+        Ok(match c {
+            0 => EvalKind::Loss,
+            1 => EvalKind::LossGrad,
+            2 => EvalKind::Rows,
+            3 => EvalKind::UPred,
+            _ => bail!("unknown eval kind code {c}"),
+        })
+    }
+
+    /// Reply f64s per work unit for a problem with `n_params` parameters.
+    pub(crate) fn values_per_unit(self, n_params: usize) -> usize {
+        match self {
+            EvalKind::Loss | EvalKind::UPred => 1,
+            EvalKind::LossGrad | EvalKind::Rows => 1 + n_params,
+        }
+    }
+}
+
+/// Everything a worker needs to serve ranges of one evaluation call.
+#[derive(Debug)]
+pub(crate) struct EvalCtx {
+    pub(crate) kind: EvalKind,
+    pub(crate) spec: ProblemSpec,
+    pub(crate) theta: Vec<f64>,
+    /// Interior batch (`Rows`/`Loss`/`LossGrad`) or the evaluation set
+    /// (`UPred`).
+    pub(crate) x_a: Vec<f64>,
+    /// Boundary batch; empty for `UPred`.
+    pub(crate) x_b: Vec<f64>,
+}
+
+#[derive(Debug)]
+pub(crate) enum Frame {
+    Hello { protocol: u64 },
+    HelloAck { pid: u64 },
+    Eval(Box<EvalCtx>),
+    Range { lo: u64, hi: u64 },
+    Data { values: Vec<f64> },
+    Error { message: String },
+    Exit,
+}
+
+const TAG_HELLO: u32 = 1;
+const TAG_HELLO_ACK: u32 = 2;
+const TAG_EVAL: u32 = 3;
+const TAG_RANGE: u32 = 4;
+const TAG_DATA: u32 = 5;
+const TAG_ERROR: u32 = 6;
+const TAG_EXIT: u32 = 7;
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u64(b, s.len() as u64);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_f64s(b: &mut Vec<u8>, v: &[f64]) {
+    put_u64(b, v.len() as u64);
+    b.reserve(v.len() * 8);
+    for x in v {
+        put_f64(b, *x);
+    }
+}
+
+fn put_usizes(b: &mut Vec<u8>, v: &[usize]) {
+    put_u64(b, v.len() as u64);
+    for x in v {
+        put_u64(b, *x as u64);
+    }
+}
+
+fn put_spec(b: &mut Vec<u8>, p: &ProblemSpec) {
+    put_str(b, &p.name);
+    put_u64(b, p.dim as u64);
+    put_usizes(b, &p.arch);
+    put_u64(b, p.n_params as u64);
+    put_u64(b, p.n_interior as u64);
+    put_u64(b, p.n_boundary as u64);
+    put_u64(b, p.n_eval as u64);
+    put_f64(b, p.interior_weight);
+    put_f64(b, p.boundary_weight);
+    put_str(b, &p.pde);
+    put_str(b, p.operator.name());
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.buf.len() - self.pos >= n,
+            "payload truncated: wanted {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u64()? as usize;
+        Ok(String::from_utf8(self.bytes(n)?.to_vec())?)
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        ensure!(
+            n <= (self.buf.len() - self.pos) / 8,
+            "vector length {n} exceeds the remaining payload"
+        );
+        let raw = self.bytes(n * 8)?;
+        let mut out = Vec::with_capacity(n);
+        for k in 0..n {
+            out.push(f64::from_le_bytes(raw[k * 8..k * 8 + 8].try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.u64()? as usize;
+        ensure!(
+            n <= (self.buf.len() - self.pos) / 8,
+            "vector length {n} exceeds the remaining payload"
+        );
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()? as usize);
+        }
+        Ok(out)
+    }
+
+    fn spec(&mut self) -> Result<ProblemSpec> {
+        Ok(ProblemSpec {
+            name: self.str()?,
+            dim: self.u64()? as usize,
+            arch: self.usizes()?,
+            n_params: self.u64()? as usize,
+            n_interior: self.u64()? as usize,
+            n_boundary: self.u64()? as usize,
+            n_eval: self.u64()? as usize,
+            interior_weight: self.f64()?,
+            boundary_weight: self.f64()?,
+            pde: self.str()?,
+            operator: PdeOperator::parse(&self.str()?)?,
+        })
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "trailing garbage: {} of {} payload bytes unread",
+            self.buf.len() - self.pos,
+            self.buf.len()
+        );
+        Ok(())
+    }
+}
+
+fn assemble(tag: u32, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + payload.len());
+    out.extend_from_slice(&tag.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Serialize a frame (header + payload) into one contiguous byte buffer.
+pub(crate) fn frame_bytes(f: &Frame) -> Vec<u8> {
+    let mut p = Vec::new();
+    let tag = match f {
+        Frame::Hello { protocol } => {
+            put_u64(&mut p, *protocol);
+            TAG_HELLO
+        }
+        Frame::HelloAck { pid } => {
+            put_u64(&mut p, *pid);
+            TAG_HELLO_ACK
+        }
+        Frame::Eval(ctx) => {
+            return eval_frame_bytes(ctx.kind, &ctx.spec, &ctx.theta, &ctx.x_a, &ctx.x_b);
+        }
+        Frame::Range { lo, hi } => {
+            put_u64(&mut p, *lo);
+            put_u64(&mut p, *hi);
+            TAG_RANGE
+        }
+        Frame::Data { values } => {
+            put_f64s(&mut p, values);
+            TAG_DATA
+        }
+        Frame::Error { message } => {
+            put_str(&mut p, message);
+            TAG_ERROR
+        }
+        Frame::Exit => TAG_EXIT,
+    };
+    assemble(tag, p)
+}
+
+/// Serialize an `Eval` frame straight from borrowed slices — the
+/// supervisor encodes one context per evaluation call and reuses the bytes
+/// across workers and respawns without cloning θ or the batches.
+pub(crate) fn eval_frame_bytes(
+    kind: EvalKind,
+    spec: &ProblemSpec,
+    theta: &[f64],
+    x_a: &[f64],
+    x_b: &[f64],
+) -> Vec<u8> {
+    let mut p = Vec::with_capacity(64 + 8 * (theta.len() + x_a.len() + x_b.len()));
+    put_u64(&mut p, kind.code());
+    put_spec(&mut p, spec);
+    put_f64s(&mut p, theta);
+    put_f64s(&mut p, x_a);
+    put_f64s(&mut p, x_b);
+    assemble(TAG_EVAL, p)
+}
+
+fn decode(tag: u32, payload: &[u8]) -> Result<Frame> {
+    let mut d = Dec::new(payload);
+    let frame = match tag {
+        TAG_HELLO => Frame::Hello { protocol: d.u64()? },
+        TAG_HELLO_ACK => Frame::HelloAck { pid: d.u64()? },
+        TAG_EVAL => Frame::Eval(Box::new(EvalCtx {
+            kind: EvalKind::from_code(d.u64()?)?,
+            spec: d.spec()?,
+            theta: d.f64s()?,
+            x_a: d.f64s()?,
+            x_b: d.f64s()?,
+        })),
+        TAG_RANGE => Frame::Range {
+            lo: d.u64()?,
+            hi: d.u64()?,
+        },
+        TAG_DATA => Frame::Data { values: d.f64s()? },
+        TAG_ERROR => Frame::Error { message: d.str()? },
+        TAG_EXIT => Frame::Exit,
+        other => bail!("unknown frame tag {other}"),
+    };
+    d.done()?;
+    Ok(frame)
+}
+
+/// Write one frame and flush (request/reply pacing needs the flush —
+/// `BufWriter`-wrapped pipes would otherwise deadlock both sides waiting).
+pub(crate) fn write_frame(w: &mut impl Write, f: &Frame) -> io::Result<()> {
+    w.write_all(&frame_bytes(f))?;
+    w.flush()
+}
+
+/// Read one frame; frames after the stream prologue only (the caller
+/// consumes [`MAGIC`] first). `UnexpectedEof` before a header means the
+/// peer hung up cleanly between frames.
+pub(crate) fn read_frame(r: &mut impl Read) -> io::Result<Frame> {
+    let mut head = [0u8; 12];
+    r.read_exact(&mut head)?;
+    let tag = u32::from_le_bytes(head[..4].try_into().unwrap());
+    let len = u64::from_le_bytes(head[4..].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame payload length {len} exceeds the sanity cap (desynced stream?)"),
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    decode(tag, &payload)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("{e:#}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::builtin_problem;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = frame_bytes(f);
+        let mut cursor = std::io::Cursor::new(bytes);
+        let back = read_frame(&mut cursor).unwrap();
+        assert_eq!(cursor.position() as usize, cursor.get_ref().len(), "bytes left over");
+        back
+    }
+
+    #[test]
+    fn scalar_frames_roundtrip() {
+        assert!(matches!(
+            roundtrip(&Frame::Hello { protocol: PROTOCOL }),
+            Frame::Hello { protocol: PROTOCOL }
+        ));
+        assert!(matches!(roundtrip(&Frame::HelloAck { pid: 4242 }), Frame::HelloAck { pid: 4242 }));
+        assert!(
+            matches!(roundtrip(&Frame::Range { lo: 3, hi: 17 }), Frame::Range { lo: 3, hi: 17 })
+        );
+        assert!(matches!(roundtrip(&Frame::Exit), Frame::Exit));
+        match roundtrip(&Frame::Error { message: "boom × 3".into() }) {
+            Frame::Error { message } => assert_eq!(message, "boom × 3"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn data_frames_preserve_f64_bits() {
+        let values = vec![0.0, -0.0, 1.5, f64::MIN_POSITIVE, f64::NAN, f64::NEG_INFINITY, 1e300];
+        match roundtrip(&Frame::Data { values: values.clone() }) {
+            Frame::Data { values: back } => {
+                assert_eq!(back.len(), values.len());
+                for (a, b) in values.iter().zip(&back) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn eval_frames_roundtrip_the_full_context() {
+        for name in ["poisson2d", "heat2d"] {
+            let spec = builtin_problem(name).unwrap();
+            let theta = vec![1.25, -2.5, 3.75];
+            let x_a = vec![0.1, 0.2, 0.3, 0.4];
+            let x_b = vec![0.9];
+            let f = Frame::Eval(Box::new(EvalCtx {
+                kind: EvalKind::Rows,
+                spec: spec.clone(),
+                theta: theta.clone(),
+                x_a: x_a.clone(),
+                x_b: x_b.clone(),
+            }));
+            match roundtrip(&f) {
+                Frame::Eval(ctx) => {
+                    assert_eq!(ctx.kind, EvalKind::Rows);
+                    assert_eq!(ctx.spec.name, spec.name);
+                    assert_eq!(ctx.spec.arch, spec.arch);
+                    assert_eq!(ctx.spec.n_params, spec.n_params);
+                    assert_eq!(ctx.spec.operator, spec.operator);
+                    assert_eq!(ctx.spec.pde, spec.pde);
+                    assert_eq!(ctx.theta, theta);
+                    assert_eq!(ctx.x_a, x_a);
+                    assert_eq!(ctx.x_b, x_b);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn desynced_streams_are_rejected() {
+        // Absurd payload length: refused before allocating.
+        let mut head = Vec::new();
+        head.extend_from_slice(&TAG_DATA.to_le_bytes());
+        head.extend_from_slice(&u64::MAX.to_le_bytes());
+        let err = read_frame(&mut std::io::Cursor::new(head)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+
+        // Unknown tag.
+        let bytes = assemble(99, Vec::new());
+        let err = read_frame(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+
+        // Truncated payload inside a declared-complete frame.
+        let mut short = Vec::new();
+        put_u64(&mut short, 10); // claims 10 f64s, carries none
+        let err = read_frame(&mut std::io::Cursor::new(assemble(TAG_DATA, short))).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn values_per_unit_matches_reply_layout() {
+        assert_eq!(EvalKind::Loss.values_per_unit(7), 1);
+        assert_eq!(EvalKind::UPred.values_per_unit(7), 1);
+        assert_eq!(EvalKind::LossGrad.values_per_unit(7), 8);
+        assert_eq!(EvalKind::Rows.values_per_unit(7), 8);
+    }
+}

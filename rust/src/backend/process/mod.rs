@@ -1,0 +1,792 @@
+//! Out-of-process shard executors: the third execution tier.
+//!
+//! [`ProcessEvaluator`] runs the same batch-sharded dispatch as
+//! [`crate::backend::sharded::ShardedEvaluator`], but each shard is a
+//! worker *process* instead of a pool thread: the supervisor spawns `n`
+//! copies of the current binary with the hidden `--shard-worker` argv flag
+//! (see [`worker_main`]), ships θ and the batches once per evaluation over
+//! a length-prefixed frame protocol on stdio pipes ([`frames`]), then
+//! streams range requests from the shared work-stealing [`RangeQueue`] and
+//! writes each reply into its deterministic slot of the pooled output.
+//!
+//! ## Bitwise contract
+//!
+//! `--backend process:<n>` is bitwise-identical to `--backend native` for
+//! any worker count, schedule, and interleaving, by the same argument as
+//! the thread tier: workers compute ranges through the identical
+//! `shard_*` kernels (the supervisor pins `ENGD_THREADS` and
+//! `ENGD_NUMERICS` in each worker's environment so the reduction chunk
+//! grid and kernel tier match), every range lands in a fixed output slot,
+//! f64 payloads travel as raw IEEE-754 bits, and reductions run in the
+//! unsharded chunk order. `rust/tests/process.rs` asserts the identity for
+//! the whole evaluation surface and for full training trajectories —
+//! including runs where a worker is killed mid-step.
+//!
+//! ## Fault tolerance
+//!
+//! Each worker's I/O thread treats a vanished pipe, a protocol desync, or
+//! a missed reply deadline (`ENGD_SHARD_TIMEOUT_S`, default 30 s) as a
+//! dead worker: the in-flight range goes back on the queue for any live
+//! shard, the process is killed and respawned (up to
+//! [`ProcessOptions::max_respawns`] per evaluation), and the evaluation
+//! only fails if the batch cannot be completed at all. A worker replying
+//! with an explicit `Error` frame is a *deterministic* failure — every
+//! respawn would hit it too — so it fails the evaluation immediately.
+
+mod frames;
+mod worker;
+
+pub use worker::worker_main;
+
+use std::io::{BufReader, Read, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::native::{thread_chunks, NativeBackend, NumericsMode};
+use super::sharded::{RangeQueue, SchedState, Schedule};
+use super::{Evaluator, SchedSnapshot};
+use crate::linalg::{Matrix, Workspace, WorkspaceStats};
+use crate::parallel::{self, SendPtr};
+use crate::pde::ProblemSpec;
+use self::frames::{EvalKind, Frame};
+
+/// Supervisor knobs; [`Default`] reads the environment.
+#[derive(Debug, Clone)]
+pub struct ProcessOptions {
+    /// Worker processes to run (≥ 1).
+    pub workers: usize,
+    /// Argv (after the executable path) that re-enters the spawned binary
+    /// in worker mode. The `engd` binary and the process-tier test/bench
+    /// harnesses all answer `--shard-worker`.
+    pub spawn_args: Vec<String>,
+    /// Per-range reply deadline; a worker that blows it is declared hung,
+    /// killed, and respawned. Default: `ENGD_SHARD_TIMEOUT_S` seconds,
+    /// else 30 s.
+    pub deadline: Duration,
+    /// Respawn budget per worker per evaluation call; a worker that dies
+    /// more often retires for the rest of the call (its ranges are
+    /// requeued for the others).
+    pub max_respawns: usize,
+    /// Work-assignment policy. Default: `ENGD_SHARD_SCHEDULE`
+    /// (work stealing unless `static`).
+    pub schedule: Schedule,
+    /// Deterministic fault injection (tests): worker `.0` exits abruptly
+    /// when range request `.1` (0-based) arrives — armed only on that
+    /// worker's first incarnation, so its respawn serves normally.
+    pub fault_once: Option<(usize, u64)>,
+}
+
+impl Default for ProcessOptions {
+    fn default() -> Self {
+        let deadline = std::env::var("ENGD_SHARD_TIMEOUT_S")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .filter(|s| *s > 0.0)
+            .unwrap_or(30.0);
+        ProcessOptions {
+            workers: parallel::num_threads(),
+            spawn_args: vec!["--shard-worker".to_string()],
+            deadline: Duration::from_secs_f64(deadline),
+            max_respawns: 2,
+            schedule: Schedule::from_env(),
+            fault_once: None,
+        }
+    }
+}
+
+/// A live worker process plus its I/O endpoints. Replies arrive through a
+/// dedicated reader thread (so the dispatch loop can wait with a timeout);
+/// requests go straight down the child's stdin.
+struct WorkerProc {
+    child: Child,
+    stdin: ChildStdin,
+    rx: Receiver<std::io::Result<Frame>>,
+    /// Evaluation generation whose `Eval` context this worker holds —
+    /// the context is re-sent only after a respawn or a new evaluation.
+    ctx_gen: u64,
+}
+
+/// One supervisor-side worker slot. The slot mutex is held by that
+/// worker's I/O thread for a whole dispatch, so slots never contend.
+#[derive(Default)]
+struct Slot {
+    proc: Option<WorkerProc>,
+    /// A previous incarnation died — the next spawn counts as a respawn.
+    died: bool,
+}
+
+/// How a range request failed, which decides the recovery.
+enum WorkerFailure {
+    /// The worker vanished, desynced, or missed the deadline: kill,
+    /// requeue the range, respawn.
+    Dead(anyhow::Error),
+    /// The worker reported a deterministic evaluation error: fail the
+    /// dispatch (a respawn would hit it again).
+    Fatal(anyhow::Error),
+}
+
+/// The process-tier [`Evaluator`]: batch shards served by worker
+/// processes. Construction is lazy — workers spawn on the first
+/// evaluation call and persist (with their warmed tape scratch) across
+/// steps until the evaluator drops.
+pub struct ProcessEvaluator {
+    /// Problem catalogue + numerics-mode holder. Serving never touches it
+    /// (the full `ProblemSpec` travels in the `Eval` frame), so custom
+    /// problem sets work even though workers boot the built-in catalogue.
+    catalog: NativeBackend,
+    opts: ProcessOptions,
+    slots: Vec<Mutex<Slot>>,
+    sched: SchedState,
+    /// Monotone evaluation-context generation (see `WorkerProc::ctx_gen`).
+    ctx_gen: AtomicU64,
+    /// The one-shot fault of `ProcessOptions::fault_once` has been armed.
+    fault_armed: AtomicBool,
+    /// Pooled storage for reduction partials, as in the thread tier.
+    scratch: Mutex<Workspace>,
+}
+
+impl ProcessEvaluator {
+    /// `workers` worker processes over the built-in problem catalogue, in
+    /// the `ENGD_NUMERICS`-requested numerics mode.
+    ///
+    /// Panics if `workers == 0` — the config layer
+    /// (`crate::backend::validate_backend`) rejects `process:0` before it
+    /// can reach here.
+    pub fn new(workers: usize) -> Self {
+        Self::with_options(ProcessOptions { workers, ..ProcessOptions::default() })
+    }
+
+    /// Built-in catalogue in an explicit numerics mode (the config/CLI
+    /// path); the mode is pinned into every worker's environment.
+    pub fn with_numerics(workers: usize, numerics: NumericsMode) -> Self {
+        Self::build(
+            NativeBackend::with_numerics(numerics),
+            ProcessOptions { workers, ..ProcessOptions::default() },
+        )
+    }
+
+    /// Fully explicit supervisor options (tests, benches).
+    pub fn with_options(opts: ProcessOptions) -> Self {
+        Self::build(NativeBackend::new(), opts)
+    }
+
+    /// Custom problem set with explicit options (tests). The specs travel
+    /// to the workers inside every `Eval` frame, so no worker-side
+    /// catalogue is needed.
+    pub fn with_problems_options(problems: Vec<ProblemSpec>, opts: ProcessOptions) -> Self {
+        Self::build(NativeBackend::with_problems(problems), opts)
+    }
+
+    fn build(catalog: NativeBackend, opts: ProcessOptions) -> Self {
+        assert!(opts.workers > 0, "ProcessEvaluator needs at least one worker (got 0)");
+        let workers = opts.workers;
+        ProcessEvaluator {
+            catalog,
+            opts,
+            slots: (0..workers).map(|_| Mutex::new(Slot::default())).collect(),
+            sched: SchedState::new(workers),
+            ctx_gen: AtomicU64::new(0),
+            fault_armed: AtomicBool::new(false),
+            scratch: Mutex::new(Workspace::new()),
+        }
+    }
+
+    /// Number of worker processes.
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// PIDs of the currently live workers (`None` for never-spawned or
+    /// currently-dead slots) — observability and external kill tests.
+    pub fn worker_pids(&self) -> Vec<Option<u32>> {
+        self.slots
+            .iter()
+            .map(|s| {
+                let slot = s.lock().unwrap_or_else(|p| p.into_inner());
+                slot.proc.as_ref().map(|p| p.child.id())
+            })
+            .collect()
+    }
+
+    /// Kill worker `idx`'s process outright (tests: simulate an external
+    /// crash). The next evaluation respawns it and re-ships the context.
+    /// Blocks while a dispatch holds the slot.
+    pub fn kill_worker(&self, idx: usize) {
+        let mut slot = self.slots[idx].lock().unwrap_or_else(|p| p.into_inner());
+        Self::kill_slot(&mut slot);
+    }
+
+    /// Allocation counters of the partial-buffer pool.
+    pub fn scratch_stats(&self) -> WorkspaceStats {
+        self.lock_scratch().stats()
+    }
+
+    fn lock_scratch(&self) -> MutexGuard<'_, Workspace> {
+        self.scratch.lock().unwrap_or_else(|poison| poison.into_inner())
+    }
+
+    fn kill_slot(slot: &mut Slot) {
+        if let Some(mut proc) = slot.proc.take() {
+            let _ = proc.child.kill();
+            let _ = proc.child.wait();
+        }
+        slot.died = true;
+    }
+
+    /// Spawn one worker process and complete the `MAGIC`/`Hello` handshake.
+    fn spawn_worker(&self, idx: usize) -> Result<WorkerProc> {
+        let exe = match std::env::var_os("ENGD_WORKER_EXE") {
+            Some(p) => PathBuf::from(p),
+            None => std::env::current_exe().context("resolving the worker executable")?,
+        };
+        let mut cmd = Command::new(exe);
+        cmd.args(&self.opts.spawn_args)
+            // Pin the determinism-critical knobs: the worker must rebuild
+            // the supervisor's reduction chunk grid and kernel tier.
+            .env("ENGD_THREADS", parallel::num_threads().to_string())
+            .env("ENGD_NUMERICS", self.catalog.numerics().name())
+            .env_remove("ENGD_BACKEND")
+            .env_remove("ENGD_SHARD_FAULT")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit());
+        if let Some((w, after)) = self.opts.fault_once {
+            // One worker, one incarnation: swap only evaluates when the
+            // index matches, so the flag arms exactly once.
+            if w == idx && !self.fault_armed.swap(true, Ordering::SeqCst) {
+                cmd.env("ENGD_SHARD_FAULT", format!("after={after}"));
+            }
+        }
+        let mut child = cmd.spawn().with_context(|| format!("spawning shard worker {idx}"))?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut proc = WorkerProc { child, stdin, rx: start_reader(stdout), ctx_gen: 0 };
+        let hello = Frame::Hello { protocol: frames::PROTOCOL };
+        let failure = match frames::write_frame(&mut proc.stdin, &hello) {
+            Err(e) => anyhow!("greeting shard worker {idx}: {e}"),
+            Ok(()) => match proc.rx.recv_timeout(self.opts.deadline) {
+                Ok(Ok(Frame::HelloAck { .. })) => return Ok(proc),
+                Ok(Ok(other)) => anyhow!("worker {idx} handshake desync: {other:?}"),
+                Ok(Err(e)) => anyhow!("worker {idx} handshake failed: {e}"),
+                Err(_) => anyhow!("worker {idx} handshake timed out"),
+            },
+        };
+        let _ = proc.child.kill();
+        let _ = proc.child.wait();
+        Err(failure)
+    }
+
+    /// Run all of `units` through the workers: plan ranges, pump each
+    /// worker's request/reply stream from its own I/O thread, recover from
+    /// crashes, and land every reply via `write(lo, hi, values)`.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch(
+        &self,
+        kind: EvalKind,
+        spec: &ProblemSpec,
+        theta: &[f64],
+        x_a: &[f64],
+        x_b: &[f64],
+        units: usize,
+        write: &(dyn Fn(usize, usize, &[f64]) -> Result<()> + Sync),
+    ) -> Result<()> {
+        let workers = self.slots.len();
+        let queue = RangeQueue::new(units, workers, self.opts.schedule);
+        // One encode per evaluation; the bytes are shared by every worker
+        // and re-shipped as-is after a respawn.
+        let eval_bytes = frames::eval_frame_bytes(kind, spec, theta, x_a, x_b);
+        let per_unit = kind.values_per_unit(spec.n_params);
+        let gen = self.ctx_gen.fetch_add(1, Ordering::Relaxed) + 1;
+        let in_flight = AtomicUsize::new(0);
+        let done_units = AtomicUsize::new(0);
+        let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        std::thread::scope(|scope| {
+            for idx in 0..workers {
+                let queue = &queue;
+                let eval_bytes = &eval_bytes[..];
+                let in_flight = &in_flight;
+                let done_units = &done_units;
+                let error = &error;
+                scope.spawn(move || {
+                    let outcome = self.worker_io_loop(
+                        idx, gen, eval_bytes, queue, in_flight, done_units, per_unit, write,
+                    );
+                    if let Err(e) = outcome {
+                        queue.poison();
+                        let mut first = error.lock().unwrap_or_else(|p| p.into_inner());
+                        if first.is_none() {
+                            *first = Some(e);
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(e) = error.lock().unwrap_or_else(|p| p.into_inner()).take() {
+            return Err(e);
+        }
+        let done = done_units.load(Ordering::SeqCst);
+        ensure!(
+            done == units,
+            "shard workers completed only {done} of {units} work units \
+             (all respawn budgets exhausted?)"
+        );
+        Ok(())
+    }
+
+    /// One worker's dispatch loop: claim ranges, serve them through the
+    /// worker process, recover dead workers. Returns `Err` only for
+    /// dispatch-fatal conditions; a worker that exhausts its respawn
+    /// budget retires with `Ok` after requeueing its range.
+    #[allow(clippy::too_many_arguments)]
+    fn worker_io_loop(
+        &self,
+        idx: usize,
+        gen: u64,
+        eval_bytes: &[u8],
+        queue: &RangeQueue,
+        in_flight: &AtomicUsize,
+        done_units: &AtomicUsize,
+        per_unit: usize,
+        write: &(dyn Fn(usize, usize, &[f64]) -> Result<()> + Sync),
+    ) -> Result<()> {
+        let mut slot = self.slots[idx].lock().unwrap_or_else(|p| p.into_inner());
+        let mut respawns_left = self.opts.max_respawns;
+        // Only work stealing can hand this shard a peer's requeued range,
+        // so only then is waiting on peers' in-flight work useful.
+        let can_wait = self.opts.schedule == Schedule::WorkSteal;
+        let t0 = Instant::now();
+        let result = loop {
+            let claimed = loop {
+                if queue.is_poisoned() {
+                    break None;
+                }
+                // Count ourselves in-flight *before* popping: peers then
+                // never observe (empty queue, nothing in flight) while a
+                // range could still be requeued.
+                in_flight.fetch_add(1, Ordering::SeqCst);
+                if let Some(r) = queue.pop_for(idx) {
+                    break Some(r);
+                }
+                let others = in_flight.fetch_sub(1, Ordering::SeqCst) - 1;
+                if others == 0 || !can_wait {
+                    break None;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            };
+            let Some((lo, hi, stolen)) = claimed else {
+                break Ok(());
+            };
+            self.sched.note_range(stolen);
+            match self.run_range(&mut slot, idx, gen, eval_bytes, lo, hi) {
+                Ok(values) => {
+                    let expect = (hi - lo) * per_unit;
+                    if values.len() != expect {
+                        in_flight.fetch_sub(1, Ordering::SeqCst);
+                        break Err(anyhow!(
+                            "worker {idx} returned {} values for range [{lo}, {hi}) \
+                             (expected {expect})",
+                            values.len()
+                        ));
+                    }
+                    let landed = write(lo, hi, &values);
+                    if landed.is_ok() {
+                        done_units.fetch_add(hi - lo, Ordering::SeqCst);
+                    }
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    if let Err(e) = landed {
+                        break Err(e);
+                    }
+                }
+                Err(WorkerFailure::Fatal(e)) => {
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    break Err(e);
+                }
+                Err(WorkerFailure::Dead(e)) => {
+                    // Crash, desync, or deadline: requeue for any live
+                    // shard (before the in-flight decrement, so waiters
+                    // can't miss it), then respawn lazily or retire.
+                    Self::kill_slot(&mut slot);
+                    queue.requeue(idx, lo, hi);
+                    self.sched.note_requeue();
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    if respawns_left == 0 {
+                        eprintln!(
+                            "note: shard worker {idx} retired for this evaluation after \
+                             exhausting its respawn budget ({e:#})"
+                        );
+                        break Ok(());
+                    }
+                    respawns_left -= 1;
+                }
+            }
+        };
+        self.sched.add_busy(idx, t0.elapsed());
+        result
+    }
+
+    /// Serve one range through worker `idx`, (re)spawning it and
+    /// (re)shipping the evaluation context as needed.
+    fn run_range(
+        &self,
+        slot: &mut Slot,
+        idx: usize,
+        gen: u64,
+        eval_bytes: &[u8],
+        lo: usize,
+        hi: usize,
+    ) -> std::result::Result<Vec<f64>, WorkerFailure> {
+        if slot.proc.is_none() {
+            let was_respawn = slot.died;
+            let proc = self.spawn_worker(idx).map_err(WorkerFailure::Dead)?;
+            slot.proc = Some(proc);
+            if was_respawn {
+                self.sched.note_respawn();
+            }
+        }
+        let proc = slot.proc.as_mut().expect("just spawned");
+        if proc.ctx_gen != gen {
+            proc.stdin
+                .write_all(eval_bytes)
+                .and_then(|()| proc.stdin.flush())
+                .map_err(|e| WorkerFailure::Dead(anyhow!("sending eval context: {e}")))?;
+            proc.ctx_gen = gen;
+        }
+        let range = Frame::Range { lo: lo as u64, hi: hi as u64 };
+        proc.stdin
+            .write_all(&frames::frame_bytes(&range))
+            .and_then(|()| proc.stdin.flush())
+            .map_err(|e| WorkerFailure::Dead(anyhow!("sending range request: {e}")))?;
+        match proc.rx.recv_timeout(self.opts.deadline) {
+            Ok(Ok(Frame::Data { values })) => Ok(values),
+            Ok(Ok(Frame::Error { message })) => {
+                Err(WorkerFailure::Fatal(anyhow!("worker {idx}: {message}")))
+            }
+            Ok(Ok(other)) => {
+                Err(WorkerFailure::Dead(anyhow!("worker {idx} protocol desync: {other:?}")))
+            }
+            Ok(Err(e)) => Err(WorkerFailure::Dead(anyhow!("worker {idx} stream died: {e}"))),
+            Err(RecvTimeoutError::Timeout) => Err(WorkerFailure::Dead(anyhow!(
+                "worker {idx} missed the {:.1?} reply deadline",
+                self.opts.deadline
+            ))),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(WorkerFailure::Dead(anyhow!("worker {idx} reader thread disconnected")))
+            }
+        }
+    }
+}
+
+/// Move the child's stdout into a reader thread that scans for the
+/// [`frames::MAGIC`] prologue and then forwards decoded frames (or the
+/// terminating I/O error) through a channel the dispatch loop can wait on
+/// with a timeout.
+fn start_reader(stdout: ChildStdout) -> Receiver<std::io::Result<Frame>> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::Builder::new()
+        .name("engd-shard-reader".to_string())
+        .spawn(move || {
+            let mut r = BufReader::new(stdout);
+            if let Err(e) = sync_to_magic(&mut r) {
+                let _ = tx.send(Err(e));
+                return;
+            }
+            loop {
+                match frames::read_frame(&mut r) {
+                    Ok(f) => {
+                        if tx.send(Ok(f)).is_err() {
+                            return; // supervisor dropped this worker
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        return;
+                    }
+                }
+            }
+        })
+        .expect("spawning shard reader thread");
+    rx
+}
+
+/// Consume the stream up to and including the 8-byte magic prologue,
+/// tolerating a bounded amount of pre-protocol noise (a harness binary
+/// may print a line before entering worker mode).
+fn sync_to_magic(r: &mut impl Read) -> std::io::Result<()> {
+    let mut window = [0u8; 8];
+    let mut have = 0usize;
+    let mut scanned = 0usize;
+    loop {
+        if have == window.len() && window == frames::MAGIC {
+            return Ok(());
+        }
+        if scanned > 65536 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "worker never sent the protocol magic (is --shard-worker handled?)",
+            ));
+        }
+        let mut b = [0u8; 1];
+        r.read_exact(&mut b)?;
+        scanned += 1;
+        if have < window.len() {
+            window[have] = b[0];
+            have += 1;
+        } else {
+            window.rotate_left(1);
+            window[7] = b[0];
+        }
+    }
+}
+
+impl Drop for ProcessEvaluator {
+    fn drop(&mut self) {
+        for slot in &mut self.slots {
+            let slot = slot.get_mut().unwrap_or_else(|p| p.into_inner());
+            let Some(proc) = slot.proc.take() else { continue };
+            let WorkerProc { mut child, mut stdin, .. } = proc;
+            // Polite shutdown: Exit frame, then EOF. Fall back to SIGKILL
+            // if the worker doesn't leave within the grace window.
+            let _ = frames::write_frame(&mut stdin, &Frame::Exit);
+            drop(stdin);
+            let grace = Instant::now() + Duration::from_millis(500);
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < grace => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Evaluator for ProcessEvaluator {
+    fn backend_name(&self) -> &'static str {
+        "process"
+    }
+
+    fn problem(&self, name: &str) -> Result<ProblemSpec> {
+        self.catalog.problem(name)
+    }
+
+    fn problem_names(&self) -> Vec<String> {
+        self.catalog.problem_names()
+    }
+
+    fn sched_stats(&self) -> Option<SchedSnapshot> {
+        Some(self.sched.snapshot())
+    }
+
+    fn loss(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+    ) -> Result<f64> {
+        let (chunks, _) = thread_chunks(p.n_total());
+        // As in the thread tier: scratch may hold stale pool contents, but
+        // the ranges tile `0..chunks` and `dispatch` fails unless every
+        // unit landed, so the reduction only ever reads fresh values.
+        let mut partials = self.lock_scratch().take_scratch(chunks);
+        let dispatched = {
+            let pptr = SendPtr(partials.as_mut_ptr());
+            self.dispatch(EvalKind::Loss, p, theta, x_int, x_bnd, chunks, &|lo, hi, vals| {
+                // SAFETY: queued chunk ranges are disjoint and `partials`
+                // outlives the dispatch.
+                let out = unsafe {
+                    std::slice::from_raw_parts_mut(pptr.get().add(lo), hi - lo)
+                };
+                out.copy_from_slice(vals);
+                Ok(())
+            })
+        };
+        let loss = if dispatched.is_ok() {
+            0.5 * partials.iter().sum::<f64>()
+        } else {
+            f64::NAN
+        };
+        self.lock_scratch().recycle(partials);
+        dispatched?;
+        Ok(loss)
+    }
+
+    fn loss_and_grad(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+    ) -> Result<(f64, Vec<f64>)> {
+        let np = p.n_params;
+        let (chunks, _) = thread_chunks(p.n_total());
+        let (mut loss_parts, mut grad_parts) = {
+            let mut ws = self.lock_scratch();
+            (ws.take_scratch(chunks), ws.take_scratch(chunks * np))
+        };
+        let dispatched = {
+            let lptr = SendPtr(loss_parts.as_mut_ptr());
+            let gptr = SendPtr(grad_parts.as_mut_ptr());
+            self.dispatch(
+                EvalKind::LossGrad,
+                p,
+                theta,
+                x_int,
+                x_bnd,
+                chunks,
+                &|c0, c1, vals| {
+                    let k = c1 - c0;
+                    // Reply layout: k loss partials, then k·P gradients.
+                    let (lv, gv) = vals.split_at(k);
+                    // SAFETY: disjoint chunk ranges of both flat buffers,
+                    // which outlive the dispatch.
+                    unsafe {
+                        std::slice::from_raw_parts_mut(lptr.get().add(c0), k)
+                            .copy_from_slice(lv);
+                        std::slice::from_raw_parts_mut(gptr.get().add(c0 * np), k * np)
+                            .copy_from_slice(gv);
+                    }
+                    Ok(())
+                },
+            )
+        };
+        // Fixed chunk order — byte-for-byte the unsharded reduction.
+        let mut grad = vec![0.0; np];
+        let mut loss = 0.0;
+        if dispatched.is_ok() {
+            for k in 0..chunks {
+                loss += loss_parts[k];
+                for (total, gi) in grad.iter_mut().zip(&grad_parts[k * np..(k + 1) * np]) {
+                    *total += gi;
+                }
+            }
+        }
+        {
+            let mut ws = self.lock_scratch();
+            ws.recycle(loss_parts);
+            ws.recycle(grad_parts);
+        }
+        dispatched?;
+        Ok((0.5 * loss, grad))
+    }
+
+    fn residuals_jacobian(
+        &self,
+        p: &ProblemSpec,
+        theta: &[f64],
+        x_int: &[f64],
+        x_bnd: &[f64],
+        ws: &mut Workspace,
+    ) -> Result<(Vec<f64>, Matrix)> {
+        let n = p.n_total();
+        let np = p.n_params;
+        let mut j = ws.take_matrix(n, np);
+        let mut r = vec![0.0; n];
+        {
+            let jptr = SendPtr(j.data_mut().as_mut_ptr());
+            let rptr = SendPtr(r.as_mut_ptr());
+            self.dispatch(EvalKind::Rows, p, theta, x_int, x_bnd, n, &|row0, row1, vals| {
+                let k = row1 - row0;
+                // Reply layout: k residuals, then the k·P row-block.
+                let (rv, jv) = vals.split_at(k);
+                // SAFETY: disjoint row ranges of J and r, which outlive
+                // the dispatch.
+                unsafe {
+                    std::slice::from_raw_parts_mut(rptr.get().add(row0), k)
+                        .copy_from_slice(rv);
+                    std::slice::from_raw_parts_mut(jptr.get().add(row0 * np), k * np)
+                        .copy_from_slice(jv);
+                }
+                Ok(())
+            })?;
+        }
+        Ok((r, j))
+    }
+
+    fn u_pred(&self, p: &ProblemSpec, theta: &[f64], x_eval: &[f64]) -> Result<Vec<f64>> {
+        let m = x_eval.len() / p.dim.max(1);
+        let mut out = vec![0.0; m];
+        {
+            let optr = SendPtr(out.as_mut_ptr());
+            self.dispatch(EvalKind::UPred, p, theta, x_eval, &[], m, &|i0, i1, vals| {
+                // SAFETY: disjoint prediction ranges.
+                let slice = unsafe {
+                    std::slice::from_raw_parts_mut(optr.get().add(i0), i1 - i0)
+                };
+                slice.copy_from_slice(vals);
+                Ok(())
+            })?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Anything that actually spawns workers lives in the harness-free
+    // `rust/tests/process.rs` suite (the libtest binary can't serve the
+    // frame protocol on stdout). In-crate tests cover the supervisor's
+    // pure pieces.
+
+    #[test]
+    fn default_options_read_the_environment_shape() {
+        let opts = ProcessOptions::default();
+        assert_eq!(opts.workers, parallel::num_threads());
+        assert_eq!(opts.spawn_args, vec!["--shard-worker".to_string()]);
+        assert!(opts.deadline > Duration::ZERO);
+        assert!(opts.max_respawns >= 1);
+        assert!(opts.fault_once.is_none());
+    }
+
+    #[test]
+    fn magic_sync_tolerates_bounded_noise() {
+        let mut clean = Vec::from(frames::MAGIC);
+        clean.extend_from_slice(&[1, 2, 3]);
+        let mut cur = std::io::Cursor::new(clean);
+        sync_to_magic(&mut cur).unwrap();
+        assert_eq!(cur.position(), 8);
+
+        let mut noisy = b"harness header line\n".to_vec();
+        noisy.extend_from_slice(&frames::MAGIC);
+        sync_to_magic(&mut std::io::Cursor::new(noisy)).unwrap();
+
+        let garbage = vec![0u8; 70_000];
+        let err = sync_to_magic(&mut std::io::Cursor::new(garbage)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+
+        let truncated = vec![b'E'; 4];
+        let err = sync_to_magic(&mut std::io::Cursor::new(truncated)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one worker")]
+    fn zero_workers_panics() {
+        let _ = ProcessEvaluator::new(0);
+    }
+
+    #[test]
+    fn catalogue_is_served_without_spawning_workers() {
+        let ev = ProcessEvaluator::new(2);
+        assert_eq!(ev.backend_name(), "process");
+        assert!(ev.problem("poisson2d").is_ok());
+        assert!(ev.problem_names().contains(&"heat2d".to_string()));
+        assert_eq!(ev.worker_pids(), vec![None, None]);
+        let snap = ev.sched_stats().unwrap();
+        assert_eq!((snap.ranges, snap.steals, snap.requeues, snap.respawns), (0, 0, 0, 0));
+    }
+}

@@ -1,0 +1,222 @@
+//! The worker side of the process tier: a frame-serving loop around the
+//! native backend's `shard_*` entry points.
+//!
+//! A worker is the *same binary* as its supervisor, re-entered through the
+//! hidden `--shard-worker` argv flag (the `engd` binary, the
+//! `rust/tests/process.rs` harness, and `benches/shard_scale.rs` all route
+//! that flag here before their normal entry). It writes the [`MAGIC`]
+//! prologue, then answers frames on stdin/stdout until `Exit` or EOF.
+//! Nothing else in the process may touch stdout — diagnostics go to
+//! stderr, which the supervisor leaves connected to its own.
+//!
+//! Determinism: the supervisor pins `ENGD_THREADS` and `ENGD_NUMERICS` in
+//! the worker's environment, so [`NativeBackend::new`] reconstructs the
+//! exact reduction chunk grid and kernel tier of an in-process shard, and
+//! every served range is bitwise what `NativeBackend` would have produced.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::frames::{read_frame, write_frame, EvalCtx, EvalKind, Frame, MAGIC, PROTOCOL};
+use crate::backend::native::NativeBackend;
+
+/// Exit code of a fault-injected abrupt death (tests assert on it).
+pub(crate) const FAULT_EXIT_CODE: i32 = 86;
+
+/// Deterministic fault injection for the supervisor test-suite:
+/// `ENGD_SHARD_FAULT=after=<n>` makes the worker exit with
+/// [`FAULT_EXIT_CODE`] — no reply, no shutdown handshake — the moment
+/// range request `n` (0-based) arrives. The supervisor arms this only on
+/// one worker's first incarnation, so the respawn serves normally.
+fn fault_after() -> Option<u64> {
+    let v = std::env::var("ENGD_SHARD_FAULT").ok()?;
+    v.strip_prefix("after=")?.parse().ok()
+}
+
+/// Entry point of `--shard-worker` mode. Serves the frame protocol on this
+/// process's stdin/stdout until `Exit` or supervisor hang-up, then returns
+/// for a clean exit.
+pub fn worker_main() -> Result<()> {
+    let stdout = std::io::stdout();
+    let mut out = BufWriter::new(stdout.lock());
+    out.write_all(&MAGIC).context("writing stream prologue")?;
+    out.flush()?;
+    let stdin = std::io::stdin();
+    let mut inp = BufReader::new(stdin.lock());
+    serve(&mut inp, &mut out)
+}
+
+fn serve(inp: &mut impl Read, out: &mut impl Write) -> Result<()> {
+    // Numerics mode and thread-chunk grid both come from the environment
+    // the supervisor pinned at spawn time.
+    let backend = NativeBackend::new();
+    let fault = fault_after();
+    let mut served = 0u64;
+    let mut ctx: Option<Box<EvalCtx>> = None;
+    let mut scratch: Vec<f64> = Vec::new();
+    loop {
+        let frame = match read_frame(inp) {
+            Ok(f) => f,
+            // EOF between frames: the supervisor dropped our stdin
+            // (shutdown without an explicit Exit). Leave quietly.
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(e).context("reading frame from supervisor"),
+        };
+        match frame {
+            Frame::Hello { protocol } => {
+                ensure!(
+                    protocol == PROTOCOL,
+                    "supervisor speaks protocol {protocol}, worker speaks {PROTOCOL}"
+                );
+                write_frame(out, &Frame::HelloAck { pid: std::process::id() as u64 })?;
+            }
+            Frame::Eval(new_ctx) => ctx = Some(new_ctx),
+            Frame::Range { lo, hi } => {
+                if fault.is_some_and(|n| served >= n) {
+                    // Injected crash: die abruptly with the range in
+                    // flight, exactly like a killed or wedged worker.
+                    std::process::exit(FAULT_EXIT_CODE);
+                }
+                served += 1;
+                let reply = match serve_range(&backend, &ctx, lo as usize, hi as usize, scratch)
+                {
+                    Ok(values) => Frame::Data { values },
+                    Err(e) => Frame::Error { message: format!("{e:#}") },
+                };
+                write_frame(out, &reply)?;
+                // Reclaim the reply buffer: steady-state serving reuses one
+                // allocation per worker.
+                scratch = match reply {
+                    Frame::Data { mut values } => {
+                        values.clear();
+                        values
+                    }
+                    _ => Vec::new(),
+                };
+            }
+            Frame::Exit => return Ok(()),
+            other => bail!("unexpected frame in worker: {other:?}"),
+        }
+    }
+}
+
+/// Compute one range via the shard protocol, returning the reply payload
+/// in the [`EvalKind`]'s documented layout (`out` is recycled storage).
+fn serve_range(
+    backend: &NativeBackend,
+    ctx: &Option<Box<EvalCtx>>,
+    lo: usize,
+    hi: usize,
+    mut out: Vec<f64>,
+) -> Result<Vec<f64>> {
+    let ctx = ctx.as_ref().ok_or_else(|| anyhow!("range request before any Eval context"))?;
+    ensure!(lo <= hi, "inverted range [{lo}, {hi})");
+    let units = hi - lo;
+    let spec = &ctx.spec;
+    // clear + resize zero-fills everything, as `shard_rows_into` requires
+    // of its Jacobian block.
+    out.clear();
+    out.resize(units * ctx.kind.values_per_unit(spec.n_params), 0.0);
+    match ctx.kind {
+        EvalKind::Loss => {
+            backend.shard_loss_partials(spec, &ctx.theta, &ctx.x_a, &ctx.x_b, lo, hi, &mut out)?;
+        }
+        EvalKind::LossGrad => {
+            let (loss_out, grad_out) = out.split_at_mut(units);
+            backend.shard_loss_grad_partials(
+                spec, &ctx.theta, &ctx.x_a, &ctx.x_b, lo, hi, loss_out, grad_out,
+            )?;
+        }
+        EvalKind::Rows => {
+            let (r_out, j_out) = out.split_at_mut(units);
+            backend
+                .shard_rows_into(spec, &ctx.theta, &ctx.x_a, &ctx.x_b, lo, hi, r_out, j_out)?;
+        }
+        EvalKind::UPred => {
+            backend.shard_u_pred_into(spec, &ctx.theta, &ctx.x_a, lo, hi, &mut out)?;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::frames::frame_bytes;
+    use super::*;
+    use crate::backend::native::thread_chunks;
+    use crate::backend::Evaluator;
+    use crate::pde::init_params;
+    use crate::rng::Rng;
+
+    /// Drive `serve` through an in-memory session: the full handshake, an
+    /// Eval context, every chunk range, and Exit — then check the replies
+    /// are bitwise the native backend's partials.
+    #[test]
+    fn worker_loop_serves_bitwise_native_partials() {
+        let native = NativeBackend::new();
+        let p = native.problem("poisson1d").unwrap();
+        let mut rng = Rng::seed_from(29);
+        let theta = init_params(&p.arch, &mut rng);
+        let mut xi = vec![0.0; p.n_interior * p.dim];
+        let mut xb = vec![0.0; p.n_boundary * p.dim];
+        rng.fill_uniform(&mut xi, 0.0, 1.0);
+        for (k, v) in xb.iter_mut().enumerate() {
+            *v = (k % 2) as f64;
+        }
+        let (chunks, _) = thread_chunks(p.n_total());
+        let mut want = vec![0.0; chunks];
+        native.shard_loss_partials(&p, &theta, &xi, &xb, 0, chunks, &mut want).unwrap();
+
+        let mut request = Vec::new();
+        for f in [
+            Frame::Hello { protocol: PROTOCOL },
+            Frame::Eval(Box::new(EvalCtx {
+                kind: EvalKind::Loss,
+                spec: p.clone(),
+                theta: theta.clone(),
+                x_a: xi.clone(),
+                x_b: xb.clone(),
+            })),
+        ] {
+            request.extend_from_slice(&frame_bytes(&f));
+        }
+        for c in 0..chunks {
+            let f = Frame::Range { lo: c as u64, hi: c as u64 + 1 };
+            request.extend_from_slice(&frame_bytes(&f));
+        }
+        request.extend_from_slice(&frame_bytes(&Frame::Exit));
+
+        let mut replies = Vec::new();
+        serve(&mut std::io::Cursor::new(request), &mut replies).unwrap();
+
+        let mut r = std::io::Cursor::new(replies);
+        match read_frame(&mut r).unwrap() {
+            Frame::HelloAck { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        for (c, want_c) in want.iter().enumerate() {
+            match read_frame(&mut r).unwrap() {
+                Frame::Data { values } => {
+                    assert_eq!(values.len(), 1);
+                    assert_eq!(values[0].to_bits(), want_c.to_bits(), "chunk {c}");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(r.position() as usize, r.get_ref().len());
+    }
+
+    #[test]
+    fn range_before_eval_is_an_error_reply_not_a_crash() {
+        let mut request = Vec::new();
+        request.extend_from_slice(&frame_bytes(&Frame::Range { lo: 0, hi: 1 }));
+        request.extend_from_slice(&frame_bytes(&Frame::Exit));
+        let mut replies = Vec::new();
+        serve(&mut std::io::Cursor::new(request), &mut replies).unwrap();
+        match read_frame(&mut std::io::Cursor::new(replies)).unwrap() {
+            Frame::Error { message } => assert!(message.contains("before any Eval")),
+            other => panic!("{other:?}"),
+        }
+    }
+}

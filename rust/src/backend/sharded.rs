@@ -1,37 +1,53 @@
-//! A sharded [`Evaluator`]: the collocation batch split into contiguous
-//! shards across inner evaluators.
+//! A sharded [`Evaluator`]: the collocation batch split into shards across
+//! inner evaluators, assigned by a work-stealing range scheduler.
 //!
 //! This is the batch-partitioned execution layout of Dual Natural Gradient
 //! Descent (Jnini & Vella, 2025) and the randomized-NLA ENGD line (Bioli et
 //! al., 2025) — per-sample residual/Jacobian work scales by splitting the
 //! collocation batch across executors, while the kernel solve stays global.
-//! Today the inner evaluators are in-process [`NativeBackend`] instances
-//! dispatched on the [`crate::parallel`] worker pool; the shard protocol
-//! (`NativeBackend::shard_*`) is shaped so the same composite can later
-//! front per-process or per-device executors.
+//! Here the inner evaluators are in-process [`NativeBackend`] instances
+//! dispatched on the [`crate::parallel`] worker pool; the same shard
+//! protocol (`NativeBackend::shard_*`) and the same scheduler back the
+//! out-of-process tier in [`crate::backend::process`].
 //!
 //! ## Bitwise contract
 //!
 //! `ShardedEvaluator` results are **bitwise identical** to the unsharded
-//! [`NativeBackend`] for any shard count, because nothing about the math
-//! depends on the shard layout:
+//! [`NativeBackend`] for any shard count and either [`Schedule`], because
+//! nothing about the math depends on which shard computes which range:
 //!
-//! * residuals, Jacobian rows, and predictions are pointwise — each shard
-//!   computes its rows exactly as the unsharded backend would (through the
-//!   same point-blocked tape kernels, whose lanes preserve the scalar
-//!   per-point FP sequence) and writes them into disjoint ranges of the
-//!   shared output (`Workspace`-pooled J, the residual vector, the
-//!   prediction buffer);
+//! * residuals, Jacobian rows, and predictions are pointwise — each range
+//!   is computed exactly as the unsharded backend would compute those rows
+//!   (through the same point-blocked tape kernels, whose lanes preserve the
+//!   scalar per-point FP sequence) and lands in its deterministic slot of
+//!   the shared output (`Workspace`-pooled J, the residual vector, the
+//!   prediction buffer) regardless of completion order;
 //! * the loss / gradient reductions reuse the native backend's global
 //!   chunk grid (`thread_chunks`, a pure function of `ENGD_THREADS` and
-//!   the batch size): shards compute whole chunks' partials and the final
+//!   the batch size): ranges are measured in whole chunks and the final
 //!   sum runs over chunks in fixed order, so the f64 reduction sequence is
 //!   byte-for-byte the unsharded one.
 //!
+//! ## Range scheduling
+//!
+//! Static contiguous splits are straggler-bound on non-uniform batches
+//! (boundary rows are far cheaper than interior rows; mixed-operator
+//! batches differ per range). [`RangeQueue`] therefore cuts each shard's
+//! contiguous slice into [`OVERSUB`] sub-ranges and lets idle shards steal
+//! from the busiest peer once their own slice is drained
+//! ([`Schedule::WorkSteal`], the default; `ENGD_SHARD_SCHEDULE=static`
+//! restores the old layout for A/B runs — `benches/shard_scale.rs` measures
+//! the gap). [`SchedState`] counts ranges/steals/requeues and per-shard
+//! busy time; the trainer surfaces the per-step deltas as CSV extras.
+//!
 //! `rust/tests/pool.rs` cross-checks all four evaluation entry points (and
-//! a whole training trajectory) against the unsharded backend bitwise.
+//! a whole training trajectory) against the unsharded backend bitwise;
+//! `rust/tests/process.rs` extends the same matrix to worker processes.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -41,10 +57,226 @@ use crate::linalg::{Matrix, Workspace, WorkspaceStats};
 use crate::parallel::{self, SendPtr};
 use crate::pde::ProblemSpec;
 
-/// Composite evaluator: `shards` inner native evaluators, each serving a
-/// contiguous slice of every batch.
+/// Sub-ranges per shard under [`Schedule::WorkSteal`]: enough slack for
+/// idle shards to steal, coarse enough that per-range overhead (context
+/// setup in-process, a frame round-trip out-of-process) stays negligible.
+pub(crate) const OVERSUB: usize = 4;
+
+/// Work-assignment policy shared by the thread tier ([`ShardedEvaluator`])
+/// and the process tier ([`crate::backend::process::ProcessEvaluator`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// One contiguous range per shard — the pre-scheduler layout, kept for
+    /// A/B benchmarking (`benches/shard_scale.rs`).
+    Static,
+    /// Each shard's slice is cut into [`OVERSUB`] sub-ranges on a shared
+    /// queue; a shard that drains its own slice steals from the busiest
+    /// peer. Output slots are fixed per range, so results are bitwise
+    /// independent of the assignment.
+    WorkSteal,
+}
+
+impl Schedule {
+    /// Policy requested by `ENGD_SHARD_SCHEDULE` (`static` | `steal`),
+    /// defaulting to work stealing.
+    pub fn from_env() -> Self {
+        match std::env::var("ENGD_SHARD_SCHEDULE").as_deref() {
+            Ok("static") => Schedule::Static,
+            _ => Schedule::WorkSteal,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Static => "static",
+            Schedule::WorkSteal => "steal",
+        }
+    }
+}
+
+/// Contiguous, balanced slice of `units` work units owned by shard `s`.
+pub(crate) fn split_range(units: usize, shards: usize, s: usize) -> (usize, usize) {
+    (units * s / shards, units * (s + 1) / shards)
+}
+
+/// Shared per-evaluation range queue: one FIFO of `(lo, hi)` sub-ranges per
+/// home shard, cut from the shard's static slice. `pop_for(s)` serves shard
+/// `s` its own ranges first; under [`Schedule::WorkSteal`] it then steals
+/// the tail of the fullest peer queue. The supervisor requeues a crashed
+/// worker's in-flight range at the front of its home queue so any live
+/// shard picks it up.
+pub(crate) struct RangeQueue {
+    queues: Mutex<Vec<VecDeque<(usize, usize)>>>,
+    steal: bool,
+    poisoned: AtomicBool,
+}
+
+impl RangeQueue {
+    pub(crate) fn new(units: usize, shards: usize, schedule: Schedule) -> Self {
+        let oversub = match schedule {
+            Schedule::Static => 1,
+            Schedule::WorkSteal => OVERSUB,
+        };
+        let mut queues = vec![VecDeque::new(); shards];
+        for (s, q) in queues.iter_mut().enumerate() {
+            let (lo, hi) = split_range(units, shards, s);
+            let len = hi - lo;
+            let subs = oversub.min(len.max(1));
+            for k in 0..subs {
+                let a = lo + len * k / subs;
+                let b = lo + len * (k + 1) / subs;
+                if a < b {
+                    q.push_back((a, b));
+                }
+            }
+        }
+        RangeQueue {
+            queues: Mutex::new(queues),
+            steal: schedule == Schedule::WorkSteal,
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Next range for shard `s` as `(lo, hi, stolen)`, or `None` when
+    /// nothing is available to it (drained, or static mode with its own
+    /// slice done, or the queue is poisoned).
+    pub(crate) fn pop_for(&self, s: usize) -> Option<(usize, usize, bool)> {
+        if self.is_poisoned() {
+            return None;
+        }
+        let mut qs = self.queues.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some((lo, hi)) = qs[s].pop_front() {
+            return Some((lo, hi, false));
+        }
+        if !self.steal {
+            return None;
+        }
+        // Steal from the back of the fullest peer queue: the tail of a
+        // contiguous slice is the work its owner is furthest from.
+        let victim = (0..qs.len())
+            .filter(|&v| v != s && !qs[v].is_empty())
+            .max_by_key(|&v| qs[v].len())?;
+        qs[victim].pop_back().map(|(lo, hi)| (lo, hi, true))
+    }
+
+    /// Put a failed worker's in-flight range back at the front of its home
+    /// queue, ahead of untouched work.
+    pub(crate) fn requeue(&self, home: usize, lo: usize, hi: usize) {
+        let mut qs = self.queues.lock().unwrap_or_else(|p| p.into_inner());
+        qs[home].push_front((lo, hi));
+    }
+
+    /// Stop handing out ranges (a shard hit a deterministic error — every
+    /// peer would hit it too).
+    pub(crate) fn poison(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+    }
+
+    pub(crate) fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+}
+
+/// Cumulative scheduler counters, shared by both executor tiers. Snapshots
+/// surface through [`Evaluator::sched_stats`]; the trainer logs per-step
+/// deltas to the metrics CSV.
+pub(crate) struct SchedState {
+    busy_us: Vec<AtomicU64>,
+    ranges: AtomicU64,
+    steals: AtomicU64,
+    requeues: AtomicU64,
+    respawns: AtomicU64,
+}
+
+impl SchedState {
+    pub(crate) fn new(shards: usize) -> Self {
+        SchedState {
+            busy_us: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            ranges: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            requeues: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn note_range(&self, stolen: bool) {
+        self.ranges.fetch_add(1, Ordering::Relaxed);
+        if stolen {
+            self.steals.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub(crate) fn note_requeue(&self) {
+        self.requeues.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_respawn(&self) {
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_busy(&self, s: usize, d: Duration) {
+        self.busy_us[s].fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub(crate) fn snapshot(&self) -> SchedSnapshot {
+        SchedSnapshot {
+            shard_busy_s: self
+                .busy_us
+                .iter()
+                .map(|us| us.load(Ordering::Relaxed) as f64 * 1e-6)
+                .collect(),
+            ranges: self.ranges.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            requeues: self.requeues.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of a shard executor's scheduler counters (cumulative
+/// since construction). `delta_since` turns two snapshots into the
+/// per-step numbers the metrics CSV records.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedSnapshot {
+    /// Per-shard busy wall time in seconds (dispatch-loop time: compute
+    /// plus, for the process tier, frame I/O).
+    pub shard_busy_s: Vec<f64>,
+    /// Ranges served (a static schedule serves exactly one per shard per
+    /// evaluation; work stealing serves up to `OVERSUB×` as many).
+    pub ranges: u64,
+    /// Ranges a shard pulled from another shard's queue.
+    pub steals: u64,
+    /// In-flight ranges returned to the queue after a worker died or hit
+    /// its reply deadline (process tier only).
+    pub requeues: u64,
+    /// Worker processes restarted after a crash/hang (process tier only).
+    pub respawns: u64,
+}
+
+impl SchedSnapshot {
+    /// Counter increments between `prev` (earlier) and `self` (later).
+    pub fn delta_since(&self, prev: &SchedSnapshot) -> SchedSnapshot {
+        SchedSnapshot {
+            shard_busy_s: self
+                .shard_busy_s
+                .iter()
+                .enumerate()
+                .map(|(i, s)| (s - prev.shard_busy_s.get(i).copied().unwrap_or(0.0)).max(0.0))
+                .collect(),
+            ranges: self.ranges.saturating_sub(prev.ranges),
+            steals: self.steals.saturating_sub(prev.steals),
+            requeues: self.requeues.saturating_sub(prev.requeues),
+            respawns: self.respawns.saturating_sub(prev.respawns),
+        }
+    }
+}
+
+/// Composite evaluator: `shards` inner native evaluators serving ranges of
+/// every batch from a shared [`RangeQueue`].
 pub struct ShardedEvaluator {
     inner: Vec<NativeBackend>,
+    schedule: Schedule,
+    sched: SchedState,
     /// Pooled storage for the reduction partials (per-chunk losses and the
     /// flat `chunks × n_params` gradient block): `Evaluator` methods take
     /// `&self`, so the pool sits behind a mutex. Steady-state loss/grad
@@ -56,10 +288,14 @@ pub struct ShardedEvaluator {
 }
 
 impl ShardedEvaluator {
-    /// `shards` inner evaluators over the built-in problem catalogue
-    /// (clamped to ≥ 1), in the `ENGD_NUMERICS`-requested numerics mode.
+    /// `shards` inner evaluators over the built-in problem catalogue, in
+    /// the `ENGD_NUMERICS`-requested numerics mode.
     /// `parallel::num_threads()` shards saturate the worker pool; more
     /// simply makes shards finer.
+    ///
+    /// Panics if `shards == 0` — the config layer
+    /// (`crate::backend::validate_backend`) rejects `sharded:0` before it
+    /// can reach here.
     pub fn new(shards: usize) -> Self {
         Self::build(shards, NativeBackend::new)
     }
@@ -89,9 +325,19 @@ impl ShardedEvaluator {
         })
     }
 
+    /// Replace the `ENGD_SHARD_SCHEDULE` default with an explicit policy
+    /// (benchmarks and A/B tests).
+    pub fn with_schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
     fn build(shards: usize, mk: impl Fn() -> NativeBackend) -> Self {
+        assert!(shards > 0, "ShardedEvaluator needs at least one shard (got 0)");
         ShardedEvaluator {
-            inner: (0..shards.max(1)).map(|_| mk()).collect(),
+            inner: (0..shards).map(|_| mk()).collect(),
+            schedule: Schedule::from_env(),
+            sched: SchedState::new(shards),
             scratch: Mutex::new(Workspace::new()),
         }
     }
@@ -99,6 +345,11 @@ impl ShardedEvaluator {
     /// Number of shards the batch is split into.
     pub fn shards(&self) -> usize {
         self.inner.len()
+    }
+
+    /// Active work-assignment policy.
+    pub fn schedule(&self) -> Schedule {
+        self.schedule
     }
 
     /// Allocation counters of the partial-buffer pool (tests assert
@@ -111,22 +362,30 @@ impl ShardedEvaluator {
         self.scratch.lock().unwrap_or_else(|poison| poison.into_inner())
     }
 
-    /// Contiguous, balanced range of work units owned by shard `s`.
-    fn shard_range(units: usize, shards: usize, s: usize) -> (usize, usize) {
-        (units * s / shards, units * (s + 1) / shards)
-    }
-
-    /// Dispatch `f(shard, lo, hi)` for every shard's slice of `units` work
-    /// units across the pool, surfacing the first shard failure (if any).
+    /// Dispatch `f(shard, lo, hi)` over `units` work units across the
+    /// pool: every shard loops on the shared [`RangeQueue`] until it (and,
+    /// under work stealing, everyone's) slice is drained. The first shard
+    /// failure poisons the queue and is surfaced after the join.
     fn for_shards(
         &self,
         units: usize,
         f: impl Fn(usize, usize, usize) -> Result<()> + Sync,
     ) -> Result<()> {
         let shards = self.inner.len();
+        let queue = RangeQueue::new(units, shards, self.schedule);
         let failures = parallel::par_map(shards, |s| {
-            let (lo, hi) = Self::shard_range(units, shards, s);
-            f(s, lo, hi).err().map(|e| format!("shard {s}: {e:#}"))
+            let t0 = Instant::now();
+            let mut err = None;
+            while let Some((lo, hi, stolen)) = queue.pop_for(s) {
+                self.sched.note_range(stolen);
+                if let Err(e) = f(s, lo, hi) {
+                    queue.poison();
+                    err = Some(format!("shard {s} (range [{lo}, {hi})): {e:#}"));
+                    break;
+                }
+            }
+            self.sched.add_busy(s, t0.elapsed());
+            err
         });
         if let Some(msg) = failures.into_iter().flatten().next() {
             bail!("{msg}");
@@ -148,6 +407,10 @@ impl Evaluator for ShardedEvaluator {
         self.inner[0].problem_names()
     }
 
+    fn sched_stats(&self) -> Option<super::SchedSnapshot> {
+        Some(self.sched.snapshot())
+    }
+
     fn loss(
         &self,
         p: &ProblemSpec,
@@ -157,7 +420,7 @@ impl Evaluator for ShardedEvaluator {
     ) -> Result<f64> {
         let n = p.n_total();
         let (chunks, _) = thread_chunks(n);
-        // Scratch is fine uninitialized: the shard ranges tile `0..chunks`,
+        // Scratch is fine uninitialized: the queued ranges tile `0..chunks`,
         // so every entry is overwritten before the reduction reads it. The
         // pool lock covers only the checkout/check-in bookkeeping — the
         // buffer is owned across the dispatch, so concurrent evaluations
@@ -166,8 +429,8 @@ impl Evaluator for ShardedEvaluator {
         let dispatched = {
             let pptr = SendPtr(partials.as_mut_ptr());
             self.for_shards(chunks, |s, c0, c1| {
-                // SAFETY: shards own disjoint chunk ranges of `partials`,
-                // which outlives the dispatch.
+                // SAFETY: queued chunk ranges are disjoint and `partials`
+                // outlives the dispatch.
                 let out = unsafe {
                     std::slice::from_raw_parts_mut(pptr.get().add(c0), c1 - c0)
                 };
@@ -211,8 +474,8 @@ impl Evaluator for ShardedEvaluator {
             let lptr = SendPtr(loss_parts.as_mut_ptr());
             let gptr = SendPtr(grad_parts.as_mut_ptr());
             self.for_shards(chunks, |s, c0, c1| {
-                // SAFETY: disjoint chunk ranges per shard (see `loss`) of
-                // both flat buffers; both outlive the dispatch.
+                // SAFETY: disjoint chunk ranges per queued range (see
+                // `loss`) of both flat buffers; both outlive the dispatch.
                 let (loss_out, grad_out) = unsafe {
                     (
                         std::slice::from_raw_parts_mut(lptr.get().add(c0), c1 - c0),
@@ -258,16 +521,17 @@ impl Evaluator for ShardedEvaluator {
     ) -> Result<(Vec<f64>, Matrix)> {
         let n = p.n_total();
         let np = p.n_params;
-        // One shared output: shards write disjoint Jacobian row-blocks and
-        // residual ranges straight into the pooled storage.
+        // One shared output: ranges land as disjoint Jacobian row-blocks
+        // and residual slices straight in the pooled storage, whichever
+        // shard served them.
         let mut j = ws.take_matrix(n, np);
         let mut r = vec![0.0; n];
         {
             let jptr = SendPtr(j.data_mut().as_mut_ptr());
             let rptr = SendPtr(r.as_mut_ptr());
             self.for_shards(n, |s, row0, row1| {
-                // SAFETY: shards own disjoint row ranges of J and r; both
-                // buffers outlive the dispatch.
+                // SAFETY: queued row ranges are disjoint slices of J and r;
+                // both buffers outlive the dispatch.
                 let (r_out, j_out) = unsafe {
                     (
                         std::slice::from_raw_parts_mut(rptr.get().add(row0), row1 - row0),
@@ -289,7 +553,7 @@ impl Evaluator for ShardedEvaluator {
         {
             let optr = SendPtr(out.as_mut_ptr());
             self.for_shards(m, |s, i0, i1| {
-                // SAFETY: disjoint prediction ranges per shard.
+                // SAFETY: disjoint prediction ranges per queued range.
                 let slice = unsafe {
                     std::slice::from_raw_parts_mut(optr.get().add(i0), i1 - i0)
                 };
@@ -306,13 +570,46 @@ mod tests {
     use crate::pde::init_params;
     use crate::rng::Rng;
 
+    /// Pop everything a queue will serve to shard `s` before moving on.
+    fn drain(q: &RangeQueue, shards: usize) -> Vec<(usize, usize, bool)> {
+        let mut got = Vec::new();
+        for s in 0..shards {
+            while let Some(r) = q.pop_for(s) {
+                got.push(r);
+            }
+        }
+        got
+    }
+
     #[test]
-    fn shard_ranges_cover_and_balance() {
+    fn range_plans_tile_the_units() {
+        for units in [0usize, 1, 5, 17, 64, 100, 1000] {
+            for shards in [1usize, 2, 3, 7, 16] {
+                for schedule in [Schedule::Static, Schedule::WorkSteal] {
+                    let q = RangeQueue::new(units, shards, schedule);
+                    let mut covered = vec![0u32; units];
+                    for (lo, hi, _) in drain(&q, shards) {
+                        assert!(lo < hi && hi <= units);
+                        for c in &mut covered[lo..hi] {
+                            *c += 1;
+                        }
+                    }
+                    assert!(
+                        covered.iter().all(|&c| c == 1),
+                        "hole or overlap: {units} units, {shards} shards, {schedule:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn static_ranges_are_contiguous_and_balanced() {
         for units in [0usize, 1, 5, 17, 64, 100] {
             for shards in [1usize, 2, 3, 7, 16] {
                 let mut next = 0;
                 for s in 0..shards {
-                    let (lo, hi) = ShardedEvaluator::shard_range(units, shards, s);
+                    let (lo, hi) = split_range(units, shards, s);
                     assert_eq!(lo, next, "gap at shard {s} ({units} units, {shards} shards)");
                     assert!(hi >= lo);
                     assert!(hi - lo <= units.div_ceil(shards), "imbalanced shard {s}");
@@ -324,11 +621,80 @@ mod tests {
     }
 
     #[test]
+    fn static_schedule_never_steals() {
+        let q = RangeQueue::new(64, 4, Schedule::Static);
+        // Shard 0's single contiguous range, then nothing — even though
+        // shards 1..4 still have work queued.
+        let (lo, hi, stolen) = q.pop_for(0).unwrap();
+        assert_eq!((lo, hi, stolen), (0, 16, false));
+        assert!(q.pop_for(0).is_none());
+        assert!(q.pop_for(1).is_some());
+    }
+
+    #[test]
+    fn work_stealing_drains_everything_through_one_shard() {
+        let q = RangeQueue::new(64, 4, Schedule::WorkSteal);
+        let mut own = 0;
+        let mut stolen = 0;
+        let mut covered = vec![0u32; 64];
+        while let Some((lo, hi, s)) = q.pop_for(0) {
+            if s {
+                stolen += 1;
+            } else {
+                own += 1;
+            }
+            for c in &mut covered[lo..hi] {
+                *c += 1;
+            }
+        }
+        assert_eq!(own, OVERSUB);
+        assert_eq!(stolen, 3 * OVERSUB, "shard 0 should steal every peer range");
+        assert!(covered.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn requeued_range_is_served_again_and_poison_stops_service() {
+        let q = RangeQueue::new(8, 2, Schedule::WorkSteal);
+        let (lo, hi, _) = q.pop_for(0).unwrap();
+        q.requeue(0, lo, hi);
+        assert_eq!(q.pop_for(0).unwrap(), (lo, hi, false));
+        q.poison();
+        assert!(q.pop_for(0).is_none());
+        assert!(q.pop_for(1).is_none());
+    }
+
+    #[test]
+    fn sched_snapshot_deltas_saturate() {
+        let a = SchedSnapshot {
+            shard_busy_s: vec![1.0, 2.0],
+            ranges: 10,
+            steals: 3,
+            requeues: 1,
+            respawns: 0,
+        };
+        let b = SchedSnapshot {
+            shard_busy_s: vec![1.5, 2.25],
+            ranges: 14,
+            steals: 3,
+            requeues: 2,
+            respawns: 1,
+        };
+        let d = b.delta_since(&a);
+        assert_eq!(d.ranges, 4);
+        assert_eq!(d.steals, 0);
+        assert_eq!(d.requeues, 1);
+        assert_eq!(d.respawns, 1);
+        assert!((d.shard_busy_s[0] - 0.5).abs() < 1e-12);
+        // Deltas never go negative, and a missing prev shard reads as 0.
+        assert_eq!(a.delta_since(&b).ranges, 0);
+        assert_eq!(b.delta_since(&SchedSnapshot::default()).shard_busy_s.len(), 2);
+    }
+
+    #[test]
     fn sharded_loss_matches_native_bitwise_smoke() {
         // The full cross-check matrix lives in rust/tests/pool.rs; this is
-        // the in-module smoke version on one problem.
+        // the in-module smoke version on one problem, under both schedules.
         let native = NativeBackend::new();
-        let sharded = ShardedEvaluator::new(3);
         let p = native.problem("poisson1d").unwrap();
         let mut rng = Rng::seed_from(11);
         let theta = init_params(&p.arch, &mut rng);
@@ -339,8 +705,17 @@ mod tests {
             *v = (k % 2) as f64;
         }
         let a = native.loss(&p, &theta, &xi, &xb).unwrap();
-        let b = sharded.loss(&p, &theta, &xi, &xb).unwrap();
-        assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        for schedule in [Schedule::Static, Schedule::WorkSteal] {
+            let sharded = ShardedEvaluator::new(3).with_schedule(schedule);
+            let b = sharded.loss(&p, &theta, &xi, &xb).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b} ({schedule:?})");
+            let snap = sharded.sched_stats().unwrap();
+            assert!(snap.ranges > 0);
+            if schedule == Schedule::Static {
+                assert_eq!(snap.steals, 0, "static schedule must not steal");
+            }
+            assert_eq!(snap.requeues + snap.respawns, 0);
+        }
     }
 
     #[test]
@@ -368,5 +743,11 @@ mod tests {
         for (x, y) in ga.iter().zip(&gb) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_panics() {
+        let _ = ShardedEvaluator::new(0);
     }
 }

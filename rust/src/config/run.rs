@@ -275,9 +275,11 @@ impl OptimizerConfig {
 pub struct RunConfig {
     pub name: String,
     pub problem: String,
-    /// Evaluation backend: "pjrt", "native", "sharded[:n]" (batch-sharded
-    /// composite, bitwise-identical to native), or "auto" (PJRT when a
-    /// usable artifact manifest exists, native otherwise).
+    /// Evaluation backend: "pjrt", "native", "sharded[:n]" (thread-sharded
+    /// composite), "process[:n]" (out-of-process shard workers) — both
+    /// bitwise-identical to native — or "auto" (PJRT when a usable
+    /// artifact manifest exists, native otherwise). Shard counts must be
+    /// at least 1; `sharded:0` / `process:0` are rejected at parse time.
     pub backend: String,
     pub artifacts_dir: String,
     pub steps: usize,
@@ -350,6 +352,9 @@ impl RunConfig {
                 _ => bail!("unknown config key '{k}'"),
             }
         }
+        // Fail malformed backend selectors (sharded:0, process:0, typos)
+        // here at parse time, not when the backend is first constructed.
+        crate::backend::validate_backend(&c.backend)?;
         Ok(c)
     }
 
@@ -413,6 +418,19 @@ path = "fused"
     fn unknown_key_is_an_error() {
         let v = crate::config::toml::parse("bogus = 1").unwrap();
         assert!(RunConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_shard_backends() {
+        for bad in ["sharded:0", "process:0"] {
+            let v = crate::config::toml::parse(&format!(r#"backend = "{bad}""#)).unwrap();
+            let err = RunConfig::from_value(&v).unwrap_err().to_string();
+            assert!(err.contains("at least 1"), "{bad}: {err}");
+        }
+        for good in ["native", "sharded:2", "process:4", "auto"] {
+            let v = crate::config::toml::parse(&format!(r#"backend = "{good}""#)).unwrap();
+            assert_eq!(RunConfig::from_value(&v).unwrap().backend, good);
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::checkpoint::Checkpoint;
-use crate::backend::{Evaluator, NumericsMode, SimdTier};
+use crate::backend::{Evaluator, NumericsMode, SchedSnapshot, SimdTier};
 use crate::config::RunConfig;
 use crate::linalg::{Workspace, WorkspaceStats};
 use crate::metrics::{RunLogger, StepRecord};
@@ -81,6 +81,10 @@ pub struct Trainer<'a> {
     eval_exact: Vec<f64>,
     /// Cumulative seconds spent in `u_pred` evaluation.
     eval_seconds: f64,
+    /// Scheduler counters at the end of the previous logged step (shard
+    /// executors only): `sched_stats` is cumulative, the CSV wants
+    /// per-step deltas.
+    sched_prev: Option<SchedSnapshot>,
     pub theta: Vec<f64>,
 }
 
@@ -157,6 +161,7 @@ impl<'a> Trainer<'a> {
             eval_points,
             eval_exact,
             eval_seconds: 0.0,
+            sched_prev: None,
             theta,
         })
     }
@@ -270,6 +275,21 @@ impl<'a> Trainer<'a> {
             extra.push(("numerics".into(), self.cfg.numerics.code()));
             if self.cfg.numerics == NumericsMode::Fast {
                 extra.push(("simd_tier".into(), SimdTier::detect().code()));
+            }
+            // Shard executors expose scheduler counters; record the
+            // per-step increments (ranges/steals plus, for the process
+            // tier, requeues/respawns) and per-shard busy seconds.
+            if let Some(now) = self.eval.sched_stats() {
+                let prev = self.sched_prev.take().unwrap_or_default();
+                let d = now.delta_since(&prev);
+                extra.push(("sched_ranges".into(), d.ranges as f64));
+                extra.push(("sched_steals".into(), d.steals as f64));
+                extra.push(("sched_requeues".into(), d.requeues as f64));
+                extra.push(("sched_respawns".into(), d.respawns as f64));
+                for (i, s) in d.shard_busy_s.iter().enumerate() {
+                    extra.push((format!("shard{i}_s"), *s));
+                }
+                self.sched_prev = Some(now);
             }
             logger.log(StepRecord {
                 step: k,

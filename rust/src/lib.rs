@@ -43,12 +43,24 @@
 //!   (`--backend native`, the default wherever no artifact manifest
 //!   exists).
 //!
-//! On top of the seam sits [`backend::ShardedEvaluator`]
-//! (`--backend sharded:<n>`): the collocation batch split into contiguous
-//! shards across inner native evaluators, each writing its Jacobian
-//! row-block / residual range straight into the shared workspace output,
-//! with reductions in fixed shard order — bitwise-identical to the
-//! unsharded native backend for any shard count.
+//! On top of the seam sit two sharded execution tiers, both built on the
+//! native backend's range-granular `shard_*` protocol and the
+//! work-stealing range scheduler in [`backend::sharded`]:
+//!
+//! * [`backend::ShardedEvaluator`] (`--backend sharded:<n>`) — the
+//!   collocation batch served as sub-ranges by inner native evaluators on
+//!   the in-process worker pool;
+//! * [`backend::ProcessEvaluator`] (`--backend process:<n>`) — the same
+//!   dispatch shipped to `n` worker *processes* (this binary re-entered
+//!   through the hidden `--shard-worker` flag) over a length-prefixed
+//!   frame protocol on stdio pipes; a crashed or hung worker is respawned
+//!   and its in-flight ranges requeued.
+//!
+//! Every range writes into a fixed slot of the shared workspace output and
+//! reductions run in the unsharded chunk order, so both tiers are
+//! **bitwise-identical** to the unsharded native backend for any shard
+//! count, either schedule, and any completion order — even across worker
+//! crashes (`rust/tests/pool.rs`, `rust/tests/process.rs`).
 //!
 //! ## The execution substrate
 //!

@@ -7,11 +7,18 @@
 //!   list       show the problems (and artifacts, on PJRT) of the backend
 //!   smoke      end-to-end sanity check of the training pipeline
 //!
-//! Every command takes `--backend {pjrt,native,sharded[:N],auto}` (default
-//! auto): the PJRT backend executes AOT artifacts from `--artifacts DIR`;
-//! the native backend evaluates the model in pure Rust and needs no
-//! artifacts at all; `sharded:N` splits every collocation batch across N
-//! inner native evaluators (bitwise-identical results).
+//! Every command takes `--backend {pjrt,native,sharded[:N],process[:N],auto}`
+//! (default auto): the PJRT backend executes AOT artifacts from
+//! `--artifacts DIR`; the native backend evaluates the model in pure Rust
+//! and needs no artifacts at all; `sharded:N` splits every collocation
+//! batch across N inner native evaluators; `process:N` runs the same
+//! split across N worker *processes* respawned from this binary (both are
+//! bitwise-identical to native, and a killed worker process is respawned
+//! with its ranges requeued).
+//!
+//! The hidden `--shard-worker` flag re-enters the binary as a shard
+//! worker serving the `backend::process` frame protocol on stdin/stdout;
+//! it is spawned by the process-tier supervisor, never by hand.
 //!
 //! The native kernel tiers take `--numerics {bitwise,fast}` (default:
 //! the `ENGD_NUMERICS` environment variable, else bitwise; the flag
@@ -40,6 +47,19 @@ use engd::coordinator::train;
 const SWITCHES: &[&str] = &["echo", "line-search", "diag", "help"];
 
 fn main() {
+    // Worker-mode re-entry for the process-tier supervisor
+    // (`engd::backend::process`): checked before CLI parsing so the hidden
+    // flag can never collide with a command. Stdout belongs to the frame
+    // protocol from here on.
+    if std::env::args().any(|a| a == "--shard-worker") {
+        std::process::exit(match engd::backend::process::worker_main() {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("shard worker error: {e:#}");
+                1
+            }
+        });
+    }
     let args = match Args::parse(SWITCHES) {
         Ok(a) => a,
         Err(e) => {
@@ -89,11 +109,13 @@ fn print_help() {
          \x20 report    summarize results/ CSVs as a markdown table\n\
          \n\
          COMMON FLAGS\n\
-         \x20 --backend KIND    pjrt|native|sharded[:N]|auto (default auto:\n\
-         \x20                   PJRT when artifacts exist, else pure-Rust\n\
-         \x20                   native AD; sharded:N splits each batch\n\
-         \x20                   across N inner evaluators, bitwise-identical\n\
-         \x20                   to native)\n\
+         \x20 --backend KIND    pjrt|native|sharded[:N]|process[:N]|auto\n\
+         \x20                   (default auto: PJRT when artifacts exist,\n\
+         \x20                   else pure-Rust native AD; sharded:N splits\n\
+         \x20                   each batch across N in-process evaluators;\n\
+         \x20                   process:N across N worker processes with\n\
+         \x20                   work-stealing + crash respawn — both\n\
+         \x20                   bitwise-identical to native)\n\
          \x20 --numerics MODE   bitwise|fast (default bitwise, or ENGD_NUMERICS;\n\
          \x20                   fast enables the relaxed-numerics SIMD kernel\n\
          \x20                   tier on the native/sharded backends)\n\
@@ -124,6 +146,9 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
         cfg.problem = p.to_string();
     }
     if let Some(b) = args.get("backend") {
+        // Fail malformed selectors (sharded:0, process:0, typos) here at
+        // parse time, not at backend construction.
+        engd::backend::validate_backend(b)?;
         cfg.backend = b.to_string();
     }
     if let Some(a) = args.get("artifacts") {

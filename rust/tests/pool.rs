@@ -21,7 +21,7 @@
 
 use std::sync::Mutex;
 
-use engd::backend::{Evaluator, NativeBackend, ShardedEvaluator};
+use engd::backend::{Evaluator, NativeBackend, Schedule, ShardedEvaluator};
 use engd::config::run::{ExecPath, OptimizerKind};
 use engd::config::RunConfig;
 use engd::coordinator::{train, Trainer};
@@ -446,6 +446,43 @@ fn sharded_training_trajectory_is_bitwise_identical_to_native() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Both range schedules are bitwise-invisible: work stealing may move
+/// ranges between shards, but every range lands in its fixed output slot
+/// and the reductions run in the unsharded chunk order.
+#[test]
+fn thread_tier_schedules_are_bitwise_invisible_and_counted() {
+    let _guard = serialized();
+    let native = NativeBackend::new();
+    let (p, theta, x_int, x_bnd, _) = problem_inputs(&native, "poisson2d", 57);
+    let loss_ref = native.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+    let (_, grad_ref) = native.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap();
+
+    for schedule in [Schedule::Static, Schedule::WorkSteal] {
+        let sharded = ShardedEvaluator::new(4).with_schedule(schedule);
+        assert_eq!(sharded.schedule(), schedule);
+        for round in 0..3 {
+            let loss = sharded.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+            assert_eq!(
+                loss.to_bits(),
+                loss_ref.to_bits(),
+                "{} round {round}: loss",
+                schedule.name()
+            );
+            let (_, grad) = sharded.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap();
+            for (i, (g, gr)) in grad.iter().zip(&grad_ref).enumerate() {
+                assert_eq!(g.to_bits(), gr.to_bits(), "{}: grad[{i}]", schedule.name());
+            }
+        }
+        let snap = sharded.sched_stats().unwrap();
+        assert!(snap.ranges > 0, "{}: no ranges dispatched", schedule.name());
+        assert_eq!(snap.shard_busy_s.len(), 4);
+        assert_eq!((snap.requeues, snap.respawns), (0, 0), "thread tier never requeues");
+        if schedule == Schedule::Static {
+            assert_eq!(snap.steals, 0, "static schedule must never steal");
+        }
+    }
+}
+
 #[test]
 fn backend_select_understands_sharded() {
     let _guard = serialized();
@@ -459,4 +496,25 @@ fn backend_select_understands_sharded() {
     assert!(engd::backend::select("sharded:0", "artifacts").is_err());
     assert!(engd::backend::select("sharded:x", "artifacts").is_err());
     assert!(engd::backend::select("bogus", "artifacts").is_err());
+}
+
+/// Process-tier *selection* from libtest: construction is lazy (workers
+/// only spawn on the first evaluation), so no worker processes are born
+/// here — the spawning tests live in the harness-free
+/// `rust/tests/process.rs` suite, which owns its stdout.
+#[test]
+fn backend_select_understands_process() {
+    let _guard = serialized();
+    let be = engd::backend::select("process:3", "artifacts").unwrap();
+    assert_eq!(be.backend_name(), "process");
+    assert!(be.problem("poisson1d").is_ok());
+    assert!(be.sched_stats().is_some());
+
+    let default = engd::backend::select("process", "artifacts").unwrap();
+    assert_eq!(default.backend_name(), "process");
+
+    assert!(engd::backend::select("process:0", "artifacts").is_err());
+    assert!(engd::backend::select("process:x", "artifacts").is_err());
+    assert!(engd::backend::validate_backend("process:0").is_err());
+    assert!(engd::backend::validate_backend("process:2").is_ok());
 }

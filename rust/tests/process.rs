@@ -1,0 +1,323 @@
+//! Process-tier integration suite (`--backend process:<n>`).
+//!
+//! This target is `harness = false` on purpose: the supervisor spawns
+//! *this very binary* with `--shard-worker` to get its worker processes,
+//! and the libtest harness owns stdout (it even prints slow-test warnings
+//! there), which would corrupt the frame protocol. `main` below therefore
+//! answers `--shard-worker` first and otherwise runs a minimal sequential
+//! test runner.
+//!
+//! Contracts asserted here:
+//!
+//! 1. **Bitwise transparency** — `process:n` equals `sharded:n` equals the
+//!    unsharded native backend, bit for bit, on every evaluation entry
+//!    point, for n ∈ {1, 2, 4}, on poisson2d and heat2d.
+//! 2. **Trajectory identity** — a full poisson2d training run through
+//!    worker processes reproduces the native loss trajectory exactly, and
+//!    the metrics CSV carries the scheduler columns.
+//! 3. **Fault tolerance** — a worker killed mid-evaluation (both by
+//!    injected crash and by external SIGKILL) is respawned, its in-flight
+//!    ranges are requeued, and the results are still bitwise native.
+//! 4. **Config hygiene** — `process:0` is rejected at selector- and
+//!    TOML-parse time.
+
+use engd::backend::{
+    Evaluator, NativeBackend, ProcessEvaluator, ProcessOptions, ShardedEvaluator,
+};
+use engd::config::run::{ExecPath, OptimizerKind};
+use engd::config::RunConfig;
+use engd::coordinator::train;
+use engd::linalg::Workspace;
+use engd::pde::{init_params, Sampler};
+use engd::rng::Rng;
+
+fn out_dir(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("engd-process-{}-{tag}", std::process::id()))
+        .display()
+        .to_string()
+}
+
+/// A problem's batch + parameters, deterministically seeded (the same
+/// helper `rust/tests/pool.rs` uses).
+fn problem_inputs(
+    be: &dyn Evaluator,
+    name: &str,
+    seed: u64,
+) -> (engd::pde::ProblemSpec, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let p = be.problem(name).unwrap();
+    let mut rng = Rng::seed_from(seed);
+    let theta = init_params(&p.arch, &mut rng);
+    let mut sampler = Sampler::new(p.dim, seed ^ 0xD15C);
+    let x_int = sampler.interior(p.n_interior);
+    let x_bnd = sampler.boundary(p.n_boundary);
+    let x_eval = sampler.eval_set(64);
+    (p, theta, x_int, x_bnd, x_eval)
+}
+
+fn assert_bits(tag: &str, got: &[f64], want: &[f64]) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{tag}[{i}]: {g:.17e} != {w:.17e}");
+    }
+}
+
+/// Every evaluation entry point of `ev`, bitwise against the native
+/// reference.
+fn assert_matches_native(tag: &str, ev: &dyn Evaluator, native: &NativeBackend, problem: &str) {
+    let (p, theta, x_int, x_bnd, x_eval) = problem_inputs(native, problem, 31);
+    let mut ws = Workspace::new();
+
+    let loss_ref = native.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+    let loss = ev.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+    assert_eq!(loss.to_bits(), loss_ref.to_bits(), "{tag}: loss");
+
+    let (lg_ref, grad_ref) = native.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap();
+    let (lg, grad) = ev.loss_and_grad(&p, &theta, &x_int, &x_bnd).unwrap();
+    assert_eq!(lg.to_bits(), lg_ref.to_bits(), "{tag}: loss (grad path)");
+    assert_bits(&format!("{tag}: grad"), &grad, &grad_ref);
+
+    let (r_ref, j_ref) = native
+        .residuals_jacobian(&p, &theta, &x_int, &x_bnd, &mut ws)
+        .unwrap();
+    let mut ws_e = Workspace::new();
+    let (r, j) = ev
+        .residuals_jacobian(&p, &theta, &x_int, &x_bnd, &mut ws_e)
+        .unwrap();
+    assert_bits(&format!("{tag}: r"), &r, &r_ref);
+    assert_eq!((j.rows(), j.cols()), (j_ref.rows(), j_ref.cols()), "{tag}: J shape");
+    assert_bits(&format!("{tag}: J"), j.data(), j_ref.data());
+
+    let u_ref = native.u_pred(&p, &theta, &x_eval).unwrap();
+    let u = ev.u_pred(&p, &theta, &x_eval).unwrap();
+    assert_bits(&format!("{tag}: u"), &u, &u_ref);
+}
+
+// ---------------------------------------------------------------------------
+// 1. Bitwise transparency
+// ---------------------------------------------------------------------------
+
+fn process_tier_is_bitwise_identical_to_threads_and_native() {
+    let native = NativeBackend::new();
+    for problem in ["poisson2d", "heat2d"] {
+        for n in [1usize, 2, 4] {
+            let threads = ShardedEvaluator::new(n);
+            assert_matches_native(&format!("{problem} sharded:{n}"), &threads, &native, problem);
+            let procs = ProcessEvaluator::new(n);
+            assert_matches_native(&format!("{problem} process:{n}"), &procs, &native, problem);
+            let snap = procs.sched_stats().unwrap();
+            assert!(snap.ranges > 0, "{problem} process:{n}: no ranges dispatched");
+            assert_eq!(snap.shard_busy_s.len(), n, "{problem} process:{n}: busy vector");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Trajectory identity + scheduler metrics
+// ---------------------------------------------------------------------------
+
+fn training_through_worker_processes_matches_native_and_logs_sched() {
+    let mk_cfg = |tag: &str, backend: &str, dir: &str| {
+        let mut cfg = RunConfig {
+            name: tag.to_string(),
+            problem: "poisson2d".into(),
+            backend: backend.to_string(),
+            steps: 3,
+            seed: 17,
+            eval_every: 2,
+            out_dir: dir.to_string(),
+            ..RunConfig::default()
+        };
+        cfg.optimizer.kind = OptimizerKind::Spring;
+        cfg.optimizer.path = ExecPath::Decomposed;
+        cfg.optimizer.damping = 1e-6;
+        cfg.optimizer.momentum = 0.8;
+        cfg.optimizer.line_search = true;
+        cfg.optimizer.ls_grid = 6;
+        cfg
+    };
+
+    let dir = out_dir("traj");
+    let native = NativeBackend::new();
+    let base = train(mk_cfg("traj-native", "native", &dir), &native, false).unwrap();
+
+    let procs = ProcessEvaluator::new(2);
+    let run = train(mk_cfg("traj-process2", "process:2", &dir), &procs, false).unwrap();
+    assert_eq!(run.backend, "process");
+    assert_eq!(base.losses.len(), run.losses.len());
+    for (k, (a, b)) in base.losses.iter().zip(&run.losses).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "step {}: native loss {a:.17e} != process {b:.17e}",
+            k + 1
+        );
+    }
+
+    // The per-step scheduler deltas landed as CSV extras.
+    let csv =
+        std::fs::read_to_string(std::path::Path::new(&dir).join("traj-process2.csv")).unwrap();
+    let header = csv.lines().next().unwrap();
+    for col in ["sched_ranges", "sched_steals", "sched_requeues", "sched_respawns", "shard0_s"] {
+        assert!(header.contains(col), "missing CSV column {col}: {header}");
+    }
+    // And the native run's CSV carries none of them.
+    let csv_n =
+        std::fs::read_to_string(std::path::Path::new(&dir).join("traj-native.csv")).unwrap();
+    assert!(!csv_n.lines().next().unwrap().contains("sched_ranges"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 3. Fault tolerance
+// ---------------------------------------------------------------------------
+
+fn injected_worker_crash_is_respawned_requeued_and_bitwise_invisible() {
+    let native = NativeBackend::new();
+    let (p, theta, x_int, x_bnd, _) = problem_inputs(&native, "poisson2d", 43);
+    let mut ws = Workspace::new();
+    let loss_ref = native.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+    let (r_ref, j_ref) = native
+        .residuals_jacobian(&p, &theta, &x_int, &x_bnd, &mut ws)
+        .unwrap();
+
+    // Worker 0's first incarnation dies abruptly the moment its first
+    // range request arrives — with a range in flight, mid-evaluation.
+    let procs = ProcessEvaluator::with_options(ProcessOptions {
+        workers: 2,
+        fault_once: Some((0, 0)),
+        ..ProcessOptions::default()
+    });
+    // Several evaluations (the Jacobian one hands worker 0 four sub-ranges
+    // of its own), so worker 0 claims work — and dies — no matter how
+    // stealing interleaves the cheap loss dispatches.
+    for round in 0..3 {
+        let loss = procs.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+        assert_eq!(loss.to_bits(), loss_ref.to_bits(), "round {round}: loss");
+    }
+    let mut ws_p = Workspace::new();
+    let (r, j) = procs
+        .residuals_jacobian(&p, &theta, &x_int, &x_bnd, &mut ws_p)
+        .unwrap();
+    assert_bits("faulted r", &r, &r_ref);
+    assert_bits("faulted J", j.data(), j_ref.data());
+
+    let snap = procs.sched_stats().unwrap();
+    assert!(snap.respawns >= 1, "crash never triggered a respawn: {snap:?}");
+    assert!(snap.requeues >= 1, "crash never requeued a range: {snap:?}");
+}
+
+fn externally_killed_worker_recovers_between_evaluations() {
+    let native = NativeBackend::new();
+    let (p, theta, x_int, x_bnd, _) = problem_inputs(&native, "poisson2d", 47);
+    let loss_ref = native.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+
+    let procs = ProcessEvaluator::new(2);
+    let loss = procs.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+    assert_eq!(loss.to_bits(), loss_ref.to_bits(), "pre-kill loss");
+    assert!(
+        procs.worker_pids().iter().any(|pid| pid.is_some()),
+        "no worker alive after an evaluation"
+    );
+
+    // SIGKILL one worker out from under the supervisor; the next
+    // evaluation must respawn it (and re-ship the context) transparently.
+    procs.kill_worker(0);
+    let loss = procs.loss(&p, &theta, &x_int, &x_bnd).unwrap();
+    assert_eq!(loss.to_bits(), loss_ref.to_bits(), "post-kill loss");
+    let snap = procs.sched_stats().unwrap();
+    assert!(snap.respawns >= 1, "external kill never counted a respawn: {snap:?}");
+}
+
+// ---------------------------------------------------------------------------
+// 4. Selection + config hygiene
+// ---------------------------------------------------------------------------
+
+fn selector_and_config_reject_zero_workers() {
+    // Selection is lazy: building process:2 spawns nothing until the first
+    // evaluation, so this is cheap.
+    let be = engd::backend::select("process:2", "artifacts").unwrap();
+    assert_eq!(be.backend_name(), "process");
+    assert!(be.problem("poisson2d").is_ok());
+
+    assert!(engd::backend::select("process:0", "artifacts").is_err());
+    assert!(engd::backend::select("process:x", "artifacts").is_err());
+    assert!(engd::backend::validate_backend("process:4").is_ok());
+    assert!(engd::backend::validate_backend("process").is_ok());
+    assert!(engd::backend::validate_backend("process:0").is_err());
+    assert!(engd::backend::validate_backend("sharded:0").is_err());
+
+    for bad in [r#"backend = "process:0""#, r#"backend = "sharded:0""#] {
+        let v = engd::config::toml::parse(bad).unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "accepted {bad}");
+    }
+    let v = engd::config::toml::parse(r#"backend = "process:2""#).unwrap();
+    assert_eq!(RunConfig::from_value(&v).unwrap().backend, "process:2");
+}
+
+// ---------------------------------------------------------------------------
+// Runner
+// ---------------------------------------------------------------------------
+
+const TESTS: &[(&str, fn())] = &[
+    (
+        "process_tier_is_bitwise_identical_to_threads_and_native",
+        process_tier_is_bitwise_identical_to_threads_and_native,
+    ),
+    (
+        "training_through_worker_processes_matches_native_and_logs_sched",
+        training_through_worker_processes_matches_native_and_logs_sched,
+    ),
+    (
+        "injected_worker_crash_is_respawned_requeued_and_bitwise_invisible",
+        injected_worker_crash_is_respawned_requeued_and_bitwise_invisible,
+    ),
+    (
+        "externally_killed_worker_recovers_between_evaluations",
+        externally_killed_worker_recovers_between_evaluations,
+    ),
+    (
+        "selector_and_config_reject_zero_workers",
+        selector_and_config_reject_zero_workers,
+    ),
+];
+
+fn main() {
+    // Worker mode first: the supervisor spawns this binary for its shard
+    // workers, and nothing may touch stdout before the frame protocol.
+    if std::env::args().any(|a| a == "--shard-worker") {
+        std::process::exit(match engd::backend::process::worker_main() {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("shard worker error: {e:#}");
+                1
+            }
+        });
+    }
+
+    // Minimal sequential runner: first non-flag argument is a substring
+    // filter, libtest-style.
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let mut ran = 0usize;
+    let mut failed = 0usize;
+    for (name, test) in TESTS {
+        if let Some(f) = &filter {
+            if !name.contains(f.as_str()) {
+                continue;
+            }
+        }
+        ran += 1;
+        match std::panic::catch_unwind(test) {
+            Ok(()) => println!("test {name} ... ok"),
+            Err(_) => {
+                failed += 1;
+                println!("test {name} ... FAILED");
+            }
+        }
+    }
+    let verdict = if failed == 0 { "ok" } else { "FAILED" };
+    println!("\ntest result: {verdict}. {} passed; {failed} failed", ran - failed);
+    if failed > 0 {
+        std::process::exit(1);
+    }
+}

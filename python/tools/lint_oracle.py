@@ -1,0 +1,400 @@
+#!/usr/bin/env python3
+"""Toolchain-free mirror of tools/engd-lint (see rust/src of engd-lint).
+
+Mirrors the scanner and the five rules line for line so environments
+without a Rust toolchain can still run the static contracts:
+
+  R1 nan-ord     .partial_cmp(..).unwrap()
+  R2 unsafe-doc  `unsafe` without a preceding // SAFETY: comment
+  R3 env-reg     ENGD_* literal not in config/envvars.rs REGISTRY
+  R4 alloc       Vec::new / vec![ / .to_vec() / .clone() in hot-path fns
+  R5 bitwise     mul_add / .sum() / .fold( in tape.rs outside fast-tier fns
+
+Exits 0 on a clean tree, 1 on findings (printed as file:line [rule] msg).
+Keep in sync with tools/engd-lint/src/lib.rs — this file is the oracle
+the verify skill runs when cargo is unavailable.
+"""
+
+import os
+import sys
+
+WALK_DIRS = ["rust/src", "benches", "examples"]
+REGISTRY_FILE = "rust/src/config/envvars.rs"
+
+
+class Line:
+    __slots__ = ("code", "comment", "strings")
+
+    def __init__(self):
+        self.code = []
+        self.comment = []
+        self.strings = []
+
+
+def scan(src):
+    """Split source into per-line code/comment/string streams."""
+    chars = list(src)
+    n = len(chars)
+    lines = [Line()]
+    i = 0
+    while i < n:
+        c = chars[i]
+        nxt = chars[i + 1] if i + 1 < n else ""
+        if c == "\n":
+            lines.append(Line())
+            i += 1
+            continue
+        if c == "/" and nxt == "/":
+            i += 2
+            while i < n and chars[i] != "\n":
+                lines[-1].comment.append(chars[i])
+                i += 1
+            continue
+        if c == "/" and nxt == "*":
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if chars[i] == "/" and i + 1 < n and chars[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif chars[i] == "*" and i + 1 < n and chars[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    if chars[i] == "\n":
+                        lines.append(Line())
+                    else:
+                        lines[-1].comment.append(chars[i])
+                    i += 1
+            continue
+        prev_ident = i > 0 and (chars[i - 1].isalnum() or chars[i - 1] == "_")
+        if (c == "r" or (c == "b" and nxt == "r")) and not prev_ident:
+            base = i + 2 if c == "b" else i + 1
+            hashes = 0
+            while base + hashes < n and chars[base + hashes] == "#":
+                hashes += 1
+            if base + hashes < n and chars[base + hashes] == '"':
+                lines[-1].code.append('"')
+                j = base + hashes + 1
+                content = []
+                while j < n:
+                    if chars[j] == '"':
+                        k = 0
+                        while k < hashes and j + 1 + k < n and chars[j + 1 + k] == "#":
+                            k += 1
+                        if k == hashes:
+                            j += 1 + hashes
+                            break
+                    if chars[j] == "\n":
+                        lines.append(Line())
+                    else:
+                        content.append(chars[j])
+                    j += 1
+                lines[-1].code.append('"')
+                lines[-1].strings.append("".join(content))
+                i = j
+                continue
+        if c == '"' or (c == "b" and nxt == '"' and not prev_ident):
+            j = i + 2 if c == "b" else i + 1
+            lines[-1].code.append('"')
+            content = []
+            while j < n:
+                if chars[j] == "\\":
+                    content.append("\\")
+                    if j + 1 < n:
+                        if chars[j + 1] == "\n":
+                            lines.append(Line())
+                        else:
+                            content.append(chars[j + 1])
+                    j += 2
+                elif chars[j] == '"':
+                    j += 1
+                    break
+                elif chars[j] == "\n":
+                    lines.append(Line())
+                    j += 1
+                else:
+                    content.append(chars[j])
+                    j += 1
+            lines[-1].code.append('"')
+            lines[-1].strings.append("".join(content))
+            i = j
+            continue
+        if c == "'":
+            if nxt == "\\":
+                lines[-1].code.append("''")
+                j = i + 2
+                while j < n and chars[j] != "'":
+                    j += 1
+                i = j + 1
+                continue
+            if i + 2 < n and chars[i + 2] == "'":
+                lines[-1].code.append("''")
+                i += 3
+                continue
+            lines[-1].code.append("'")
+            i += 1
+            continue
+        lines[-1].code.append(c)
+        i += 1
+    out = []
+    for l in lines:
+        r = Line()
+        r.code = "".join(l.code)
+        r.comment = "".join(l.comment)
+        r.strings = l.strings
+        out.append(r)
+    return out
+
+
+def allows(line, rule):
+    return ("lint: allow(%s)" % rule) in line.comment
+
+
+def flatten(lines):
+    chars = []
+    line_of = []
+    for li, l in enumerate(lines):
+        for c in l.code:
+            chars.append(c)
+            line_of.append(li)
+        chars.append("\n")
+        line_of.append(li)
+    return chars, line_of
+
+
+def is_ident(c):
+    return c.isalnum() or c == "_"
+
+
+def word_positions(chars, word):
+    w = list(word)
+    out = []
+    for i in range(len(chars) - len(w) + 1):
+        if chars[i : i + len(w)] == w:
+            if i > 0 and is_ident(chars[i - 1]):
+                continue
+            if i + len(w) < len(chars) and is_ident(chars[i + len(w)]):
+                continue
+            out.append(i)
+    return out
+
+
+def skip_ws(chars, i):
+    while i < len(chars) and chars[i].isspace():
+        i += 1
+    return i
+
+
+def skip_balanced(chars, i):
+    depth = 0
+    while i < len(chars):
+        if chars[i] == "(":
+            depth += 1
+        elif chars[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return None
+
+
+def marked_fn_regions(lines, marker):
+    chars, line_of = flatten(lines)
+    marked = [marker in l.comment for l in lines]
+    regions = []
+    pending = False
+    awaiting = False
+    fn_depth = 0
+    fn_line = 0
+    in_region = False
+    region_depth = 0
+    depth = 0
+    last_line = -1
+    i = 0
+    while i < len(chars):
+        li = line_of[i]
+        if li != last_line:
+            last_line = li
+            if marked[li] and not in_region:
+                pending = True
+        c = chars[i]
+        if (
+            pending
+            and not awaiting
+            and not in_region
+            and c == "f"
+            and i + 1 < len(chars)
+            and chars[i + 1] == "n"
+            and (i == 0 or not is_ident(chars[i - 1]))
+            and (i + 2 >= len(chars) or not is_ident(chars[i + 2]))
+        ):
+            awaiting = True
+            fn_depth = depth
+            fn_line = li
+            i += 2
+            continue
+        if c == "{":
+            depth += 1
+            if awaiting:
+                awaiting = False
+                pending = False
+                in_region = True
+                region_depth = depth
+        elif c == "}":
+            depth -= 1
+            if in_region and depth < region_depth:
+                in_region = False
+                regions.append((fn_line, li))
+        elif c == ";" and awaiting and depth == fn_depth:
+            awaiting = False
+            pending = False
+        i += 1
+    if in_region:
+        regions.append((fn_line, len(lines) - 1))
+    return regions
+
+
+def in_regions(regions, line):
+    return any(a <= line <= b for a, b in regions)
+
+
+def rule_nan_ord(path, lines, out):
+    chars, line_of = flatten(lines)
+    for p in word_positions(chars, "partial_cmp"):
+        j = skip_ws(chars, p + len("partial_cmp"))
+        if j >= len(chars) or chars[j] != "(":
+            continue
+        j = skip_balanced(chars, j)
+        if j is None:
+            continue
+        j = skip_ws(chars, j)
+        if j >= len(chars) or chars[j] != ".":
+            continue
+        j = skip_ws(chars, j + 1)
+        if chars[j : j + 6] != list("unwrap"):
+            continue
+        end = j + 6
+        if end < len(chars) and is_ident(chars[end]):
+            continue
+        li = line_of[p]
+        if allows(lines[li], "nan-ord"):
+            continue
+        out.append((path, li + 1, "nan-ord", "`.partial_cmp(..).unwrap()` panics on NaN"))
+
+
+def rule_unsafe_doc(path, lines, out):
+    chars, line_of = flatten(lines)
+    flagged = set()
+    for p in word_positions(chars, "unsafe"):
+        li = line_of[p]
+        if li in flagged:
+            continue
+        l = lines[li]
+        if "SAFETY:" in l.comment or allows(l, "unsafe-doc"):
+            continue
+        documented = False
+        i = li
+        while i > 0:
+            i -= 1
+            prev = lines[i]
+            if "SAFETY:" in prev.comment:
+                documented = True
+                break
+            code = prev.code.strip()
+            if not code or code.startswith("#[") or code.startswith("#!["):
+                continue
+            if code.endswith("=") or code.endswith("(") or code.endswith(","):
+                continue
+            break
+        if not documented:
+            flagged.add(li)
+            out.append((path, li + 1, "unsafe-doc", "`unsafe` without a preceding // SAFETY:"))
+
+
+def envvar_shaped(s):
+    return (
+        len(s) > 5
+        and s.startswith("ENGD_")
+        and all(c.isupper() or c.isdigit() or c == "_" for c in s[5:])
+    )
+
+
+def rule_env_reg(path, lines, registry, out):
+    for li, l in enumerate(lines):
+        for s in l.strings:
+            if envvar_shaped(s) and s not in registry and not allows(l, "env-reg"):
+                out.append((path, li + 1, "env-reg", "env var `%s` not in REGISTRY" % s))
+
+
+def rule_alloc(path, lines, out):
+    regions = marked_fn_regions(lines, "lint: hot-path")
+    if not regions:
+        return
+    pats = ["Vec::new", "vec![", ".to_vec()", ".clone()"]
+    for li, l in enumerate(lines):
+        if not in_regions(regions, li) or allows(l, "alloc"):
+            continue
+        for pat in pats:
+            if pat in l.code:
+                out.append((path, li + 1, "alloc", "`%s` in hot-path fn" % pat))
+
+
+def rule_bitwise(path, lines, out):
+    if os.path.basename(path) != "tape.rs":
+        return
+    fast = marked_fn_regions(lines, "lint: fast-tier")
+    pats = ["mul_add", ".sum()", ".sum::<", ".fold("]
+    for li, l in enumerate(lines):
+        if in_regions(fast, li) or allows(l, "bitwise"):
+            continue
+        for pat in pats:
+            if pat in l.code:
+                out.append((path, li + 1, "bitwise", "`%s` outside fast-tier fn" % pat))
+
+
+def lint_source(path, src, registry):
+    lines = scan(src)
+    out = []
+    rule_nan_ord(path, lines, out)
+    rule_unsafe_doc(path, lines, out)
+    if path != REGISTRY_FILE:
+        rule_env_reg(path, lines, registry, out)
+    rule_alloc(path, lines, out)
+    rule_bitwise(path, lines, out)
+    return out
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.join(os.path.dirname(__file__), "..", "..")
+    root = os.path.abspath(root)
+    registry = set()
+    with open(os.path.join(root, REGISTRY_FILE), encoding="utf-8") as f:
+        for line in scan(f.read()):
+            for s in line.strings:
+                if envvar_shaped(s):
+                    registry.add(s)
+    files = []
+    for d in WALK_DIRS:
+        for dirpath, _dirnames, filenames in os.walk(os.path.join(root, d)):
+            for fn in filenames:
+                if fn.endswith(".rs"):
+                    files.append(os.path.join(dirpath, fn))
+    files.sort()
+    findings = []
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            src = f.read()
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        findings.extend(lint_source(rel, src, registry))
+    for path, line, rule, msg in findings:
+        print("%s:%d: [%s] %s" % (path, line, rule, msg))
+    print(
+        "lint_oracle: %d finding(s) across %d files (%d registered env vars)"
+        % (len(findings), len(files), len(registry))
+    )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -172,6 +172,7 @@ impl NativeBackend {
     /// Loss partials of the global reduction chunks `[c0, c1)` (see
     /// [`thread_chunks`]): `out[k] = Σ r_i²` over chunk `c0 + k`, rows in
     /// order. `out` must have `c1 - c0` entries.
+    // lint: hot-path — shard protocol fns write caller-pooled slices (R4).
     pub(crate) fn shard_loss_partials(
         &self,
         p: &ProblemSpec,
@@ -202,6 +203,7 @@ impl NativeBackend {
     /// partial (overwritten, not accumulated). Flat slices keep the
     /// sharded evaluator's steady state allocation-free — partials land
     /// in one `chunks × n_params` scratch block from its workspace pool.
+    // lint: hot-path — shard protocol fns write caller-pooled slices (R4).
     pub(crate) fn shard_loss_grad_partials(
         &self,
         p: &ProblemSpec,
@@ -243,6 +245,7 @@ impl NativeBackend {
     /// `(row1 - row0) × n_params` block. `j_out` must be zeroed (the
     /// reverse pass accumulates). Rows are pointwise-deterministic, so any
     /// contiguous partition reproduces the unsharded Jacobian bitwise.
+    // lint: hot-path — shard protocol fns write caller-pooled slices (R4).
     pub(crate) fn shard_rows_into(
         &self,
         p: &ProblemSpec,
@@ -267,6 +270,7 @@ impl NativeBackend {
 
     /// Predictions `u_θ` for evaluation points `[i0, i1)` of a row-major
     /// point set, written into `out` (`i1 - i0` entries).
+    // lint: hot-path — shard protocol fns write caller-pooled slices (R4).
     pub(crate) fn shard_u_pred_into(
         &self,
         p: &ProblemSpec,
@@ -747,6 +751,8 @@ impl Evaluator for NativeBackend {
                     std::slice::from_raw_parts_mut(gptr.get().add(w * np), np)
                 };
                 let l = chunk_loss_grad_into(&ctx, theta, x_int, x_bnd, start, end, grad_out);
+                // SAFETY: same disjointness — loss slot `w` is written by
+                // this worker only, and the buffer outlives the dispatch.
                 unsafe { *lptr.get().add(w) = l };
             });
         }

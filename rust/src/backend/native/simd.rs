@@ -401,12 +401,17 @@ fn sweep4_pair_impl<const FMA: bool>(
 macro_rules! define_kernel {
     ($body:ident, $avx2:ident, $neon:ident, $scalar:ident, $disp:ident,
      ( $( $arg:ident : $ty:ty ),* $(,)? )) => {
+        // SAFETY: `unsafe` here is only the `#[target_feature]` calling
+        // contract — the body is safe Rust; callers must prove AVX2+FMA
+        // support, which `$disp` below does before every call.
         #[cfg(target_arch = "x86_64")]
         #[target_feature(enable = "avx2,fma")]
         unsafe fn $avx2( $( $arg : $ty ),* ) {
             $body::<true>( $( $arg ),* )
         }
 
+        // SAFETY: as above for NEON (baseline on aarch64, but the wrapper
+        // keeps the dispatch structure uniform across arches).
         #[cfg(target_arch = "aarch64")]
         #[target_feature(enable = "neon")]
         unsafe fn $neon( $( $arg : $ty ),* ) {

@@ -958,6 +958,7 @@ impl Tape {
     /// propagation routed through the dispatched [`super::simd`] kernels
     /// (FMA contraction, four-row blocked passes). Entered automatically
     /// by `forward_batch` when the tape is in fast mode.
+    // lint: fast-tier — contraction/reassociation allowed here (engd-lint R5).
     fn forward_batch_fast(&mut self, theta: &[f64], xs: &[f64], n_pts: usize, orders: DualOrder) {
         let d = self.arch[0];
         let nl = self.arch.len() - 1;
@@ -1091,6 +1092,7 @@ impl Tape {
     /// destination pass, and quad-level zero-skip guards instead of
     /// per-row ones. Entered automatically by `backward_batch` in fast
     /// mode.
+    // lint: fast-tier — contraction/reassociation allowed here (engd-lint R5).
     fn backward_batch_fast(
         &mut self,
         theta: &[f64],

@@ -1,0 +1,163 @@
+//! Registry of every `ENGD_*` environment variable the tree reads.
+//!
+//! This table is the single source of truth for the env-var surface:
+//!
+//! * `engd-lint` rule **R3** (`env-reg`) scans this file for the declared
+//!   names and flags any `ENGD_*` string literal elsewhere in `rust/src`,
+//!   `benches`, or `examples` that is missing here — an env var can no
+//!   longer ship undocumented;
+//! * [`render_markdown_table`] renders the README's "Environment
+//!   variables" table, and a test below asserts the README copy between
+//!   the `<!-- envvar-table:begin/end -->` markers matches it byte for
+//!   byte (on drift, the test prints the expected block to paste in).
+
+/// One registered environment variable.
+pub struct EnvVar {
+    /// The exact name read from the environment (`ENGD_…`).
+    pub name: &'static str,
+    /// Human-readable default (what happens when the variable is unset).
+    pub default: &'static str,
+    /// What the variable controls and who reads it.
+    pub purpose: &'static str,
+}
+
+/// Every `ENGD_*` variable, sorted by name. Keep sorted — the lint's
+/// registry scan is order-insensitive, but the rendered README table and
+/// `lookup`'s binary search are not.
+pub const REGISTRY: &[EnvVar] = &[
+    EnvVar {
+        name: "ENGD_APPB_ITERS",
+        default: "20",
+        purpose: "Appendix-B Nyström micro-bench: timed iterations per arm.",
+    },
+    EnvVar {
+        name: "ENGD_APPB_N",
+        default: "896",
+        purpose: "Appendix-B Nyström micro-bench: kernel size N.",
+    },
+    EnvVar {
+        name: "ENGD_APPB_SKETCH",
+        default: "N/2",
+        purpose: "Appendix-B Nyström micro-bench: sketch size ℓ.",
+    },
+    EnvVar {
+        name: "ENGD_BACKEND",
+        default: "auto",
+        // No `|` in purposes: render_markdown_table does not escape cells.
+        purpose: "Bench-harness backend: auto / pjrt / native / sharded:<n> / process:<n>.",
+    },
+    EnvVar {
+        name: "ENGD_BENCH_BUDGET",
+        default: "per-bench (20 s)",
+        purpose: "Wall-clock budget in seconds given to each bench arm (paper §4 protocol).",
+    },
+    EnvVar {
+        name: "ENGD_NUMERICS",
+        default: "bitwise",
+        purpose: "Kernel numerics tier: bitwise (scalar-order FP, trajectories reproducible \
+                  bit for bit) or fast (FMA + reassociated reductions, tolerance-level).",
+    },
+    EnvVar {
+        name: "ENGD_PROP_SEED",
+        default: "0x5EED",
+        purpose: "Base seed of the property-test generator (override to explore new regions).",
+    },
+    EnvVar {
+        name: "ENGD_SHARD_FAULT",
+        default: "unset",
+        purpose: "Fault injection for tests: after=<n> makes a shard worker process exit \
+                  mid-protocol after n requests.",
+    },
+    EnvVar {
+        name: "ENGD_SHARD_SCHEDULE",
+        default: "steal",
+        purpose: "Shard work-assignment policy: steal (work-stealing range queue) or static \
+                  (fixed equal splits, for A/B runs).",
+    },
+    EnvVar {
+        name: "ENGD_SHARD_TIMEOUT_S",
+        default: "30",
+        purpose: "Seconds a shard worker process may go silent before the supervisor declares \
+                  it hung, kills it, and respawns.",
+    },
+    EnvVar {
+        name: "ENGD_SIMD",
+        default: "auto-detect",
+        purpose: "Fast-tier instruction-set override: scalar / avx2 / avx512 / neon (clamped \
+                  to what the CPU supports).",
+    },
+    EnvVar {
+        name: "ENGD_THREADS",
+        default: "available cores",
+        purpose: "Worker-pool width; also fixes the reduction chunk grid, so trajectories are \
+                  comparable only at equal ENGD_THREADS.",
+    },
+    EnvVar {
+        name: "ENGD_WORKER_EXE",
+        default: "current executable",
+        purpose: "Executable spawned as the --shard-worker process for the process:<n> backend.",
+    },
+];
+
+/// Look up a registered variable by exact name.
+pub fn lookup(name: &str) -> Option<&'static EnvVar> {
+    REGISTRY
+        .binary_search_by(|v| v.name.cmp(name))
+        .ok()
+        .map(|i| &REGISTRY[i])
+}
+
+/// Render the registry as the README's GitHub-flavored markdown table.
+pub fn render_markdown_table() -> String {
+    let mut out = String::new();
+    out.push_str("| Variable | Default | Purpose |\n");
+    out.push_str("| --- | --- | --- |\n");
+    for v in REGISTRY {
+        // The long purpose strings carry continuation whitespace from the
+        // source literals; collapse runs so the table stays one line per
+        // variable.
+        let purpose: String = v.purpose.split_whitespace().collect::<Vec<_>>().join(" ");
+        out.push_str(&format!("| `{}` | {} | {} |\n", v.name, v.default, purpose));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_sorted_and_unique() {
+        for w in REGISTRY.windows(2) {
+            assert!(
+                w[0].name < w[1].name,
+                "registry must stay sorted/unique: {} !< {}",
+                w[0].name,
+                w[1].name
+            );
+        }
+        for v in REGISTRY {
+            assert!(lookup(v.name).is_some());
+        }
+        // Lowercase on purpose: engd-lint scrapes every ENGD_*-shaped string
+        // literal in this file as "registered", so a shaped miss here would
+        // silently widen the registry.
+        assert!(lookup("ENGD_not_a_var").is_none());
+    }
+
+    #[test]
+    fn readme_env_table_matches_registry() {
+        let readme_path = concat!(env!("CARGO_MANIFEST_DIR"), "/README.md");
+        let readme = std::fs::read_to_string(readme_path).expect("README.md readable");
+        let begin = "<!-- envvar-table:begin -->";
+        let end = "<!-- envvar-table:end -->";
+        let b = readme.find(begin).expect("README missing envvar-table:begin marker");
+        let e = readme.find(end).expect("README missing envvar-table:end marker");
+        let actual = readme[b + begin.len()..e].trim();
+        let expected = render_markdown_table();
+        assert!(
+            actual == expected.trim(),
+            "README env-var table is stale; paste this between the markers:\n\n{expected}"
+        );
+    }
+}

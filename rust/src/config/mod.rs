@@ -3,6 +3,7 @@
 //! serde/toml are unavailable offline, so both parsers are implemented here
 //! (see DESIGN.md "Offline-dependency constraint").
 
+pub mod envvars;
 pub mod json;
 pub mod toml;
 

@@ -96,6 +96,27 @@
 //!   is the seam where a sharded or PJRT-backed operator drops in without
 //!   touching the optimizers.
 //!
+//! ## Static contracts (`// lint:` comments)
+//!
+//! Source-level invariants are enforced by `tools/engd-lint` (run as part
+//! of `cargo test -q` via `rust/tests/lint.rs`; rules and rationale in the
+//! README's "Static contracts" table). The lint is steered by structured
+//! comments:
+//!
+//! * `// lint: hot-path` — arms the next `fn`: its body may not call
+//!   `Vec::new` / `vec![..]` / `.to_vec()` / `.clone()` (rule `alloc`);
+//!   steady-state steps draw from [`linalg::Workspace`] instead.
+//! * `// lint: fast-tier` — in `tape.rs`, marks the next `fn` as a
+//!   fast-tier kernel where FMA contraction and reassociated reductions
+//!   are allowed (rule `bitwise` forbids them elsewhere in the file).
+//! * `// lint: allow(<rule>)` — suppresses one rule on its line; used
+//!   sparingly and with a trailing justification (e.g. a lazy first-step
+//!   buffer init inside a hot-path `fn`).
+//!
+//! Every `ENGD_*` environment variable read anywhere in the tree must be
+//! declared in [`config::envvars::REGISTRY`] (rule `env-reg`), which also
+//! renders the README's env-var table.
+//!
 //! Quickstart (after `make artifacts`):
 //! ```bash
 //! cargo run --release -- train --problem poisson5d --opt spring --steps 300 --echo

@@ -122,9 +122,19 @@ pub fn eigh_into(
         }
     }
 
-    // Sort ascending, permuting V's columns into the output.
+    // Sort ascending, permuting V's columns into the output. Total-order
+    // key with NaN last: a non-finite diagonal entry (overflowed input,
+    // poisoned sweep) used to panic the pivot sort via
+    // `partial_cmp(..).unwrap()`; now +∞ orders after every finite value
+    // as usual and NaN orders after everything, deterministically (the
+    // sort is stable, so tied/NaN columns keep their sweep order).
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| m[(i, i)].partial_cmp(&m[(j, j)]).unwrap());
+    order.sort_by(|&i, &j| {
+        let key = |d: f64| (d.is_nan(), d);
+        key(m[(i, i)])
+            .partial_cmp(&key(m[(j, j)]))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
     for (new_j, &old_j) in order.iter().enumerate() {
         eigenvalues[new_j] = m[(old_j, old_j)];
         for i in 0..n {
@@ -193,6 +203,49 @@ mod tests {
         let trace: f64 = (0..15).map(|i| a[(i, i)]).sum();
         let sum: f64 = e.eigenvalues.iter().sum();
         assert!((trace - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_finite_diagonal_orders_last_instead_of_panicking() {
+        // Regression: the final pivot sort used `partial_cmp(..).unwrap()`,
+        // so a non-finite diagonal entry (overflowed Gram input, poisoned
+        // sweep) panicked instead of producing a deterministic ordering.
+        // A diagonal input never rotates (every off-diagonal is zero), so
+        // the sort sees the diagonal verbatim: finite values ascend, +∞
+        // after them, NaN last.
+        let a = Matrix::from_vec(
+            4,
+            4,
+            vec![
+                f64::NAN,
+                0.0,
+                0.0,
+                0.0,
+                0.0,
+                2.0,
+                0.0,
+                0.0,
+                0.0,
+                0.0,
+                f64::INFINITY,
+                0.0,
+                0.0,
+                0.0,
+                0.0,
+                1.0,
+            ],
+        );
+        let e = eigh(&a);
+        assert_eq!(e.eigenvalues[0], 1.0);
+        assert_eq!(e.eigenvalues[1], 2.0);
+        assert_eq!(e.eigenvalues[2], f64::INFINITY);
+        assert!(e.eigenvalues[3].is_nan());
+        // Eigenvector columns follow the permutation: column 0 must be the
+        // eigenvector of the entry 1.0 (original column 3).
+        assert_eq!(e.eigenvectors[(3, 0)], 1.0);
+        assert_eq!(e.eigenvectors[(1, 1)], 1.0);
+        assert_eq!(e.eigenvectors[(2, 2)], 1.0);
+        assert_eq!(e.eigenvectors[(0, 3)], 1.0);
     }
 
     #[test]

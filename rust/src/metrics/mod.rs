@@ -251,7 +251,14 @@ impl Summary {
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::of on empty sample set");
         let mut s = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Total-order key with NaN last (the `rank_trials` pattern): a
+        // timing sample that divided by zero used to panic the quantile
+        // sort outright. NaNs sinking to the top keeps the low quantiles
+        // meaningful and surfaces the corruption in `max`.
+        s.sort_by(|a, b| {
+            let key = |x: &f64| (x.is_nan(), *x);
+            key(a).partial_cmp(&key(b)).unwrap_or(std::cmp::Ordering::Equal)
+        });
         let q = |f: f64| -> f64 {
             let idx = f * (s.len() - 1) as f64;
             let lo = idx.floor() as usize;
@@ -283,6 +290,23 @@ impl std::fmt::Display for Summary {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn summary_quantiles_survive_nan_samples() {
+        // Regression: the quantile sort used `partial_cmp(..).unwrap()`,
+        // which panics the moment a sample is NaN (a zero-iteration timing
+        // arm divides 0/0). NaNs must instead order last deterministically:
+        // low quantiles stay meaningful, and `max` reports the corruption.
+        let s = Summary::of(&[3.0, f64::NAN, 1.0, 2.0, f64::NAN]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+        assert!(s.max.is_nan(), "NaN samples must sink to the top, got {}", s.max);
+        assert_eq!(s.n, 5);
+
+        // NaN-free summaries are untouched by the total-order key.
+        let clean = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!((clean.min, clean.median, clean.max), (1.0, 2.0, 3.0));
+    }
 
     #[test]
     fn logger_writes_jsonl_and_csv() {

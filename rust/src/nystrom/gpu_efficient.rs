@@ -56,6 +56,7 @@ impl GpuNystrom {
     /// Build from a kernel operator: sample Ω, sketch `Y = AΩ` through the
     /// operator, factorize. Buffers come from (and should eventually return
     /// to) `ws` — see [`GpuNystrom::recycle`].
+    // lint: hot-path — per-step Nyström rebuilds draw from the pool (R4).
     pub fn build(
         op: &dyn KernelOp,
         sketch: usize,
@@ -81,6 +82,7 @@ impl GpuNystrom {
     /// instead of the O(N²P) kernel build — the whole point of sketching).
     ///
     /// Consumes both inputs; their storage is recycled into `ws`.
+    // lint: hot-path — per-step Nyström rebuilds draw from the pool (R4).
     pub fn from_sketch(
         omega: Matrix,
         y: Matrix,

@@ -47,6 +47,7 @@ pub struct StableNystrom {
 impl StableNystrom {
     /// Build from a kernel operator: orthonormal test matrix, operator
     /// sketch, eigendecomposition.
+    // lint: hot-path — per-step Nyström rebuilds draw from the pool (R4).
     pub fn build(
         op: &dyn KernelOp,
         sketch: usize,
@@ -71,6 +72,7 @@ impl StableNystrom {
 
     /// Build from a precomputed (orthonormal Ω, Y = AΩ) pair. Consumes both;
     /// their storage is recycled into `ws`.
+    // lint: hot-path — per-step Nyström rebuilds draw from the pool (R4).
     pub fn from_sketch(
         omega: Matrix,
         y: Matrix,

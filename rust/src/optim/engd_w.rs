@@ -34,6 +34,7 @@ impl EngdW {
         EngdW { cfg: o.clone() }
     }
 
+    // lint: hot-path — steady-state steps must not allocate (engd-lint R4).
     fn fused_step(&self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         if !self.cfg.line_search {
             // Single-artifact hot path: θ' computed inside XLA.
@@ -49,7 +50,7 @@ impl EngdW {
             return Ok(StepInfo {
                 loss: out[1][0],
                 lr_used: self.cfg.lr,
-                extra: vec![],
+                extra: vec![], // lint: allow(alloc) — empty reporting vec
             });
         }
         // Direction artifact + grid line search on the backend loss.
@@ -64,10 +65,12 @@ impl EngdW {
         Ok(StepInfo {
             loss,
             lr_used: ls.eta,
-            extra: vec![("ls_evals".into(), ls.evals as f64)],
+            // Reporting tuple handed to the metrics logger, not kernel math.
+            extra: vec![("ls_evals".into(), ls.evals as f64)], // lint: allow(alloc)
         })
     }
 
+    // lint: hot-path — steady-state steps must not allocate (engd-lint R4).
     fn decomposed_step(&self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         let (r, j) = env.residuals_jacobian(theta)?;
         let loss = 0.5 * crate::linalg::dot(&r, &r);
@@ -100,6 +103,7 @@ impl EngdW {
 }
 
 impl Optimizer for EngdW {
+    // lint: hot-path — steady-state steps must not allocate (engd-lint R4).
     fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         match self.cfg.path {
             // Fused artifacts exist only on the PJRT backend; elsewhere the

@@ -49,6 +49,7 @@ impl HessianFree {
 }
 
 impl Optimizer for HessianFree {
+    // lint: hot-path — steady-state steps must not allocate (engd-lint R4).
     fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         let (r, j) = env.residuals_jacobian(theta)?;
         let loss = 0.5 * crate::linalg::dot(&r, &r);
@@ -127,7 +128,8 @@ impl Optimizer for HessianFree {
         Ok(StepInfo {
             loss,
             lr_used: eta,
-            extra: vec![
+            // Reporting tuples handed to the metrics logger, not kernel math.
+            extra: vec![ // lint: allow(alloc)
                 ("cg_iters".into(), cg_iters as f64),
                 ("cg_rel_res".into(), cg_rel_res),
                 ("damping".into(), lambda),

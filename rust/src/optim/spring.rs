@@ -51,6 +51,7 @@ impl Spring {
     /// in pooled storage — it is recycled into `env.ws` here, and the φ
     /// momentum state stays an owned, persistent vector (never a pool
     /// buffer), so checkpointing and the pool's steady state both hold.
+    // lint: hot-path — steady-state steps must not allocate (engd-lint R4).
     fn apply(
         &mut self,
         theta: &mut [f64],
@@ -90,10 +91,12 @@ impl Spring {
         })
     }
 
+    // lint: hot-path — steady-state steps must not allocate (engd-lint R4).
     fn fused_step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         let p = env.problem.n_params;
         if self.phi.is_empty() {
-            self.phi = vec![0.0; p];
+            // First-step lazy init only; φ persists across steps.
+            self.phi = vec![0.0; p]; // lint: allow(alloc)
         }
         if !self.cfg.line_search && self.cfg.bias != BiasMode::Overwrite {
             // Fully fused single-artifact hot path (Algorithm 1 lines 4–9).
@@ -110,11 +113,13 @@ impl Spring {
                 &[bias],
             ])?;
             theta.copy_from_slice(&out[0]);
-            self.phi = out[1].clone();
+            // PJRT-only path: the artifact owns `out`; φ must outlive it.
+            self.phi = out[1].clone(); // lint: allow(alloc)
             return Ok(StepInfo {
                 loss: out[2][0],
                 lr_used: self.cfg.lr,
-                extra: vec![("bias".into(), bias)],
+                // Reporting tuple for the metrics logger, not kernel math.
+                extra: vec![("bias".into(), bias)], // lint: allow(alloc)
             });
         }
         // Direction artifact; bias/line-search applied in Rust.
@@ -127,11 +132,12 @@ impl Spring {
             &[self.cfg.damping],
             &[self.cfg.momentum],
         ])?;
-        let phi_raw = out[0].clone();
+        let phi_raw = out[0].clone(); // lint: allow(alloc) — PJRT artifact owns `out`
         let loss = out[1][0];
-        self.apply(theta, env, phi_raw, loss, vec![])
+        self.apply(theta, env, phi_raw, loss, vec![]) // lint: allow(alloc) — empty reporting vec
     }
 
+    // lint: hot-path — steady-state steps must not allocate (engd-lint R4).
     fn decomposed_step(
         &mut self,
         theta: &mut [f64],
@@ -139,7 +145,8 @@ impl Spring {
     ) -> Result<StepInfo> {
         let (r, j) = env.residuals_jacobian(theta)?;
         if self.phi.is_empty() {
-            self.phi = vec![0.0; j.cols()];
+            // First-step lazy init only; φ persists across steps.
+            self.phi = vec![0.0; j.cols()]; // lint: allow(alloc)
         }
         let loss = 0.5 * crate::linalg::dot(&r, &r);
         let op = JacobianKernel::with_numerics(&j, env.numerics);
@@ -168,6 +175,7 @@ impl Spring {
 }
 
 impl Optimizer for Spring {
+    // lint: hot-path — steady-state steps must not allocate (engd-lint R4).
     fn step(&mut self, theta: &mut [f64], env: &mut StepEnv) -> Result<StepInfo> {
         match self.cfg.path {
             // Fused artifacts are PJRT-only; the decomposed path computes

@@ -435,7 +435,13 @@ where
 /// Cholesky) — each user is responsible for keeping its writes disjoint
 /// per slot.
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+// SAFETY: SendPtr is a bare address; sharing it across threads is sound
+// because every user partitions its writes into disjoint index ranges per
+// worker (the pool's chunk grids) and the pointee outlives the dispatch
+// (the latch barrier in `run_job` joins before the borrow ends).
 unsafe impl<T> Sync for SendPtr<T> {}
+// SAFETY: as above — moving the address between threads adds no capability
+// beyond the disjoint-write contract documented on the struct.
 unsafe impl<T> Send for SendPtr<T> {}
 
 impl<T> SendPtr<T> {

@@ -1,0 +1,229 @@
+//! engd-lint self-check and per-rule fixtures.
+//!
+//! The fixtures pin each rule's semantics (positive detection with exact
+//! `file:line` + rule id, a negative that must stay clean, and pragma
+//! suppression); the self-check runs the real tree walk over this checkout
+//! and demands zero findings — `cargo test -q` fails the moment a
+//! contract-violating line lands anywhere under `rust/src`, `benches`, or
+//! `examples`. A Python mirror of the same walk lives at
+//! `python/tools/lint_oracle.py` for toolchain-free environments.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use engd_lint::{lint_source, lint_tree, registry_names, render_json, Finding, RULES};
+
+fn registry() -> BTreeSet<String> {
+    ["ENGD_THREADS", "ENGD_NUMERICS"].iter().map(|s| s.to_string()).collect()
+}
+
+fn run(src: &str) -> Vec<Finding> {
+    lint_source("fixture.rs", src, &registry())
+}
+
+/// `(line, rule)` pairs, the shape every positive fixture asserts on.
+fn hits(findings: &[Finding]) -> Vec<(usize, &'static str)> {
+    findings.iter().map(|f| (f.line, f.rule)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// R1 nan-ord
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nan_ord_flags_partial_cmp_unwrap() {
+    let f = run("fn f(v: &mut [f64]) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n");
+    assert_eq!(hits(&f), vec![(2, "nan-ord")]);
+    assert_eq!(f[0].file, "fixture.rs");
+}
+
+#[test]
+fn nan_ord_flags_multiline_chain() {
+    let f = run("fn f() {\n    a.partial_cmp(&b)\n        .unwrap();\n}\n");
+    // Diagnostic anchors on the `partial_cmp` line.
+    assert_eq!(hits(&f), vec![(2, "nan-ord")]);
+}
+
+#[test]
+fn nan_ord_accepts_unwrap_or_total_key() {
+    let clean = "fn f(v: &mut [f64]) {\n    v.sort_by(|a, b| {\n        let key = |x: &f64| (x.is_nan(), *x);\n        key(a).partial_cmp(&key(b)).unwrap_or(std::cmp::Ordering::Equal)\n    });\n}\n";
+    assert!(run(clean).is_empty());
+    // `unwrap_or_else` is a longer identifier, not a bare `unwrap()`.
+    assert!(run("fn f() { a.partial_cmp(b).unwrap_or_else(|| x); }\n").is_empty());
+}
+
+#[test]
+fn nan_ord_pragma_suppresses() {
+    let src = "fn f() {\n    a.partial_cmp(b).unwrap(); // lint: allow(nan-ord)\n}\n";
+    assert!(run(src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R2 unsafe-doc
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unsafe_doc_flags_undocumented_block() {
+    let f = run("fn f() {\n    let x = 1;\n    unsafe { g() }\n}\n");
+    assert_eq!(hits(&f), vec![(3, "unsafe-doc")]);
+}
+
+#[test]
+fn unsafe_doc_accepts_preceding_safety_comment() {
+    assert!(run("fn f() {\n    // SAFETY: g has no preconditions here.\n    unsafe { g() }\n}\n")
+        .is_empty());
+    // Same-line trailing comment also documents the site.
+    assert!(run("fn f() { unsafe { g() } // SAFETY: trivially fine\n}\n").is_empty());
+}
+
+#[test]
+fn unsafe_doc_walks_over_continuations_and_attributes() {
+    // The `let x: T =\n unsafe {…}` idiom: SAFETY sits above the binding.
+    let src = "// SAFETY: slice bounds checked by caller.\nlet row: &mut [f64] =\n    unsafe { s.get_unchecked_mut(a..b) };\n";
+    assert!(run(src).is_empty());
+    let attr = "// SAFETY: caller proves AVX2 support.\n#[target_feature(enable = \"avx2\")]\nunsafe fn kernel() {}\n";
+    assert!(run(attr).is_empty());
+}
+
+#[test]
+fn unsafe_doc_ignores_strings_and_comments() {
+    assert!(run("fn f() { let s = \"unsafe\"; } // unsafe in prose\n").is_empty());
+}
+
+#[test]
+fn unsafe_doc_pragma_suppresses() {
+    assert!(run("fn f() {\n    unsafe { g() } // lint: allow(unsafe-doc)\n}\n").is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R3 env-reg
+// ---------------------------------------------------------------------------
+
+#[test]
+fn env_reg_flags_unregistered_var() {
+    let f = run("fn f() {\n    std::env::var(\"ENGD_BOGUS\").ok();\n}\n");
+    assert_eq!(hits(&f), vec![(2, "env-reg")]);
+    assert!(f[0].message.contains("ENGD_BOGUS"));
+}
+
+#[test]
+fn env_reg_accepts_registered_and_unshaped() {
+    assert!(run("fn f() { std::env::var(\"ENGD_THREADS\").ok(); }\n").is_empty());
+    // Lowercase tail is not env-var-shaped; neither are foreign prefixes.
+    assert!(run("fn f() { let s = \"ENGD_lowercase\"; let t = \"OTHER_VAR\"; }\n").is_empty());
+}
+
+#[test]
+fn env_reg_pragma_suppresses() {
+    let src = "fn f() {\n    std::env::var(\"ENGD_BOGUS\").ok(); // lint: allow(env-reg)\n}\n";
+    assert!(run(src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R4 alloc
+// ---------------------------------------------------------------------------
+
+#[test]
+fn alloc_flags_allocations_only_inside_marked_fns() {
+    let src = "// lint: hot-path\nfn step(&mut self) {\n    let v = Vec::new();\n    let w = x.to_vec();\n}\n\nfn cold() {\n    let v = Vec::new();\n}\n";
+    let f = run(src);
+    assert_eq!(hits(&f), vec![(3, "alloc"), (4, "alloc")]);
+}
+
+#[test]
+fn alloc_flags_vec_macro_and_clone() {
+    let src = "// lint: hot-path\nfn step() {\n    let v = vec![0.0; 8];\n    let c = buf.clone();\n}\n";
+    assert_eq!(hits(&run(src)), vec![(3, "alloc"), (4, "alloc")]);
+}
+
+#[test]
+fn alloc_pragma_suppresses_per_line() {
+    let src = "// lint: hot-path\nfn step() {\n    let v = vec![0.0; 8]; // lint: allow(alloc) — one-time lazy init\n    let w = Vec::new();\n}\n";
+    assert_eq!(hits(&run(src)), vec![(4, "alloc")]);
+}
+
+#[test]
+fn alloc_region_ends_at_fn_close_brace() {
+    // Closure braces inside the body must not end the region early.
+    let src = "// lint: hot-path\nfn step() {\n    let f = |x: usize| { x + 1 };\n    let v = Vec::new();\n}\nfn after() {\n    let v = Vec::new();\n}\n";
+    assert_eq!(hits(&run(src)), vec![(4, "alloc")]);
+}
+
+// ---------------------------------------------------------------------------
+// R5 bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bitwise_applies_only_to_tape_rs() {
+    let src = "fn f(a: f64, b: f64, c: f64) -> f64 {\n    a.mul_add(b, c)\n}\n";
+    assert!(lint_source("rust/src/linalg/matrix.rs", src, &registry()).is_empty());
+    let f = lint_source("rust/src/backend/native/tape.rs", src, &registry());
+    assert_eq!(hits(&f), vec![(2, "bitwise")]);
+}
+
+#[test]
+fn bitwise_flags_reductions_outside_fast_tier() {
+    let src = "// lint: fast-tier\nfn forward_fast(xs: &[f64]) -> f64 {\n    xs.iter().sum::<f64>()\n}\nfn forward_bitwise(xs: &[f64]) -> f64 {\n    xs.iter().fold(0.0, |a, b| a + b)\n}\n";
+    let f = lint_source("tape.rs", src, &registry());
+    assert_eq!(hits(&f), vec![(6, "bitwise")]);
+}
+
+#[test]
+fn bitwise_pragma_suppresses() {
+    let src = "fn f(xs: &[f64]) -> f64 {\n    xs.iter().sum::<f64>() // lint: allow(bitwise)\n}\n";
+    assert!(lint_source("tape.rs", src, &registry()).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Machine-readable output
+// ---------------------------------------------------------------------------
+
+#[test]
+fn json_report_escapes_and_counts() {
+    let findings = run("fn f() {\n    unsafe { g() }\n}\n");
+    let report = engd_lint::Report {
+        findings,
+        files_scanned: 1,
+        registry: registry(),
+    };
+    let json = render_json(&report);
+    assert!(json.contains("\"finding_count\": 1"));
+    assert!(json.contains("\"rule\": \"unsafe-doc\""));
+    assert!(json.contains("\"file\": \"fixture.rs\""));
+    assert!(json.contains("\"line\": 2"));
+    // The message quotes `unsafe` in backticks and must survive escaping.
+    assert!(json.contains("`unsafe`"));
+}
+
+// ---------------------------------------------------------------------------
+// Repo self-check
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repo_registry_matches_envvars_module() {
+    // The lexer-scraped registry and the compiled REGISTRY must agree —
+    // this is what lets engd-lint stay dependency-free.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let scraped = registry_names(root).expect("scan registry file");
+    let compiled: BTreeSet<String> =
+        engd::config::envvars::REGISTRY.iter().map(|v| v.name.to_string()).collect();
+    assert_eq!(scraped, compiled);
+}
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(root).expect("walk tree");
+    assert!(report.files_scanned > 50, "walk looks truncated: {} files", report.files_scanned);
+    assert!(!report.registry.is_empty(), "registry scan came up empty");
+    if !report.findings.is_empty() {
+        for f in &report.findings {
+            eprintln!("{f}");
+        }
+        panic!(
+            "engd-lint: {} finding(s) in this checkout (rules: {})",
+            report.findings.len(),
+            RULES.join(", ")
+        );
+    }
+}

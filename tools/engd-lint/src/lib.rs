@@ -1,0 +1,791 @@
+//! engd-lint — self-hosted static analysis for the engd tree.
+//!
+//! The crate enforces the repo-specific contracts the test suite can only
+//! probe dynamically (see README "Static contracts"):
+//!
+//! * **R1 `nan-ord`** — no `.partial_cmp(..).unwrap()`: a NaN anywhere in
+//!   the keys panics the sort. Use a `(is_nan, value)` total-order key
+//!   with `unwrap_or(Equal)` (the `run_sweep` bug class).
+//! * **R2 `unsafe-doc`** — every `unsafe` block / fn / impl must be
+//!   preceded by a `// SAFETY:` comment.
+//! * **R3 `env-reg`** — every `ENGD_*` string literal must be declared in
+//!   `engd::config::envvars::REGISTRY` (this file is located by path and
+//!   scanned with the same lexer).
+//! * **R4 `alloc`** — inside functions annotated `// lint: hot-path`, no
+//!   `Vec::new` / `vec![..]` / `.to_vec()` / `.clone()` without a
+//!   `// lint: allow(alloc)` pragma — the static complement to the
+//!   `Workspace` pool's `scratch_stats()` runtime asserts.
+//! * **R5 `bitwise`** — in `tape.rs`, no `mul_add` and no `.sum()` /
+//!   `.fold(` float reductions outside functions annotated
+//!   `// lint: fast-tier`: the bitwise tier's contract is scalar-order FP
+//!   with no contraction or reassociation.
+//!
+//! Any finding can be suppressed on its line with `// lint: allow(<rule>)`.
+//!
+//! Sources are tokenized by a small scanner ([`scan`]) that understands
+//! line/nested-block comments, (raw/byte) string literals, char literals,
+//! and lifetimes — rules never match inside comments or strings, and
+//! comment/pragma detection never matches inside strings.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// All rule identifiers, in diagnostic order.
+pub const RULES: &[&str] = &["nan-ord", "unsafe-doc", "env-reg", "alloc", "bitwise"];
+
+/// One diagnostic: `file:line` plus the violated rule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the lint root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule identifier (one of [`RULES`]).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Result of a tree walk: findings plus coverage counters for the report.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Registered `ENGD_*` names the R3 scan checked against.
+    pub registry: BTreeSet<String>,
+}
+
+// ---------------------------------------------------------------------------
+// Scanner
+// ---------------------------------------------------------------------------
+
+/// One physical source line, split into the streams the rules care about.
+#[derive(Debug, Default, Clone)]
+pub struct SourceLine {
+    /// Code with comments removed and string/char literal *contents*
+    /// blanked (the delimiting quotes remain, so token adjacency is
+    /// preserved).
+    pub code: String,
+    /// Concatenated text of every comment on the line.
+    pub comment: String,
+    /// Contents of string literals that terminate on this line.
+    pub strings: Vec<String>,
+}
+
+impl SourceLine {
+    /// Is a `// lint: allow(<rule>)` pragma present on this line?
+    fn allows(&self, rule: &str) -> bool {
+        self.comment.contains(&format!("lint: allow({rule})"))
+    }
+}
+
+/// Tokenize Rust source into per-line code / comment / string streams.
+///
+/// Handles: `//` line comments, nested `/* */` block comments, string
+/// literals with escapes, raw strings `r"…"` / `r#"…"#` (any hash count,
+/// plus `b` prefixes), char and byte-char literals, and lifetimes (`'a`
+/// is code, not an unterminated char).
+pub fn scan(src: &str) -> Vec<SourceLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<SourceLine> = vec![SourceLine::default()];
+    let mut i = 0;
+
+    macro_rules! cur {
+        () => {
+            lines.last_mut().expect("at least one line")
+        };
+    }
+    macro_rules! newline {
+        () => {
+            lines.push(SourceLine::default())
+        };
+    }
+
+    while i < n {
+        let c = chars[i];
+        let next = |k: usize| chars.get(i + k).copied();
+
+        if c == '\n' {
+            newline!();
+            i += 1;
+            continue;
+        }
+
+        // Comments.
+        if c == '/' && next(1) == Some('/') {
+            // Line comment: consume to end of line.
+            i += 2;
+            while i < n && chars[i] != '\n' {
+                cur!().comment.push(chars[i]);
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && next(1) == Some('*') {
+            // Nested block comment.
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        newline!();
+                    } else {
+                        cur!().comment.push(chars[i]);
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+
+        // Raw strings: r"…", r#"…"#, br"…", … A raw-string head only counts
+        // when the `r` does not terminate an identifier (`var"` is not
+        // valid Rust anyway, but macros make caution cheap).
+        let prev_ident = i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+        if (c == 'r' || (c == 'b' && next(1) == Some('r'))) && !prev_ident {
+            let base = if c == 'b' { i + 2 } else { i + 1 };
+            let mut hashes = 0usize;
+            while chars.get(base + hashes) == Some(&'#') {
+                hashes += 1;
+            }
+            if chars.get(base + hashes) == Some(&'"') {
+                cur!().code.push('"');
+                let mut j = base + hashes + 1;
+                let mut content = String::new();
+                'raw: while j < n {
+                    if chars[j] == '"' {
+                        let mut k = 0;
+                        while k < hashes && chars.get(j + 1 + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    if chars[j] == '\n' {
+                        newline!();
+                    } else {
+                        content.push(chars[j]);
+                    }
+                    j += 1;
+                }
+                cur!().code.push('"');
+                cur!().strings.push(content);
+                i = j;
+                continue;
+            }
+        }
+
+        // Plain (or byte) strings.
+        if c == '"' || (c == 'b' && next(1) == Some('"') && !prev_ident) {
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            cur!().code.push('"');
+            let mut content = String::new();
+            while j < n {
+                match chars[j] {
+                    '\\' => {
+                        // Keep the escape verbatim; it can't terminate.
+                        content.push('\\');
+                        if let Some(&e) = chars.get(j + 1) {
+                            if e == '\n' {
+                                newline!();
+                            } else {
+                                content.push(e);
+                            }
+                        }
+                        j += 2;
+                    }
+                    '"' => {
+                        j += 1;
+                        break;
+                    }
+                    '\n' => {
+                        newline!();
+                        j += 1;
+                    }
+                    other => {
+                        content.push(other);
+                        j += 1;
+                    }
+                }
+            }
+            cur!().code.push('"');
+            cur!().strings.push(content);
+            i = j;
+            continue;
+        }
+
+        // Char literal vs lifetime. `'x'` and `'\n'` are chars; `'a` (no
+        // closing quote in reach) is a lifetime and stays in the code
+        // stream.
+        if c == '\'' {
+            if next(1) == Some('\\') {
+                // Escaped char literal: consume through the closing quote.
+                cur!().code.push('\'');
+                cur!().code.push('\'');
+                let mut j = i + 2;
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+                i = j + 1;
+                continue;
+            }
+            if next(2) == Some('\'') {
+                cur!().code.push('\'');
+                cur!().code.push('\'');
+                i += 3;
+                continue;
+            }
+            // Lifetime (or `'static`): leave the quote in the code stream.
+            cur!().code.push('\'');
+            i += 1;
+            continue;
+        }
+
+        cur!().code.push(c);
+        i += 1;
+    }
+
+    lines
+}
+
+// ---------------------------------------------------------------------------
+// Flattened code stream helpers
+// ---------------------------------------------------------------------------
+
+/// Code of all lines joined with `\n`, plus a char-index → line-index map.
+fn flatten(lines: &[SourceLine]) -> (Vec<char>, Vec<usize>) {
+    let mut chars = Vec::new();
+    let mut line_of = Vec::new();
+    for (li, l) in lines.iter().enumerate() {
+        for c in l.code.chars() {
+            chars.push(c);
+            line_of.push(li);
+        }
+        chars.push('\n');
+        line_of.push(li);
+    }
+    (chars, line_of)
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Positions where `word` occurs with identifier boundaries on both sides.
+fn word_positions(chars: &[char], word: &str) -> Vec<usize> {
+    let w: Vec<char> = word.chars().collect();
+    let mut out = Vec::new();
+    if w.is_empty() || chars.len() < w.len() {
+        return out;
+    }
+    for i in 0..=chars.len() - w.len() {
+        if chars[i..i + w.len()] == w[..]
+            && (i == 0 || !is_ident_char(chars[i - 1]))
+            && (i + w.len() == chars.len() || !is_ident_char(chars[i + w.len()]))
+        {
+            out.push(i);
+        }
+    }
+    out
+}
+
+fn skip_ws(chars: &[char], mut i: usize) -> usize {
+    while i < chars.len() && chars[i].is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Given `i` at an opening `(`, return the index just past its match.
+fn skip_balanced(chars: &[char], mut i: usize) -> Option<usize> {
+    debug_assert_eq!(chars.get(i), Some(&'('));
+    let mut depth = 0usize;
+    while i < chars.len() {
+        match chars[i] {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i + 1);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Function-region detection (R4 hot-path, R5 fast-tier)
+// ---------------------------------------------------------------------------
+
+/// Line ranges (inclusive) of function bodies whose preceding comments
+/// carry `marker` (e.g. `lint: hot-path`). A marker arms the *next* `fn`
+/// keyword; the region spans that function's brace-balanced body.
+fn marked_fn_regions(lines: &[SourceLine], marker: &str) -> Vec<(usize, usize)> {
+    let (chars, line_of) = flatten(lines);
+    let marked: Vec<bool> = lines.iter().map(|l| l.comment.contains(marker)).collect();
+
+    let mut regions = Vec::new();
+    let mut pending = false;
+    let mut awaiting_brace = false;
+    let mut fn_depth = 0i64;
+    let mut fn_line = 0usize;
+    let mut in_region = false;
+    let mut region_depth = 0i64;
+    let mut depth = 0i64;
+    let mut last_line = usize::MAX;
+
+    let mut i = 0;
+    while i < chars.len() {
+        let li = line_of[i];
+        if li != last_line {
+            last_line = li;
+            if marked[li] && !in_region {
+                pending = true;
+            }
+        }
+        let c = chars[i];
+        if pending
+            && !awaiting_brace
+            && !in_region
+            && c == 'f'
+            && i + 2 <= chars.len()
+            && chars.get(i + 1) == Some(&'n')
+            && (i == 0 || !is_ident_char(chars[i - 1]))
+            && (i + 2 == chars.len() || !is_ident_char(chars[i + 2]))
+        {
+            awaiting_brace = true;
+            fn_depth = depth;
+            fn_line = li;
+            i += 2;
+            continue;
+        }
+        match c {
+            '{' => {
+                depth += 1;
+                if awaiting_brace {
+                    awaiting_brace = false;
+                    pending = false;
+                    in_region = true;
+                    region_depth = depth;
+                }
+            }
+            '}' => {
+                depth -= 1;
+                if in_region && depth < region_depth {
+                    in_region = false;
+                    regions.push((fn_line, li));
+                }
+            }
+            ';' if awaiting_brace && depth == fn_depth => {
+                // Bodyless declaration (trait method): the marker is moot.
+                awaiting_brace = false;
+                pending = false;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    if in_region {
+        regions.push((fn_line, lines.len().saturating_sub(1)));
+    }
+    regions
+}
+
+fn in_regions(regions: &[(usize, usize)], line: usize) -> bool {
+    regions.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// R1 `nan-ord`: `.partial_cmp(..)` immediately `.unwrap()`ed.
+fn rule_nan_ord(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
+    let (chars, line_of) = flatten(lines);
+    for p in word_positions(&chars, "partial_cmp") {
+        let mut j = skip_ws(&chars, p + "partial_cmp".len());
+        if chars.get(j) != Some(&'(') {
+            continue;
+        }
+        let Some(after) = skip_balanced(&chars, j) else { continue };
+        j = skip_ws(&chars, after);
+        if chars.get(j) != Some(&'.') {
+            continue;
+        }
+        j = skip_ws(&chars, j + 1);
+        let unwrap: Vec<char> = "unwrap".chars().collect();
+        if j + unwrap.len() > chars.len() || chars[j..j + unwrap.len()] != unwrap[..] {
+            continue;
+        }
+        let end = j + unwrap.len();
+        // `unwrap_or(..)` on a total-order key is the sanctioned pattern.
+        if end < chars.len() && is_ident_char(chars[end]) {
+            continue;
+        }
+        let line = line_of[p];
+        if lines[line].allows("nan-ord") {
+            continue;
+        }
+        out.push(Finding {
+            file: file.into(),
+            line: line + 1,
+            rule: "nan-ord",
+            message: "`.partial_cmp(..).unwrap()` panics on NaN; sort on a `(is_nan, value)` \
+                      total-order key with `unwrap_or(Equal)` instead"
+                .into(),
+        });
+    }
+}
+
+/// R2 `unsafe-doc`: every `unsafe` token needs a preceding `// SAFETY:`.
+///
+/// "Preceding" walks upward from the `unsafe` line across comment-only,
+/// blank, attribute (`#[…]`), and statement-continuation lines (code
+/// ending in `=`, `(`, or `,` — the `let x: &mut [f64] =\n  unsafe {…}`
+/// idiom); a comment containing `SAFETY:` anywhere on the way (or on the
+/// `unsafe` line itself) documents the site.
+fn rule_unsafe_doc(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
+    let (chars, line_of) = flatten(lines);
+    let mut flagged = BTreeSet::new();
+    for p in word_positions(&chars, "unsafe") {
+        let line = line_of[p];
+        if flagged.contains(&line) {
+            continue;
+        }
+        if lines[line].comment.contains("SAFETY:") || lines[line].allows("unsafe-doc") {
+            continue;
+        }
+        let mut documented = false;
+        let mut i = line;
+        while i > 0 {
+            i -= 1;
+            let l = &lines[i];
+            if l.comment.contains("SAFETY:") {
+                documented = true;
+                break;
+            }
+            let code = l.code.trim();
+            if code.is_empty() || code.starts_with("#[") || code.starts_with("#![") {
+                continue;
+            }
+            if code.ends_with('=') || code.ends_with('(') || code.ends_with(',') {
+                continue;
+            }
+            break;
+        }
+        if !documented {
+            flagged.insert(line);
+            out.push(Finding {
+                file: file.into(),
+                line: line + 1,
+                rule: "unsafe-doc",
+                message: "`unsafe` without a preceding `// SAFETY:` comment stating why the \
+                          invariants hold"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// R3 `env-reg`: `ENGD_*`-shaped string literals must be registered.
+fn rule_env_reg(
+    file: &str,
+    lines: &[SourceLine],
+    registry: &BTreeSet<String>,
+    out: &mut Vec<Finding>,
+) {
+    for (li, l) in lines.iter().enumerate() {
+        for s in &l.strings {
+            if !is_envvar_shaped(s) {
+                continue;
+            }
+            if registry.contains(s) || l.allows("env-reg") {
+                continue;
+            }
+            out.push(Finding {
+                file: file.into(),
+                line: li + 1,
+                rule: "env-reg",
+                message: format!(
+                    "env var `{s}` is not declared in engd::config::envvars::REGISTRY \
+                     (name, default, purpose)"
+                ),
+            });
+        }
+    }
+}
+
+/// Does `s` look like one of our env-var names (`ENGD_` + caps)?
+pub fn is_envvar_shaped(s: &str) -> bool {
+    s.len() > 5
+        && s.starts_with("ENGD_")
+        && s[5..].chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// R4 `alloc`: allocation calls inside `// lint: hot-path` functions.
+fn rule_alloc(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
+    let regions = marked_fn_regions(lines, "lint: hot-path");
+    if regions.is_empty() {
+        return;
+    }
+    const PATTERNS: &[&str] = &["Vec::new", "vec![", ".to_vec()", ".clone()"];
+    for (li, l) in lines.iter().enumerate() {
+        if !in_regions(&regions, li) || l.allows("alloc") {
+            continue;
+        }
+        for pat in PATTERNS {
+            if l.code.contains(pat) {
+                out.push(Finding {
+                    file: file.into(),
+                    line: li + 1,
+                    rule: "alloc",
+                    message: format!(
+                        "`{pat}` in a `// lint: hot-path` function: steady-state steps draw \
+                         from the Workspace pool (or justify with `// lint: allow(alloc)`)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// R5 `bitwise`: contraction/reassociation primitives in `tape.rs` outside
+/// `// lint: fast-tier` functions.
+fn rule_bitwise(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
+    if Path::new(file).file_name().and_then(|s| s.to_str()) != Some("tape.rs") {
+        return;
+    }
+    let fast = marked_fn_regions(lines, "lint: fast-tier");
+    const PATTERNS: &[&str] = &["mul_add", ".sum()", ".sum::<", ".fold("];
+    for (li, l) in lines.iter().enumerate() {
+        if in_regions(&fast, li) || l.allows("bitwise") {
+            continue;
+        }
+        for pat in PATTERNS {
+            if l.code.contains(pat) {
+                out.push(Finding {
+                    file: file.into(),
+                    line: li + 1,
+                    rule: "bitwise",
+                    message: format!(
+                        "`{pat}` outside a `// lint: fast-tier` function: bitwise-tier kernels \
+                         must keep scalar-order FP (no FMA contraction, no reassociated \
+                         reductions)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+/// Path (relative to the lint root) of the env-var registry source; R3
+/// collects its declared names from here and exempts the file itself.
+pub const REGISTRY_FILE: &str = "rust/src/config/envvars.rs";
+
+/// Lint one file's source text. `file` is the root-relative path used in
+/// diagnostics; `registry` is the set of declared env-var names.
+pub fn lint_source(file: &str, src: &str, registry: &BTreeSet<String>) -> Vec<Finding> {
+    let lines = scan(src);
+    let mut out = Vec::new();
+    rule_nan_ord(file, &lines, &mut out);
+    rule_unsafe_doc(file, &lines, &mut out);
+    if file != REGISTRY_FILE {
+        rule_env_reg(file, &lines, registry, &mut out);
+    }
+    rule_alloc(file, &lines, &mut out);
+    rule_bitwise(file, &lines, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// The directories a tree walk covers, relative to the root.
+pub const WALK_DIRS: &[&str] = &["rust/src", "benches", "examples"];
+
+/// Collect every `.rs` file under the walk dirs, sorted for determinism.
+pub fn collect_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                walk(&path, out)?;
+            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                out.push(path);
+            }
+        }
+        Ok(())
+    }
+    let mut files = Vec::new();
+    for d in WALK_DIRS {
+        let dir = root.join(d);
+        if dir.is_dir() {
+            walk(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Read the env-var registry names by scanning [`REGISTRY_FILE`] with the
+/// same string-aware lexer the rules use.
+pub fn registry_names(root: &Path) -> std::io::Result<BTreeSet<String>> {
+    let path = root.join(REGISTRY_FILE);
+    let src = std::fs::read_to_string(&path).map_err(|e| {
+        std::io::Error::new(e.kind(), format!("reading registry {}: {e}", path.display()))
+    })?;
+    let mut names = BTreeSet::new();
+    for line in scan(&src) {
+        for s in line.strings {
+            if is_envvar_shaped(&s) {
+                names.insert(s);
+            }
+        }
+    }
+    Ok(names)
+}
+
+/// Lint the whole tree rooted at `root` (the repo checkout).
+pub fn lint_tree(root: &Path) -> std::io::Result<Report> {
+    let registry = registry_names(root)?;
+    let files = collect_files(root)?;
+    let mut findings = Vec::new();
+    let files_scanned = files.len();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(&path)?;
+        findings.extend(lint_source(&rel, &src, &registry));
+    }
+    Ok(Report { findings, files_scanned, registry })
+}
+
+/// Render the machine-readable JSON report (hand-rolled: zero deps).
+pub fn render_json(report: &Report) -> String {
+    fn esc(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"files_scanned\": {},\n", report.files_scanned));
+    out.push_str(&format!("  \"finding_count\": {},\n", report.findings.len()));
+    out.push_str("  \"findings\": [");
+    for (i, f) in report.findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+            esc(&f.file),
+            f.line,
+            f.rule,
+            esc(&f.message)
+        ));
+    }
+    if !report.findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scanner_separates_comments_strings_and_code() {
+        let src = "let a = \"// not a comment\"; // SAFETY: trailing\nlet b = 'x';\n";
+        let lines = scan(src);
+        assert!(lines[0].code.contains("let a"));
+        assert!(!lines[0].code.contains("not a comment"));
+        assert_eq!(lines[0].strings, vec!["// not a comment".to_string()]);
+        assert!(lines[0].comment.contains("SAFETY: trailing"));
+        assert!(lines[1].code.contains("let b"));
+        assert!(!lines[1].code.contains('x'));
+    }
+
+    #[test]
+    fn scanner_handles_raw_strings_and_nested_block_comments() {
+        let src = "let r = r#\"unsafe \"quoted\" vec![]\"#;\n/* outer /* inner */ still */ code\n";
+        let lines = scan(src);
+        assert_eq!(lines[0].strings, vec!["unsafe \"quoted\" vec![]".to_string()]);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[1].comment.contains("inner"));
+        assert!(lines[1].comment.contains("still"));
+        assert!(lines[1].code.contains("code"));
+    }
+
+    #[test]
+    fn scanner_keeps_lifetimes_in_code() {
+        let lines = scan("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert!(lines[0].code.contains("<'a>"));
+    }
+
+    #[test]
+    fn scanner_handles_escaped_chars_and_strings() {
+        let lines = scan("let c = '\\n'; let s = \"a\\\"b\";\n");
+        assert_eq!(lines[0].strings, vec!["a\\\"b".to_string()]);
+        assert!(lines[0].code.contains("let s"));
+    }
+
+    #[test]
+    fn envvar_shape() {
+        assert!(is_envvar_shaped("ENGD_THREADS"));
+        assert!(is_envvar_shaped("ENGD_SHARD_TIMEOUT_S"));
+        assert!(!is_envvar_shaped("ENGD_"));
+        assert!(!is_envvar_shaped("ENGD_lower"));
+        assert!(!is_envvar_shaped("OTHER_VAR"));
+    }
+
+    #[test]
+    fn marked_regions_track_braces() {
+        let src = "\
+// lint: hot-path
+fn hot(n: usize) -> usize {
+    let f = |x: usize| { x + 1 };
+    f(n)
+}
+
+fn cold() {}
+";
+        let lines = scan(src);
+        let regs = marked_fn_regions(&lines, "lint: hot-path");
+        assert_eq!(regs, vec![(1, 4)]);
+    }
+}

@@ -1,0 +1,83 @@
+//! engd-lint CLI: walk the tree, print findings, emit the JSON report.
+//!
+//! Usage: `engd-lint [--root <dir>] [--json <path>] [--quiet]`
+//!
+//! Exits 0 on a clean tree, 1 when findings exist, 2 on usage/IO errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut json: Option<PathBuf> = None;
+    let mut quiet = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage("--root needs a directory"),
+            },
+            "--json" => match args.next() {
+                Some(v) => json = Some(PathBuf::from(v)),
+                None => return usage("--json needs a path"),
+            },
+            "--quiet" => quiet = true,
+            "--help" | "-h" => {
+                println!("engd-lint [--root <dir>] [--json <path>] [--quiet]");
+                println!("rules: {}", engd_lint::RULES.join(", "));
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+
+    if !root.join("rust/src").is_dir() {
+        eprintln!(
+            "engd-lint: `{}` does not look like the engd checkout (no rust/src); \
+             pass --root <repo>",
+            root.display()
+        );
+        return ExitCode::from(2);
+    }
+
+    let report = match engd_lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("engd-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = json {
+        if let Err(e) = std::fs::write(&path, engd_lint::render_json(&report)) {
+            eprintln!("engd-lint: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    if !quiet {
+        for f in &report.findings {
+            println!("{f}");
+        }
+        println!(
+            "engd-lint: {} finding(s) across {} files ({} registered env vars)",
+            report.findings.len(),
+            report.files_scanned,
+            report.registry.len()
+        );
+    }
+
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("engd-lint: {msg}");
+    eprintln!("usage: engd-lint [--root <dir>] [--json <path>] [--quiet]");
+    ExitCode::from(2)
+}

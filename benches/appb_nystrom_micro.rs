@@ -20,8 +20,7 @@ use engd::optim::DenseKernel;
 use engd::rng::Rng;
 
 fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key)
-        .ok()
+    engd::config::envvars::read(key)
         .and_then(|s| s.parse().ok())
         .unwrap_or(default)
 }

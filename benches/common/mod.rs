@@ -17,8 +17,7 @@ use engd::config::{OptimizerConfig, RunConfig};
 use engd::coordinator::{train, TrainReport};
 
 pub fn budget_seconds(default: f64) -> f64 {
-    std::env::var("ENGD_BENCH_BUDGET")
-        .ok()
+    engd::config::envvars::read("ENGD_BENCH_BUDGET")
         .and_then(|s| s.parse().ok())
         .unwrap_or(default)
 }
@@ -29,7 +28,7 @@ pub fn budget_seconds(default: f64) -> f64 {
 /// every bench runs offline too). `sharded:n` exercises the batch-sharded
 /// composite, bitwise-identical to native.
 pub fn backend() -> anyhow::Result<Box<dyn Evaluator>> {
-    let kind = std::env::var("ENGD_BACKEND").unwrap_or_else(|_| "auto".into());
+    let kind = engd::config::envvars::read("ENGD_BACKEND").unwrap_or_else(|| "auto".into());
     let be = engd::backend::select(&kind, "artifacts")?;
     println!("[bench] backend: {}", be.backend_name());
     Ok(be)

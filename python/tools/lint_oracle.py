@@ -1,25 +1,45 @@
 #!/usr/bin/env python3
 """Toolchain-free mirror of tools/engd-lint (see rust/src of engd-lint).
 
-Mirrors the scanner and the five rules line for line so environments
-without a Rust toolchain can still run the static contracts:
+Mirrors the scanner, the semantic layer (token stream -> item tree ->
+intra-crate call graph), the workspace dataflow pass, and all nine rules
+line for line so environments without a Rust toolchain can still run the
+static contracts:
 
-  R1 nan-ord     .partial_cmp(..).unwrap()
-  R2 unsafe-doc  `unsafe` without a preceding // SAFETY: comment
-  R3 env-reg     ENGD_* literal not in config/envvars.rs REGISTRY
-  R4 alloc       Vec::new / vec![ / .to_vec() / .clone() in hot-path fns
-  R5 bitwise     mul_add / .sum() / .fold( in tape.rs outside fast-tier fns
+  R1 nan-ord        .partial_cmp(..).unwrap()
+  R2 unsafe-doc     `unsafe` without a preceding // SAFETY: comment
+  R3 env-reg        ENGD_* literal not in config/envvars.rs REGISTRY
+  R4 alloc          Vec::new / vec![ / .to_vec() / .clone() in hot-path fns
+  R5 bitwise        mul_add / .sum() / .fold( in tape.rs outside fast-tier fns
+  R6 ws-leak        ws.take* binding never reaches a recycle/move/return sink,
+                    or is live across an early return / `?` exit
+  R7 hot-path-prop  hot-path fn (explicit, or reached only from hot paths)
+                    calls an in-crate callee that allocates
+  R8 det-iter       HashMap / HashSet / RandomState under the bitwise-contract
+                    dirs (rust/src/{backend,linalg,parallel})
+  R9 env-read       raw std::env::var / var_os outside config/envvars.rs
 
-Exits 0 on a clean tree, 1 on findings (printed as file:line [rule] msg).
-Keep in sync with tools/engd-lint/src/lib.rs — this file is the oracle
-the verify skill runs when cargo is unavailable.
+Files whose comments carry `// lint: fixture` are skipped entirely (that is
+how rust/tests/lint.rs holds intentional violations while the walk covers
+rust/tests).
+
+Usage:
+  lint_oracle.py [root]             walk + print findings, exit 1 if any
+  lint_oracle.py [root] --parity R  compare (file, line, rule) triples
+                                    against the Rust tool's --json report R;
+                                    exit 1 on any mismatch
+
+Keep in sync with tools/engd-lint/src/{lib,semantic,dataflow}.rs — this
+file is the oracle the verify skill runs when cargo is unavailable.
 """
 
+import json
 import os
 import sys
 
-WALK_DIRS = ["rust/src", "benches", "examples"]
+WALK_DIRS = ["rust/src", "benches", "examples", "rust/tests"]
 REGISTRY_FILE = "rust/src/config/envvars.rs"
+DET_ITER_DIRS = ["rust/src/backend/", "rust/src/linalg/", "rust/src/parallel/"]
 
 
 class Line:
@@ -151,6 +171,10 @@ def allows(line, rule):
     return ("lint: allow(%s)" % rule) in line.comment
 
 
+def is_fixture(lines):
+    return any("lint: fixture" in l.comment for l in lines)
+
+
 def flatten(lines):
     chars = []
     line_of = []
@@ -259,6 +283,470 @@ def in_regions(regions, line):
     return any(a <= line <= b for a, b in regions)
 
 
+# ---------------------------------------------------------------------------
+# Semantic layer (mirror of semantic.rs)
+# ---------------------------------------------------------------------------
+
+KEYWORDS = {
+    "if", "else", "while", "for", "loop", "match", "return", "break", "continue",
+    "fn", "let", "mut", "ref", "move", "unsafe", "in", "as", "dyn", "impl",
+    "where", "pub", "use", "mod", "struct", "enum", "trait", "type", "const",
+    "static", "crate", "self", "super", "box", "await", "async", "extern",
+    "true", "false",
+}
+
+
+class Token:
+    __slots__ = ("text", "line", "ident")
+
+    def __init__(self, text, line, ident):
+        self.text = text
+        self.line = line
+        self.ident = ident
+
+
+def tokenize(lines):
+    toks = []
+    for li, l in enumerate(lines):
+        chars = l.code
+        i = 0
+        while i < len(chars):
+            c = chars[i]
+            if c.isspace():
+                i += 1
+                continue
+            if c.isalnum() or c == "_":
+                start = i
+                while i < len(chars) and (chars[i].isalnum() or chars[i] == "_"):
+                    i += 1
+                toks.append(Token(chars[start:i], li, True))
+            else:
+                toks.append(Token(c, li, False))
+                i += 1
+    return toks
+
+
+class Call:
+    __slots__ = ("name", "qual", "method", "line")
+
+    def __init__(self, name, qual, method, line):
+        self.name = name
+        self.qual = qual
+        self.method = method
+        self.line = line
+
+
+class FnItem:
+    __slots__ = (
+        "name", "owner", "sig_line", "end_line", "sig_tok", "body",
+        "has_body", "hot_path", "calls",
+    )
+
+    def __init__(self, name, owner, sig_line, sig_tok, hot_path):
+        self.name = name
+        self.owner = owner
+        self.sig_line = sig_line
+        self.end_line = sig_line
+        self.sig_tok = sig_tok
+        self.body = (0, 0)
+        self.has_body = False
+        self.hot_path = hot_path
+        self.calls = []
+
+
+def skip_generics(toks, i):
+    depth = 0
+    while i < len(toks):
+        t = toks[i].text
+        if t == "<":
+            depth += 1
+        elif t == ">" and i > 0 and toks[i - 1].text == "-":
+            pass  # `->` return arrow
+        elif t == ">":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return i
+
+
+def skip_parens(toks, i):
+    depth = 0
+    while i < len(toks):
+        t = toks[i].text
+        if t == "(":
+            depth += 1
+        elif t == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return i
+
+
+def impl_self_type(toks, impl_idx, brace_idx):
+    header = toks[impl_idx + 1 : brace_idx]
+    depth = 0
+    start = 0
+    for k, t in enumerate(header):
+        if t.text == "<":
+            depth += 1
+        elif t.text == ">" and k > 0 and header[k - 1].text == "-":
+            pass
+        elif t.text == ">":
+            depth -= 1
+        elif t.text == "for" and depth == 0:
+            start = k + 1
+    owner = None
+    d = 0
+    for k, t in enumerate(header[start:]):
+        if t.text == "<":
+            d += 1
+        elif t.text == ">" and k > 0 and header[start + k - 1].text == "-":
+            pass
+        elif t.text == ">":
+            d -= 1
+        elif t.text == "where" and d == 0:
+            break
+        elif t.ident and d == 0:
+            owner = t.text
+    return owner
+
+
+def items(lines, hot_lines):
+    toks = tokenize(lines)
+    fns = []
+    scopes = []  # (owner, fn_idx_or_None)
+    cur_owner = None
+    pending = None  # [fn_idx, paren_depth, bracket_depth]
+    i = 0
+    while i < len(toks):
+        t = toks[i]
+        if pending is not None:
+            tx = t.text
+            if tx == "(":
+                pending[1] += 1
+            elif tx == ")":
+                pending[1] -= 1
+            elif tx == "[":
+                pending[2] += 1
+            elif tx == "]":
+                pending[2] -= 1
+            elif tx == "{" and pending[1] == 0 and pending[2] == 0:
+                fn_idx = pending[0]
+                fns[fn_idx].body = (i, fns[fn_idx].body[1])
+                scopes.append((cur_owner, fn_idx))
+                pending = None
+            elif tx == ";" and pending[1] == 0 and pending[2] == 0:
+                pending = None
+            i += 1
+            continue
+        tx = t.text
+        if tx == "impl":
+            j = i + 1
+            depth = 0
+            while j < len(toks):
+                jt = toks[j].text
+                if jt == "<":
+                    depth += 1
+                elif jt == ">" and toks[j - 1].text == "-":
+                    pass
+                elif jt == ">":
+                    depth -= 1
+                elif jt == "{" and depth == 0:
+                    break
+                elif jt == ";" and depth == 0:
+                    break
+                j += 1
+            if j < len(toks) and toks[j].text == "{":
+                owner = impl_self_type(toks, i, j)
+                scopes.append((cur_owner, None))
+                cur_owner = owner
+                i = j + 1
+            else:
+                i += 1
+        elif tx == "fn":
+            name_idx = i + 1
+            if name_idx >= len(toks) or not toks[name_idx].ident:
+                i += 1
+                continue
+            name = toks[name_idx].text
+            j = name_idx + 1
+            if j < len(toks) and toks[j].text == "<":
+                j = skip_generics(toks, j)
+            if j >= len(toks) or toks[j].text != "(":
+                i += 1
+                continue
+            j = skip_parens(toks, j)
+            fn_idx = len(fns)
+            fns.append(FnItem(name, cur_owner, t.line, i, t.line in hot_lines))
+            pending = [fn_idx, 0, 0]
+            i = j
+        elif tx == "{":
+            scopes.append((cur_owner, None))
+            i += 1
+        elif tx == "}":
+            if scopes:
+                owner, fn_idx = scopes.pop()
+                if fn_idx is not None:
+                    fns[fn_idx].body = (fns[fn_idx].body[0], i)
+                    fns[fn_idx].end_line = t.line
+                    fns[fn_idx].has_body = True
+                cur_owner = owner
+            i += 1
+        else:
+            i += 1
+    for f in fns:
+        if f.body[0] > 0 and not f.has_body:
+            f.body = (f.body[0], max(len(toks) - 1, 0))
+            f.end_line = toks[-1].line if toks else f.sig_line
+            f.has_body = True
+
+    spans = [(f.sig_tok, f.body[1] if f.has_body else f.sig_tok) for f in fns]
+    for f in fns:
+        if not f.has_body:
+            continue
+        lo, hi = f.body
+        calls = []
+        k = lo + 1
+        while k < hi:
+            skipped = False
+            for nlo, nhi in spans:
+                if lo < nlo and nhi < hi and nlo == k:
+                    k = nhi + 1
+                    skipped = True
+                    break
+            if skipped:
+                continue
+            t = toks[k]
+            if t.ident and t.text not in KEYWORDS:
+                j = k + 1
+                if (
+                    j + 2 < len(toks)
+                    and toks[j].text == ":"
+                    and toks[j + 1].text == ":"
+                    and toks[j + 2].text == "<"
+                ):
+                    j = skip_generics(toks, j + 2)
+                is_call = j < len(toks) and toks[j].text == "("
+                is_macro = k + 1 < len(toks) and toks[k + 1].text == "!"
+                if is_call and not is_macro:
+                    method = k > 0 and toks[k - 1].text == "."
+                    qual = None
+                    if (
+                        k >= 3
+                        and toks[k - 1].text == ":"
+                        and toks[k - 2].text == ":"
+                        and toks[k - 3].ident
+                    ):
+                        qual = toks[k - 3].text
+                    calls.append(Call(t.text, qual, method, t.line))
+            k += 1
+        f.calls = calls
+    return fns
+
+
+class CrateGraph:
+    def __init__(self):
+        self.fns = []  # (file_idx, FnItem)
+        self.files = []
+
+    def add_file(self, path, fn_items):
+        fi = len(self.files)
+        self.files.append(path)
+        for it in fn_items:
+            self.fns.append((fi, it))
+
+    def resolve(self, caller, call):
+        caller_owner = self.fns[caller][1].owner
+        named = [
+            i
+            for i, (_, f) in enumerate(self.fns)
+            if f.has_body and f.name == call.name
+        ]
+        if call.method:
+            return named
+        q = call.qual
+        if q == "Self":
+            return [i for i in named if self.fns[i][1].owner == caller_owner]
+        if q is not None and q[:1].isupper():
+            return [i for i in named if self.fns[i][1].owner == q]
+        return [i for i in named if self.fns[i][1].owner is None]
+
+    def hot_assumed(self):
+        n = len(self.fns)
+        callers = [[] for _ in range(n)]
+        for f in range(n):
+            for call in self.fns[f][1].calls:
+                for g in self.resolve(f, call):
+                    if g != f and f not in callers[g]:
+                        callers[g].append(f)
+        hot = [f.hot_path for _, f in self.fns]
+        changed = True
+        while changed:
+            changed = False
+            for g in range(n):
+                if not hot[g] and callers[g] and all(hot[c] for c in callers[g]):
+                    hot[g] = True
+                    changed = True
+        return hot
+
+
+# ---------------------------------------------------------------------------
+# Dataflow (mirror of dataflow.rs)
+# ---------------------------------------------------------------------------
+
+TAKE_METHODS = ["take", "take_scratch", "take_matrix", "take_matrix_scratch", "take_scratch_f32"]
+
+
+def is_take_method(name, receiver):
+    if name not in TAKE_METHODS:
+        return False
+    return name != "take" or receiver == "ws"
+
+
+def take_bindings(toks, f):
+    lo, hi = f.body
+    out = []
+    k = lo + 1
+    while k < hi:
+        t = toks[k]
+        if (
+            t.ident
+            and k >= 2
+            and toks[k - 1].text == "."
+            and k + 1 < len(toks)
+            and toks[k + 1].text == "("
+            and is_take_method(t.text, toks[k - 2].text if toks[k - 2].ident else None)
+        ):
+            s = k
+            while s > lo and toks[s - 1].text not in (";", "{", "}"):
+                s -= 1
+            p = s
+            if p < len(toks) and toks[p].text == "let":
+                p += 1
+                if p < len(toks) and toks[p].text == "mut":
+                    p += 1
+                if p < len(toks):
+                    name_tok = toks[p]
+                    nxt = toks[p + 1].text if p + 1 < len(toks) else None
+                    if name_tok.ident and nxt in (":", "="):
+                        e = k
+                        depth = 0
+                        while e < hi:
+                            te = toks[e].text
+                            if te in ("(", "["):
+                                depth += 1
+                            elif te in (")", "]"):
+                                depth -= 1
+                            elif te == ";" and depth <= 0:
+                                break
+                            e += 1
+                        out.append((name_tok.text, t.line, e + 1))
+        k += 1
+    return out
+
+
+SINK, RENAME, USE = 0, 1, 2
+
+
+def classify(toks, k):
+    prev = toks[k - 1].text if k > 0 else ""
+    nxt = toks[k + 1].text if k + 1 < len(toks) else ""
+    if prev == "." or prev == "&" or nxt == "[":
+        return USE, None
+    if prev == "mut" and k >= 2 and toks[k - 2].text == "&":
+        return USE, None
+    if nxt == ".":
+        if k + 2 < len(toks) and toks[k + 2].text.startswith("into"):
+            return SINK, None
+        return USE, None
+    whole_value = prev in ("(", ",", "=", ":", "{") or nxt in (")", ",", ";", "}")
+    if not whole_value:
+        return USE, None
+    if prev == "=" and nxt == ";" and k >= 3:
+        p = k - 2
+        if toks[p].ident:
+            new_name = toks[p].text
+            if p >= 1 and toks[p - 1].text == "mut":
+                p -= 1
+            if p >= 1 and toks[p - 1].text == "let":
+                return RENAME, new_name
+    return SINK, None
+
+
+def ws_leak(path, lines, toks, f, nested, out):
+    _, hi = f.body
+    for bname, bline, scan_from in take_bindings(toks, f):
+        if allows(lines[bline], "ws-leak"):
+            continue
+        name = bname
+        k = scan_from
+        leaked = False
+        sunk = False
+        while k < hi:
+            skipped = False
+            for nlo, nhi in nested:
+                if nlo == k:
+                    k = nhi + 1
+                    skipped = True
+                    break
+            if skipped:
+                continue
+            t = toks[k]
+            if t.text == "?":
+                if not allows(lines[t.line], "ws-leak"):
+                    out.append(
+                        (path, t.line + 1, "ws-leak",
+                         "`?` exit drops pooled buffer `%s` (taken line %d)" % (name, bline + 1))
+                    )
+                leaked = True
+                break
+            if t.ident and t.text == "return":
+                e = k + 1
+                depth = 0
+                returned = False
+                while e < hi:
+                    te = toks[e].text
+                    if te in ("(", "["):
+                        depth += 1
+                    elif te in (")", "]"):
+                        depth -= 1
+                    elif te == ";" and depth <= 0:
+                        break
+                    if toks[e].ident and te == name:
+                        returned = True
+                    e += 1
+                if returned:
+                    sunk = True
+                    break
+                if not allows(lines[t.line], "ws-leak"):
+                    out.append(
+                        (path, t.line + 1, "ws-leak",
+                         "early `return` drops pooled buffer `%s` (taken line %d)" % (name, bline + 1))
+                    )
+                leaked = True
+                break
+            if t.ident and t.text == name:
+                ev, new_name = classify(toks, k)
+                if ev == SINK:
+                    sunk = True
+                    break
+                if ev == RENAME:
+                    name = new_name
+            k += 1
+        if not leaked and not sunk:
+            out.append(
+                (path, bline + 1, "ws-leak",
+                 "pooled buffer `%s` never reaches a recycle/return sink" % name)
+            )
+
+
+# ---------------------------------------------------------------------------
+# Per-file rules
+# ---------------------------------------------------------------------------
+
+
 def rule_nan_ord(path, lines, out):
     chars, line_of = flatten(lines)
     for p in word_positions(chars, "partial_cmp"):
@@ -353,20 +841,164 @@ def rule_bitwise(path, lines, out):
                 out.append((path, li + 1, "bitwise", "`%s` outside fast-tier fn" % pat))
 
 
-def lint_source(path, src, registry):
-    lines = scan(src)
+def rule_det_iter(path, lines, out):
+    if not any(path.startswith(d) for d in DET_ITER_DIRS):
+        return
+    chars, line_of = flatten(lines)
+    for pat in ["HashMap", "HashSet", "RandomState"]:
+        for p in word_positions(chars, pat):
+            li = line_of[p]
+            if allows(lines[li], "det-iter"):
+                continue
+            out.append(
+                (path, li + 1, "det-iter",
+                 "`%s` in a bitwise-contract directory (nondeterministic iteration order)" % pat)
+            )
+
+
+def rule_env_read(path, lines, out):
+    chars, line_of = flatten(lines)
+    needle = list("env::var")
+    for i in range(len(chars) - len(needle) + 1):
+        if chars[i : i + len(needle)] != needle:
+            continue
+        if i > 0 and is_ident(chars[i - 1]):
+            continue
+        end = i + len(needle)
+        tail = "".join(chars[end : min(len(chars), end + 4)])
+        if tail.startswith("_os("):
+            pass
+        elif not tail.startswith("("):
+            continue
+        li = line_of[i]
+        if allows(lines[li], "env-read"):
+            continue
+        out.append(
+            (path, li + 1, "env-read",
+             "raw std::env::var outside config/envvars.rs (use envvars::read/read_os)")
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parsed-file cache + interprocedural rules (R6, R7)
+# ---------------------------------------------------------------------------
+
+
+class Parsed:
+    __slots__ = ("path", "lines", "toks", "fns", "fixture")
+
+    def __init__(self, path, src):
+        self.path = path
+        self.lines = scan(src)
+        self.fixture = is_fixture(self.lines)
+        hot_lines = {a for a, _ in marked_fn_regions(self.lines, "lint: hot-path")}
+        self.toks = tokenize(self.lines)
+        self.fns = items(self.lines, hot_lines)
+
+
+def nested_spans(p, f):
+    return [
+        (g.sig_tok, g.body[1] if g.has_body else g.sig_tok)
+        for g in p.fns
+        if f.body[0] < g.sig_tok and (g.body[1] if g.has_body else g.sig_tok) < f.body[1]
+    ]
+
+
+def rule_ws_leak(p, out):
+    for f in p.fns:
+        if f.has_body:
+            ws_leak(p.path, p.lines, p.toks, f, nested_spans(p, f), out)
+
+
+ALLOC_PATS = ["Vec::new", "vec![", ".to_vec()", ".clone()"]
+
+
+def first_alloc(p, f):
+    for li in range(f.sig_line, min(f.end_line, len(p.lines) - 1) + 1):
+        l = p.lines[li]
+        if allows(l, "alloc"):
+            continue
+        for pat in ALLOC_PATS:
+            if pat in l.code:
+                return (li, pat)
+    return None
+
+
+def rule_hot_path_prop(graph, parsed, out):
+    hot = graph.hot_assumed()
+    allocs = [
+        first_alloc(parsed[fi], f) if f.has_body else None for fi, f in graph.fns
+    ]
+    for ci, (caller_file, caller) in enumerate(graph.fns):
+        if not hot[ci]:
+            continue
+        pf = parsed[caller_file]
+        seen = set()
+        for call in caller.calls:
+            if allows(pf.lines[call.line], "hot-path-prop"):
+                continue
+            for gi in graph.resolve(ci, call):
+                if gi == ci:
+                    continue
+                callee_file, callee = graph.fns[gi]
+                if callee.hot_path:
+                    continue
+                if allocs[gi] is not None:
+                    key = (call.line, call.name)
+                    if key not in seen:
+                        seen.add(key)
+                        aline, pat = allocs[gi]
+                        out.append(
+                            (pf.path, call.line + 1, "hot-path-prop",
+                             "hot-path caller `%s` invokes `%s` (%s:%d) which allocates (`%s` line %d)"
+                             % (caller.name, callee.name, graph.files[callee_file],
+                                callee.sig_line + 1, pat, aline + 1))
+                        )
+                    break
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def lint_file_rules(p, registry, out):
+    rule_nan_ord(p.path, p.lines, out)
+    rule_unsafe_doc(p.path, p.lines, out)
+    if p.path != REGISTRY_FILE:
+        rule_env_reg(p.path, p.lines, registry, out)
+        rule_env_read(p.path, p.lines, out)
+    rule_alloc(p.path, p.lines, out)
+    rule_bitwise(p.path, p.lines, out)
+    rule_ws_leak(p, out)
+    rule_det_iter(p.path, p.lines, out)
+
+
+def lint_crate(files, registry):
+    parsed = [Parsed(path, src) for path, src in files]
+    parsed = [p for p in parsed if not p.fixture]
     out = []
-    rule_nan_ord(path, lines, out)
-    rule_unsafe_doc(path, lines, out)
-    if path != REGISTRY_FILE:
-        rule_env_reg(path, lines, registry, out)
-    rule_alloc(path, lines, out)
-    rule_bitwise(path, lines, out)
+    graph = CrateGraph()
+    for p in parsed:
+        lint_file_rules(p, registry, out)
+        graph.add_file(p.path, p.fns)
+    rule_hot_path_prop(graph, parsed, out)
+    out.sort(key=lambda f: (f[0], f[1], f[2]))
     return out
 
 
+def lint_source(path, src, registry):
+    return lint_crate([(path, src)], registry)
+
+
 def main():
-    root = sys.argv[1] if len(sys.argv) > 1 else os.path.join(os.path.dirname(__file__), "..", "..")
+    args = sys.argv[1:]
+    parity = None
+    if "--parity" in args:
+        k = args.index("--parity")
+        parity = args[k + 1]
+        args = args[:k] + args[k + 2 :]
+    root = args[0] if args else os.path.join(os.path.dirname(__file__), "..", "..")
     root = os.path.abspath(root)
     registry = set()
     with open(os.path.join(root, REGISTRY_FILE), encoding="utf-8") as f:
@@ -381,18 +1013,35 @@ def main():
                 if fn.endswith(".rs"):
                     files.append(os.path.join(dirpath, fn))
     files.sort()
-    findings = []
+    sources = []
     for path in files:
         with open(path, encoding="utf-8") as f:
             src = f.read()
         rel = os.path.relpath(path, root).replace(os.sep, "/")
-        findings.extend(lint_source(rel, src, registry))
+        sources.append((rel, src))
+    findings = lint_crate(sources, registry)
     for path, line, rule, msg in findings:
         print("%s:%d: [%s] %s" % (path, line, rule, msg))
     print(
         "lint_oracle: %d finding(s) across %d files (%d registered env vars)"
         % (len(findings), len(files), len(registry))
     )
+    if parity is not None:
+        with open(parity, encoding="utf-8") as f:
+            report = json.load(f)
+        rust = sorted((f["file"], f["line"], f["rule"]) for f in report["findings"])
+        mine = sorted((p, l, r) for p, l, r, _ in findings)
+        if rust != mine:
+            only_rust = [t for t in rust if t not in mine]
+            only_mine = [t for t in mine if t not in rust]
+            for t in only_rust:
+                print("parity: rust-only %s:%d [%s]" % t)
+            for t in only_mine:
+                print("parity: oracle-only %s:%d [%s]" % t)
+            print("lint_oracle: PARITY MISMATCH (%d rust / %d oracle)" % (len(rust), len(mine)))
+            return 1
+        print("lint_oracle: parity OK (%d findings match the Rust report)" % len(rust))
+        return 0
     return 1 if findings else 0
 
 

@@ -337,7 +337,7 @@ impl Ctx {
             "heat operator needs at least one spatial + one time coordinate"
         );
         Ok(Ctx {
-            arch: p.arch.clone(),
+            arch: p.arch.clone(), // lint: allow(alloc) — tiny once-per-dispatch setup copy
             dim: p.dim,
             operator: p.operator,
             orders: p.operator.dual_orders(p.dim),
@@ -758,7 +758,7 @@ impl Evaluator for NativeBackend {
         }
         // Fixed chunk-order reduction — the exact f64 sequence of the
         // previous per-chunk-Vec implementation.
-        let mut grad = vec![0.0; np];
+        let mut grad = vec![0.0; np]; // lint: allow(alloc) — returned gradient, owned by caller
         let mut loss = 0.0;
         for k in 0..workers {
             loss += loss_parts[k];
@@ -789,7 +789,7 @@ impl Evaluator for NativeBackend {
         // Zero-filled pooled storage: the reverse pass accumulates (+=)
         // into its row.
         let mut j = ws.take_matrix(n, np);
-        let mut r = vec![0.0; n];
+        let mut r = vec![0.0; n]; // lint: allow(alloc) — returned residual, owned by caller
         {
             let jptr = SendPtr(j.data_mut().as_mut_ptr());
             let rptr = SendPtr(r.as_mut_ptr());

@@ -93,15 +93,15 @@ impl NumericsMode {
     /// Mode requested by `ENGD_NUMERICS` (default `bitwise`; an invalid
     /// value warns and falls back rather than aborting a run).
     pub fn from_env() -> Self {
-        match std::env::var("ENGD_NUMERICS") {
-            Ok(s) => match Self::parse(&s) {
+        match crate::config::envvars::read("ENGD_NUMERICS") {
+            Some(s) => match Self::parse(&s) {
                 Ok(m) => m,
                 Err(e) => {
                     eprintln!("[engd] {e}; ignoring ENGD_NUMERICS");
                     NumericsMode::Bitwise
                 }
             },
-            Err(_) => NumericsMode::Bitwise,
+            None => NumericsMode::Bitwise,
         }
     }
 }
@@ -194,7 +194,7 @@ impl SimdTier {
     pub fn detect() -> SimdTier {
         static TIER: OnceLock<SimdTier> = OnceLock::new();
         *TIER.get_or_init(|| {
-            if let Ok(s) = std::env::var("ENGD_SIMD") {
+            if let Some(s) = crate::config::envvars::read("ENGD_SIMD") {
                 match SimdTier::parse(&s) {
                     Ok(t) if t.supported() => return t,
                     Ok(t) => eprintln!(

@@ -84,8 +84,7 @@ pub struct ProcessOptions {
 
 impl Default for ProcessOptions {
     fn default() -> Self {
-        let deadline = std::env::var("ENGD_SHARD_TIMEOUT_S")
-            .ok()
+        let deadline = crate::config::envvars::read("ENGD_SHARD_TIMEOUT_S")
             .and_then(|s| s.parse::<f64>().ok())
             .filter(|s| *s > 0.0)
             .unwrap_or(30.0);
@@ -241,7 +240,7 @@ impl ProcessEvaluator {
 
     /// Spawn one worker process and complete the `MAGIC`/`Hello` handshake.
     fn spawn_worker(&self, idx: usize) -> Result<WorkerProc> {
-        let exe = match std::env::var_os("ENGD_WORKER_EXE") {
+        let exe = match crate::config::envvars::read_os("ENGD_WORKER_EXE") {
             Some(p) => PathBuf::from(p),
             None => std::env::current_exe().context("resolving the worker executable")?,
         };
@@ -663,7 +662,7 @@ impl Evaluator for ProcessEvaluator {
             )
         };
         // Fixed chunk order — byte-for-byte the unsharded reduction.
-        let mut grad = vec![0.0; np];
+        let mut grad = vec![0.0; np]; // lint: allow(alloc) — returned gradient, owned by caller
         let mut loss = 0.0;
         if dispatched.is_ok() {
             for k in 0..chunks {
@@ -693,8 +692,8 @@ impl Evaluator for ProcessEvaluator {
         let n = p.n_total();
         let np = p.n_params;
         let mut j = ws.take_matrix(n, np);
-        let mut r = vec![0.0; n];
-        {
+        let mut r = vec![0.0; n]; // lint: allow(alloc) — returned residual, owned by caller
+        let dispatched = {
             let jptr = SendPtr(j.data_mut().as_mut_ptr());
             let rptr = SendPtr(r.as_mut_ptr());
             self.dispatch(EvalKind::Rows, p, theta, x_int, x_bnd, n, &|row0, row1, vals| {
@@ -710,7 +709,14 @@ impl Evaluator for ProcessEvaluator {
                         .copy_from_slice(jv);
                 }
                 Ok(())
-            })?;
+            })
+        };
+        if let Err(e) = dispatched {
+            // A failed dispatch must not strand the pooled Jacobian: the
+            // evaluator (and its caller's Workspace) outlive this error
+            // (engd-lint R6).
+            ws.recycle_matrix(j);
+            return Err(e);
         }
         Ok((r, j))
     }

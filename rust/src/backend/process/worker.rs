@@ -30,7 +30,7 @@ pub(crate) const FAULT_EXIT_CODE: i32 = 86;
 /// range request `n` (0-based) arrives. The supervisor arms this only on
 /// one worker's first incarnation, so the respawn serves normally.
 fn fault_after() -> Option<u64> {
-    let v = std::env::var("ENGD_SHARD_FAULT").ok()?;
+    let v = crate::config::envvars::read("ENGD_SHARD_FAULT")?;
     v.strip_prefix("after=")?.parse().ok()
 }
 

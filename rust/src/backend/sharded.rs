@@ -80,8 +80,8 @@ impl Schedule {
     /// Policy requested by `ENGD_SHARD_SCHEDULE` (`static` | `steal`),
     /// defaulting to work stealing.
     pub fn from_env() -> Self {
-        match std::env::var("ENGD_SHARD_SCHEDULE").as_deref() {
-            Ok("static") => Schedule::Static,
+        match crate::config::envvars::read("ENGD_SHARD_SCHEDULE").as_deref() {
+            Some("static") => Schedule::Static,
             _ => Schedule::WorkSteal,
         }
     }
@@ -492,7 +492,7 @@ impl Evaluator for ShardedEvaluator {
         };
         // Fixed chunk order over the flat blocks — byte-for-byte the
         // unsharded backend's reduction sequence.
-        let mut grad = vec![0.0; np];
+        let mut grad = vec![0.0; np]; // lint: allow(alloc) — returned gradient, owned by caller
         let mut loss = 0.0;
         if dispatched.is_ok() {
             for k in 0..chunks {
@@ -525,8 +525,8 @@ impl Evaluator for ShardedEvaluator {
         // and residual slices straight in the pooled storage, whichever
         // shard served them.
         let mut j = ws.take_matrix(n, np);
-        let mut r = vec![0.0; n];
-        {
+        let mut r = vec![0.0; n]; // lint: allow(alloc) — returned residual, owned by caller
+        let dispatched = {
             let jptr = SendPtr(j.data_mut().as_mut_ptr());
             let rptr = SendPtr(r.as_mut_ptr());
             self.for_shards(n, |s, row0, row1| {
@@ -542,7 +542,14 @@ impl Evaluator for ShardedEvaluator {
                     )
                 };
                 self.inner[s].shard_rows_into(p, theta, x_int, x_bnd, row0, row1, r_out, j_out)
-            })?;
+            })
+        };
+        if let Err(e) = dispatched {
+            // A failed shard sweep must not strand the pooled Jacobian: the
+            // evaluator (and its caller's Workspace) outlive this error
+            // (engd-lint R6).
+            ws.recycle_matrix(j);
+            return Err(e);
         }
         Ok((r, j))
     }

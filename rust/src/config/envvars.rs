@@ -107,6 +107,30 @@ pub fn lookup(name: &str) -> Option<&'static EnvVar> {
         .map(|i| &REGISTRY[i])
 }
 
+/// Read a registered variable from the process environment.
+///
+/// The single sanctioned read path: engd-lint rule R9 (`env-read`) bans
+/// raw `std::env::var` outside this file, so every lookup passes through
+/// the registry assert below — an undeclared read fails loudly at the
+/// call site instead of shipping as an undocumented knob. Returns `None`
+/// when the variable is unset (or not valid Unicode).
+pub fn read(name: &str) -> Option<String> {
+    assert!(
+        lookup(name).is_some(),
+        "env var `{name}` is not declared in config::envvars::REGISTRY"
+    );
+    std::env::var(name).ok()
+}
+
+/// [`read`] for values that may not be Unicode (executable paths).
+pub fn read_os(name: &str) -> Option<std::ffi::OsString> {
+    assert!(
+        lookup(name).is_some(),
+        "env var `{name}` is not declared in config::envvars::REGISTRY"
+    );
+    std::env::var_os(name)
+}
+
 /// Render the registry as the README's GitHub-flavored markdown table.
 pub fn render_markdown_table() -> String {
     let mut out = String::new();
@@ -143,6 +167,15 @@ mod tests {
         // literal in this file as "registered", so a shaped miss here would
         // silently widen the registry.
         assert!(lookup("ENGD_not_a_var").is_none());
+    }
+
+    #[test]
+    fn read_accepts_registered_names_only() {
+        // Registered names read without panicking whether set or not.
+        let _ = read("ENGD_APPB_ITERS");
+        let _ = read_os("ENGD_WORKER_EXE");
+        let err = std::panic::catch_unwind(|| read("ENGD_not_a_var"));
+        assert!(err.is_err(), "undeclared reads must panic");
     }
 
     #[test]

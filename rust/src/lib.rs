@@ -105,17 +105,34 @@
 //!
 //! * `// lint: hot-path` — arms the next `fn`: its body may not call
 //!   `Vec::new` / `vec![..]` / `.to_vec()` / `.clone()` (rule `alloc`);
-//!   steady-state steps draw from [`linalg::Workspace`] instead.
+//!   steady-state steps draw from [`linalg::Workspace`] instead. The
+//!   contract is interprocedural: a hot-path `fn` also may not call an
+//!   in-crate callee that allocates (rule `hot-path-prop`), and functions
+//!   reached only from hot paths inherit the contract automatically.
 //! * `// lint: fast-tier` — in `tape.rs`, marks the next `fn` as a
 //!   fast-tier kernel where FMA contraction and reassociated reductions
 //!   are allowed (rule `bitwise` forbids them elsewhere in the file).
 //! * `// lint: allow(<rule>)` — suppresses one rule on its line; used
 //!   sparingly and with a trailing justification (e.g. a lazy first-step
 //!   buffer init inside a hot-path `fn`).
+//! * a file-level `fixture` pragma (the `// lint:` prefix followed by
+//!   the word `fixture`) — anywhere in a file's comments, opts the whole
+//!   file out of every rule (how `rust/tests/lint.rs`, whose fixture
+//!   strings are deliberate violations, lives inside the walked tree).
+//!
+//! Two dataflow-backed contracts need no marker at all: every `let`-bound
+//! `ws.take*` checkout must reach a `recycle*`/move/return sink on every
+//! path — an early `return` or `?` while the buffer is live is a leak
+//! (rule `ws-leak`) — and `backend/`, `linalg/`, and `parallel/` may not
+//! use `HashMap`/`HashSet`/`RandomState`, whose iteration order breaks
+//! shard==native bitwise identity (rule `det-iter`).
 //!
 //! Every `ENGD_*` environment variable read anywhere in the tree must be
-//! declared in [`config::envvars::REGISTRY`] (rule `env-reg`), which also
-//! renders the README's env-var table.
+//! declared in [`config::envvars::REGISTRY`] (rule `env-reg`), and read
+//! through [`config::envvars::read`]/[`config::envvars::read_os`], the
+//! registry-checked lookup helpers (rule `env-read`) — so the README's
+//! env-var table, rendered from the registry, is complete by
+//! construction.
 //!
 //! Quickstart (after `make artifacts`):
 //! ```bash

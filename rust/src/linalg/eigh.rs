@@ -277,6 +277,7 @@ mod tests {
         let fresh = ws.stats().fresh_allocs;
         eigh_into(&a, &mut evals, &mut evecs, &mut ws);
         assert_eq!(ws.stats().fresh_allocs, fresh, "second eigh allocated");
+        ws.recycle_matrix(evecs);
     }
 
     #[test]

@@ -178,6 +178,7 @@ mod tests {
         thin_qr_into(&a, &mut q, &mut ws);
         assert_eq!(ws.stats().fresh_allocs, fresh, "second QR allocated");
         assert_eq!(q.max_abs_diff(&reference), 0.0);
+        ws.recycle_matrix(q);
     }
 
     #[test]

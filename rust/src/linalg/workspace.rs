@@ -243,6 +243,7 @@ mod tests {
         );
         assert_eq!(b.len(), 128);
         assert!(b.iter().all(|&x| x == 0.0));
+        ws.recycle(b);
     }
 
     #[test]
@@ -256,6 +257,7 @@ mod tests {
         assert!(c.capacity() < 1000);
         assert_eq!(ws.pooled_buffers(), 1);
         assert_eq!(ws.pooled_capacity(), 1000);
+        ws.recycle(c);
     }
 
     #[test]
@@ -267,6 +269,7 @@ mod tests {
         assert_eq!(b.len(), 64);
         let s = ws.stats();
         assert_eq!((s.fresh_allocs, s.grown), (1, 1));
+        ws.recycle(b);
     }
 
     #[test]
@@ -278,6 +281,7 @@ mod tests {
         let m2 = ws.take_matrix(7, 6);
         assert_eq!(ws.stats().reuses, 1);
         assert!(m2.data().iter().all(|&x| x == 0.0));
+        ws.recycle_matrix(m2);
     }
 
     #[test]
@@ -305,6 +309,7 @@ mod tests {
         ws.recycle(a);
         let b = ws.take(32);
         assert!(b.iter().all(|&x| x == 0.0));
+        ws.recycle(b);
     }
 
     #[test]
@@ -323,5 +328,6 @@ mod tests {
         let c = ws.take_scratch(8);
         assert_eq!(c.len(), 8);
         assert!(c.iter().all(|&x| x == 7.0));
+        ws.recycle(c);
     }
 }

@@ -97,7 +97,18 @@ impl Optimizer for EngdDense {
         let mut damped = env.ws.take_matrix_scratch(p, p);
         damped.data_mut().copy_from_slice(gram.data());
         damped.add_diag_in_place(self.cfg.damping);
-        let ch = Cholesky::factor_from(damped)?;
+        let ch = match Cholesky::factor_from(damped) {
+            Ok(ch) => ch,
+            Err(e) => {
+                // A non-SPD Gramian aborts the step: keep the EMA state and
+                // return every live checkout to the pool (engd-lint R6).
+                self.gramian = Some(gram);
+                drop(op);
+                env.ws.recycle_matrix(j);
+                env.ws.recycle(grad);
+                return Err(e);
+            }
+        };
         let mut phi = env.ws.take_scratch(p);
         ch.solve_into(&grad, &mut phi);
         env.ws.recycle_matrix(ch.into_factor());
@@ -106,7 +117,15 @@ impl Optimizer for EngdDense {
         env.ws.recycle_matrix(j);
 
         let eta = if self.cfg.line_search {
-            let ls = grid_line_search(env, theta, &phi, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)?;
+            let ls = match grid_line_search(env, theta, &phi, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)
+            {
+                Ok(ls) => ls,
+                Err(e) => {
+                    env.ws.recycle(phi);
+                    env.ws.recycle(grad);
+                    return Err(e);
+                }
+            };
             ls.eta
         } else {
             self.cfg.lr

@@ -76,14 +76,29 @@ impl EngdW {
         let loss = 0.5 * crate::linalg::dot(&r, &r);
         let op = JacobianKernel::with_numerics(&j, env.numerics);
         let (a, mut extra) =
-            kernel_solve(&op, &r, &self.cfg, env.rng, env.ws, env.diagnostics)?;
+            match kernel_solve(&op, &r, &self.cfg, env.rng, env.ws, env.diagnostics) {
+                Ok(out) => out,
+                Err(e) => {
+                    // Error paths recycle live checkouts (engd-lint R6).
+                    drop(op);
+                    env.ws.recycle_matrix(j);
+                    return Err(e);
+                }
+            };
         let mut phi = env.ws.take_scratch(theta.len());
         op.apply_t_into(&a, &mut phi);
         env.ws.recycle(a);
         drop(op);
         env.ws.recycle_matrix(j);
         let eta = if self.cfg.line_search {
-            let ls = grid_line_search(env, theta, &phi, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)?;
+            let ls = match grid_line_search(env, theta, &phi, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)
+            {
+                Ok(ls) => ls,
+                Err(e) => {
+                    env.ws.recycle(phi);
+                    return Err(e);
+                }
+            };
             extra.push(("ls_evals".into(), ls.evals as f64));
             ls.eta
         } else {

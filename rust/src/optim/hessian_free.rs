@@ -83,7 +83,18 @@ impl Optimizer for HessianFree {
         let phi = out.x;
 
         let eta = if self.cfg.line_search {
-            grid_line_search(env, theta, &phi, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)?.eta
+            match grid_line_search(env, theta, &phi, loss, self.cfg.ls_eta_max, self.cfg.ls_grid) {
+                Ok(ls) => ls.eta,
+                Err(e) => {
+                    // Error paths recycle live checkouts (engd-lint R6).
+                    drop(op);
+                    env.ws.recycle_matrix(j);
+                    env.ws.recycle(phi);
+                    env.ws.recycle(jv);
+                    env.ws.recycle(grad);
+                    return Err(e);
+                }
+            }
         } else {
             self.cfg.lr
         };
@@ -96,7 +107,19 @@ impl Optimizer for HessianFree {
         if self.adapt {
             // LM ratio ρ = (actual reduction)/(predicted reduction), with the
             // quadratic model m(φ) = L − η gᵀφ + ½η² φᵀ(G+λI)φ.
-            let new_loss = env.eval_loss(&trial)?;
+            let new_loss = match env.eval_loss(&trial) {
+                Ok(v) => v,
+                Err(e) => {
+                    // Error paths recycle live checkouts (engd-lint R6).
+                    drop(op);
+                    env.ws.recycle_matrix(j);
+                    env.ws.recycle(phi);
+                    env.ws.recycle(trial);
+                    env.ws.recycle(jv);
+                    env.ws.recycle(grad);
+                    return Err(e);
+                }
+            };
             let g_phi = crate::linalg::dot(&grad, &phi);
             op.apply_j_into(&phi, &mut jv);
             let quad = crate::linalg::dot(&jv, &jv) + lambda * crate::linalg::dot(&phi, &phi);

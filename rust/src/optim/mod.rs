@@ -189,7 +189,7 @@ pub fn kernel_solve(
 ) -> Result<(Vec<f64>, Vec<(String, f64)>)> {
     use crate::config::run::SolveMode;
     let n = op.size();
-    let mut extra = Vec::new();
+    let mut extra = Vec::new(); // lint: allow(alloc) — returned reporting tags
     let a = match o.solve {
         SolveMode::Exact => {
             let mut k = op.gram(ws);

@@ -66,7 +66,22 @@ impl Spring {
             *s = p * bias;
         }
         let eta = if self.cfg.line_search {
-            let ls = grid_line_search(env, theta, &step_dir, loss, self.cfg.ls_eta_max, self.cfg.ls_grid)?;
+            let ls = match grid_line_search(
+                env,
+                theta,
+                &step_dir,
+                loss,
+                self.cfg.ls_eta_max,
+                self.cfg.ls_grid,
+            ) {
+                Ok(ls) => ls,
+                Err(e) => {
+                    // Error paths recycle live checkouts (engd-lint R6).
+                    env.ws.recycle(step_dir);
+                    env.ws.recycle(phi_raw);
+                    return Err(e);
+                }
+            };
             extra.push(("ls_evals".into(), ls.evals as f64));
             ls.eta
         } else {
@@ -159,7 +174,17 @@ impl Spring {
             *z = ri - mu * *z;
         }
         // a = (K̂+λI)⁻¹ ζ  (line 7, Woodbury form; K̂ exact or Nyström)
-        let (a, extra) = kernel_solve(&op, &zeta, &self.cfg, env.rng, env.ws, env.diagnostics)?;
+        let (a, extra) =
+            match kernel_solve(&op, &zeta, &self.cfg, env.rng, env.ws, env.diagnostics) {
+                Ok(out) => out,
+                Err(e) => {
+                    // Error paths recycle live checkouts (engd-lint R6).
+                    env.ws.recycle(zeta);
+                    drop(op);
+                    env.ws.recycle_matrix(j);
+                    return Err(e);
+                }
+            };
         env.ws.recycle(zeta);
         // φ_raw = μ φ_{k−1} + Jᵀ a, accumulated over the Jᵀa buffer.
         let mut phi_raw = env.ws.take_scratch(self.phi.len());

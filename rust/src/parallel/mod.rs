@@ -65,7 +65,7 @@
 
 use std::any::{Any, TypeId};
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
@@ -75,7 +75,7 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 pub fn num_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
-        if let Ok(s) = std::env::var("ENGD_THREADS") {
+        if let Some(s) = crate::config::envvars::read("ENGD_THREADS") {
             if let Ok(n) = s.parse::<usize>() {
                 return n.clamp(1, 64);
             }
@@ -395,8 +395,11 @@ where
 
 thread_local! {
     /// Per-thread scratch slots, one per type (see [`with_scratch`]).
-    static SCRATCH: RefCell<HashMap<TypeId, Box<dyn Any>>> =
-        RefCell::new(HashMap::new());
+    // BTreeMap, not HashMap: the bitwise-contract dirs ban nondeterministic
+    // iteration orders outright (engd-lint R8) — lookup-only here, but the
+    // ordered map keeps the invariant uniform.
+    static SCRATCH: RefCell<BTreeMap<TypeId, Box<dyn Any>>> =
+        RefCell::new(BTreeMap::new());
 }
 
 /// Borrow this thread's persistent scratch slot of type `T`, creating it

@@ -85,8 +85,7 @@ where
 {
     // Base seed is stable so failures are reproducible; override with
     // ENGD_PROP_SEED to explore a different region.
-    let base: u64 = std::env::var("ENGD_PROP_SEED")
-        .ok()
+    let base: u64 = crate::config::envvars::read("ENGD_PROP_SEED")
         .and_then(|s| s.parse().ok())
         .unwrap_or(0x5EED);
     for case in 0..cases {

@@ -47,7 +47,7 @@ impl Runtime {
 
     /// Get (compiling if needed) the executable for `problem/artifact`.
     pub fn artifact(&self, problem: &str, name: &str) -> Result<std::rc::Rc<Artifact>> {
-        let spec = self.manifest.artifact(problem, name)?.clone();
+        let spec = self.manifest.artifact(problem, name)?.clone(); // lint: allow(alloc) — small spec copy
         self.compile_spec(&spec)
     }
 

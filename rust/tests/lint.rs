@@ -4,9 +4,16 @@
 //! `file:line` + rule id, a negative that must stay clean, and pragma
 //! suppression); the self-check runs the real tree walk over this checkout
 //! and demands zero findings — `cargo test -q` fails the moment a
-//! contract-violating line lands anywhere under `rust/src`, `benches`, or
-//! `examples`. A Python mirror of the same walk lives at
+//! contract-violating line lands anywhere under `rust/src`, `benches`,
+//! `examples`, or `rust/tests`. A Python mirror of the same walk lives at
 //! `python/tools/lint_oracle.py` for toolchain-free environments.
+//!
+//! This file itself is in the walk (rust/tests is covered), and its fixture
+//! strings are deliberate violations — the file-level pragma below opts it
+//! out, which is also the pragma's own integration test: were it ignored,
+//! `repo_tree_is_lint_clean` would fail on this file's fixtures.
+
+// lint: fixture
 
 use std::collections::BTreeSet;
 use std::path::Path;
@@ -101,21 +108,24 @@ fn unsafe_doc_pragma_suppresses() {
 
 #[test]
 fn env_reg_flags_unregistered_var() {
+    // The raw read also fires R9 — the two rules compose on one line.
     let f = run("fn f() {\n    std::env::var(\"ENGD_BOGUS\").ok();\n}\n");
-    assert_eq!(hits(&f), vec![(2, "env-reg")]);
-    assert!(f[0].message.contains("ENGD_BOGUS"));
+    assert_eq!(hits(&f), vec![(2, "env-read"), (2, "env-reg")]);
+    assert!(f[1].message.contains("ENGD_BOGUS"));
 }
 
 #[test]
 fn env_reg_accepts_registered_and_unshaped() {
-    assert!(run("fn f() { std::env::var(\"ENGD_THREADS\").ok(); }\n").is_empty());
+    // The sanctioned read path: the name literal is still R3-checked.
+    assert!(run("fn f() { crate::config::envvars::read(\"ENGD_THREADS\"); }\n").is_empty());
     // Lowercase tail is not env-var-shaped; neither are foreign prefixes.
     assert!(run("fn f() { let s = \"ENGD_lowercase\"; let t = \"OTHER_VAR\"; }\n").is_empty());
 }
 
 #[test]
 fn env_reg_pragma_suppresses() {
-    let src = "fn f() {\n    std::env::var(\"ENGD_BOGUS\").ok(); // lint: allow(env-reg)\n}\n";
+    let src = "fn f() {\n    std::env::var(\"ENGD_BOGUS\").ok(); \
+               // lint: allow(env-reg) lint: allow(env-read)\n}\n";
     assert!(run(src).is_empty());
 }
 
@@ -172,6 +182,260 @@ fn bitwise_flags_reductions_outside_fast_tier() {
 fn bitwise_pragma_suppresses() {
     let src = "fn f(xs: &[f64]) -> f64 {\n    xs.iter().sum::<f64>() // lint: allow(bitwise)\n}\n";
     assert!(lint_source("tape.rs", src, &registry()).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R6 ws-leak
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ws_leak_flags_never_recycled_checkout() {
+    // A deliberately leaked checkout: filled, read, never returned to the
+    // pool. The finding anchors on the take line.
+    let src = "fn f(ws: &mut Workspace) {\n    let mut v = ws.take_scratch(8);\n    \
+               fill(&mut v);\n    read(&v);\n}\n";
+    let f = run(src);
+    assert_eq!(hits(&f), vec![(2, "ws-leak")]);
+    assert!(f[0].message.contains("`v`"));
+}
+
+#[test]
+fn ws_leak_flags_question_mark_and_early_return_exits() {
+    let q = "fn f(ws: &mut Workspace) -> Result<()> {\n    let v = ws.take(8);\n    \
+             fallible()?;\n    ws.recycle(v);\n    Ok(())\n}\n";
+    let f = run(q);
+    assert_eq!(hits(&f), vec![(3, "ws-leak")]);
+    assert!(f[0].message.contains("`?` exit"));
+    let r = "fn f(ws: &mut Workspace, bad: bool) -> usize {\n    let v = ws.take(8);\n    \
+             if bad {\n        return 0;\n    }\n    ws.recycle(v);\n    1\n}\n";
+    let f = run(r);
+    assert_eq!(hits(&f), vec![(4, "ws-leak")]);
+    assert!(f[0].message.contains("early `return`"));
+}
+
+#[test]
+fn ws_leak_accepts_recycle_rename_and_documented_return() {
+    let recycled = "fn f(ws: &mut Workspace) {\n    let mut v = ws.take_scratch(8);\n    \
+                    v[0] = 1.0;\n    ws.recycle(v);\n}\n";
+    assert!(run(recycled).is_empty());
+    // `let w = v;` transfers tracking; recycling the new name closes it.
+    let renamed = "fn f(ws: &mut Workspace) {\n    let v = ws.take(8);\n    let w = v;\n    \
+                   ws.recycle(w);\n}\n";
+    assert!(run(renamed).is_empty());
+    // Returning the buffer hands the contract to the caller.
+    let returned = "fn f(ws: &mut Workspace) -> Vec<f64> {\n    let v = ws.take(8);\n    v\n}\n";
+    assert!(run(returned).is_empty());
+    // `Option::take` on a non-`ws` receiver is not a checkout.
+    assert!(run("fn f(&mut self) {\n    let g = self.gramian.take();\n    let _ = g;\n}\n")
+        .is_empty());
+}
+
+#[test]
+fn ws_leak_pragma_suppresses() {
+    let src = "fn f(ws: &mut Workspace) {\n    \
+               let v = ws.take(8); // lint: allow(ws-leak) — handed off via raw ptr\n    \
+               let n = v.len();\n}\n";
+    assert!(run(src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R7 hot-path-prop
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hot_path_prop_flags_allocating_callee() {
+    // The canonical chain: a hot-path fn calls an in-crate callee that
+    // allocates. The finding lands on the call site.
+    let src = "// lint: hot-path\nfn step() {\n    helper();\n}\n\nfn helper() {\n    \
+               let v = Vec::new();\n}\n";
+    let f = run(src);
+    assert_eq!(hits(&f), vec![(3, "hot-path-prop")]);
+    assert!(f[0].message.contains("`helper`"));
+    assert!(f[0].message.contains("Vec::new"));
+}
+
+#[test]
+fn hot_path_prop_propagates_through_hot_assumed_intermediary() {
+    // `mid` is reached only from a hot path, so it is hot-assumed and its
+    // own call into the allocating leaf is the finding.
+    let src = "// lint: hot-path\nfn step() {\n    mid();\n}\n\nfn mid() {\n    leaf();\n}\n\n\
+               fn leaf() {\n    let v = vec![0.0; 8];\n}\n";
+    assert_eq!(hits(&run(src)), vec![(7, "hot-path-prop")]);
+}
+
+#[test]
+fn hot_path_prop_cold_caller_blocks_assumption() {
+    // A cold caller (here: a test-shaped free fn) keeps `mid` out of the
+    // hot-assumed set, so the chain below it is not propagated into.
+    let src = "// lint: hot-path\nfn step() {\n    mid();\n}\n\nfn mid() {\n    leaf();\n}\n\n\
+               fn leaf() {\n    let v = vec![0.0; 8];\n}\n\nfn test_mid() {\n    mid();\n}\n";
+    assert!(run(src).is_empty());
+}
+
+#[test]
+fn hot_path_prop_resolves_methods_and_skips_explicit_hot_callees() {
+    // Method-call resolution inside an impl block.
+    let m = "impl Foo {\n    // lint: hot-path\n    fn step(&mut self) {\n        \
+             self.helper();\n    }\n    fn helper(&self) {\n        let v = Vec::new();\n    \
+             }\n}\n";
+    assert_eq!(hits(&run(m)), vec![(4, "hot-path-prop")]);
+    // An explicitly hot callee is R4's job, line by line — not a repeat
+    // finding at every call site.
+    let owned = "// lint: hot-path\nfn step() {\n    helper();\n}\n\n// lint: hot-path\n\
+                 fn helper() {\n    let v = Vec::new(); // lint: allow(alloc)\n}\n";
+    assert!(run(owned).is_empty());
+    // Foreign CamelCase qualifiers resolve to no in-crate item: no edge.
+    assert!(run("// lint: hot-path\nfn step() {\n    let x = Other::make();\n}\n").is_empty());
+}
+
+#[test]
+fn hot_path_prop_pragma_suppresses_at_call_site() {
+    let src = "// lint: hot-path\nfn step() {\n    \
+               helper(); // lint: allow(hot-path-prop) — cold setup branch\n}\n\nfn helper() {\n    \
+               let v = Vec::new();\n}\n";
+    assert!(run(src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R8 det-iter
+// ---------------------------------------------------------------------------
+
+#[test]
+fn det_iter_flags_hash_collections_in_contract_dirs() {
+    let src = "use std::collections::HashMap;\n";
+    let f = lint_source("rust/src/backend/cache.rs", src, &registry());
+    assert_eq!(hits(&f), vec![(1, "det-iter")]);
+    let f = lint_source("rust/src/linalg/pool.rs", "fn f(s: RandomState) {}\n", &registry());
+    assert_eq!(hits(&f), vec![(1, "det-iter")]);
+}
+
+#[test]
+fn det_iter_scopes_to_contract_dirs_and_accepts_btree() {
+    // Outside backend/ linalg/ parallel/, hash collections are fine.
+    let src = "use std::collections::HashMap;\n";
+    assert!(lint_source("rust/src/runtime/client.rs", src, &registry()).is_empty());
+    // Ordered collections are always fine.
+    let b = "use std::collections::BTreeMap;\nfn f(m: &BTreeMap<u32, u32>) {}\n";
+    assert!(lint_source("rust/src/parallel/mod.rs", b, &registry()).is_empty());
+    // `HashMapLike` is a different identifier — word-boundary match only.
+    let w = "fn f(m: HashMapLike) {}\n";
+    assert!(lint_source("rust/src/backend/x.rs", w, &registry()).is_empty());
+}
+
+#[test]
+fn det_iter_pragma_suppresses() {
+    let src = "use std::collections::HashMap; // lint: allow(det-iter) — lookup-only\n";
+    assert!(lint_source("rust/src/backend/cache.rs", src, &registry()).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R9 env-read
+// ---------------------------------------------------------------------------
+
+#[test]
+fn env_read_flags_raw_var_and_var_os() {
+    // Registered name, so R3 stays quiet — the raw read path is the issue.
+    let f = run("fn f() {\n    std::env::var(\"ENGD_THREADS\").ok();\n}\n");
+    assert_eq!(hits(&f), vec![(2, "env-read")]);
+    let f = run("fn f() {\n    std::env::var_os(\"ENGD_THREADS\");\n}\n");
+    assert_eq!(hits(&f), vec![(2, "env-read")]);
+}
+
+#[test]
+fn env_read_accepts_vars_iter_and_registry_module() {
+    // `env::vars()` enumerates, it does not read one variable.
+    assert!(run("fn f() {\n    for (k, v) in std::env::vars() {\n        drop((k, v));\n    }\n}\n")
+        .is_empty());
+    // The registry module is the one sanctioned home for the raw read.
+    let raw = "pub fn read(name: &str) -> Option<String> {\n    std::env::var(name).ok()\n}\n";
+    assert!(lint_source(engd_lint::REGISTRY_FILE, raw, &registry()).is_empty());
+}
+
+#[test]
+fn env_read_pragma_suppresses() {
+    let src =
+        "fn f() {\n    std::env::var(\"ENGD_THREADS\").ok(); // lint: allow(env-read)\n}\n";
+    assert!(run(src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// File-level fixture pragma
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixture_pragma_skips_the_whole_file() {
+    // Every rule would fire on this source; the pragma silences the file.
+    let src = "// lint: fixture\n// lint: hot-path\nfn step(ws: &mut Workspace) {\n    \
+               let v = ws.take(8);\n    let w = Vec::new();\n    unsafe { g() }\n    \
+               std::env::var(\"ENGD_BOGUS\").ok();\n}\n";
+    assert!(run(src).is_empty());
+    // Without it, the same source is loud.
+    assert!(!run(&src.replace("// lint: fixture\n", "")).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Semantic layer: item tree and call edges on adversarial token streams
+// ---------------------------------------------------------------------------
+
+#[test]
+fn item_tree_spans_and_calls_survive_adversarial_streams() {
+    use engd_lint::semantic::items_from_source;
+    let src = "fn outer() {\n    let s = \"fn fake() { inner_fake(); }\";\n    \
+               let c = '{';\n    let f = |x: usize| { helper(x) };\n    inner();\n    \
+               fn inner() {}\n}\n\nimpl Foo {\n    fn method(&self) -> Vec<usize> {\n        \
+               self.call_a::<f64>();\n        Self::call_b();\n        vec![]\n    }\n}\n";
+    let fns = items_from_source(src, &[]);
+    let mut names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+    names.sort();
+    assert_eq!(names, vec!["inner", "method", "outer"]);
+
+    // Spans: outer runs line 1..=7 (0-based 0..=6) despite the brace in a
+    // string, the `{` char literal, and the closure braces.
+    let outer = fns.iter().find(|f| f.name == "outer").unwrap();
+    assert_eq!((outer.sig_line, outer.end_line), (0, 6));
+    // Calls: the closure body counts, the string contents and the nested
+    // `fn inner` *declaration* do not.
+    let calls: Vec<&str> = outer.calls.iter().map(|c| c.name.as_str()).collect();
+    assert_eq!(calls, vec!["helper", "inner"]);
+
+    let method = fns.iter().find(|f| f.name == "method").unwrap();
+    assert_eq!(method.owner.as_deref(), Some("Foo"));
+    let mc: Vec<(&str, bool)> =
+        method.calls.iter().map(|c| (c.name.as_str(), c.method)).collect();
+    // `vec![]` is a macro, not a call; the turbofish method call and the
+    // `Self::` path call both survive.
+    assert_eq!(mc, vec![("call_a", true), ("call_b", false)]);
+    assert_eq!(method.calls[1].qual.as_deref(), Some("Self"));
+}
+
+// ---------------------------------------------------------------------------
+// Baselines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn baseline_round_trips_and_masks_only_recorded_findings() {
+    let old = run("fn f(ws: &mut Workspace) {\n    let v = ws.take(8);\n    let n = v.len();\n}\n");
+    assert_eq!(hits(&old), vec![(2, "ws-leak")]);
+    let text = engd_lint::render_baseline(&old);
+    assert!(text.starts_with('#'), "baseline carries a self-describing header");
+    let accepted = engd_lint::parse_baseline(&text);
+    // Every recorded finding round-trips through its key…
+    assert!(old.iter().all(|f| accepted.contains(&engd_lint::baseline_key(f))));
+    // …and a finding at any other location is new.
+    let new = run("fn g(ws: &mut Workspace) {\n    fallible()?;\n    \
+                   let v = ws.take(8);\n    let n = v.len();\n}\n");
+    assert!(new.iter().all(|f| !accepted.contains(&engd_lint::baseline_key(f))));
+}
+
+#[test]
+fn baseline_render_is_sorted_and_deduped() {
+    let mut findings = run("fn f(ws: &mut Workspace) {\n    let v = ws.take(8);\n    \
+                            let n = v.len();\n}\n");
+    let dup = findings[0].clone();
+    findings.push(dup);
+    let text = engd_lint::render_baseline(&findings);
+    let keys: Vec<&str> = text.lines().filter(|l| !l.starts_with('#')).collect();
+    assert_eq!(keys, vec!["fixture.rs:2: [ws-leak]"]);
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,435 @@
+//! Intra-procedural dataflow over `Workspace` buffer bindings (R6
+//! `ws-leak`).
+//!
+//! A `let`-bound `ws.take*` checkout must reach a *sink* before the
+//! function ends and before any early exit while the binding is live:
+//!
+//! * a `recycle*` call (or any whole-value move: argument position, struct
+//!   literal field, assignment into a field, `.into_*` conversion, block
+//!   result) — ownership left the binding, the new owner carries the
+//!   contract;
+//! * a `return` whose expression mentions the binding (documented-return
+//!   sinks: `kernel_solve` and friends hand pooled storage to the caller);
+//! * a `let` rename (`let b = a;`) — tracking transfers to the new name.
+//!
+//! Early `return`s and `?` operators encountered while the binding is live
+//! are leaks: the buffer drops without reaching the pool. The analysis is
+//! a linear scan per binding (first sink wins), which catches the leak
+//! classes that actually bite — an early exit between take and recycle,
+//! and a checkout with no sink at all — while staying lexer-grade: a sink
+//! on one branch of an `if` is credited to all paths, so a buffer recycled
+//! on only one branch is a known false negative, not a false positive.
+//!
+//! Checkouts that are never `let`-bound (struct literal fields, direct
+//! argument position) move ownership immediately and are out of scope.
+
+use crate::semantic::{FnItem, Token};
+use crate::{Finding, SourceLine};
+
+/// Workspace checkout methods tracked by the pass. The bare `take` name is
+/// ambiguous with `Option::take`, so it only counts on a receiver token
+/// literally named `ws`; the longer names are unique to the pool.
+const TAKE_METHODS: &[&str] =
+    &["take", "take_scratch", "take_matrix", "take_matrix_scratch", "take_scratch_f32"];
+
+fn is_take_method(name: &str, receiver: Option<&str>) -> bool {
+    if !TAKE_METHODS.contains(&name) {
+        return false;
+    }
+    name != "take" || receiver == Some("ws")
+}
+
+/// One tracked checkout binding.
+struct Binding {
+    name: String,
+    line: usize,
+    /// Token index just past the binding statement's `;`.
+    scan_from: usize,
+}
+
+/// Find `let <name> = … ws.take*(…) …;` bindings inside `f`'s body.
+fn bindings(toks: &[Token], f: &FnItem) -> Vec<Binding> {
+    let (lo, hi) = f.body;
+    let mut out = Vec::new();
+    let mut k = lo + 1;
+    while k < hi {
+        let t = &toks[k];
+        if t.ident
+            && k >= 2
+            && toks[k - 1].text == "."
+            && k + 1 < toks.len()
+            && toks[k + 1].text == "("
+            && is_take_method(&t.text, toks[k - 2].ident.then(|| toks[k - 2].text.as_str()))
+        {
+            // Statement start: walk back to the nearest `;` / `{` / `}`.
+            let mut s = k;
+            while s > lo && !matches!(toks[s - 1].text.as_str(), ";" | "{" | "}") {
+                s -= 1;
+            }
+            // Match `let [mut] NAME [:(type)] =` — anything else (tuple
+            // patterns, struct fields, argument position) is an immediate
+            // ownership transfer the pass does not track.
+            let mut p = s;
+            if toks.get(p).map(|t| t.text.as_str()) == Some("let") {
+                p += 1;
+                if toks.get(p).map(|t| t.text.as_str()) == Some("mut") {
+                    p += 1;
+                }
+                if let Some(name_tok) = toks.get(p) {
+                    let next = toks.get(p + 1).map(|t| t.text.as_str());
+                    if name_tok.ident && matches!(next, Some(":") | Some("=")) {
+                        // End of statement: the `;` at paren depth 0.
+                        let mut e = k;
+                        let mut depth = 0i64;
+                        while e < hi {
+                            match toks[e].text.as_str() {
+                                "(" | "[" => depth += 1,
+                                ")" | "]" => depth -= 1,
+                                ";" if depth <= 0 => break,
+                                _ => {}
+                            }
+                            e += 1;
+                        }
+                        out.push(Binding {
+                            name: name_tok.text.clone(),
+                            line: t.line,
+                            scan_from: e + 1,
+                        });
+                    }
+                }
+            }
+        }
+        k += 1;
+    }
+    out
+}
+
+enum Event {
+    Sink,
+    Rename(String),
+    Use,
+}
+
+/// Classify an occurrence of the tracked name at token `k`.
+fn classify(toks: &[Token], k: usize) -> Event {
+    let prev = if k > 0 { toks[k - 1].text.as_str() } else { "" };
+    let next = toks.get(k + 1).map(|t| t.text.as_str()).unwrap_or("");
+    // `foo.name` is a field/method of something else; `&name` / `&mut name`
+    // are borrows; `name[..]` is an element access.
+    if prev == "." || prev == "&" || next == "[" {
+        return Event::Use;
+    }
+    if prev == "mut" && k >= 2 && toks[k - 2].text == "&" {
+        return Event::Use;
+    }
+    if next == "." {
+        // Consuming conversions move the buffer toward its new owner
+        // (`ws.recycle(m.into_vec())`); everything else is a method use.
+        if toks.get(k + 2).map(|t| t.text.starts_with("into")).unwrap_or(false) {
+            return Event::Sink;
+        }
+        return Event::Use;
+    }
+    let whole_value = matches!(prev, "(" | "," | "=" | ":" | "{")
+        || matches!(next, ")" | "," | ";" | "}");
+    if !whole_value {
+        return Event::Use;
+    }
+    // `let NEW = name ;` transfers tracking to NEW.
+    if prev == "=" && next == ";" && k >= 3 {
+        let mut p = k - 2; // token before `=`
+        if toks[p].ident {
+            let new_name = toks[p].text.clone();
+            if p >= 1 && toks[p - 1].text == "mut" {
+                p -= 1;
+            }
+            if p >= 1 && toks[p - 1].text == "let" {
+                return Event::Rename(new_name);
+            }
+        }
+    }
+    Event::Sink
+}
+
+/// Run the leak analysis for every take-binding in `f`, appending findings.
+///
+/// `lines` carry the per-line pragma comments; `nested` are token spans of
+/// nested `fn` items to skip (a nested item may reuse the same names).
+pub fn ws_leak(
+    file: &str,
+    lines: &[SourceLine],
+    toks: &[Token],
+    f: &FnItem,
+    nested: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let (_, hi) = f.body;
+    'bindings: for b in bindings(toks, f) {
+        if lines[b.line].allows("ws-leak") {
+            continue;
+        }
+        let mut name = b.name.clone();
+        let mut k = b.scan_from;
+        while k < hi {
+            if let Some(&(_, nhi)) = nested.iter().find(|&&(nlo, _)| nlo == k) {
+                k = nhi + 1;
+                continue;
+            }
+            let t = &toks[k];
+            if t.text == "?" {
+                if !lines[t.line].allows("ws-leak") {
+                    out.push(Finding {
+                        file: file.into(),
+                        line: t.line + 1,
+                        rule: "ws-leak",
+                        message: format!(
+                            "`?` exit drops pooled buffer `{name}` (checked out at line {}) \
+                             without recycling; recycle before the fallible call or justify \
+                             with `// lint: allow(ws-leak)`",
+                            b.line + 1
+                        ),
+                    });
+                }
+                continue 'bindings;
+            }
+            if t.ident && t.text == "return" {
+                // Does the return expression mention the binding?
+                let mut e = k + 1;
+                let mut depth = 0i64;
+                let mut returned = false;
+                while e < hi {
+                    match toks[e].text.as_str() {
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        ";" if depth <= 0 => break,
+                        _ => {}
+                    }
+                    if toks[e].ident && toks[e].text == name {
+                        returned = true;
+                    }
+                    e += 1;
+                }
+                if returned {
+                    continue 'bindings;
+                }
+                if !lines[t.line].allows("ws-leak") {
+                    out.push(Finding {
+                        file: file.into(),
+                        line: t.line + 1,
+                        rule: "ws-leak",
+                        message: format!(
+                            "early `return` drops pooled buffer `{name}` (checked out at line \
+                             {}) without recycling; recycle on this path or justify with \
+                             `// lint: allow(ws-leak)`",
+                            b.line + 1
+                        ),
+                    });
+                }
+                continue 'bindings;
+            }
+            if t.ident && t.text == name {
+                match classify(toks, k) {
+                    Event::Sink => continue 'bindings,
+                    Event::Rename(new_name) => {
+                        name = new_name;
+                    }
+                    Event::Use => {}
+                }
+            }
+            k += 1;
+        }
+        out.push(Finding {
+            file: file.into(),
+            line: b.line + 1,
+            rule: "ws-leak",
+            message: format!(
+                "pooled buffer `{name}` checked out here never reaches a recycle/return sink \
+                 in this function; every `ws.take*` must be recycled or handed to a caller \
+                 (or justify with `// lint: allow(ws-leak)`)"
+            ),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan;
+    use crate::semantic::{items, tokenize};
+
+    fn run(src: &str) -> Vec<(usize, String)> {
+        let lines = scan(src);
+        let toks = tokenize(&lines);
+        let fns = items(&lines, &[]);
+        let spans: Vec<(usize, usize)> = fns
+            .iter()
+            .map(|f| (f.sig_tok, if f.has_body { f.body.1 } else { f.sig_tok }))
+            .collect();
+        let mut out = Vec::new();
+        for f in fns.iter().filter(|f| f.has_body) {
+            let nested: Vec<(usize, usize)> = spans
+                .iter()
+                .filter(|&&(nlo, nhi)| nlo > f.body.0 && nhi < f.body.1)
+                .copied()
+                .collect();
+            ws_leak("t.rs", &lines, &toks, f, &nested, &mut out);
+        }
+        out.iter().map(|f| (f.line, f.message.clone())).collect()
+    }
+
+    #[test]
+    fn recycled_binding_is_clean() {
+        let src = "\
+fn f(ws: &mut Workspace) {
+    let mut v = ws.take_scratch(8);
+    v[0] = 1.0;
+    ws.recycle(v);
+}
+";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn never_recycled_binding_is_flagged_at_the_take() {
+        let src = "\
+fn f(ws: &mut Workspace) {
+    let v = ws.take_scratch(8);
+    let s = v.len();
+}
+";
+        let f = run(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].0, 2);
+        assert!(f[0].1.contains("`v`"));
+    }
+
+    #[test]
+    fn early_return_between_take_and_recycle_is_flagged() {
+        let src = "\
+fn f(ws: &mut Workspace, bad: bool) -> usize {
+    let v = ws.take(8);
+    if bad {
+        return 0;
+    }
+    ws.recycle(v);
+    1
+}
+";
+        let f = run(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].0, 4);
+        assert!(f[0].1.contains("early `return`"));
+    }
+
+    #[test]
+    fn returning_the_buffer_is_a_documented_sink() {
+        let src = "\
+fn f(ws: &mut Workspace) -> Vec<f64> {
+    let v = ws.take(8);
+    if v.len() > 4 {
+        return v;
+    }
+    v
+}
+";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn rename_transfers_tracking() {
+        let clean = "\
+fn f(ws: &mut Workspace) {
+    let v = ws.take(8);
+    let w = v;
+    ws.recycle(w);
+}
+";
+        assert!(run(clean).is_empty());
+        let leaky = "\
+fn f(ws: &mut Workspace) {
+    let v = ws.take(8);
+    let w = v;
+    let n = w.len();
+}
+";
+        let f = run(leaky);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].1.contains("`w`"));
+    }
+
+    #[test]
+    fn question_mark_exit_is_flagged() {
+        let src = "\
+fn f(ws: &mut Workspace) -> Result<()> {
+    let v = ws.take(8);
+    fallible()?;
+    ws.recycle(v);
+    Ok(())
+}
+";
+        let f = run(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].0, 3);
+        assert!(f[0].1.contains("`?` exit"));
+    }
+
+    #[test]
+    fn moves_and_struct_fields_are_sinks() {
+        // Argument-position move, struct literal shorthand, and field
+        // assignment all transfer ownership out of the binding.
+        let src = "\
+fn g(ws: &mut Workspace) -> Out {
+    let x = ws.take(8);
+    Out { x }
+}
+fn h(ws: &mut Workspace, nys: &Nystrom) {
+    let omega = ws.take_matrix_scratch(4, 4);
+    nys.build(omega);
+}
+fn k(ws: &mut Workspace, slot: &mut S) {
+    let b = ws.take(8);
+    slot.buf = b;
+}
+fn m(ws: &mut Workspace) {
+    let m = ws.take_matrix(2, 2);
+    ws.recycle(m.into_vec());
+}
+";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn mut_borrow_arguments_are_not_sinks() {
+        // `&mut v` in argument position is a borrow, not a move — the
+        // binding stays live and still needs a real sink.
+        let src = "\
+fn f(ws: &mut Workspace) {
+    let mut v = ws.take_scratch(8);
+    fill(&mut v);
+    read(&v);
+}
+";
+        let f = run(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].0, 2);
+        let clean = "\
+fn f(ws: &mut Workspace) {
+    let mut v = ws.take_scratch(8);
+    fill(&mut v);
+    ws.recycle(v);
+}
+";
+        assert!(run(clean).is_empty());
+    }
+
+    #[test]
+    fn option_take_is_not_tracked() {
+        let src = "\
+fn f(&mut self) {
+    let g = self.gramian.take();
+    let _ = g;
+}
+";
+        assert!(run(src).is_empty());
+    }
+}

@@ -19,20 +19,58 @@
 //!   `.fold(` float reductions outside functions annotated
 //!   `// lint: fast-tier`: the bitwise tier's contract is scalar-order FP
 //!   with no contraction or reassociation.
+//! * **R6 `ws-leak`** — every `let`-bound `ws.take*` checkout must reach a
+//!   recycle / whole-value-move / documented-return sink before the
+//!   function ends and before any early `return` / `?` exit while the
+//!   binding is live (intra-procedural dataflow, `let` renames tracked —
+//!   see [`dataflow`]).
+//! * **R7 `hot-path-prop`** — the alloc contract is transitive: a
+//!   hot-path function may not call an in-crate callee whose body
+//!   allocates. `// lint: hot-path` is auto-assumed on functions reached
+//!   *only* from hot paths (call graph in [`semantic`]; functions with any
+//!   cold caller are never auto-assumed).
+//! * **R8 `det-iter`** — in the bitwise-contract directories
+//!   (`backend/`, `linalg/`, `parallel/`), no `HashMap` / `HashSet` /
+//!   `RandomState`: their iteration order is nondeterministic, which
+//!   silently breaks shard==native bitwise identity. Use `BTreeMap` /
+//!   `BTreeSet` or justify with `// lint: allow(det-iter)`.
+//! * **R9 `env-read`** — no raw `std::env::var` / `var_os` outside
+//!   `config/envvars.rs`: reads go through `envvars::read` / `read_os`,
+//!   which assert the name is declared in the registry (closing the loop
+//!   R3 opened on the string-literal side).
 //!
 //! Any finding can be suppressed on its line with `// lint: allow(<rule>)`.
+//! A file whose comments contain `// lint: fixture` is skipped entirely —
+//! that is how `rust/tests/lint.rs` holds intentional violations while the
+//! walk covers `rust/tests`.
 //!
 //! Sources are tokenized by a small scanner ([`scan`]) that understands
 //! line/nested-block comments, (raw/byte) string literals, char literals,
 //! and lifetimes — rules never match inside comments or strings, and
-//! comment/pragma detection never matches inside strings.
+//! comment/pragma detection never matches inside strings. The
+//! interprocedural rules sit on the [`semantic`] layer: a brace-matched
+//! item tree over the token stream (functions with spans, impl owners,
+//! callee names) and the intra-crate call graph built from it.
+
+pub mod dataflow;
+pub mod semantic;
 
 use std::collections::BTreeSet;
 use std::fmt;
 use std::path::{Path, PathBuf};
 
 /// All rule identifiers, in diagnostic order.
-pub const RULES: &[&str] = &["nan-ord", "unsafe-doc", "env-reg", "alloc", "bitwise"];
+pub const RULES: &[&str] = &[
+    "nan-ord",
+    "unsafe-doc",
+    "env-reg",
+    "alloc",
+    "bitwise",
+    "ws-leak",
+    "hot-path-prop",
+    "det-iter",
+    "env-read",
+];
 
 /// One diagnostic: `file:line` plus the violated rule.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -596,6 +634,206 @@ fn rule_bitwise(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
     }
 }
 
+/// R8 `det-iter`: order-nondeterministic collections in the directories
+/// under the bitwise contract. Shard==native identity depends on fixed
+/// reduction/iteration orders, and `HashMap`/`HashSet` iteration order
+/// varies per process (SipHash seeding) — one stray `for (k, v) in map`
+/// silently breaks the contract, so the types are banned wholesale here.
+const DET_ITER_DIRS: &[&str] = &["rust/src/backend/", "rust/src/linalg/", "rust/src/parallel/"];
+
+fn rule_det_iter(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
+    if !DET_ITER_DIRS.iter().any(|d| file.starts_with(d)) {
+        return;
+    }
+    let (chars, line_of) = flatten(lines);
+    for pat in ["HashMap", "HashSet", "RandomState"] {
+        for p in word_positions(&chars, pat) {
+            let line = line_of[p];
+            if lines[line].allows("det-iter") {
+                continue;
+            }
+            out.push(Finding {
+                file: file.into(),
+                line: line + 1,
+                rule: "det-iter",
+                message: format!(
+                    "`{pat}` in a bitwise-contract directory: its iteration order is \
+                     nondeterministic and breaks shard==native identity; use \
+                     `BTreeMap`/`BTreeSet` or justify with `// lint: allow(det-iter)`"
+                ),
+            });
+        }
+    }
+}
+
+/// R9 `env-read`: raw `std::env::var` / `var_os` outside the registry
+/// module. Reads must go through `config::envvars::read`/`read_os`, which
+/// assert the name is declared — R3 catches undeclared *names*, this
+/// catches undeclared *read paths*.
+fn rule_env_read(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
+    let (chars, line_of) = flatten(lines);
+    let needle: Vec<char> = "env::var".chars().collect();
+    if chars.len() < needle.len() {
+        return;
+    }
+    for i in 0..=chars.len() - needle.len() {
+        if chars[i..i + needle.len()] != needle[..] {
+            continue;
+        }
+        if i > 0 && is_ident_char(chars[i - 1]) {
+            continue;
+        }
+        // `env::var(` or `env::var_os(`; anything else (`env::vars()`,
+        // prose) is not a read of a single variable.
+        let mut end = i + needle.len();
+        let tail: String = chars[end..chars.len().min(end + 4)].iter().collect();
+        if tail.starts_with("_os(") {
+            end += 3;
+        } else if !tail.starts_with('(') {
+            continue;
+        }
+        let _ = end;
+        let line = line_of[i];
+        if lines[line].allows("env-read") {
+            continue;
+        }
+        out.push(Finding {
+            file: file.into(),
+            line: line + 1,
+            rule: "env-read",
+            message: "raw `std::env::var` outside config/envvars.rs: read through \
+                      `config::envvars::read`/`read_os` so every lookup is registry-checked \
+                      (or justify with `// lint: allow(env-read)`)"
+                .into(),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parsed-file cache and the interprocedural rules (R6, R7)
+// ---------------------------------------------------------------------------
+
+/// One file parsed through the semantic layer (shared by R6 and R7).
+pub struct Parsed {
+    pub path: String,
+    pub lines: Vec<SourceLine>,
+    pub toks: Vec<semantic::Token>,
+    pub fns: Vec<semantic::FnItem>,
+    /// File-level `// lint: fixture` pragma: skip every rule.
+    pub fixture: bool,
+}
+
+/// Does any comment in the file carry the file-level `fixture` pragma?
+pub fn is_fixture(lines: &[SourceLine]) -> bool {
+    lines.iter().any(|l| l.comment.contains("lint: fixture"))
+}
+
+/// Parse one source file for the semantic rules. Hot-path arming reuses
+/// R4's region detector so the two passes can never disagree on which
+/// functions are explicitly hot.
+pub fn parse_source(path: &str, src: &str) -> Parsed {
+    let lines = scan(src);
+    let fixture = is_fixture(&lines);
+    let hot_lines: Vec<usize> =
+        marked_fn_regions(&lines, "lint: hot-path").iter().map(|&(a, _)| a).collect();
+    let toks = semantic::tokenize(&lines);
+    let fns = semantic::items(&lines, &hot_lines);
+    Parsed { path: path.to_string(), lines, toks, fns, fixture }
+}
+
+/// Token spans of fn items strictly inside `f`'s body (signature through
+/// closing brace) — the dataflow pass skips them.
+fn nested_spans(p: &Parsed, f: &semantic::FnItem) -> Vec<(usize, usize)> {
+    p.fns
+        .iter()
+        .map(|g| (g.sig_tok, if g.has_body { g.body.1 } else { g.sig_tok }))
+        .filter(|&(nlo, nhi)| nlo > f.body.0 && nhi < f.body.1)
+        .collect()
+}
+
+/// R6 `ws-leak`: per-function dataflow over `ws.take*` bindings.
+fn rule_ws_leak(p: &Parsed, out: &mut Vec<Finding>) {
+    for f in p.fns.iter().filter(|f| f.has_body) {
+        let nested = nested_spans(p, f);
+        dataflow::ws_leak(&p.path, &p.lines, &p.toks, f, &nested, out);
+    }
+}
+
+/// First un-pragma'd allocation inside a function's line span, if any
+/// (the same pattern set R4 enforces).
+fn first_alloc(p: &Parsed, f: &semantic::FnItem) -> Option<(usize, &'static str)> {
+    const PATTERNS: &[&str] = &["Vec::new", "vec![", ".to_vec()", ".clone()"];
+    for li in f.sig_line..=f.end_line.min(p.lines.len().saturating_sub(1)) {
+        let l = &p.lines[li];
+        if l.allows("alloc") {
+            continue;
+        }
+        for pat in PATTERNS {
+            if l.code.contains(pat) {
+                return Some((li, *pat));
+            }
+        }
+    }
+    None
+}
+
+/// R7 `hot-path-prop`: the alloc contract propagated through the call
+/// graph. For every hot-assumed caller (explicitly marked, or reached only
+/// from hot paths), a resolved in-crate callee that allocates directly is
+/// a finding at the call site — unless the callee is itself explicitly
+/// `// lint: hot-path` (then R4 owns its body line by line).
+fn rule_hot_path_prop(graph: &semantic::CrateGraph, parsed: &[Parsed], out: &mut Vec<Finding>) {
+    let hot = graph.hot_assumed();
+    let allocs: Vec<Option<(usize, &'static str)>> = graph
+        .fns
+        .iter()
+        .map(|(fi, f)| if f.has_body { first_alloc(&parsed[*fi], f) } else { None })
+        .collect();
+    for (ci, (caller_file, caller)) in graph.fns.iter().enumerate() {
+        if !hot[ci] {
+            continue;
+        }
+        let pf = &parsed[*caller_file];
+        let mut seen: BTreeSet<(usize, String)> = BTreeSet::new();
+        for call in &caller.calls {
+            if pf.lines[call.line].allows("hot-path-prop") {
+                continue;
+            }
+            for gi in graph.resolve(ci, call) {
+                if gi == ci {
+                    continue;
+                }
+                let (callee_file, callee) = &graph.fns[gi];
+                if callee.hot_path {
+                    continue; // R4 enforces its body directly.
+                }
+                if let Some((aline, pat)) = allocs[gi] {
+                    if seen.insert((call.line, call.name.clone())) {
+                        out.push(Finding {
+                            file: pf.path.clone(),
+                            line: call.line + 1,
+                            rule: "hot-path-prop",
+                            message: format!(
+                                "hot-path caller `{}` invokes `{}` ({}:{}), which allocates \
+                                 (`{}` at line {}); hot paths draw from the Workspace pool \
+                                 transitively — pool the callee or justify with \
+                                 `// lint: allow(hot-path-prop)`",
+                                caller.name,
+                                callee.name,
+                                graph.files[*callee_file],
+                                callee.sig_line + 1,
+                                pat,
+                                aline + 1
+                            ),
+                        });
+                    }
+                    break;
+                }
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Entry points
 // ---------------------------------------------------------------------------
@@ -604,24 +842,52 @@ fn rule_bitwise(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
 /// collects its declared names from here and exempts the file itself.
 pub const REGISTRY_FILE: &str = "rust/src/config/envvars.rs";
 
-/// Lint one file's source text. `file` is the root-relative path used in
-/// diagnostics; `registry` is the set of declared env-var names.
-pub fn lint_source(file: &str, src: &str, registry: &BTreeSet<String>) -> Vec<Finding> {
-    let lines = scan(src);
-    let mut out = Vec::new();
-    rule_nan_ord(file, &lines, &mut out);
-    rule_unsafe_doc(file, &lines, &mut out);
+/// Run every per-file rule (R1–R6, R8, R9) over one parsed file.
+fn lint_file_rules(p: &Parsed, registry: &BTreeSet<String>, out: &mut Vec<Finding>) {
+    let (file, lines) = (p.path.as_str(), p.lines.as_slice());
+    rule_nan_ord(file, lines, out);
+    rule_unsafe_doc(file, lines, out);
     if file != REGISTRY_FILE {
-        rule_env_reg(file, &lines, registry, &mut out);
+        rule_env_reg(file, lines, registry, out);
+        rule_env_read(file, lines, out);
     }
-    rule_alloc(file, &lines, &mut out);
-    rule_bitwise(file, &lines, &mut out);
-    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    rule_alloc(file, lines, out);
+    rule_bitwise(file, lines, out);
+    rule_ws_leak(p, out);
+    rule_det_iter(file, lines, out);
+}
+
+/// Lint one file's source text. `file` is the root-relative path used in
+/// diagnostics; `registry` is the set of declared env-var names. R7 runs
+/// over the single-file call graph (fixtures exercise whole chains this
+/// way); multi-file analyses go through [`lint_crate`].
+pub fn lint_source(file: &str, src: &str, registry: &BTreeSet<String>) -> Vec<Finding> {
+    lint_crate(&[(file.to_string(), src.to_string())], registry)
+}
+
+/// Lint a set of files as one crate: all per-file rules plus the
+/// crate-wide call-graph pass (R7). Files carrying the `fixture` pragma
+/// are skipped entirely.
+pub fn lint_crate(files: &[(String, String)], registry: &BTreeSet<String>) -> Vec<Finding> {
+    let parsed: Vec<Parsed> = files
+        .iter()
+        .map(|(path, src)| parse_source(path, src))
+        .filter(|p| !p.fixture)
+        .collect();
+    let mut out = Vec::new();
+    let mut graph = semantic::CrateGraph::default();
+    for p in &parsed {
+        lint_file_rules(p, registry, &mut out);
+        graph.add_file(&p.path, p.fns.clone());
+    }
+    rule_hot_path_prop(&graph, &parsed, &mut out);
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
     out
 }
 
-/// The directories a tree walk covers, relative to the root.
-pub const WALK_DIRS: &[&str] = &["rust/src", "benches", "examples"];
+/// The directories a tree walk covers, relative to the root. `rust/tests`
+/// is in scope — `lint.rs` opts out per-file via the `fixture` pragma.
+pub const WALK_DIRS: &[&str] = &["rust/src", "benches", "examples", "rust/tests"];
 
 /// Collect every `.rs` file under the walk dirs, sorted for determinism.
 pub fn collect_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
@@ -665,13 +931,16 @@ pub fn registry_names(root: &Path) -> std::io::Result<BTreeSet<String>> {
     Ok(names)
 }
 
-/// Lint the whole tree rooted at `root` (the repo checkout).
+/// Lint the whole tree rooted at `root` (the repo checkout). All walked
+/// files form one crate for the call-graph pass: cross-file calls inside
+/// `rust/src` resolve, and test callers count as cold callers (which is
+/// what keeps pool internals out of the auto-assumed hot set).
 pub fn lint_tree(root: &Path) -> std::io::Result<Report> {
     let registry = registry_names(root)?;
-    let files = collect_files(root)?;
-    let mut findings = Vec::new();
-    let files_scanned = files.len();
-    for path in files {
+    let paths = collect_files(root)?;
+    let files_scanned = paths.len();
+    let mut files = Vec::with_capacity(paths.len());
+    for path in paths {
         let rel = path
             .strip_prefix(root)
             .unwrap_or(&path)
@@ -679,10 +948,46 @@ pub fn lint_tree(root: &Path) -> std::io::Result<Report> {
             .map(|c| c.as_os_str().to_string_lossy())
             .collect::<Vec<_>>()
             .join("/");
-        let src = std::fs::read_to_string(&path)?;
-        findings.extend(lint_source(&rel, &src, &registry));
+        files.push((rel, std::fs::read_to_string(&path)?));
     }
+    let findings = lint_crate(&files, &registry);
     Ok(Report { findings, files_scanned, registry })
+}
+
+// ---------------------------------------------------------------------------
+// Baselines
+// ---------------------------------------------------------------------------
+
+/// Stable identity of a finding for baseline comparison: `file:line: [rule]`.
+/// Messages are excluded so wording changes don't churn baselines.
+pub fn baseline_key(f: &Finding) -> String {
+    format!("{}:{}: [{}]", f.file, f.line, f.rule)
+}
+
+/// Render findings as a baseline file: one key per line, sorted, with a
+/// self-describing header.
+pub fn render_baseline(findings: &[Finding]) -> String {
+    let mut keys: Vec<String> = findings.iter().map(baseline_key).collect();
+    keys.sort();
+    keys.dedup();
+    let mut out = String::from(
+        "# engd-lint baseline: accepted findings, one `file:line: [rule]` per line.\n\
+         # Regenerate with `engd-lint --update-baseline <this file>`.\n",
+    );
+    for k in &keys {
+        out.push_str(k);
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a baseline file back into the key set (blank and `#` lines skipped).
+pub fn parse_baseline(text: &str) -> BTreeSet<String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
 }
 
 /// Render the machine-readable JSON report (hand-rolled: zero deps).

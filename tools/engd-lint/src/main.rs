@@ -1,8 +1,15 @@
 //! engd-lint CLI: walk the tree, print findings, emit the JSON report.
 //!
-//! Usage: `engd-lint [--root <dir>] [--json <path>] [--quiet]`
+//! Usage: `engd-lint [--root <dir>] [--json <path>] [--quiet]
+//!                   [--baseline <file> | --update-baseline <file>]`
 //!
-//! Exits 0 on a clean tree, 1 when findings exist, 2 on usage/IO errors.
+//! `--baseline <file>` suppresses findings recorded in the file (one
+//! `file:line: [rule]` key per line) so a new rule can land before the fix
+//! sweep; only *new* findings fail the run. `--update-baseline <file>`
+//! rewrites the file from the current findings and exits 0.
+//!
+//! Exits 0 on a clean tree (or all findings baselined), 1 when new
+//! findings exist, 2 on usage/IO errors.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -10,6 +17,8 @@ use std::process::ExitCode;
 fn main() -> ExitCode {
     let mut root = PathBuf::from(".");
     let mut json: Option<PathBuf> = None;
+    let mut baseline: Option<PathBuf> = None;
+    let mut update_baseline: Option<PathBuf> = None;
     let mut quiet = false;
 
     let mut args = std::env::args().skip(1);
@@ -23,14 +32,28 @@ fn main() -> ExitCode {
                 Some(v) => json = Some(PathBuf::from(v)),
                 None => return usage("--json needs a path"),
             },
+            "--baseline" => match args.next() {
+                Some(v) => baseline = Some(PathBuf::from(v)),
+                None => return usage("--baseline needs a file"),
+            },
+            "--update-baseline" => match args.next() {
+                Some(v) => update_baseline = Some(PathBuf::from(v)),
+                None => return usage("--update-baseline needs a file"),
+            },
             "--quiet" => quiet = true,
             "--help" | "-h" => {
-                println!("engd-lint [--root <dir>] [--json <path>] [--quiet]");
+                println!(
+                    "engd-lint [--root <dir>] [--json <path>] [--quiet] \
+                     [--baseline <file> | --update-baseline <file>]"
+                );
                 println!("rules: {}", engd_lint::RULES.join(", "));
                 return ExitCode::SUCCESS;
             }
             other => return usage(&format!("unknown argument `{other}`")),
         }
+    }
+    if baseline.is_some() && update_baseline.is_some() {
+        return usage("--baseline and --update-baseline are mutually exclusive");
     }
 
     if !root.join("rust/src").is_dir() {
@@ -57,19 +80,55 @@ fn main() -> ExitCode {
         }
     }
 
+    if let Some(path) = update_baseline {
+        let text = engd_lint::render_baseline(&report.findings);
+        if let Err(e) = std::fs::write(&path, text) {
+            eprintln!("engd-lint: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+        if !quiet {
+            println!(
+                "engd-lint: baseline {} recorded ({} finding(s))",
+                path.display(),
+                report.findings.len()
+            );
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let accepted = match &baseline {
+        Some(path) => match std::fs::read_to_string(path) {
+            Ok(text) => engd_lint::parse_baseline(&text),
+            Err(e) => {
+                eprintln!("engd-lint: reading baseline {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        },
+        None => Default::default(),
+    };
+    let new: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| !accepted.contains(&engd_lint::baseline_key(f)))
+        .collect();
+
     if !quiet {
-        for f in &report.findings {
+        for f in &new {
             println!("{f}");
         }
+        let baselined = report.findings.len() - new.len();
+        if baselined > 0 {
+            println!("engd-lint: {baselined} baselined finding(s) suppressed");
+        }
         println!(
-            "engd-lint: {} finding(s) across {} files ({} registered env vars)",
-            report.findings.len(),
+            "engd-lint: {} new finding(s) across {} files ({} registered env vars)",
+            new.len(),
             report.files_scanned,
             report.registry.len()
         );
     }
 
-    if report.findings.is_empty() {
+    if new.is_empty() {
         ExitCode::SUCCESS
     } else {
         ExitCode::FAILURE
@@ -78,6 +137,9 @@ fn main() -> ExitCode {
 
 fn usage(msg: &str) -> ExitCode {
     eprintln!("engd-lint: {msg}");
-    eprintln!("usage: engd-lint [--root <dir>] [--json <path>] [--quiet]");
+    eprintln!(
+        "usage: engd-lint [--root <dir>] [--json <path>] [--quiet] \
+         [--baseline <file> | --update-baseline <file>]"
+    );
     ExitCode::from(2)
 }

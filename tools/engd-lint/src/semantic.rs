@@ -1,0 +1,615 @@
+//! Semantic layer: a brace-matched item tree over the scanner's token
+//! stream, plus the intra-crate call graph built from it.
+//!
+//! The per-line rules (R1–R5) never needed to know *which function* a line
+//! belongs to beyond the marked-region heuristic; the interprocedural rules
+//! do. This module tokenizes the comment-/string-stripped code stream
+//! ([`tokenize`]), then parses it into [`FnItem`]s — every `fn` with its
+//! name, enclosing `impl` owner, line span, body token span, and the
+//! callee names invoked from its body ([`items`]). No type inference, no
+//! macro expansion: resolution is name-based ([`CrateGraph::resolve`]),
+//! which is exactly as strong as the repo's naming conventions (snake_case
+//! functions, CamelCase types) and is pinned by fixtures in
+//! `rust/tests/lint.rs`.
+//!
+//! Parsing is deliberately resilient to the adversarial corners fixtures
+//! cover: nested closures (their braces don't end a function body), nested
+//! `fn` items (excluded from the parent's call list), generic
+//! angle-bracket soup incl. `Fn(..) -> T` bounds (the `->` inside generics
+//! does not close the `<`), turbofish call syntax, and `fn` pointer types
+//! (`fn(usize) -> usize` declares no item).
+
+use crate::{scan, SourceLine};
+
+/// One token of the flattened code stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    /// Identifier text, or the single punctuation character as a string.
+    pub text: String,
+    /// 0-based source line the token starts on.
+    pub line: usize,
+    /// True for identifier/keyword tokens.
+    pub ident: bool,
+}
+
+/// Tokenize scanned lines into identifiers and single-char punctuation.
+/// Comments and string contents are already gone (the scanner blanked
+/// them), so every brace/quote seen here is structural.
+pub fn tokenize(lines: &[SourceLine]) -> Vec<Token> {
+    let mut toks = Vec::new();
+    for (li, l) in lines.iter().enumerate() {
+        let chars: Vec<char> = l.code.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            if c.is_whitespace() {
+                i += 1;
+                continue;
+            }
+            if c.is_alphanumeric() || c == '_' {
+                let start = i;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                toks.push(Token {
+                    text: chars[start..i].iter().collect(),
+                    line: li,
+                    ident: true,
+                });
+            } else {
+                toks.push(Token { text: c.to_string(), line: li, ident: false });
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+/// One call site inside a function body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Call {
+    /// Callee name (the last path segment before the `(`).
+    pub name: String,
+    /// `Qual::name(..)` qualifier, if path-qualified (`Self`, a type, or a
+    /// module segment). `None` for bare calls and method calls.
+    pub qual: Option<String>,
+    /// True for `.name(..)` method-call syntax.
+    pub method: bool,
+    /// 0-based line of the callee identifier.
+    pub line: usize,
+}
+
+/// One `fn` item: spans, ownership, and outgoing calls.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// Self type of the enclosing `impl` block (`impl Foo` / `impl Trait
+    /// for Foo` both record `Foo`); `None` for free functions and trait
+    /// declaration bodies.
+    pub owner: Option<String>,
+    /// 0-based line of the `fn` keyword.
+    pub sig_line: usize,
+    /// 0-based line of the body's closing `}` (== `sig_line` for bodyless
+    /// declarations, which carry `has_body == false`).
+    pub end_line: usize,
+    /// Token index of the `fn` keyword.
+    pub sig_tok: usize,
+    /// Token-index span of the body, inclusive of both braces.
+    pub body: (usize, usize),
+    pub has_body: bool,
+    /// Explicitly armed by a `// lint: hot-path` marker (same arming rule
+    /// as R4's region detection, so the two passes can never disagree).
+    pub hot_path: bool,
+    /// Call sites in the body, nested `fn` items excluded.
+    pub calls: Vec<Call>,
+}
+
+const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "for", "loop", "match", "return", "break", "continue", "fn", "let",
+    "mut", "ref", "move", "unsafe", "in", "as", "dyn", "impl", "where", "pub", "use", "mod",
+    "struct", "enum", "trait", "type", "const", "static", "crate", "self", "super", "box",
+    "await", "async", "extern", "true", "false",
+];
+
+/// Skip a balanced `<...>` generics run starting at the `<` token; `->`
+/// arrows inside (closure/fn-trait bounds) do not close the angle. Returns
+/// the index just past the matching `>`.
+fn skip_generics(toks: &[Token], mut i: usize) -> usize {
+    debug_assert_eq!(toks[i].text, "<");
+    let mut depth = 0i64;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "<" => depth += 1,
+            ">" if i > 0 && toks[i - 1].text == "-" => {} // `->` return arrow
+            ">" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Skip a balanced `(...)` run starting at the `(` token.
+fn skip_parens(toks: &[Token], mut i: usize) -> usize {
+    debug_assert_eq!(toks[i].text, "(");
+    let mut depth = 0i64;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Self-type of an `impl` header: the last path-segment identifier before
+/// the block opens — after `for` when present (`impl Trait for Foo`), else
+/// after the impl generics (`impl<T> Foo<T>`).
+fn impl_self_type(toks: &[Token], impl_idx: usize, brace_idx: usize) -> Option<String> {
+    let header = &toks[impl_idx + 1..brace_idx];
+    // Prefer the segment after a top-level `for` (angle-depth 0).
+    let mut depth = 0i64;
+    let mut start = 0usize;
+    for (k, t) in header.iter().enumerate() {
+        match t.text.as_str() {
+            "<" => depth += 1,
+            ">" if k > 0 && header[k - 1].text == "-" => {}
+            ">" => depth -= 1,
+            "for" if depth == 0 => start = k + 1,
+            _ => {}
+        }
+    }
+    // Last identifier of the (possibly `::`-qualified) path before any
+    // generic arguments or the `where` clause.
+    let mut owner = None;
+    let mut d = 0i64;
+    for (k, t) in header[start..].iter().enumerate() {
+        match t.text.as_str() {
+            "<" => d += 1,
+            ">" if k > 0 && header[start + k - 1].text == "-" => {}
+            ">" => d -= 1,
+            "where" if d == 0 => break,
+            _ if t.ident && d == 0 => owner = Some(t.text.clone()),
+            _ => {}
+        }
+    }
+    owner
+}
+
+/// Parse the item tree: every `fn` with spans, owners, markers, and calls.
+///
+/// `hot_lines` are the `fn`-keyword lines armed by `// lint: hot-path`
+/// markers (computed by the caller with the same region detector R4 uses).
+pub fn items(lines: &[SourceLine], hot_lines: &[usize]) -> Vec<FnItem> {
+    let toks = tokenize(lines);
+    let mut fns: Vec<FnItem> = Vec::new();
+
+    // Scope stack entries: (brace token idx, impl owner at that depth, fn
+    // index opened by that brace if it is a function body).
+    struct Scope {
+        owner: Option<String>,
+        fn_idx: Option<usize>,
+    }
+    let mut scopes: Vec<Scope> = Vec::new();
+    let mut cur_owner: Option<String> = None;
+
+    // A parsed-but-unopened fn signature waiting for its `{` or `;`.
+    struct Pending {
+        fn_idx: usize,
+        paren_depth: i64,
+        bracket_depth: i64,
+    }
+    let mut pending: Option<Pending> = None;
+
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if let Some(p) = &mut pending {
+            // Scanning the return type / where clause for `{` or `;`.
+            match t.text.as_str() {
+                "(" => p.paren_depth += 1,
+                ")" => p.paren_depth -= 1,
+                "[" => p.bracket_depth += 1,
+                "]" => p.bracket_depth -= 1,
+                "{" if p.paren_depth == 0 && p.bracket_depth == 0 => {
+                    let fn_idx = p.fn_idx;
+                    fns[fn_idx].body.0 = i;
+                    scopes.push(Scope { owner: cur_owner.clone(), fn_idx: Some(fn_idx) });
+                    pending = None;
+                }
+                ";" if p.paren_depth == 0 && p.bracket_depth == 0 => {
+                    // Bodyless declaration (trait method, extern).
+                    pending = None;
+                }
+                _ => {}
+            }
+            i += 1;
+            continue;
+        }
+        match t.text.as_str() {
+            "impl" => {
+                // Find the block-opening `{` (angle-depth aware).
+                let mut j = i + 1;
+                let mut depth = 0i64;
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "<" => depth += 1,
+                        ">" if toks[j - 1].text == "-" => {}
+                        ">" => depth -= 1,
+                        "{" if depth == 0 => break,
+                        ";" if depth == 0 => break, // `impl Trait` in type position
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if j < toks.len() && toks[j].text == "{" {
+                    let owner = impl_self_type(&toks, i, j);
+                    scopes.push(Scope { owner: cur_owner.clone(), fn_idx: None });
+                    cur_owner = owner;
+                    i = j + 1;
+                } else {
+                    i += 1;
+                }
+            }
+            "fn" => {
+                // `fn` pointer types (`fn(usize) -> u8`) have no name.
+                let name_idx = i + 1;
+                if name_idx >= toks.len() || !toks[name_idx].ident {
+                    i += 1;
+                    continue;
+                }
+                let name = toks[name_idx].text.clone();
+                let mut j = name_idx + 1;
+                if j < toks.len() && toks[j].text == "<" {
+                    j = skip_generics(&toks, j);
+                }
+                if j >= toks.len() || toks[j].text != "(" {
+                    i += 1;
+                    continue;
+                }
+                j = skip_parens(&toks, j);
+                let fn_idx = fns.len();
+                fns.push(FnItem {
+                    name,
+                    owner: cur_owner.clone(),
+                    sig_line: t.line,
+                    end_line: t.line,
+                    sig_tok: i,
+                    body: (0, 0),
+                    has_body: false,
+                    hot_path: hot_lines.contains(&t.line),
+                    calls: Vec::new(),
+                });
+                pending = Some(Pending { fn_idx, paren_depth: 0, bracket_depth: 0 });
+                i = j;
+            }
+            "{" => {
+                scopes.push(Scope { owner: cur_owner.clone(), fn_idx: None });
+                i += 1;
+            }
+            "}" => {
+                if let Some(s) = scopes.pop() {
+                    if let Some(fn_idx) = s.fn_idx {
+                        fns[fn_idx].body.1 = i;
+                        fns[fn_idx].end_line = t.line;
+                        fns[fn_idx].has_body = true;
+                    }
+                    cur_owner = s.owner;
+                }
+                i += 1;
+            }
+            _ => {
+                i += 1;
+            }
+        }
+    }
+    // Unclosed bodies (truncated input): extend to the last token.
+    for f in &mut fns {
+        if f.body.0 > 0 && !f.has_body {
+            f.body.1 = toks.len().saturating_sub(1);
+            f.end_line = toks.last().map(|t| t.line).unwrap_or(f.sig_line);
+            f.has_body = true;
+        }
+    }
+
+    // Call extraction per fn, skipping nested fn items (their signature
+    // *and* body: a nested declaration's `inner(` is not a call site).
+    let spans: Vec<(usize, usize)> = fns
+        .iter()
+        .map(|f| (f.sig_tok, if f.has_body { f.body.1 } else { f.sig_tok }))
+        .collect();
+    for fi in 0..fns.len() {
+        if !fns[fi].has_body {
+            continue;
+        }
+        let (lo, hi) = fns[fi].body;
+        let mut calls = Vec::new();
+        let mut k = lo + 1;
+        while k < hi {
+            if let Some(&(_, nhi)) =
+                spans.iter().find(|&&(nlo, nhi)| nlo > lo && nhi < hi && nlo == k)
+            {
+                k = nhi + 1;
+                continue;
+            }
+            let t = &toks[k];
+            if t.ident && !KEYWORDS.contains(&t.text.as_str()) {
+                // A call is IDENT `(` or IDENT `::<...>` `(` (turbofish).
+                let mut j = k + 1;
+                if j + 2 < toks.len()
+                    && toks[j].text == ":"
+                    && toks[j + 1].text == ":"
+                    && toks[j + 2].text == "<"
+                {
+                    j = skip_generics(&toks, j + 2);
+                }
+                let is_call = j < toks.len() && toks[j].text == "(";
+                let is_macro = k + 1 < toks.len() && toks[k + 1].text == "!";
+                if is_call && !is_macro {
+                    let method = k > 0 && toks[k - 1].text == ".";
+                    let qual = if k >= 3
+                        && toks[k - 1].text == ":"
+                        && toks[k - 2].text == ":"
+                        && toks[k - 3].ident
+                    {
+                        Some(toks[k - 3].text.clone())
+                    } else {
+                        None
+                    };
+                    calls.push(Call { name: t.text.clone(), qual, method, line: t.line });
+                }
+            }
+            k += 1;
+        }
+        fns[fi].calls = calls;
+    }
+    fns
+}
+
+/// Convenience: parse a source string directly (fixture-friendly).
+pub fn items_from_source(src: &str, hot_lines: &[usize]) -> Vec<FnItem> {
+    items(&scan(src), hot_lines)
+}
+
+// ---------------------------------------------------------------------------
+// Crate-wide call graph
+// ---------------------------------------------------------------------------
+
+/// All functions of the crate with file attribution, plus resolution.
+pub struct CrateGraph {
+    /// `(file index, item)` for every parsed function.
+    pub fns: Vec<(usize, FnItem)>,
+    /// Files by index (root-relative paths, diagnostics use these).
+    pub files: Vec<String>,
+}
+
+impl CrateGraph {
+    pub fn new() -> Self {
+        CrateGraph { fns: Vec::new(), files: Vec::new() }
+    }
+
+    pub fn add_file(&mut self, path: &str, items: Vec<FnItem>) {
+        let fi = self.files.len();
+        self.files.push(path.to_string());
+        self.fns.extend(items.into_iter().map(|it| (fi, it)));
+    }
+
+    /// Resolve a call site from `caller` to candidate function indices.
+    ///
+    /// Name-based with qualifier narrowing:
+    /// * method calls (`.name(..)`) match any function with that name;
+    /// * `Self::name` matches within the caller's impl owner;
+    /// * `Type::name` (CamelCase qualifier) matches only functions in an
+    ///   `impl Type` block — foreign types (`Vec::new`) resolve to nothing;
+    /// * `module::name` (lowercase qualifier) and bare calls match free
+    ///   functions (no impl owner).
+    pub fn resolve(&self, caller: usize, call: &Call) -> Vec<usize> {
+        let caller_owner = self.fns[caller].1.owner.clone();
+        let named: Vec<usize> = self
+            .fns
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, f))| f.has_body && f.name == call.name)
+            .map(|(i, _)| i)
+            .collect();
+        if call.method {
+            return named;
+        }
+        match &call.qual {
+            Some(q) if q == "Self" => named
+                .into_iter()
+                .filter(|&i| self.fns[i].1.owner == caller_owner)
+                .collect(),
+            Some(q) if q.chars().next().is_some_and(|c| c.is_ascii_uppercase()) => named
+                .into_iter()
+                .filter(|&i| self.fns[i].1.owner.as_deref() == Some(q.as_str()))
+                .collect(),
+            _ => named.into_iter().filter(|&i| self.fns[i].1.owner.is_none()).collect(),
+        }
+    }
+
+    /// The hot-assumed set: explicitly marked functions, plus functions
+    /// *reached only from hot paths* — every resolved caller is itself
+    /// hot-assumed (and there is at least one). Functions also reachable
+    /// from cold callers (tests, setup code) are never auto-assumed, which
+    /// is what keeps the pool-miss fallbacks inside `Workspace::take*`
+    /// outside the transitive alloc contract.
+    pub fn hot_assumed(&self) -> Vec<bool> {
+        let n = self.fns.len();
+        // callers[g] = indices of fns with a resolved edge into g.
+        let mut callers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for f in 0..n {
+            for call in self.fns[f].1.calls.clone() {
+                for g in self.resolve(f, &call) {
+                    if g != f && !callers[g].contains(&f) {
+                        callers[g].push(f);
+                    }
+                }
+            }
+        }
+        let mut hot: Vec<bool> = self.fns.iter().map(|(_, f)| f.hot_path).collect();
+        loop {
+            let mut changed = false;
+            for g in 0..n {
+                if !hot[g] && !callers[g].is_empty() && callers[g].iter().all(|&c| hot[c]) {
+                    hot[g] = true;
+                    changed = true;
+                }
+            }
+            if !changed {
+                return hot;
+            }
+        }
+    }
+}
+
+impl Default for CrateGraph {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> Vec<FnItem> {
+        items_from_source(src, &[])
+    }
+
+    #[test]
+    fn item_tree_spans_survive_nested_closures_and_fns() {
+        let src = "\
+fn outer(n: usize) -> usize {
+    let f = |x: usize| { x + inner(x) };
+    fn inner(y: usize) -> usize { y * 2 }
+    f(n)
+}
+fn after() {}
+";
+        let fns = parse(src);
+        let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner", "after"]);
+        assert_eq!((fns[0].sig_line, fns[0].end_line), (0, 4));
+        assert_eq!((fns[1].sig_line, fns[1].end_line), (2, 2));
+        // inner's body is excluded from outer's call list; the closure call
+        // `f(n)` and `inner(x)` inside the closure are outer's.
+        let outer_calls: Vec<&str> = fns[0].calls.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(outer_calls, vec!["inner", "f"]);
+    }
+
+    #[test]
+    fn generic_soup_and_turbofish_parse() {
+        let src = "\
+fn soup<T: Into<Vec<u8>>, F: Fn(usize) -> usize>(x: T, f: F) -> impl Iterator<Item = u8> {
+    helper::<Vec<u8>>(f(1));
+    x.into().into_iter()
+}
+fn helper<T>(_n: usize) -> T { todo!() }
+";
+        let fns = parse(src);
+        assert_eq!(fns.len(), 2);
+        assert_eq!(fns[0].name, "soup");
+        assert_eq!((fns[0].sig_line, fns[0].end_line), (0, 3));
+        let calls: Vec<(&str, bool)> =
+            fns[0].calls.iter().map(|c| (c.name.as_str(), c.method)).collect();
+        // `todo!()` in helper is a macro, not a call; turbofish resolves.
+        assert!(calls.contains(&("helper", false)));
+        assert!(calls.contains(&("f", false)));
+        assert!(calls.contains(&("into", true)));
+    }
+
+    #[test]
+    fn impl_owners_attach_including_trait_impls() {
+        let src = "\
+struct Foo;
+impl Foo {
+    fn new() -> Self { Foo }
+}
+impl std::fmt::Display for Foo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result { write!(f, \"\") }
+}
+trait Bar {
+    fn decl(&self);
+    fn defaulted(&self) { free() }
+}
+fn free() {}
+";
+        let fns = parse(src);
+        let get = |n: &str| fns.iter().find(|f| f.name == n).unwrap();
+        assert_eq!(get("new").owner.as_deref(), Some("Foo"));
+        assert_eq!(get("fmt").owner.as_deref(), Some("Foo"));
+        assert!(get("defaulted").owner.is_none());
+        assert!(!get("decl").has_body);
+        assert!(get("free").has_body);
+    }
+
+    #[test]
+    fn fn_pointer_types_declare_no_item() {
+        let fns = parse("fn takes(cb: fn(usize) -> usize) -> usize { cb(1) }\n");
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "takes");
+    }
+
+    #[test]
+    fn resolution_narrows_by_qualifier() {
+        let src = "\
+struct A;
+struct B;
+impl A { fn make() {} }
+impl B { fn make() {} }
+fn make() {}
+fn caller() {
+    A::make();
+    make();
+    Vec::new();
+}
+";
+        let mut g = CrateGraph::new();
+        g.add_file("x.rs", parse(src));
+        let caller = g.fns.iter().position(|(_, f)| f.name == "caller").unwrap();
+        let calls = g.fns[caller].1.calls.clone();
+        let owner_of = |idx: usize| g.fns[idx].1.owner.clone();
+        let a = g.resolve(caller, &calls[0]);
+        assert_eq!(a.len(), 1);
+        assert_eq!(owner_of(a[0]).as_deref(), Some("A"));
+        let bare = g.resolve(caller, &calls[1]);
+        assert_eq!(bare.len(), 1);
+        assert!(owner_of(bare[0]).is_none());
+        // `Vec::new` names no crate impl: no edge.
+        assert!(g.resolve(caller, &calls[2]).is_empty());
+    }
+
+    #[test]
+    fn hot_assumption_requires_all_callers_hot() {
+        // hot -> only_from_hot (assumed), hot+cold -> mixed (not assumed).
+        let src = "\
+fn hot() { only_from_hot(); mixed(); }
+fn cold() { mixed(); }
+fn only_from_hot() {}
+fn mixed() {}
+";
+        let fns = items_from_source(src, &[0]);
+        assert!(fns[0].hot_path);
+        let mut g = CrateGraph::new();
+        g.add_file("x.rs", fns);
+        let hot = g.hot_assumed();
+        let idx = |n: &str| g.fns.iter().position(|(_, f)| f.name == n).unwrap();
+        assert!(hot[idx("hot")]);
+        assert!(hot[idx("only_from_hot")]);
+        assert!(!hot[idx("mixed")]);
+        assert!(!hot[idx("cold")]);
+    }
+}
